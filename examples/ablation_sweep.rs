@@ -1,0 +1,145 @@
+//! Ablation sweeps (Tables 3, 8, 9, 10, 11 at laptop scale): quantization
+//! technique ablation on the transformer LM, plus the extra-optimizer
+//! comparison arms (NAdamW, Adagrad, schedule-free, M-FAC).
+//!
+//!   cargo run --release --example ablation_sweep -- [--table3] [--extras]
+//!       [--steps 150] [--model tlm_tiny]
+//!
+//! With no selector flags, runs both suites.
+
+use anyhow::Result;
+use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
+use shampoo4::coordinator::Trainer;
+use shampoo4::quant::Mapping;
+use shampoo4::runtime::Runtime;
+use shampoo4::util::cli::Args;
+
+fn base_cfg(model: &str, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.to_string();
+    cfg.steps = steps;
+    cfg.first.kind = FirstOrderKind::AdamW;
+    cfg.first.lr = 2e-3;
+    cfg.first.weight_decay = 0.05;
+    cfg.second.kind = SecondOrderKind::Shampoo;
+    cfg.second.update_precond_every = 20;
+    cfg.second.update_invroot_every = 40;
+    cfg.schedule = Schedule::Cosine { warmup: steps / 20 };
+    cfg.eval_every = 0;
+    cfg.eval_batches = 4;
+    cfg.log_every = steps / 10;
+    cfg
+}
+
+fn run(rt: &Runtime, cfg: RunConfig) -> Result<(f32, f32, f64, f64)> {
+    let mut t = Trainer::new(rt, cfg)?;
+    let res = t.train(rt, None)?;
+    let train_loss = res.losses.last().map(|(_, l)| *l).unwrap_or(f32::NAN);
+    let eval_loss = res.final_eval.as_ref().map(|e| e.loss).unwrap_or(f32::NAN);
+    Ok((train_loss, eval_loss, res.wall_secs, res.memory.optimizer_mb()))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1), &["table3", "extras"]);
+    let steps = args.get_usize("steps", 150);
+    let model = args.get_or("model", "tlm_tiny").to_string();
+    let rt = Runtime::new(std::path::Path::new(args.get_or("artifact-dir", "artifacts")))?;
+    let both = !args.flag("table3") && !args.flag("extras");
+
+    if args.flag("table3") || both {
+        println!("== Table 3 (ablation): AdamW + Shampoo on {model}, {steps} steps ==");
+        println!(
+            "{:<10} {:>4} {:>3} {:>4} {:>9} {:>9} {:>8} {:>9}",
+            "mapping", "bits", "QM", "OR", "trainloss", "evalloss", "wall(s)", "opt(MB)"
+        );
+        let arms: Vec<(Mapping, u32, bool, bool)> = vec![
+            (Mapping::Linear2, 4, false, false), // QM = A (naive)
+            (Mapping::Dt, 4, true, false),
+            (Mapping::Linear2, 4, true, false),
+            (Mapping::Linear2, 4, true, true),
+            (Mapping::Linear2, 3, false, false),
+            (Mapping::Dt, 3, true, true),
+            (Mapping::Linear2, 3, true, false),
+            (Mapping::Linear2, 3, true, true),
+            (Mapping::Linear2, 32, true, true), // 32-bit reference
+        ];
+        for (mapping, bits, eigen, rect) in arms {
+            let mut cfg = base_cfg(&model, steps);
+            cfg.second.quant.mapping = mapping;
+            cfg.second.quant.bits = bits;
+            cfg.second.quant.quantize_eigen = eigen;
+            cfg.second.quant.rectify = rect;
+            cfg.name = format!(
+                "t3_{}_{}b_{}_{}",
+                mapping.name(),
+                bits,
+                if eigen { "U" } else { "A" },
+                rect
+            );
+            match run(&rt, cfg) {
+                Ok((tl, el, wall, mb)) => println!(
+                    "{:<10} {:>4} {:>3} {:>4} {:>9.4} {:>9.4} {:>8.1} {:>9.2}",
+                    mapping.name(),
+                    bits,
+                    if eigen { "U" } else { "A" },
+                    if rect { "yes" } else { "no" },
+                    tl,
+                    el,
+                    wall,
+                    mb
+                ),
+                Err(e) => println!(
+                    "{:<10} {:>4} {:>3} {:>4}  FAILED: {e}",
+                    mapping.name(),
+                    bits,
+                    if eigen { "U" } else { "A" },
+                    rect
+                ),
+            }
+        }
+    }
+
+    if args.flag("extras") || both {
+        println!("\n== Tables 9/10/11 (extra optimizers) on mlp_base, {steps} steps ==");
+        println!(
+            "{:<22} {:>7} {:>9} {:>8} {:>9}",
+            "optimizer", "acc(%)", "evalloss", "wall(s)", "opt(MB)"
+        );
+        let arms: Vec<(FirstOrderKind, f32, SecondOrderKind)> = vec![
+            (FirstOrderKind::Sgdm, 0.05, SecondOrderKind::None),
+            (FirstOrderKind::AdamW, 1e-3, SecondOrderKind::None),
+            (FirstOrderKind::NAdamW, 1e-3, SecondOrderKind::None),
+            (FirstOrderKind::Adagrad, 0.01, SecondOrderKind::None),
+            (FirstOrderKind::SgdScheduleFree, 0.5, SecondOrderKind::None),
+            (FirstOrderKind::AdamWScheduleFree, 2e-3, SecondOrderKind::None),
+            (FirstOrderKind::MFac, 0.05, SecondOrderKind::None),
+            (FirstOrderKind::Adagrad, 0.01, SecondOrderKind::Shampoo),
+            (FirstOrderKind::AdamW, 1e-3, SecondOrderKind::Shampoo),
+        ];
+        for (f, lr, second) in arms {
+            let mut cfg = base_cfg("mlp_base", steps);
+            cfg.first.kind = f;
+            cfg.first.lr = lr;
+            cfg.first.weight_decay = if matches!(f, FirstOrderKind::Sgdm) { 5e-4 } else { 0.05 };
+            cfg.second.kind = second;
+            cfg.name = format!("extras_{}_{}", f.name(), second.name());
+            let label = if second == SecondOrderKind::None {
+                f.name().to_string()
+            } else {
+                format!("{} + 4-bit {}", f.name(), second.name())
+            };
+            let mut t = Trainer::new(&rt, cfg)?;
+            let res = t.train(&rt, None)?;
+            let e = res.final_eval.as_ref().unwrap();
+            println!(
+                "{:<22} {:>7.2} {:>9.4} {:>8.1} {:>9.2}",
+                label,
+                e.accuracy.unwrap_or(0.0) * 100.0,
+                e.loss,
+                res.wall_secs,
+                res.memory.optimizer_mb()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Reproduces the paper's Table 1 (plus the 8-bit rows of Table 7 and the
+//! excluded-diagonal variant of Table 6) on the two order-1200 matrices:
+//! A₁ — spectrum-matched "real" preconditioner (cond ≈ 37235, Figure 6),
+//! A₂ — the paper's synthetic two-level spectrum.
+//!
+//!   cargo run --release --example quant_error_analysis -- [--n 1200]
+
+use anyhow::Result;
+use shampoo4::errors::{quant_error_in_power, spectrum, QuantScheme, QuantTarget};
+use shampoo4::quant::Mapping;
+use shampoo4::util::cli::Args;
+use shampoo4::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse_from(std::env::args().skip(1), &["skip-8bit"]);
+    let n = args.get_usize("n", 1200);
+    let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
+
+    println!("building A1 (cond≈37235 log-linear) and A2 (two-level, c=1000) at order {n}...");
+    let a1 = spectrum::synthetic_loglinear(n, 37235.0, &mut rng);
+    let a2 = spectrum::synthetic_two_level(n, 1000.0, 1e-3, n / 20, &mut rng);
+
+    println!("\n== Table 1: quantization errors in A^(-1/4) ==");
+    println!("{:<8} {:<9} {:>4} {:>3} {:>4} {:>8} {:>8}", "matrix", "mapping", "bit", "QM", "OR", "NRE", "AE(deg)");
+    for (mname, a) in [("A1", &a1), ("A2", &a2)] {
+        for mapping in [Mapping::Dt, Mapping::Linear2] {
+            let rows: Vec<(u32, QuantTarget, usize)> = vec![
+                (8, QuantTarget::Precond, 0),
+                (4, QuantTarget::Precond, 0),
+                (4, QuantTarget::Eigen, 0),
+                (4, QuantTarget::Eigen, 1),
+            ];
+            for (bits, target, rect) in rows {
+                if bits == 8 && args.flag("skip-8bit") {
+                    continue;
+                }
+                let block = if bits == 8 { 256 } else { 64 };
+                let row = quant_error_in_power(
+                    a,
+                    -0.25,
+                    QuantScheme { mapping, bits, target, rectify: rect, block },
+                    false,
+                );
+                println!(
+                    "{:<8} {:<9} {:>4} {:>3} {:>4} {:>8.4} {:>8.4}",
+                    mname,
+                    mapping.name(),
+                    bits,
+                    if target == QuantTarget::Eigen { "U" } else { "A" },
+                    if rect > 0 { "yes" } else { "no" },
+                    row.nre,
+                    row.ae_deg
+                );
+            }
+        }
+    }
+
+    println!("\n== Table 6 variant: errors in A^(-1/4) − Diag(diag) (4-bit) ==");
+    println!("{:<8} {:<9} {:>3} {:>4} {:>8} {:>8}", "matrix", "mapping", "QM", "OR", "NRE", "AE(deg)");
+    for (mname, a) in [("A1", &a1), ("A2", &a2)] {
+        for mapping in [Mapping::Dt, Mapping::Linear2] {
+            for (target, rect) in [
+                (QuantTarget::Precond, 0),
+                (QuantTarget::Eigen, 0),
+                (QuantTarget::Eigen, 1),
+            ] {
+                let row = quant_error_in_power(
+                    a,
+                    -0.25,
+                    QuantScheme { mapping, bits: 4, target, rectify: rect, block: 64 },
+                    true,
+                );
+                println!(
+                    "{:<8} {:<9} {:>3} {:>4} {:>8.4} {:>8.4}",
+                    mname,
+                    mapping.name(),
+                    if target == QuantTarget::Eigen { "U" } else { "A" },
+                    if rect > 0 { "yes" } else { "no" },
+                    row.nre,
+                    row.ae_deg
+                );
+            }
+        }
+    }
+    Ok(())
+}

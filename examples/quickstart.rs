@@ -1,0 +1,65 @@
+//! Quickstart: train a small MLP classifier with AdamW + 4-bit Shampoo and
+//! compare memory against the 32-bit baseline.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use shampoo4::config::{FirstOrderKind, RunConfig, SecondOrderKind};
+use shampoo4::coordinator::Trainer;
+use shampoo4::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+
+    let mut cfg = RunConfig::default();
+    cfg.name = "quickstart".into();
+    cfg.model = "mlp_base".into();
+    cfg.steps = 150;
+    cfg.first.kind = FirstOrderKind::Sgdm;
+    cfg.first.lr = 0.05;
+    cfg.first.weight_decay = 5e-4;
+    cfg.second.kind = SecondOrderKind::Shampoo;
+    cfg.second.quant.bits = 4; // the paper's headline configuration
+    cfg.second.update_precond_every = 10;
+    cfg.second.update_invroot_every = 50;
+    cfg.eval_every = 50;
+
+    println!("== SGDM + 4-bit Shampoo (ours) ==");
+    let mut t4 = Trainer::new(&rt, cfg.clone())?;
+    let r4 = t4.train(&rt, None)?;
+    report(&r4);
+
+    println!("\n== SGDM + 32-bit Shampoo (baseline) ==");
+    cfg.second.quant.bits = 32;
+    cfg.name = "quickstart32".into();
+    let mut t32 = Trainer::new(&rt, cfg)?;
+    let r32 = t32.train(&rt, None)?;
+    report(&r32);
+
+    let saved = 1.0
+        - r4.memory.second_order_bytes as f64 / r32.memory.second_order_bytes as f64;
+    println!(
+        "\n4-bit Shampoo second-order state: {:.2} MB vs {:.2} MB (saves {:.0}%)",
+        r4.memory.second_order_bytes as f64 / 1048576.0,
+        r32.memory.second_order_bytes as f64 / 1048576.0,
+        saved * 100.0
+    );
+    Ok(())
+}
+
+fn report(r: &shampoo4::coordinator::TrainResult) {
+    for (s, l) in &r.losses {
+        if s % 50 == 0 || *s == 1 {
+            println!("  step {s:>4}  loss {l:.4}");
+        }
+    }
+    if let Some(e) = &r.final_eval {
+        println!(
+            "  final: loss {:.4}  acc {}  wall {:.1}s  optimizer {:.2} MB",
+            e.loss,
+            e.accuracy.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or_default(),
+            r.wall_secs,
+            r.memory.optimizer_mb()
+        );
+    }
+}

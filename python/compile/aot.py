@@ -1,0 +1,421 @@
+"""AOT compiler: lowers every L2 entry point to HLO *text* artifacts that the
+Rust runtime loads via `HloModuleProto::from_text_file` (see
+/opt/xla-example/load_hlo — text, never .serialize(): jax ≥ 0.5 emits 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser reassigns
+ids).
+
+Outputs (under artifacts/):
+  * <name>.hlo.txt       — one per entry point
+  * manifest.json        — input/output specs per artifact + model metadata,
+                           consumed by rust/src/runtime/registry.rs
+  * golden/<name>.json   — deterministic input/output pairs for the Rust
+                           integration tests
+
+Run: ``python -m compile.aot --out-dir ../artifacts`` (the Makefile drives
+this; it is a no-op at runtime — python is never on the training path).
+
+Hyperparameters baked statically follow the paper's Appendix G defaults:
+t1=1, t2=4 (rectification iterations), one randomized-SVD iteration for
+Shampoo/CASPR and two for K-FAC/AdaBK, 10-iteration power iteration,
+15-iteration Schur–Newton. β, ε and learning-rate scalars stay runtime
+inputs so no schedule is baked in.
+
+The runtime codebook input is always 16 entries (4-bit). 3-bit runs pad
+their 8-entry codebook by repeating the last value: argmin picks the first
+occurrence, so emitted codes stay in [0, 8) and both sides dequantize
+consistently. 8-bit appears only in the error-analysis benches, which run
+natively in Rust.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile import optim1
+from compile import shampoo as sh
+
+# Paper Appendix G defaults (static).
+T1_RECT = 1
+T2_RECT = 4
+SUB_ITERS_SHAMPOO = 1
+SUB_ITERS_KFAC = 2
+SCHUR_ITERS = 15
+CB_LEN = 16  # runtime codebook entries (4-bit; 3-bit padded)
+
+ALL_BUCKETS = (32, 64, 128)
+QUANT_BUCKETS = (64, 128)  # paper: matrices smaller than 4096 elems stay 32-bit
+KFAC_ORDERS = (128, 256)   # K-FAC/AdaBK precondition whole MLP layers
+
+F32 = jnp.float32
+U8 = jnp.uint8
+I32 = jnp.int32
+
+
+def _qspec(n: int):
+    """(codes, scales) ShapeDtypeStructs for an order-n column-blocked matrix."""
+    qb = min(64, n)
+    nb = n * n // qb
+    return (jax.ShapeDtypeStruct((nb, qb), U8),
+            jax.ShapeDtypeStruct((nb,), jnp.float32))
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+class Registry:
+    def __init__(self):
+        self.entries = {}
+
+    def add(self, name: str, fn: Callable, in_specs: Sequence[Tuple[str, jax.ShapeDtypeStruct]],
+            out_names: Sequence[str], golden: bool = False):
+        assert name not in self.entries, name
+        self.entries[name] = dict(fn=fn, in_specs=list(in_specs),
+                                  out_names=list(out_names), golden=golden)
+
+
+REG = Registry()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def register_bucket_artifacts():
+    cb_spec = _spec((CB_LEN,))
+
+    for n in QUANT_BUCKETS + (256,):
+        codes, scales = _qspec(n)
+        lam = _spec((n,))
+        mat = _spec((n, n))
+        scalar = _spec(())
+
+        sub_iters = SUB_ITERS_SHAMPOO if n != 256 else SUB_ITERS_KFAC
+        REG.add(
+            f"pu_{n}",
+            (lambda si: lambda l, c, s, m, beta, cb: sh.pu_quantized(
+                l, c, s, m, beta, cb, t1=T1_RECT, sub_iters=si,
+                orth_iters=0))(sub_iters),
+            [("lam", lam), ("codes", codes), ("scales", scales),
+             ("m_stat", mat), ("beta", scalar), ("cb", cb_spec)],
+            ["lam", "codes", "scales"], golden=(n == 64))
+        # K-FAC/AdaBK also need the two-iteration PU at order 128
+        if n == 128:
+            REG.add(
+                f"pu_kfac_{n}",
+                lambda l, c, s, m, beta, cb: sh.pu_quantized(
+                    l, c, s, m, beta, cb, t1=T1_RECT,
+                    sub_iters=SUB_ITERS_KFAC, orth_iters=0),
+                [("lam", lam), ("codes", codes), ("scales", scales),
+                 ("m_stat", mat), ("beta", scalar), ("cb", cb_spec)],
+                ["lam", "codes", "scales"])
+
+        for tag, expo in (("", -0.25), ("_e2", -0.5), ("_e1", -1.0)):
+            REG.add(
+                f"piru{tag}_{n}",
+                (lambda e: lambda l, c, s, eps, cb: sh.piru_quantized(
+                    l, c, s, eps, cb, t2=T2_RECT, exponent=e))(expo),
+                [("lam", lam), ("codes", codes), ("scales", scales),
+                 ("eps", scalar), ("cb", cb_spec)],
+                ["diag", "codes", "scales"], golden=(n == 64 and tag == ""))
+
+        REG.add(
+            f"pu_naive_{n}",
+            lambda d, c, s, m, beta, cb: sh.pu_naive(d, c, s, m, beta, cb),
+            [("diag", lam), ("codes", codes), ("scales", scales),
+             ("m_stat", mat), ("beta", scalar), ("cb", cb_spec)],
+            ["diag", "codes", "scales"])
+        REG.add(
+            f"invroot_naive_{n}",
+            lambda d, c, s, eps, cb: sh.invroot_naive(
+                d, c, s, eps, cb, p=4, iters=SCHUR_ITERS),
+            [("diag", lam), ("codes", codes), ("scales", scales),
+             ("eps", scalar), ("cb", cb_spec)],
+            ["diag", "codes", "scales"])
+
+        REG.add(f"quant_cols_{n}",
+                lambda u, cb: sh.quant_eigen(u, cb),
+                [("u", mat), ("cb", cb_spec)],
+                ["codes", "scales"], golden=(n == 64))
+        REG.add(f"dequant_cols_{n}",
+                (lambda nn: lambda c, s, cb: sh.dequant_eigen(c, s, nn, cb))(n),
+                [("codes", codes), ("scales", scales), ("cb", cb_spec)],
+                ["u"], golden=(n == 64))
+
+    for n in ALL_BUCKETS + (256,):
+        mat = _spec((n, n))
+        scalar = _spec(())
+        REG.add(f"pu_dense_{n}",
+                lambda l, m, beta: sh.pu_dense(l, m, beta),
+                [("l", mat), ("m_stat", mat), ("beta", scalar)], ["l"])
+        for tag, p in (("", 4), ("_e2", 2), ("_e1", 1)):
+            REG.add(
+                f"invroot_dense{tag}_{n}",
+                (lambda pp: lambda l, eps: sh.invroot_dense(
+                    l, eps, p=pp, iters=SCHUR_ITERS))(p),
+                [("l", mat), ("eps", scalar)], ["lhat"],
+                golden=(n == 64 and tag == ""))
+
+
+def register_pair_artifacts():
+    cb_spec = _spec((CB_LEN,))
+    for m, n in itertools.product(ALL_BUCKETS, ALL_BUCKETS):
+        g = _spec((m, n))
+        REG.add(f"gram_{m}x{n}", lambda gg: sh.gram(gg),
+                [("g", g)], ["l", "r"], golden=(m == 64 and n == 128))
+        REG.add(f"precond32_{m}x{n}",
+                lambda gg, lh, rh: sh.precondition_dense(gg, lh, rh),
+                [("g", g), ("lhat", _spec((m, m))), ("rhat", _spec((n, n)))],
+                ["gt"], golden=(m == 32 and n == 32))
+        REG.add(f"caspr32_{m}x{n}",
+                lambda gg, lh, rh: sh.precondition_caspr_dense(gg, lh, rh),
+                [("g", g), ("lhat", _spec((m, m))), ("rhat", _spec((n, n)))],
+                ["gt"])
+
+    for m, n in itertools.product(QUANT_BUCKETS, QUANT_BUCKETS):
+        g = _spec((m, n))
+        lc, ls = _qspec(m)
+        rc, rs = _qspec(n)
+        common = [("g", g), ("l_diag", _spec((m,))), ("l_codes", lc),
+                  ("l_scales", ls), ("r_diag", _spec((n,))), ("r_codes", rc),
+                  ("r_scales", rs), ("cb", cb_spec)]
+        REG.add(f"precond4_{m}x{n}",
+                lambda gg, ld, lcc, lss, rd, rcc, rss, cb:
+                sh.precondition_4bit(gg, ld, lcc, lss, rd, rcc, rss, cb),
+                common, ["gt"], golden=(m == 64 and n == 64))
+        REG.add(f"caspr4_{m}x{n}",
+                lambda gg, ld, lcc, lss, rd, rcc, rss, cb:
+                sh.precondition_caspr_4bit(gg, ld, lcc, lss, rd, rcc, rss, cb),
+                common, ["gt"])
+
+
+def register_model_artifacts():
+    # MLP (always emits K-FAC statistics; Rust ignores them when not needed)
+    cfg = M.MLP_CONFIGS["mlp_base"]
+    pspecs = M.mlp_param_specs(cfg)
+    p_in = [(nm, _spec(shape)) for nm, shape in pspecs]
+    x = _spec((cfg.batch, cfg.dims[0]))
+    y = jax.ShapeDtypeStruct((cfg.batch,), I32)
+
+    def mlp_step_fn(*args):
+        params = list(args[:-2])
+        loss, grads, stats = M.mlp_step(cfg, params, args[-2], args[-1],
+                                        with_kfac=True)
+        return (loss, *grads, *stats)
+
+    stat_names = []
+    for i in range(cfg.layers):
+        stat_names += [f"stat_r{i}", f"stat_l{i}"]
+    REG.add("mlp_base_step", mlp_step_fn,
+            p_in + [("x", x), ("y", y)],
+            ["loss"] + [f"grad_{nm}" for nm, _ in pspecs] + stat_names)
+
+    def mlp_eval_fn(*args):
+        params = list(args[:-2])
+        return M.mlp_accuracy(cfg, params, args[-2], args[-1])
+
+    REG.add("mlp_base_eval", mlp_eval_fn, p_in + [("x", x), ("y", y)],
+            ["loss", "correct"])
+
+    # Transformer LMs
+    for name, tcfg in M.TLM_CONFIGS.items():
+        pspecs = M.tlm_param_specs(tcfg)
+        p_in = [(nm, _spec(shape)) for nm, shape in pspecs]
+        toks = jax.ShapeDtypeStruct((tcfg.batch, tcfg.seq + 1), I32)
+
+        def step_fn(*args, _cfg=tcfg):
+            params = list(args[:-1])
+            loss, grads = M.tlm_step(_cfg, params, args[-1])
+            return (loss, *grads)
+
+        REG.add(f"{name}_step", step_fn, p_in + [("tokens", toks)],
+                ["loss"] + [f"grad_{nm}" for nm, _ in pspecs])
+
+        def eval_fn(*args, _cfg=tcfg):
+            params = list(args[:-1])
+            return (M.tlm_loss(_cfg, params, args[-1]),)
+
+        REG.add(f"{name}_eval", eval_fn, p_in + [("tokens", toks)], ["loss"])
+
+
+def register_optim_artifacts():
+    n = 4096
+    v = _spec((n,))
+    s = _spec(())
+    REG.add("sgdm_update_4096",
+            lambda p, b, g, lr, mom, wd: optim1.sgdm_update(p, b, g, lr, mom, wd),
+            [("p", v), ("buf", v), ("g", v), ("lr", s), ("momentum", s),
+             ("wd", s)],
+            ["p", "buf"], golden=True)
+    REG.add("adamw_update_4096",
+            lambda p, m, vv, g, step, lr, b1, b2, eps, wd:
+            optim1.adamw_update(p, m, vv, g, step, lr, b1, b2, eps, wd),
+            [("p", v), ("m", v), ("v", v), ("g", v), ("step", s), ("lr", s),
+             ("beta1", s), ("beta2", s), ("eps", s), ("wd", s)],
+            ["p", "m", "v"], golden=True)
+
+
+def _golden_inputs(in_specs, seed=1234):
+    """Deterministic inputs: float arrays from a seeded generator; codes from
+    quantizing such arrays would be arbitrary u8 — we use uniform ints."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, spec in in_specs:
+        if spec.dtype == U8:
+            out[name] = rng.integers(0, CB_LEN, spec.shape).astype(np.uint8)
+        elif spec.dtype == I32:
+            out[name] = rng.integers(0, 100, spec.shape).astype(np.int32)
+        elif name == "cb":
+            from compile.quantizer import codebook
+            out[name] = codebook("linear2", 4).astype(np.float32)
+        elif name in ("beta",):
+            out[name] = np.float32(0.95)
+        elif name in ("eps",):
+            out[name] = np.float32(1e-4)
+        elif name in ("lr",):
+            out[name] = np.float32(1e-3)
+        elif name in ("momentum", "beta1"):
+            out[name] = np.float32(0.9)
+        elif name in ("beta2",):
+            out[name] = np.float32(0.999)
+        elif name in ("wd",):
+            out[name] = np.float32(0.01)
+        elif name in ("step",):
+            out[name] = np.float32(7.0)
+        elif name in ("m_stat", "l"):
+            # PD matrix
+            d = spec.shape[0]
+            b = rng.standard_normal((d, d + 8)).astype(np.float32)
+            out[name] = (b @ b.T / d).astype(np.float32)
+        elif name in ("lam", "diag"):
+            out[name] = np.abs(rng.standard_normal(spec.shape)).astype(np.float32) + 0.1
+        elif name in ("scales", "l_scales", "r_scales"):
+            out[name] = (np.abs(rng.standard_normal(spec.shape)) * 0.1 + 0.01).astype(np.float32)
+        elif name == "v":  # AdamW second moment must be nonnegative
+            out[name] = (rng.standard_normal(spec.shape).astype(np.float32) ** 2) * 0.01
+        elif name in ("l_diag", "r_diag"):
+            out[name] = (np.abs(rng.standard_normal(spec.shape)) + 0.5).astype(np.float32)
+        elif name in ("lhat", "rhat"):
+            d = spec.shape[0]
+            b = rng.standard_normal((d, d)).astype(np.float32) * 0.05
+            out[name] = (np.eye(d, dtype=np.float32) + 0.5 * (b + b.T))
+        else:
+            out[name] = rng.standard_normal(spec.shape).astype(np.float32)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names (debugging)")
+    ap.add_argument("--skip-models", action="store_true")
+    args = ap.parse_args()
+
+    register_bucket_artifacts()
+    register_pair_artifacts()
+    if not args.skip_models:
+        register_model_artifacts()
+    register_optim_artifacts()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    golden_dir = os.path.join(args.out_dir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+
+    manifest = {
+        "block_size": 64,
+        "cb_len": CB_LEN,
+        "buckets": list(ALL_BUCKETS),
+        "quant_buckets": list(QUANT_BUCKETS),
+        "kfac_orders": list(KFAC_ORDERS),
+        "defaults": {"t1": T1_RECT, "t2": T2_RECT,
+                     "sub_iters": SUB_ITERS_SHAMPOO,
+                     "schur_iters": SCHUR_ITERS},
+        "artifacts": {},
+        "models": {},
+    }
+
+    cfg = M.MLP_CONFIGS["mlp_base"]
+    manifest["models"]["mlp_base"] = {
+        "kind": "mlp", "dims": list(cfg.dims), "batch": cfg.batch,
+        "classes": cfg.dims[-1],
+        "params": [{"name": nm, "shape": list(shape)}
+                   for nm, shape in M.mlp_param_specs(cfg)],
+        "step": "mlp_base_step", "eval": "mlp_base_eval",
+    }
+    for name, tcfg in M.TLM_CONFIGS.items():
+        manifest["models"][name] = {
+            "kind": "tlm", "vocab": tcfg.vocab, "d_model": tcfg.d_model,
+            "n_layers": tcfg.n_layers, "n_heads": tcfg.n_heads,
+            "d_ff": tcfg.d_ff, "seq": tcfg.seq, "batch": tcfg.batch,
+            "param_count": M.tlm_param_count(tcfg),
+            "params": [{"name": nm, "shape": list(shape)}
+                       for nm, shape in M.tlm_param_specs(tcfg)],
+            "step": f"{name}_step", "eval": f"{name}_eval",
+        }
+
+    only = set(args.only.split(",")) if args.only else None
+    names = [n for n in REG.entries if only is None or n in only]
+    for i, name in enumerate(names):
+        ent = REG.entries[name]
+        specs = [s for _, s in ent["in_specs"]]
+        lowered = jax.jit(ent["fn"]).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+
+        out_shapes = jax.eval_shape(ent["fn"], *specs)
+        if not isinstance(out_shapes, (tuple, list)):
+            out_shapes = (out_shapes,)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"name": nm, "shape": list(s.shape),
+                        "dtype": str(s.dtype)} for nm, s in ent["in_specs"]],
+            "outputs": [{"name": onm, "shape": list(s.shape),
+                         "dtype": str(s.dtype)}
+                        for onm, s in zip(ent["out_names"], out_shapes)],
+        }
+        print(f"[{i+1}/{len(names)}] {name}: {len(text)} chars, "
+              f"{len(ent['in_specs'])} in / {len(ent['out_names'])} out")
+
+        if ent["golden"]:
+            gin = _golden_inputs(ent["in_specs"])
+            outs = jax.jit(ent["fn"])(*[jnp.array(gin[nm])
+                                        for nm, _ in ent["in_specs"]])
+            if not isinstance(outs, (tuple, list)):
+                outs = (outs,)
+            gj = {
+                "inputs": {nm: {"shape": list(np.shape(gin[nm])),
+                                "dtype": str(np.asarray(gin[nm]).dtype),
+                                "data": np.asarray(gin[nm]).ravel().tolist()}
+                           for nm, _ in ent["in_specs"]},
+                "outputs": [{"name": onm,
+                             "shape": list(np.shape(o)),
+                             "dtype": str(np.asarray(o).dtype),
+                             "data": np.asarray(o).ravel().tolist()}
+                            for onm, o in zip(ent["out_names"], outs)],
+            }
+            with open(os.path.join(golden_dir, f"{name}.json"), "w") as f:
+                json.dump(gj, f)
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(names)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""L1 Pallas kernels (build-time only; lowered into HLO artifacts)."""
+from . import quant, linalg, ref  # noqa: F401

@@ -1,0 +1,148 @@
+"""L1 Pallas kernels: tiled matmul and the symmetric building blocks of the
+preconditioner pipeline.
+
+The paper's hot spots beyond quantization are all dense matrix products:
+  * V · Λ · Vᵀ (preconditioner reconstruction, Algorithms 1/2),
+  * the Björck orthonormalization step V ← 1.5V − 0.5·V·VᵀV (eq. 2),
+  * the preconditioned gradient L̂ · G · R̂ (Algorithm 3 line 14).
+
+On TPU these map to the MXU systolic array: we tile for 128×128 MXU passes
+(bm=bn=bk=128 default) with a VMEM-resident accumulator, replacing the
+paper's cuBLAS calls (DESIGN.md §Hardware-Adaptation). Preconditioner orders
+are bucketed to {32, 64, 128}, so most products are a single MXU tile.
+
+interpret=True throughout — see kernels/quant.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+DEFAULT_TILE = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _pad2(x, bm, bn):
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, bm: int = DEFAULT_TILE,
+           bk: int = DEFAULT_TILE, bn: int = DEFAULT_TILE) -> jnp.ndarray:
+    """Tiled Pallas matmul, f32 accumulate; pads to tile multiples and crops."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    ap = _pad2(a.astype(jnp.float32), bm, bk)
+    bp = _pad2(b.astype(jnp.float32), bk, bn)
+    gm, gk = ap.shape[0] // bm, ap.shape[1] // bk
+    gn = bp.shape[1] // bn
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((ap.shape[0], bp.shape[1]), jnp.float32),
+        interpret=INTERPRET,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def _scale_cols_kernel(v_ref, d_ref, o_ref):
+    o_ref[...] = v_ref[...] * d_ref[...][None, :]
+
+
+@jax.jit
+def scale_cols(v: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """V · Diag(d) as a single-tile elementwise Pallas kernel."""
+    n, m = v.shape
+    return pl.pallas_call(
+        _scale_cols_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=INTERPRET,
+    )(v.astype(jnp.float32), d.astype(jnp.float32))
+
+
+def sandwich(v: jnp.ndarray, d: jnp.ndarray) -> jnp.ndarray:
+    """V · Diag(d) · Vᵀ using the Pallas kernels (preconditioner rebuild)."""
+    return matmul(scale_cols(v, d), v.T)
+
+
+def bjorck_step(v: jnp.ndarray) -> jnp.ndarray:
+    """One Björck orthonormalization step: V ← 1.5·V − 0.5·V·(VᵀV)  (eq. 2)."""
+    g = matmul(v.T, v)
+    return 1.5 * v - 0.5 * matmul(v, g)
+
+
+def bjorck(v: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """`iters` rectification steps (t₁/t₂ of Algorithms 1/2). Unrolled: iters
+    is small (1–4 in the paper) and unrolling lets XLA fuse the scalings."""
+    for _ in range(iters):
+        v = bjorck_step(v)
+    return v
+
+
+def colnorm_orthogonalize(x: jnp.ndarray, iters: int) -> jnp.ndarray:
+    """Column-normalize then Björck/Newton–Schulz steps.
+
+    Only valid when the columns of x are already near-orthogonal (e.g.
+    rectifying a dequantized eigenvector matrix). NOT used inside subspace
+    iteration: with the ill-conditioned spectra Shampoo preconditioners have
+    (Figure 2 of the paper), A·P has strongly correlated columns and
+    Newton–Schulz diverges — see orthogonalize_cgs2 below.
+    """
+    norms = jnp.sqrt(jnp.sum(x * x, axis=0))
+    x = x / jnp.maximum(norms, 1e-30)[None, :]
+    return bjorck(x, iters)
+
+
+def orthogonalize_cgs2(x: jnp.ndarray) -> jnp.ndarray:
+    """QR orthogonalization via classical Gram–Schmidt with reorthogonalization
+    (CGS2, "twice is enough" [Björck]).
+
+    This replaces `torch.linalg.qr` inside the paper's randomized SVD
+    (Appendix B, eq. 4): subspace iteration only needs *some* orthogonalizer
+    of A·P — the column space is unchanged. CGS2 is matmul/matvec-only, so it
+    lowers to plain HLO (no LAPACK custom-calls, which xla_extension 0.5.1
+    cannot load from HLO text), and unlike Newton–Schulz it handles the
+    near-rank-deficient columns produced by Shampoo's wide spectra.
+
+    Columns whose residual vanishes (exact rank deficiency, e.g. padded
+    blocks) are left with near-zero norm rather than replaced: downstream
+    they are always weighted by the matching ≈0 eigenvalue.
+    """
+    n, m = x.shape
+
+    def body(j, q):
+        v = jax.lax.dynamic_slice(x, (0, j), (n, 1))
+        mask = (jnp.arange(m) < j).astype(x.dtype)[None, :]
+        qm = q * mask
+        for _ in range(2):  # CGS2: project out prior columns twice
+            v = v - qm @ (qm.T @ v)
+        v = v / jnp.maximum(jnp.linalg.norm(v), 1e-30)
+        return jax.lax.dynamic_update_slice(q, v, (0, j))
+
+    q0 = jnp.zeros_like(x)
+    return jax.lax.fori_loop(0, m, body, q0)

@@ -1,0 +1,116 @@
+"""L1 Pallas kernels: block-wise quantization / dequantization.
+
+These are the numeric-format hot spots of 4-bit Shampoo. Each quantization
+block (64 elements, paper §2.2/G) is normalized by its absmax and snapped to
+the nearest codebook entry. The grid runs over tiles of quantization blocks;
+the codebook (16 entries at 4-bit) is small enough to live in VMEM
+replicated across the grid, so the argmin is a fully vectorized
+(tile × block × 2^b) broadcast — the TPU analogue of the paper's CUDA
+elementwise kernels (see DESIGN.md §Hardware-Adaptation).
+
+All kernels run interpret=True: CPU PJRT cannot execute Mosaic custom-calls,
+and interpret-mode lowers to plain HLO which the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+# Tile of quantization blocks processed per grid step. 8 blocks × 64 elems
+# × (4B input + 1B codes) + 16-entry codebook ≈ 2.6 KiB VMEM — the argmin
+# broadcast tensor (8, 64, 16) f32 is 32 KiB, well inside a ~16 MiB VMEM
+# budget; chosen small to overlap HBM↔VMEM streaming of many blocks.
+TILE_BLOCKS = 8
+
+
+def _quantize_kernel(x_ref, cb_ref, codes_ref, scale_ref):
+    x = x_ref[...]  # (t, B)
+    absmax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    normed = x / scale[:, None]
+    # Nearest codebook entry; ties resolve to the lowest index, matching the
+    # Rust runtime quantizer and the pure-jnp reference.
+    dist = jnp.abs(normed[:, :, None] - cb_ref[...][None, None, :])
+    codes_ref[...] = jnp.argmin(dist, axis=2).astype(jnp.uint8)
+    scale_ref[...] = scale.astype(jnp.float32)
+
+
+def _dequantize_kernel(codes_ref, scale_ref, cb_ref, out_ref):
+    codes = codes_ref[...].astype(jnp.int32)
+    out_ref[...] = jnp.take(cb_ref[...], codes) * scale_ref[...][:, None]
+
+
+def _pad_blocks(x2d, tile):
+    nb = x2d.shape[0]
+    pad = (-nb) % tile
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    return x2d, nb
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def quantize_blocks(x2d: jnp.ndarray, cb: jnp.ndarray, tile: int = TILE_BLOCKS):
+    """Quantize (nblocks, block) f32 -> (codes uint8, scales f32[nblocks])."""
+    x2d = x2d.astype(jnp.float32)
+    xp, nb = _pad_blocks(x2d, tile)
+    nbp, blk = xp.shape
+    grid = (nbp // tile,)
+    codes, scale = pl.pallas_call(
+        _quantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, blk), lambda i: (i, 0)),
+            pl.BlockSpec((cb.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, blk), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbp, blk), jnp.uint8),
+            jax.ShapeDtypeStruct((nbp,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(xp, cb.astype(jnp.float32))
+    return codes[:nb], scale[:nb]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def dequantize_blocks(codes: jnp.ndarray, scale: jnp.ndarray, cb: jnp.ndarray,
+                      tile: int = TILE_BLOCKS):
+    """Dequantize (codes uint8 (nb, B), scales (nb,)) -> f32 (nb, B)."""
+    cp, nb = _pad_blocks(codes, tile)
+    sp = jnp.pad(scale, (0, cp.shape[0] - nb))
+    nbp, blk = cp.shape
+    grid = (nbp // tile,)
+    out = pl.pallas_call(
+        _dequantize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, blk), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((cb.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, blk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nbp, blk), jnp.float32),
+        interpret=INTERPRET,
+    )(cp, sp.astype(jnp.float32), cb.astype(jnp.float32))
+    return out[:nb]
+
+
+def quantize_matrix_cols(u: jnp.ndarray, cb: jnp.ndarray, block: int = 64):
+    """Quantize a matrix with quantization blocks inside columns (§3.3)."""
+    n, m = u.shape
+    assert n % block == 0, (u.shape, block)
+    return quantize_blocks(u.T.reshape(-1, block), cb)
+
+
+def dequantize_matrix_cols(codes, scale, shape, cb, block: int = 64):
+    n, m = shape
+    flat = dequantize_blocks(codes, scale, cb)
+    return flat.reshape(m, n).T

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every L1 Pallas kernel.
+
+The pytest suite asserts allclose between these and the kernels in
+quant.py / linalg.py across shape/dtype sweeps (hypothesis). These oracles
+are also what the Rust-side quantizer is cross-checked against via the
+golden vectors emitted by aot.py.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile.quantizer import (  # re-exported single source of truth
+    quantize_ref,
+    dequantize_ref,
+    quantize_matrix_cols_ref,
+    dequantize_matrix_cols_ref,
+)
+
+__all__ = [
+    "quantize_ref",
+    "dequantize_ref",
+    "quantize_matrix_cols_ref",
+    "dequantize_matrix_cols_ref",
+    "matmul_ref",
+    "sandwich_ref",
+    "bjorck_step_ref",
+    "bjorck_ref",
+    "colnorm_orthogonalize_ref",
+]
+
+
+def matmul_ref(a, b):
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def sandwich_ref(v, d):
+    return (v * d[None, :]) @ v.T
+
+
+def bjorck_step_ref(v):
+    return 1.5 * v - 0.5 * (v @ (v.T @ v))
+
+
+def bjorck_ref(v, iters):
+    for _ in range(iters):
+        v = bjorck_step_ref(v)
+    return v
+
+
+def colnorm_orthogonalize_ref(x, iters):
+    norms = jnp.sqrt(jnp.sum(x * x, axis=0))
+    x = x / jnp.maximum(norms, 1e-30)[None, :]
+    return bjorck_ref(x, iters)

@@ -1,0 +1,244 @@
+"""L2: model compute graphs (forward/backward) lowered to HLO artifacts.
+
+Two model families, mirroring the paper's two evaluation domains at
+laptop scale (DESIGN.md §Substitutions):
+
+  * ``mlp``        — image-classification proxy (Table 2 CNN rows, Table 4
+                     K-FAC/AdaBK rows). Backprop is written out manually so
+                     the train step can also emit the K-FAC statistics
+                     X·Xᵀ (layer inputs) and Y·Yᵀ (pre-activation output
+                     gradients) that Algorithm 5 consumes.
+  * ``transformer``— decoder-only pre-LN LM (Table 2 ViT/Swin rows, Table 12
+                     GPT-2/LLaMA rows). Grads via jax.value_and_grad.
+
+Parameters cross the Rust boundary as a flat, name-ordered list of f32
+arrays; ``*_param_specs`` defines that order and is written into
+artifacts/manifest.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# MLP classifier with manual backprop + K-FAC statistics
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    name: str
+    dims: Tuple[int, ...]  # (in, hidden..., classes)
+    batch: int
+
+    @property
+    def layers(self) -> int:
+        return len(self.dims) - 1
+
+
+MLP_CONFIGS = {
+    # 128 -> 256 -> 256 -> 128 classes: every weight is bucket-shaped, so the
+    # K-FAC/AdaBK path (which preconditions whole layers, Appendix G)
+    # needs only bucket-order preconditioners.
+    "mlp_base": MlpConfig("mlp_base", (128, 256, 256, 128), 128),
+}
+
+
+def mlp_param_specs(cfg: MlpConfig):
+    specs = []
+    for i in range(cfg.layers):
+        specs.append((f"w{i}", (cfg.dims[i], cfg.dims[i + 1])))
+        specs.append((f"b{i}", (cfg.dims[i + 1],)))
+    return specs
+
+
+def mlp_init(cfg: MlpConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    params = []
+    for i in range(cfg.layers):
+        fan_in = cfg.dims[i]
+        w = rng.standard_normal((fan_in, cfg.dims[i + 1])) * np.sqrt(2.0 / fan_in)
+        params.append(w.astype(np.float32))
+        params.append(np.zeros((cfg.dims[i + 1],), np.float32))
+    return params
+
+
+def _softmax_xent(logits, labels):
+    """Mean cross-entropy; returns (loss, dlogits) — dlogits already /batch."""
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    z = logits - zmax
+    logsumexp = jnp.log(jnp.sum(jnp.exp(z), axis=1, keepdims=True))
+    logp = z - logsumexp
+    bs = logits.shape[0]
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    probs = jnp.exp(logp)
+    onehot = jax.nn.one_hot(labels, logits.shape[1], dtype=logits.dtype)
+    return loss, (probs - onehot) / bs
+
+
+def mlp_step(cfg: MlpConfig, params: List[jnp.ndarray], x, y,
+             with_kfac: bool = False):
+    """Forward + manual backward. Returns (loss, grads[, kfac_stats]).
+
+    kfac_stats per layer: (XᵀX/bs, δYᵀδY·bs) — Algorithm 5's R and L
+    statistics for layer i (activation second moment and pre-activation
+    gradient second moment; the ·bs undoes the 1/bs folded into dlogits so
+    the statistic matches E[y yᵀ] over the batch).
+    """
+    ws = params[0::2]
+    bs_ = params[1::2]
+    acts = [x]
+    pre = []
+    h = x
+    for i in range(cfg.layers):
+        z = h @ ws[i] + bs_[i][None, :]
+        pre.append(z)
+        h = jax.nn.relu(z) if i < cfg.layers - 1 else z
+        acts.append(h)
+    loss, dz = _softmax_xent(acts[-1], y)
+
+    grads = [None] * (2 * cfg.layers)
+    stats = []
+    batch = x.shape[0]
+    for i in reversed(range(cfg.layers)):
+        a_in = acts[i]
+        grads[2 * i] = a_in.T @ dz
+        grads[2 * i + 1] = jnp.sum(dz, axis=0)
+        if with_kfac:
+            stats.append((a_in.T @ a_in / batch, dz.T @ dz * batch))
+        if i > 0:
+            da = dz @ ws[i].T
+            dz = da * (pre[i - 1] > 0).astype(da.dtype)
+    if with_kfac:
+        stats = stats[::-1]
+        flat_stats = [s for pair in stats for s in pair]
+        return loss, grads, flat_stats
+    return loss, grads
+
+
+def mlp_accuracy(cfg: MlpConfig, params, x, y):
+    """Eval helper: (mean loss, #correct) on one batch."""
+    h = x
+    ws = params[0::2]
+    bs_ = params[1::2]
+    for i in range(cfg.layers):
+        z = h @ ws[i] + bs_[i][None, :]
+        h = jax.nn.relu(z) if i < cfg.layers - 1 else z
+    loss, _ = _softmax_xent(h, y)
+    correct = jnp.sum((jnp.argmax(h, axis=1) == y).astype(jnp.int32))
+    return loss, correct
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer LM (pre-LN, learned positions, tied head)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TlmConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+TLM_CONFIGS = {
+    "tlm_tiny": TlmConfig("tlm_tiny", 256, 128, 2, 4, 512, 64, 8),
+    "tlm_small": TlmConfig("tlm_small", 512, 256, 4, 8, 1024, 128, 8),
+    "tlm_medium": TlmConfig("tlm_medium", 2048, 512, 8, 8, 2048, 128, 4),
+}
+
+
+def tlm_param_specs(cfg: TlmConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    specs = [("embed", (cfg.vocab, d)), ("pos", (cfg.seq, d))]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1_g", (d,)), (f"l{i}.ln1_b", (d,)),
+            (f"l{i}.wqkv", (d, 3 * d)), (f"l{i}.wo", (d, d)),
+            (f"l{i}.ln2_g", (d,)), (f"l{i}.ln2_b", (d,)),
+            (f"l{i}.w1", (d, f)), (f"l{i}.w2", (f, d)),
+        ]
+    specs += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return specs
+
+
+def tlm_init(cfg: TlmConfig, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in tlm_param_specs(cfg):
+        if name.endswith("_g"):
+            params.append(np.ones(shape, np.float32))
+        elif name.endswith("_b"):
+            params.append(np.zeros(shape, np.float32))
+        else:
+            std = 0.02
+            if name.endswith(".wo") or name.endswith(".w2"):
+                std = 0.02 / np.sqrt(2.0 * cfg.n_layers)
+            params.append((rng.standard_normal(shape) * std).astype(np.float32))
+    return params
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, wqkv, wo, cfg: TlmConfig):
+    b, t, d = x.shape
+    qkv = x @ wqkv  # (b, t, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(z):
+        return z.reshape(b, t, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def tlm_loss(cfg: TlmConfig, params: List[jnp.ndarray], tokens):
+    """Next-token cross-entropy. tokens: (batch, seq+1) int32."""
+    names = [n for n, _ in tlm_param_specs(cfg)]
+    p = dict(zip(names, params))
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    x = p["embed"][inp] + p["pos"][None, : inp.shape[1]]
+    for i in range(cfg.n_layers):
+        h = _layernorm(x, p[f"l{i}.ln1_g"], p[f"l{i}.ln1_b"])
+        x = x + _attention(h, p[f"l{i}.wqkv"], p[f"l{i}.wo"], cfg)
+        h = _layernorm(x, p[f"l{i}.ln2_g"], p[f"l{i}.ln2_b"])
+        h = jax.nn.gelu(h @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+        x = x + h
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    logits = x @ p["embed"].T  # tied head
+    b, t, v = logits.shape
+    loss, _ = _softmax_xent(logits.reshape(b * t, v), tgt.reshape(b * t))
+    return loss
+
+
+def tlm_step(cfg: TlmConfig, params, tokens):
+    loss, grads = jax.value_and_grad(
+        lambda ps: tlm_loss(cfg, ps, tokens))(list(params))
+    return loss, grads
+
+
+def tlm_param_count(cfg: TlmConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in tlm_param_specs(cfg))

@@ -1,0 +1,52 @@
+"""First-order optimizer updates (the F of eq. (1)) as elementwise JAX
+functions.
+
+These exist for two reasons:
+  1. cross-check artifacts: the Rust coordinator runs its own native
+     elementwise implementations on the hot path (DESIGN.md decision 7) and
+     the integration tests assert bit-level agreement against these lowered
+     versions;
+  2. the perturbed-Shampoo regret bench reuses them.
+
+All hyperparameters are runtime scalar *inputs* so the artifacts do not bake
+in a learning-rate schedule.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sgdm_update(p, buf, g, lr, momentum, wd):
+    """SGD with momentum, classic (non-decoupled) weight decay, PyTorch
+    semantics: buf ← μ·buf + (g + wd·p); p ← p − lr·buf."""
+    g = g + wd * p
+    buf = momentum * buf + g
+    return p - lr * buf, buf
+
+
+def adamw_update(p, m, v, g, step, lr, beta1, beta2, eps, wd):
+    """AdamW with decoupled weight decay and bias correction."""
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mh = m / (1.0 - beta1**step)
+    vh = v / (1.0 - beta2**step)
+    p = p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p)
+    return p, m, v
+
+
+def nadamw_update(p, m, v, g, step, lr, beta1, beta2, eps, wd):
+    """NAdamW [Dozat 2016]: Nesterov momentum inside AdamW."""
+    m = beta1 * m + (1.0 - beta1) * g
+    v = beta2 * v + (1.0 - beta2) * g * g
+    mh = (beta1 * m + (1.0 - beta1) * g) / (1.0 - beta1 ** (step + 1.0))
+    vh = v / (1.0 - beta2**step)
+    p = p - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p)
+    return p, m, v
+
+
+def adagrad_update(p, acc, g, lr, eps, wd):
+    """Adagrad with classic weight decay."""
+    g = g + wd * p
+    acc = acc + g * g
+    return p - lr * g / (jnp.sqrt(acc) + eps), acc

@@ -1,0 +1,131 @@
+"""Quantization codebooks and block-wise (de)quantizers for 4-bit Shampoo.
+
+Implements the quantizer Q = (I∘N, M) of the paper (§2.2):
+  * N — block-wise normalization, block size 64 by default; for eigenvector
+    matrices blocks stay within a single column (paper §3.3), which the
+    matrix wrappers below guarantee by quantizing U in column-major order.
+  * I — nearest-codebook-entry argmin, executed by the Pallas kernel
+    (kernels/quant.py) on the build path and mirrored exactly by
+    ``rust/src/quant`` at runtime.
+  * M — per-block absmax scales.
+
+Codebooks (paper §3.3 + Appendix C):
+  * dynamic tree (DT) quantization for any bitwidth b >= 2,
+  * linear square (Linear-2) quantization, eq. (3),
+  * plain linear quantization (reference).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+BLOCK_SIZE = 64  # paper: block-wise normalization with block size 64 (4-bit)
+
+# ---------------------------------------------------------------------------
+# Codebooks
+# ---------------------------------------------------------------------------
+
+
+def dt_codebook(bits: int) -> np.ndarray:
+    """Dynamic tree quantization mapping (Appendix C).
+
+    Maps T_b onto {0, 1} ∪ G with G = {±q_k × 10^-E}:
+      b = 2 + E + F;  q_k = (p_k + p_{k+1}) / 2;  p_j = 0.9 j / 2^F + 0.1.
+    For b=4 this reproduces the 16-entry table in Appendix C exactly.
+    """
+    if bits < 2:
+        raise ValueError("DT quantization needs bits >= 2")
+    values = {0.0, 1.0}
+    for e in range(bits - 1):  # E in {0, ..., b-2}, F = b-2-E
+        f = bits - 2 - e
+        p = [0.9 * j / (2**f) + 0.1 for j in range(2**f + 1)]
+        for k in range(2**f):
+            q = 0.5 * (p[k] + p[k + 1]) * 10.0 ** (-e)
+            values.add(q)
+            values.add(-q)
+    out = np.array(sorted(values), dtype=np.float32)
+    assert out.shape[0] == 2**bits, (bits, out.shape)
+    return out
+
+
+def linear2_codebook(bits: int) -> np.ndarray:
+    """Linear square (Linear-2) quantization mapping, eq. (3)."""
+    n = 2**bits
+    j = np.arange(n, dtype=np.float64)
+    base = -1.0 + 2.0 * j / (n - 1)
+    mid = 2 ** (bits - 1) - 1
+    out = np.where(j < mid, -(base**2), np.where(j == mid, 0.0, base**2))
+    return out.astype(np.float32)
+
+
+def linear_codebook(bits: int) -> np.ndarray:
+    """Plain linear quantization mapping (reference arm)."""
+    n = 2**bits
+    j = np.arange(n, dtype=np.float64)
+    return (-1.0 + 2.0 * j / (n - 1)).astype(np.float32)
+
+
+_CODEBOOKS = {
+    "dt": dt_codebook,
+    "linear2": linear2_codebook,
+    "linear": linear_codebook,
+}
+
+
+def codebook(mapping: str, bits: int) -> np.ndarray:
+    """Return the sorted codebook for a mapping name ('dt'|'linear2'|'linear')."""
+    try:
+        fn = _CODEBOOKS[mapping]
+    except KeyError as e:  # pragma: no cover - defensive
+        raise ValueError(f"unknown quantization mapping {mapping!r}") from e
+    return fn(bits)
+
+
+# ---------------------------------------------------------------------------
+# Block-wise quantize / dequantize (pure-jnp; the Pallas kernels in
+# kernels/quant.py implement exactly this contract and are tested against it)
+# ---------------------------------------------------------------------------
+
+
+def blocks_of(x: jnp.ndarray, block: int = BLOCK_SIZE) -> jnp.ndarray:
+    """Reshape a flat vector (length divisible by `block`) to (nblocks, block)."""
+    assert x.ndim == 1 and x.shape[0] % block == 0, x.shape
+    return x.reshape(-1, block)
+
+
+def quantize_ref(x2d: jnp.ndarray, cb: jnp.ndarray):
+    """Reference block-wise quantizer over (nblocks, block) input.
+
+    Returns (codes uint8 (nblocks, block), scales f32 (nblocks,)).
+    Zero blocks get scale 1.0 so dequantization is exact for them.
+    """
+    absmax = jnp.max(jnp.abs(x2d), axis=1)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    normed = x2d / scale[:, None]
+    dist = jnp.abs(normed[:, :, None] - cb[None, None, :])
+    codes = jnp.argmin(dist, axis=2).astype(jnp.uint8)
+    return codes, scale.astype(jnp.float32)
+
+
+def dequantize_ref(codes: jnp.ndarray, scale: jnp.ndarray, cb: jnp.ndarray):
+    """Reference block-wise dequantizer: R(codes) ⊙ scales."""
+    return jnp.take(cb, codes.astype(jnp.int32)) * scale[:, None]
+
+
+def quantize_matrix_cols_ref(u: jnp.ndarray, cb: jnp.ndarray, block: int = BLOCK_SIZE):
+    """Quantize a matrix with blocks running down columns (paper §3.3).
+
+    U is (n, m); we quantize U^T row-blocks, i.e. each block of 64 consecutive
+    entries comes from one column of U.
+    """
+    n, m = u.shape
+    assert n % block == 0, (u.shape, block)
+    x2d = u.T.reshape(-1, block)
+    return quantize_ref(x2d, cb)
+
+
+def dequantize_matrix_cols_ref(codes, scale, shape, cb, block: int = BLOCK_SIZE):
+    n, m = shape
+    flat = dequantize_ref(codes, scale, cb)
+    return flat.reshape(m, n).T

@@ -1,0 +1,271 @@
+"""L2: the 4-bit Shampoo optimizer math (Algorithms 1–4 of the paper),
+written in JAX on top of the L1 Pallas kernels, AOT-lowered by aot.py.
+
+Entry points (all matmul-only — no LAPACK custom-calls, so the HLO text
+loads in xla_extension 0.5.1):
+
+  * ``power_iteration``      — λ_max estimate (Algorithm 4 line 8)
+  * ``schur_newton_invroot`` — coupled Newton A^{-1/p} (Algorithm 4 line 9)
+  * ``subspace_iteration``   — warm-started randomized-SVD substitute
+                               (Appendix B, eq. 4 with a polar-factor
+                               orthogonalizer instead of QR)
+  * ``pu_quantized``         — Algorithm 1 (Preconditioner Update)
+  * ``piru_quantized``       — Algorithm 2 (Inverse-4th-Root Update); the
+                               exponent generalizes to -1/2 (AdaBK) and
+                               -1 (K-FAC) per Algorithm 5
+  * ``precondition_4bit``    — Algorithm 3 lines 13–14 (dequant + L̂GR̂ + graft)
+  * ``precondition_caspr_*`` — CASPR variant (Appendix A)
+  * naive / dense arms       — quantize-A-itself (the paper's strawman) and
+                               the 32-bit baseline (Algorithm 4)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import linalg as kl
+from compile.kernels import quant as kq
+
+# ---------------------------------------------------------------------------
+# Matrix-root toolbox (matmul-only)
+# ---------------------------------------------------------------------------
+
+
+def power_iteration(a: jnp.ndarray, iters: int = 10) -> jnp.ndarray:
+    """λ_max of a PSD matrix via power iteration (fixed deterministic start)."""
+    n = a.shape[0]
+    v0 = jnp.ones((n, 1), jnp.float32) / jnp.sqrt(n).astype(jnp.float32)
+
+    def body(_, v):
+        w = kl.matmul(a, v)
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    return jnp.squeeze(v.T @ kl.matmul(a, v))
+
+
+def schur_newton_invroot(a: jnp.ndarray, p: int, iters: int = 20,
+                         lam_max: jnp.ndarray | None = None) -> jnp.ndarray:
+    """A^{-1/p} for PD A by the coupled Newton (Schur–Newton) iteration
+    [Guo & Higham 2006]:   X ← X·T,  M ← Tᵖ·M,  T = ((p+1)I − M)/p,
+    with M₀ = A/λ_max, X₀ = λ_max^{-1/p}·I. Converges since spec(M₀) ⊆ (0,1].
+    """
+    n = a.shape[0]
+    if lam_max is None:
+        lam_max = power_iteration(a)
+    z = 1.0 / jnp.maximum(lam_max, 1e-30)
+    eye = jnp.eye(n, dtype=jnp.float32)
+    m0 = z * a
+    x0 = z ** (1.0 / p) * eye
+    err0 = jnp.max(jnp.abs(m0 - eye))
+
+    def body(_, carry):
+        # Best-iterate selection: a quantized (hence possibly indefinite)
+        # input makes the iteration diverge on the negative eigendirections
+        # — the instability the paper observes for the naive arm (Table 3 /
+        # Fig. 8). We track ‖M−I‖∞ and keep the best X seen, freezing the
+        # state if the candidate goes non-finite.
+        x, m, best_x, best_err = carry
+        t = ((p + 1.0) * eye - m) / p
+        x_new = kl.matmul(x, t)
+        # Tᵖ by repeated squaring for p ∈ {2, 4}; generic fallback otherwise.
+        if p == 2:
+            tp = kl.matmul(t, t)
+        elif p == 4:
+            t2 = kl.matmul(t, t)
+            tp = kl.matmul(t2, t2)
+        else:
+            tp = t
+            for _i in range(p - 1):
+                tp = kl.matmul(tp, t)
+        m_new = kl.matmul(tp, m)
+        err = jnp.max(jnp.abs(m_new - eye))
+        ok = jnp.isfinite(err)
+        x = jnp.where(ok, x_new, x)
+        m = jnp.where(ok, m_new, m)
+        better = ok & (err < best_err)
+        best_x = jnp.where(better, x_new, best_x)
+        best_err = jnp.where(better, err, best_err)
+        return x, m, best_x, best_err
+
+    _, _, x, _ = jax.lax.fori_loop(0, iters, body, (x0, m0, x0, err0))
+    # Symmetrize: X should be symmetric for symmetric A; round-off breaks it.
+    return 0.5 * (x + x.T)
+
+
+def subspace_iteration(a: jnp.ndarray, v: jnp.ndarray, iters: int,
+                       orth_iters: int = 0):
+    """Warm-started subspace (orthogonal) iteration: P ← Orth(A·P).
+
+    The paper's randomized SVD (Appendix B eq. 4) with CGS2 replacing QR —
+    matmul-only, LAPACK-free (DESIGN.md decision 4). `orth_iters` is kept
+    for API stability but unused. Returns (eigenvalues diag(PᵀAP), P).
+    """
+    del orth_iters
+    for _ in range(iters):
+        v = kl.orthogonalize_cgs2(kl.matmul(a, v))
+    av = kl.matmul(a, v)
+    lam = jnp.sum(v * av, axis=0)
+    return lam, v
+
+
+# ---------------------------------------------------------------------------
+# Quantized state helpers
+# ---------------------------------------------------------------------------
+
+
+def _qblock(n: int) -> int:
+    """Quantization block size for an order-n matrix: blocks stay within one
+    column (§3.3), so the block is min(64, n)."""
+    return min(64, n)
+
+
+def dequant_eigen(codes, scales, n: int, cb):
+    """Dequantize an order-n eigenvector matrix stored column-blocked."""
+    return kq.dequantize_matrix_cols(codes, scales, (n, n), cb, _qblock(n))
+
+
+def quant_eigen(u, cb):
+    n = u.shape[0]
+    return kq.quantize_matrix_cols(u, cb, _qblock(n))
+
+
+# ---------------------------------------------------------------------------
+# 4-bit Shampoo (ours): Algorithms 1-3
+# ---------------------------------------------------------------------------
+
+
+def pu_quantized(lam, codes, scales, m_stat, beta, cb, *, t1: int,
+                 sub_iters: int, orth_iters: int):
+    """Algorithm 1 (PU): rebuild A = β·VΛVᵀ + (1−β)·M from the quantized
+    eigenbasis, re-diagonalize by warm-started subspace iteration, requantize.
+    """
+    n = lam.shape[0]
+    v = dequant_eigen(codes, scales, n, cb)
+    v = kl.bjorck(v, t1)
+    a = beta * kl.sandwich(v, lam) + (1.0 - beta) * m_stat
+    lam_new, p = subspace_iteration(a, v, sub_iters, orth_iters)
+    codes_new, scales_new = quant_eigen(p, cb)
+    return lam_new, codes_new, scales_new
+
+
+def piru_quantized(lam, codes, scales, eps, cb, *, t2: int, exponent: float):
+    """Algorithm 2 (PIRU): Â = V(Λ + max{λ}εI)ˢVᵀ, stored as
+    (diag(Â), Q(Â − Diag(diag(Â)))). exponent s = −1/4 for Shampoo,
+    −1/2 for AdaBK, −1 for K-FAC (Algorithm 5)."""
+    n = lam.shape[0]
+    v = dequant_eigen(codes, scales, n, cb)
+    v = kl.bjorck(v, t2)
+    ridge = jnp.max(lam) * eps
+    d = jnp.power(jnp.maximum(lam + ridge, 1e-30), exponent)
+    a_hat = kl.sandwich(v, d)
+    diag = jnp.diagonal(a_hat)
+    off = a_hat - jnp.diag(diag)
+    codes_new, scales_new = quant_eigen(off, cb)
+    return diag, codes_new, scales_new
+
+
+def dequant_invroot(diag, codes, scales, n: int, cb):
+    """Rebuild Â = Diag(a) + D(off-diag codes) (Algorithm 3 line 13)."""
+    off = dequant_eigen(codes, scales, n, cb)
+    return off - jnp.diag(jnp.diagonal(off)) + jnp.diag(diag)
+
+
+def graft(g, g_hat):
+    """Grafting trick (Algorithm 3 line 14): G̃ = Ĝ·(‖G‖_F/‖Ĝ‖_F)."""
+    ng = jnp.linalg.norm(g)
+    nh = jnp.maximum(jnp.linalg.norm(g_hat), 1e-30)
+    return g_hat * (ng / nh)
+
+
+def precondition_4bit(g, l_diag, l_codes, l_scales, r_diag, r_codes,
+                      r_scales, cb):
+    """Algorithm 3 lines 13–14 with 4-bit states on both sides."""
+    m, n = g.shape
+    l_hat = dequant_invroot(l_diag, l_codes, l_scales, m, cb)
+    r_hat = dequant_invroot(r_diag, r_codes, r_scales, n, cb)
+    g_hat = kl.matmul(kl.matmul(l_hat, g), r_hat)
+    return graft(g, g_hat)
+
+
+def precondition_caspr_4bit(g, l_diag, l_codes, l_scales, r_diag, r_codes,
+                            r_scales, cb):
+    """CASPR variant (Appendix A): J = L̂G + GR̂; Ĝ = L̂J + JR̂, grafted."""
+    m, n = g.shape
+    l_hat = dequant_invroot(l_diag, l_codes, l_scales, m, cb)
+    r_hat = dequant_invroot(r_diag, r_codes, r_scales, n, cb)
+    j = kl.matmul(l_hat, g) + kl.matmul(g, r_hat)
+    g_hat = kl.matmul(l_hat, j) + kl.matmul(j, r_hat)
+    return graft(g, g_hat)
+
+
+# ---------------------------------------------------------------------------
+# Naive 4-bit arm: quantize the preconditioner itself (paper's §3.1 strawman;
+# diagonal stored separately in 32-bit — the "slightly improved" naive).
+# ---------------------------------------------------------------------------
+
+
+def quant_sym(a, cb):
+    """Quantize a symmetric matrix excluding its diagonal."""
+    n = a.shape[0]
+    diag = jnp.diagonal(a)
+    off = a - jnp.diag(diag)
+    codes, scales = kq.quantize_matrix_cols(off, cb, _qblock(n))
+    return diag, codes, scales
+
+
+def dequant_sym(diag, codes, scales, n, cb):
+    off = kq.dequantize_matrix_cols(codes, scales, (n, n), cb, _qblock(n))
+    off = off - jnp.diag(jnp.diagonal(off))
+    return off + jnp.diag(diag)
+
+
+def pu_naive(diag, codes, scales, m_stat, beta, cb):
+    """Naive arm PU: A ← β·D(Ā) + (1−β)·M, requantize A directly."""
+    n = diag.shape[0]
+    a = dequant_sym(diag, codes, scales, n, cb)
+    a = beta * a + (1.0 - beta) * m_stat
+    return quant_sym(a, cb)
+
+
+def invroot_naive(diag, codes, scales, eps, cb, *, p: int = 4,
+                  iters: int = 16):
+    """Naive arm inverse root: Schur–Newton on the dequantized preconditioner
+    (Algorithm 4 lines 8–9), result requantized."""
+    n = diag.shape[0]
+    a = dequant_sym(diag, codes, scales, n, cb)
+    lam_max = power_iteration(a)
+    a_hat = schur_newton_invroot(a + lam_max * eps * jnp.eye(n), p,
+                                 iters=iters, lam_max=lam_max * (1 + eps))
+    return quant_sym(a_hat, cb)
+
+
+# ---------------------------------------------------------------------------
+# Dense 32-bit baseline (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+
+def pu_dense(l, m_stat, beta):
+    return beta * l + (1.0 - beta) * m_stat
+
+
+def invroot_dense(l, eps, *, p: int = 4, iters: int = 16):
+    n = l.shape[0]
+    lam_max = power_iteration(l)
+    return schur_newton_invroot(l + lam_max * eps * jnp.eye(n), p,
+                                iters=iters, lam_max=lam_max * (1 + eps))
+
+
+def precondition_dense(g, l_hat, r_hat):
+    return graft(g, kl.matmul(kl.matmul(l_hat, g), r_hat))
+
+
+def precondition_caspr_dense(g, l_hat, r_hat):
+    j = kl.matmul(l_hat, g) + kl.matmul(g, r_hat)
+    return graft(g, kl.matmul(l_hat, j) + kl.matmul(j, r_hat))
+
+
+def gram(g):
+    """(G·Gᵀ, Gᵀ·G) statistics for PU (Algorithm 3 line 6)."""
+    return kl.matmul(g, g.T), kl.matmul(g.T, g)

@@ -1,0 +1,51 @@
+"""Codebook construction vs the paper's Appendix C tables."""
+
+import numpy as np
+import pytest
+
+from compile.quantizer import codebook, dt_codebook, linear2_codebook
+
+# Appendix C, verbatim.
+DT4_PAPER = [-0.8875, -0.6625, -0.4375, -0.2125, -0.0775, -0.0325, -0.0055,
+             0.0000, 0.0055, 0.0325, 0.0775, 0.2125, 0.4375, 0.6625, 0.8875,
+             1.0000]
+DT3_PAPER = [-0.7750, -0.3250, -0.0550, 0.0000, 0.0550, 0.3250, 0.7750,
+             1.0000]
+L24_PAPER = [-1.0000, -0.7511, -0.5378, -0.3600, -0.2178, -0.1111, -0.0400,
+             0.0000, 0.0044, 0.0400, 0.1111, 0.2178, 0.3600, 0.5378, 0.7511,
+             1.0000]
+L23_PAPER = [-1.0000, -0.5102, -0.1837, 0.0000, 0.0204, 0.1837, 0.5102,
+             1.0000]
+
+
+def test_dt4_matches_paper():
+    np.testing.assert_allclose(dt_codebook(4), DT4_PAPER, atol=1e-7)
+
+
+def test_dt3_matches_paper():
+    np.testing.assert_allclose(dt_codebook(3), DT3_PAPER, atol=1e-7)
+
+
+def test_linear2_4_matches_paper():
+    np.testing.assert_allclose(linear2_codebook(4), L24_PAPER, atol=5e-5)
+
+
+def test_linear2_3_matches_paper():
+    np.testing.assert_allclose(linear2_codebook(3), L23_PAPER, atol=5e-5)
+
+
+@pytest.mark.parametrize("mapping", ["dt", "linear2", "linear"])
+@pytest.mark.parametrize("bits", [3, 4, 8])
+def test_codebook_properties(mapping, bits):
+    cb = codebook(mapping, bits)
+    assert cb.shape == (2**bits,)
+    assert np.all(np.diff(cb) > 0), "codebook must be strictly sorted"
+    assert cb.min() >= -1.0 and cb.max() <= 1.0
+    if mapping in ("dt", "linear2"):
+        assert 0.0 in cb, "zero must be representable"
+    assert cb[-1] == 1.0
+
+
+def test_unknown_mapping_raises():
+    with pytest.raises(ValueError):
+        codebook("bogus", 4)

@@ -1,0 +1,87 @@
+"""L1 Pallas linalg kernels vs pure-jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import linalg as kl
+from compile.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.array(rng.standard_normal((m, k)).astype(np.float32))
+    b = jnp.array(rng.standard_normal((k, n)).astype(np.float32))
+    got = np.array(kl.matmul(a, b))
+    want = np.array(ref.matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, atol=1e-4 * max(1, k))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([8, 32, 64, 100]), seed=st.integers(0, 2**31 - 1))
+def test_bjorck_step_and_sandwich(n, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.array(rng.standard_normal((n, n)).astype(np.float32) * 0.1)
+    np.testing.assert_allclose(
+        np.array(kl.bjorck_step(v)), np.array(ref.bjorck_step_ref(v)),
+        atol=1e-4)
+    d = jnp.array(rng.standard_normal(n).astype(np.float32))
+    np.testing.assert_allclose(
+        np.array(kl.sandwich(v, d)), np.array(ref.sandwich_ref(v, d)),
+        atol=1e-4)
+
+
+def test_bjorck_rectifies_quantized_orthogonal():
+    """Eq. 2 improves ‖VᵀV − I‖ for a perturbed orthogonal matrix (§3.2)."""
+    rng = np.random.default_rng(0)
+    n = 64
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    v = jnp.array((q + 0.02 * rng.standard_normal((n, n))).astype(np.float32))
+
+    def dev(x):
+        x = np.array(x)
+        return np.linalg.norm(x.T @ x - np.eye(n))
+
+    d0 = dev(v)
+    d1 = dev(kl.bjorck(v, 1))
+    d2 = dev(kl.bjorck(v, 2))
+    assert d1 < 0.5 * d0
+    assert d2 < d1
+
+
+def test_cgs2_orthogonalizes_ill_conditioned():
+    """CGS2 must survive the wide spectra QR handles (unlike Newton-Schulz)."""
+    rng = np.random.default_rng(1)
+    n = 64
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lam = np.logspace(-6, 1, n)
+    x = jnp.array((q * lam).astype(np.float32))  # extremely skewed columns
+    qq = np.array(kl.orthogonalize_cgs2(x))
+    assert np.linalg.norm(qq.T @ qq - np.eye(n)) < 1e-3
+
+
+def test_cgs2_preserves_column_space():
+    rng = np.random.default_rng(2)
+    n = 32
+    x = rng.standard_normal((n, n)).astype(np.float32)
+    qq = np.array(kl.orthogonalize_cgs2(jnp.array(x)))
+    # Q R' = X for some upper-triangular R' => Qᵀ X is upper triangular
+    r = qq.T @ x
+    lower = np.tril(r, -1)
+    assert np.max(np.abs(lower)) < 1e-3 * np.max(np.abs(r))
+
+
+def test_scale_cols():
+    rng = np.random.default_rng(3)
+    v = jnp.array(rng.standard_normal((16, 16)).astype(np.float32))
+    d = jnp.array(rng.standard_normal(16).astype(np.float32))
+    np.testing.assert_allclose(
+        np.array(kl.scale_cols(v, d)), np.array(v) * np.array(d)[None, :],
+        rtol=1e-6)

@@ -1,0 +1,118 @@
+"""Model graphs: manual MLP backprop vs autodiff, transformer sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def mlp_setup():
+    cfg = M.MLP_CONFIGS["mlp_base"]
+    rng = np.random.default_rng(0)
+    params = [jnp.array(p) for p in M.mlp_init(cfg)]
+    x = jnp.array(rng.standard_normal((cfg.batch, cfg.dims[0])).astype(np.float32))
+    y = jnp.array(rng.integers(0, cfg.dims[-1], cfg.batch).astype(np.int32))
+    return cfg, params, x, y
+
+
+def test_mlp_manual_grads_match_autodiff(mlp_setup):
+    cfg, params, x, y = mlp_setup
+    loss, grads = M.mlp_step(cfg, params, x, y)
+    gref = jax.grad(lambda ps: M.mlp_step(cfg, ps, x, y)[0])(params)
+    for a, b in zip(grads, gref):
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-6)
+
+
+def test_mlp_kfac_stats_shapes_and_psd(mlp_setup):
+    cfg, params, x, y = mlp_setup
+    loss, grads, stats = M.mlp_step(cfg, params, x, y, with_kfac=True)
+    assert len(stats) == 2 * cfg.layers
+    for i in range(cfg.layers):
+        r_stat, l_stat = stats[2 * i], stats[2 * i + 1]
+        assert r_stat.shape == (cfg.dims[i], cfg.dims[i])
+        assert l_stat.shape == (cfg.dims[i + 1], cfg.dims[i + 1])
+        for s in (r_stat, l_stat):
+            w = np.linalg.eigvalsh(np.array(s))
+            assert w.min() > -1e-4, "K-FAC stats must be PSD"
+
+
+def test_mlp_loss_at_init(mlp_setup):
+    cfg, params, x, y = mlp_setup
+    loss, _ = M.mlp_step(cfg, params, x, y)
+    # roughly uniform logits => loss ~ log(classes)
+    assert abs(float(loss) - np.log(cfg.dims[-1])) < 2.0
+
+
+def test_mlp_accuracy_counts(mlp_setup):
+    cfg, params, x, y = mlp_setup
+    loss, correct = M.mlp_accuracy(cfg, params, x, y)
+    assert 0 <= int(correct) <= cfg.batch
+
+
+def test_mlp_one_sgd_step_reduces_loss(mlp_setup):
+    cfg, params, x, y = mlp_setup
+    loss0, grads = M.mlp_step(cfg, params, x, y)
+    params2 = [p - 0.1 * g for p, g in zip(params, grads)]
+    loss1, _ = M.mlp_step(cfg, params2, x, y)
+    assert float(loss1) < float(loss0)
+
+
+@pytest.fixture(scope="module")
+def tlm_setup():
+    cfg = M.TLM_CONFIGS["tlm_tiny"]
+    rng = np.random.default_rng(1)
+    params = [jnp.array(p) for p in M.tlm_init(cfg)]
+    toks = jnp.array(
+        rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq + 1)).astype(np.int32))
+    return cfg, params, toks
+
+
+def test_tlm_loss_at_init(tlm_setup):
+    cfg, params, toks = tlm_setup
+    loss = M.tlm_loss(cfg, params, toks)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+
+def test_tlm_grads_cover_all_params(tlm_setup):
+    cfg, params, toks = tlm_setup
+    loss, grads = M.tlm_step(cfg, params, toks)
+    specs = M.tlm_param_specs(cfg)
+    assert len(grads) == len(specs)
+    for (name, shape), g in zip(specs, grads):
+        assert g.shape == shape, name
+        assert np.all(np.isfinite(np.array(g))), name
+    # embedding must receive gradient (tied head)
+    assert float(jnp.linalg.norm(grads[0])) > 0
+
+
+def test_tlm_one_step_reduces_loss(tlm_setup):
+    cfg, params, toks = tlm_setup
+    loss0, grads = M.tlm_step(cfg, params, toks)
+    params2 = [p - 0.5 * g for p, g in zip(params, grads)]
+    loss1 = M.tlm_loss(cfg, params2, toks)
+    assert float(loss1) < float(loss0)
+
+
+def test_tlm_causality(tlm_setup):
+    """Changing a future token must not change earlier positions' loss
+    contribution — check via per-position logits path: loss w.r.t. prefix."""
+    cfg, params, toks = tlm_setup
+    t2 = toks.at[:, -1].set((toks[:, -1] + 1) % cfg.vocab)
+    # losses differ only through the last target; compare partial forward
+    # by masking: run both and check loss changes (target changed) but
+    # gradients w.r.t. pos embedding at position 0 barely change.
+    _, g1 = M.tlm_step(cfg, params, toks)
+    _, g2 = M.tlm_step(cfg, params, t2)
+    pos_idx = [n for n, _ in M.tlm_param_specs(cfg)].index("pos")
+    d0 = float(jnp.max(jnp.abs(g1[pos_idx][0] - g2[pos_idx][0])))
+    dl = float(jnp.max(jnp.abs(g1[pos_idx][-1] - g2[pos_idx][-1])))
+    assert dl > d0
+
+
+def test_param_counts():
+    cfg = M.TLM_CONFIGS["tlm_small"]
+    n = M.tlm_param_count(cfg)
+    assert 3_000_000 < n < 4_000_000, n

@@ -1,0 +1,96 @@
+"""L1 Pallas quantization kernels vs the pure-jnp oracle (hypothesis sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant as kq
+from compile.kernels import ref
+from compile.quantizer import codebook
+
+CB4 = jnp.array(codebook("linear2", 4))
+CB_DT4 = jnp.array(codebook("dt", 4))
+CB8 = jnp.array(codebook("dt", 8))
+
+
+def _rand(rng, shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nblocks=st.integers(1, 40),
+    block=st.sampled_from([32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-6, 1e-2, 1.0, 1e3]),
+)
+def test_quantize_matches_ref(nblocks, block, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(_rand(rng, (nblocks, block), scale))
+    for cb in (CB4, CB8):
+        ck, sk = kq.quantize_blocks(x, cb)
+        cr, sr = ref.quantize_ref(x, cb)
+        np.testing.assert_array_equal(np.array(ck), np.array(cr))
+        np.testing.assert_allclose(np.array(sk), np.array(sr), rtol=1e-6)
+        dk = kq.dequantize_blocks(ck, sk, cb)
+        dr = ref.dequantize_ref(cr, sr, cb)
+        np.testing.assert_allclose(np.array(dk), np.array(dr), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), nblocks=st.integers(1, 16))
+def test_roundtrip_error_bound(seed, nblocks):
+    """Dequantized value within half the largest codebook gap × block scale."""
+    rng = np.random.default_rng(seed)
+    x = jnp.array(_rand(rng, (nblocks, 64)))
+    for cb in (CB4, CB_DT4):
+        c, s = kq.quantize_blocks(x, cb)
+        d = kq.dequantize_blocks(c, s, cb)
+        gap = float(np.max(np.diff(np.array(cb)))) / 2.0
+        bound = gap * np.array(s)[:, None] + 1e-6
+        assert np.all(np.abs(np.array(d) - np.array(x)) <= bound)
+
+
+def test_exact_codebook_values_roundtrip():
+    """Values exactly on codebook entries (scaled) must roundtrip exactly."""
+    cb = CB4
+    scales = np.array([0.5, 2.0, 7.25], np.float32)
+    x = np.stack([np.resize(np.array(cb), 64) * s for s in scales])
+    c, s = kq.quantize_blocks(jnp.array(x), cb)
+    # absmax of each block is max|cb|*scale = scale (cb max is 1.0)
+    d = kq.dequantize_blocks(c, s, cb)
+    np.testing.assert_allclose(np.array(d), x, rtol=1e-6)
+
+
+def test_zero_block_scale_one():
+    x = jnp.zeros((3, 64))
+    c, s = kq.quantize_blocks(x, CB4)
+    np.testing.assert_array_equal(np.array(s), np.ones(3, np.float32))
+    d = kq.dequantize_blocks(c, s, CB4)
+    np.testing.assert_array_equal(np.array(d), np.zeros((3, 64), np.float32))
+
+
+@pytest.mark.parametrize("n,block", [(64, 64), (128, 64), (32, 32)])
+def test_matrix_cols_roundtrip_shape(n, block):
+    rng = np.random.default_rng(0)
+    u = jnp.array(_rand(rng, (n, n)))
+    c, s = kq.quantize_matrix_cols(u, CB4, block)
+    cr, sr = ref.quantize_matrix_cols_ref(u, CB4, block)
+    np.testing.assert_array_equal(np.array(c), np.array(cr))
+    d = kq.dequantize_matrix_cols(c, s, (n, n), CB4, block)
+    assert d.shape == (n, n)
+    np.testing.assert_allclose(
+        np.array(d), np.array(ref.dequantize_matrix_cols_ref(cr, sr, (n, n), CB4, block)),
+        rtol=1e-6)
+
+
+def test_column_blocking_is_per_column():
+    """A huge entry in one column must not affect other columns' scales."""
+    n = 64
+    u = np.full((n, n), 0.01, np.float32)
+    u[0, 0] = 100.0
+    c, s = kq.quantize_matrix_cols(jnp.array(u), CB4, 64)
+    d = np.array(kq.dequantize_matrix_cols(c, s, (n, n), CB4, 64))
+    # column 1.. should be reconstructed well despite column 0's outlier
+    assert np.max(np.abs(d[:, 1:] - u[:, 1:])) < 0.005

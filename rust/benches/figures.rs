@@ -1,0 +1,130 @@
+//! Bench: regenerates the paper's standalone figures as CSV series under
+//! bench_out/:
+//!   Figure 2 — singular-value distributions, real vs 4-bit-quantized A
+//!   Figure 3 — rectification error vs s and t₂
+//!   Figure 5 — DT vs Linear-2 codebooks at 3/4-bit
+//!   Figure 6 — quantization error vs spectrum contraction coefficient τ
+//! (Figures 1/4/9/10 are the loss/accuracy curves of the training benches —
+//! their CSVs come from table2_training / table12_lm metrics files.)
+
+use std::io::Write;
+
+use shampoo4::errors::{quant_error_in_power, rectification_error, spectrum,
+                       QuantScheme, QuantTarget};
+use shampoo4::linalg::eigh;
+use shampoo4::quant::{codebook, dequantize_matrix_cols, quantize_matrix_cols, Mapping};
+use shampoo4::util::rng::Rng;
+
+fn out(name: &str) -> std::fs::File {
+    std::fs::create_dir_all("bench_out").unwrap();
+    std::fs::File::create(format!("bench_out/{name}")).unwrap()
+}
+
+fn main() {
+    let n: usize = std::env::var("SHAMPOO4_FIG_ORDER")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(384);
+    let mut rng = Rng::new(0);
+    let a1 = spectrum::synthetic_loglinear(n, 37235.0, &mut rng);
+    let a2 = spectrum::synthetic_two_level(n, 1000.0, 1e-3, n / 20, &mut rng);
+
+    // ---- Figure 2: spectra of A and its 4-bit compression -----------------
+    let mut f = out("figure2_spectra.csv");
+    writeln!(f, "matrix,kind,idx,log10_singular_value").unwrap();
+    let cb = codebook(Mapping::Dt, 4);
+    for (mname, a) in [("A1", &a1), ("A2", &a2)] {
+        let real = eigh(a);
+        // quantize A (excl. diag) like the naive arm, then re-decompose
+        let nn = a.rows;
+        let diag = a.diagonal();
+        let mut off = a.clone();
+        for i in 0..nn {
+            off[(i, i)] = 0.0;
+        }
+        let q = quantize_matrix_cols(&off.data, nn, &cb, 4);
+        let mut aq = shampoo4::linalg::Mat::from_vec(nn, nn, dequantize_matrix_cols(&q, nn, &cb));
+        aq.symmetrize();
+        for i in 0..nn {
+            aq[(i, i)] = diag[i];
+        }
+        let quan = eigh(&aq);
+        for (i, &v) in real.vals.iter().enumerate() {
+            writeln!(f, "{mname},real,{i},{}", (v.max(1e-12) as f64).log10()).unwrap();
+        }
+        for (i, &v) in quan.vals.iter().enumerate() {
+            writeln!(f, "{mname},quan,{i},{}", (v.abs().max(1e-12) as f64).log10()).unwrap();
+        }
+        let neg = quan.vals.iter().filter(|&&v| v < 0.0).count();
+        println!("figure2: {mname}: {neg}/{nn} eigenvalues pushed negative by 4-bit quantization of A");
+    }
+
+    // ---- Figure 3: rectification error vs s and t2 ------------------------
+    let mut f = out("figure3_rectify.csv");
+    writeln!(f, "s,t2,log10_mean_err").unwrap();
+    println!("figure3: mean elementwise error of (VΛ^sVᵀ)^(-1/s)(VΛVᵀ) vs I");
+    for s in [-1.0, -0.5, -0.25, -0.125] {
+        for t2 in [0usize, 1, 2, 4, 8] {
+            let e = rectification_error(&a1, s, t2, Mapping::Linear2, 4);
+            writeln!(f, "{s},{t2},{}", e.max(1e-300).log10()).unwrap();
+            if t2 == 0 || t2 == 4 {
+                println!("  s={s:>6} t2={t2}: mean err {e:.3e}");
+            }
+        }
+    }
+
+    // ---- Figure 5: codebooks ----------------------------------------------
+    let mut f = out("figure5_codebooks.csv");
+    writeln!(f, "mapping,bits,j,value").unwrap();
+    for mapping in [Mapping::Dt, Mapping::Linear2] {
+        for bits in [3u32, 4] {
+            for (j, v) in codebook(mapping, bits).iter().enumerate() {
+                writeln!(f, "{},{bits},{j},{v}", mapping.name()).unwrap();
+            }
+        }
+    }
+    println!("figure5: codebooks written");
+
+    // ---- Figure 6: contraction sweep ---------------------------------------
+    let mut f = out("figure6_contraction.csv");
+    writeln!(f, "log2_tau,cond,qm,nre,ae_deg").unwrap();
+    let base_vals = spectrum::loglinear_spectrum(n, 37235.0);
+    println!("figure6: error vs contraction coefficient (QM=U with OR vs QM=A)");
+    for k in 0..8 {
+        let tau = 2f64.powi(-(2 * k) as i32); // 1, 1/4, ..., 1/16384
+        let vals = spectrum::contract_spectrum(&base_vals, tau);
+        let a = spectrum::pd_from_spectrum(&vals, &mut rng);
+        let cond = spectrum::cond(&vals);
+        for (qm, target, rect) in [("A", QuantTarget::Precond, 0), ("U", QuantTarget::Eigen, 1)] {
+            let row = quant_error_in_power(
+                &a,
+                -0.25,
+                QuantScheme {
+                    mapping: Mapping::Linear2,
+                    bits: 4,
+                    target,
+                    rectify: rect,
+                    block: 64,
+                },
+                false,
+            );
+            writeln!(
+                f,
+                "{},{cond:.1},{qm},{:.5},{:.4}",
+                (tau.log2()) as i32,
+                row.nre,
+                row.ae_deg
+            )
+            .unwrap();
+            if k % 2 == 0 {
+                println!(
+                    "  tau=2^{:>3} cond={cond:>9.1} QM={qm}: NRE {:.4} AE {:.3}°",
+                    tau.log2() as i32,
+                    row.nre,
+                    row.ae_deg
+                );
+            }
+        }
+    }
+    println!("figures written to bench_out/");
+}

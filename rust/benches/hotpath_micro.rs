@@ -1,0 +1,116 @@
+//! Hot-path micro-benchmarks (§Perf instrument): times every stage of the
+//! per-step pipeline so the optimization log in EXPERIMENTS.md §Perf has
+//! before/after numbers.
+//!
+//!   cargo bench --bench hotpath_micro
+//!
+//! Stages: native quantize/dequantize + bit packing, partitioner
+//! extract/scatter, native first-order update, host matmul, and the PJRT
+//! artifact executions (gram, precond4, pu, piru, model step).
+
+use shampoo4::config::RunConfig;
+use shampoo4::coordinator::Trainer;
+use shampoo4::linalg::Mat;
+use shampoo4::quant::{codebook, dequantize, pack_bits, quantize, unpack_bits, Mapping};
+use shampoo4::runtime::{HostTensor, Runtime};
+use shampoo4::util::rng::Rng;
+use shampoo4::util::timer::BenchRunner;
+
+fn main() {
+    let runner = BenchRunner::default();
+    let mut rng = Rng::new(0);
+    let cb = codebook(Mapping::Linear2, 4);
+
+    // ---- native quantizer -------------------------------------------------
+    let x: Vec<f32> = rng.normal_vec(128 * 128);
+    let q = quantize(&x, &cb, 4, 64);
+    println!("{}", runner.run("quant/native quantize 128x128", || {
+        std::hint::black_box(quantize(std::hint::black_box(&x), &cb, 4, 64));
+    }).report());
+    println!("{}", runner.run("quant/native dequantize 128x128", || {
+        std::hint::black_box(dequantize(std::hint::black_box(&q), &cb));
+    }).report());
+    let codes = q.codes_u8();
+    println!("{}", runner.run("quant/pack_bits 16k codes", || {
+        std::hint::black_box(pack_bits(std::hint::black_box(&codes), 4));
+    }).report());
+    println!("{}", runner.run("quant/unpack_bits 16k codes", || {
+        std::hint::black_box(unpack_bits(std::hint::black_box(&q.packed), 4, codes.len()));
+    }).report());
+
+    // ---- host linalg --------------------------------------------------------
+    let a = Mat::randn(128, 128, &mut rng);
+    let b = Mat::randn(128, 128, &mut rng);
+    println!("{}", runner.run("linalg/matmul 128x128 host", || {
+        std::hint::black_box(a.matmul(std::hint::black_box(&b)));
+    }).report());
+    let sym = b.gram();
+    println!("{}", runner.run("linalg/eigh 128 (tred2/tqli)", || {
+        std::hint::black_box(shampoo4::linalg::eigh(std::hint::black_box(&sym)));
+    }).report());
+
+    // ---- first-order update -------------------------------------------------
+    let n = 1 << 20;
+    let mut params = rng.normal_vec(n);
+    let grad = rng.normal_vec(n);
+    let mut adamw = shampoo4::optim::AdamW::new(n, 0.9, 0.999, 1e-8, 0.01);
+    use shampoo4::optim::FirstOrder;
+    println!("{}", runner.run("optim/adamw native 1M params", || {
+        adamw.step(&mut params, &grad, 1e-3);
+    }).report());
+
+    // ---- artifact executions -------------------------------------------------
+    let Ok(rt) = Runtime::new(std::path::Path::new("artifacts")) else {
+        println!("artifacts/ missing — skipping PJRT stage benches");
+        return;
+    };
+    let g128 = HostTensor::f32(&[128, 128], rng.normal_vec(128 * 128));
+    println!("{}", runner.run("pjrt/gram_128x128", || {
+        std::hint::black_box(rt.execute("gram_128x128", &[g128.clone()]).unwrap());
+    }).report());
+
+    // precond4 with identity-ish states
+    let cfg2 = shampoo4::config::SecondOrderConfig::default();
+    let cbrt = shampoo4::coordinator::state::codebook_for(&cfg2.quant);
+    let side = shampoo4::coordinator::state::SideState::new(128, &cfg2, &cbrt);
+    let mut inputs = vec![g128.clone()];
+    inputs.extend(side.invroot_inputs().unwrap());
+    inputs.extend(side.invroot_inputs().unwrap());
+    inputs.push(HostTensor::f32(&[16], cbrt.clone()));
+    println!("{}", runner.run("pjrt/precond4_128x128", || {
+        std::hint::black_box(rt.execute("precond4_128x128", &inputs).unwrap());
+    }).report());
+
+    let mut pu_inputs = side.pu_inputs().unwrap();
+    pu_inputs.push(HostTensor::f32(&[128, 128], sym.data.clone()));
+    pu_inputs.push(HostTensor::scalar_f32(0.95));
+    pu_inputs.push(HostTensor::f32(&[16], cbrt.clone()));
+    let slow = BenchRunner::quick();
+    println!("{}", slow.run("pjrt/pu_128 (T1 path)", || {
+        std::hint::black_box(rt.execute("pu_128", &pu_inputs).unwrap());
+    }).report());
+
+    let mut piru_inputs = side.pu_inputs().unwrap();
+    piru_inputs.push(HostTensor::scalar_f32(1e-4));
+    piru_inputs.push(HostTensor::f32(&[16], cbrt));
+    println!("{}", slow.run("pjrt/piru_128 (T2 path)", || {
+        std::hint::black_box(rt.execute("piru_128", &piru_inputs).unwrap());
+    }).report());
+
+    // ---- full training step ----------------------------------------------
+    let mut cfg = RunConfig::default();
+    cfg.model = "mlp_base".into();
+    cfg.steps = 1;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 0;
+    let trainer = Trainer::new(&rt, cfg).unwrap();
+    let batch = trainer.model.make_batch(&trainer.data, false, 0);
+    println!("{}", slow.run("pjrt/mlp_base_step (fwd+bwd+stats)", || {
+        std::hint::black_box(trainer.model.step(&rt, &batch).unwrap());
+    }).report());
+
+    println!("\nper-step budget at T1=100/T2=500 (mlp_base, 6 blocks):");
+    println!("  every step:  model_step + 6×precond4 + flat adamw");
+    println!("  every T1:    + 6×(gram + 2×pu)");
+    println!("  every T2:    + 6×(2×piru)");
+}

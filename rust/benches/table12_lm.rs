@@ -1,0 +1,49 @@
+//! Bench: regenerates Table 12 / Figure 10 — language modeling with
+//! AdamW vs +32-bit Shampoo vs +4-bit naive vs +4-bit ours on the
+//! transformer LM over the synthetic bigram corpus.
+//! SHAMPOO4_BENCH_STEPS (default 200); curves land in bench_out/.
+
+use anyhow::Result;
+use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
+use shampoo4::coordinator::Trainer;
+use shampoo4::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("SHAMPOO4_BENCH_STEPS")
+        .ok().and_then(|v| v.parse().ok()).unwrap_or(200);
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    std::fs::create_dir_all("bench_out").ok();
+    println!("# Table 12 @ tlm_tiny, {steps} steps (paper: GPT2-124M/LLaMA-130M)");
+    println!("{:<34} {:>8} {:>9} {:>10}", "Optimizer", "VL", "WCT(s)", "opt(MB)");
+    // (label, bits, quantize_eigen); bits=0 -> no shampoo
+    let arms: Vec<(&str, u32, bool, f32)> = vec![
+        ("AdamW", 0, true, 1.5),
+        ("AdamW + 32-bit Shampoo", 32, true, 1.0),
+        ("AdamW + 4-bit Shampoo (naive)", 4, false, 1.0),
+        ("AdamW + 4-bit Shampoo (our)", 4, true, 1.0),
+    ];
+    for (label, bits, eigen, mult) in arms {
+        let mut cfg = RunConfig::default();
+        cfg.name = format!("t12_{}", label.replace(' ', "_"));
+        cfg.model = "tlm_tiny".into();
+        cfg.steps = (steps as f32 * mult) as usize;
+        cfg.first.kind = FirstOrderKind::AdamW;
+        cfg.first.lr = 2e-3;
+        cfg.first.weight_decay = 0.05;
+        cfg.second.kind = if bits == 0 { SecondOrderKind::None } else { SecondOrderKind::Shampoo };
+        cfg.second.quant.bits = if bits == 0 { 4 } else { bits };
+        cfg.second.quant.quantize_eigen = eigen;
+        cfg.second.update_precond_every = 10;
+        cfg.second.update_invroot_every = 30;
+        cfg.schedule = Schedule::Cosine { warmup: cfg.steps / 10 };
+        cfg.eval_every = (cfg.steps / 5).max(1);
+        cfg.eval_batches = 4;
+        cfg.log_every = (cfg.steps / 20).max(1);
+        let mut t = Trainer::new(&rt, cfg.clone())?;
+        let res = t.train(&rt, Some(std::path::Path::new(&format!("bench_out/{}.csv", cfg.name))))?;
+        let e = res.final_eval.as_ref().unwrap();
+        println!("{:<34} {:>8.4} {:>9.1} {:>10.2}", label, e.loss, res.wall_secs, res.memory.optimizer_mb());
+    }
+    println!("# curves (Figure 10): bench_out/t12_*.csv");
+    Ok(())
+}

@@ -1,0 +1,28 @@
+//! Bench: regenerates Table 13 — LLaMA2-7B max batch under 80 GiB across
+//! optimizers, via the analytic memory planner (same accounting model as
+//! the live state manager).
+
+use shampoo4::coordinator::memory::{plan, OptimizerPlan, PlannedModel};
+
+fn main() {
+    let budget = 81920usize * 1024 * 1024;
+    let m = PlannedModel::llama2_7b();
+    println!("# Table 13: {} ({:.2}B params), 80GiB A800, ctx 256", m.name, m.param_count() as f64 / 1e9);
+    println!("{:<36} {:>7} {:>12} {:>6}", "Optimizer", "Batch", "TMC(MB)", "fits");
+    let arms = [
+        ("8-bit AdamW", plan(&m, OptimizerPlan::Adam { bits: 8 })),
+        ("8-bit AdamW + 32-bit Shampoo",
+         plan(&m, OptimizerPlan::AdamShampoo { adam_bits: 8, shampoo_bits: 32, max_order: 2048 })),
+        ("8-bit AdamW + 4-bit Shampoo (our)",
+         plan(&m, OptimizerPlan::AdamShampoo { adam_bits: 8, shampoo_bits: 4, max_order: 2048 })),
+    ];
+    for (name, p) in &arms {
+        for batch in [2usize, 64, 128, 256] {
+            let total = p.total_at_batch(batch);
+            println!("{:<36} {:>7} {:>12.0} {:>6}", name, batch,
+                     total as f64 / 1048576.0, if total <= budget { "yes" } else { "OOM" });
+        }
+        println!("{:<36} max batch: {}", name, p.max_batch(budget));
+    }
+    println!("# paper: AdamW fits 128 / OOM 256; +32-bit Shampoo OOM@2; +4-bit fits 64 / OOM 128");
+}

@@ -1,0 +1,56 @@
+//! Bench: regenerates Table 1 (and the Table 5 DT/Linear-2 comparison) —
+//! quantization errors in A^{-1/4} for QM ∈ {A, U}, OR on/off, at 4-bit and
+//! 8-bit, on the spectrum-matched A₁ and the synthetic two-level A₂.
+//!
+//! Order defaults to 512 to keep `cargo bench` snappy; the
+//! quant_error_analysis example runs the paper's exact order 1200.
+//! Set SHAMPOO4_T1_ORDER=1200 to match the paper here.
+
+use shampoo4::errors::{quant_error_in_power, spectrum, QuantScheme, QuantTarget};
+use shampoo4::quant::Mapping;
+use shampoo4::util::rng::Rng;
+use shampoo4::util::timer::Stopwatch;
+
+fn main() {
+    let n: usize = std::env::var("SHAMPOO4_T1_ORDER")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(512);
+    let mut rng = Rng::new(0);
+    let sw = Stopwatch::start();
+    let a1 = spectrum::synthetic_loglinear(n, 37235.0, &mut rng);
+    let a2 = spectrum::synthetic_two_level(n, 1000.0, 1e-3, n / 20, &mut rng);
+    println!("# Table 1 @ order {n} (paper: 1200); setup {:.1}s", sw.secs());
+    println!(
+        "{:<4} {:<9} {:>4} {:>3} {:>4} {:>8} {:>8}  (paper 4-bit A1: A/U/U+OR = 0.62/0.05-0.07/0.03-0.05)",
+        "mat", "mapping", "bit", "QM", "OR", "NRE", "AE"
+    );
+    for (mname, a) in [("A1", &a1), ("A2", &a2)] {
+        for mapping in [Mapping::Dt, Mapping::Linear2] {
+            for (bits, target, rect, block) in [
+                (8u32, QuantTarget::Precond, 0usize, 256usize),
+                (4, QuantTarget::Precond, 0, 64),
+                (4, QuantTarget::Eigen, 0, 64),
+                (4, QuantTarget::Eigen, 1, 64),
+            ] {
+                let row = quant_error_in_power(
+                    a,
+                    -0.25,
+                    QuantScheme { mapping, bits, target, rectify: rect, block },
+                    false,
+                );
+                println!(
+                    "{:<4} {:<9} {:>4} {:>3} {:>4} {:>8.4} {:>8.4}",
+                    mname,
+                    mapping.name(),
+                    bits,
+                    if target == QuantTarget::Eigen { "U" } else { "A" },
+                    if rect > 0 { "yes" } else { "no" },
+                    row.nre,
+                    row.ae_deg
+                );
+            }
+        }
+    }
+    println!("# total {:.1}s", sw.secs());
+}

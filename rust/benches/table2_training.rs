@@ -1,0 +1,84 @@
+//! Bench: regenerates Table 2 (+ Figures 1/4 as CSV curves) at laptop
+//! scale — test accuracy / validation loss, wall-clock time, and exact
+//! optimizer memory for {F, F + 32-bit Shampoo, F + 4-bit Shampoo} on the
+//! MLP classifier (CNN stand-in) and the tiny transformer LM (ViT/Swin
+//! stand-in). First-order arms run 1.5× the steps, like the paper's
+//! 1.2–1.5× epochs.
+//!
+//! SHAMPOO4_BENCH_STEPS overrides the per-arm second-order step count
+//! (default 200).
+
+use anyhow::Result;
+use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
+use shampoo4::coordinator::Trainer;
+use shampoo4::runtime::Runtime;
+
+fn steps_default() -> usize {
+    std::env::var("SHAMPOO4_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200)
+}
+
+struct Arm {
+    label: &'static str,
+    model: &'static str,
+    f: FirstOrderKind,
+    lr: f32,
+    bits: u32, // 0 = no shampoo
+    steps_mult: f32,
+}
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let steps = steps_default();
+    let arms = [
+        Arm { label: "SGDM", model: "mlp_base", f: FirstOrderKind::Sgdm, lr: 0.05, bits: 0, steps_mult: 1.5 },
+        Arm { label: "SGDM + 32-bit Shampoo", model: "mlp_base", f: FirstOrderKind::Sgdm, lr: 0.05, bits: 32, steps_mult: 1.0 },
+        Arm { label: "SGDM + 4-bit Shampoo (our)", model: "mlp_base", f: FirstOrderKind::Sgdm, lr: 0.05, bits: 4, steps_mult: 1.0 },
+        Arm { label: "AdamW", model: "tlm_tiny", f: FirstOrderKind::AdamW, lr: 2e-3, bits: 0, steps_mult: 1.5 },
+        Arm { label: "AdamW + 32-bit Shampoo", model: "tlm_tiny", f: FirstOrderKind::AdamW, lr: 2e-3, bits: 32, steps_mult: 1.0 },
+        Arm { label: "AdamW + 4-bit Shampoo (our)", model: "tlm_tiny", f: FirstOrderKind::AdamW, lr: 2e-3, bits: 4, steps_mult: 1.0 },
+    ];
+    println!("# Table 2 @ {steps} second-order steps (paper: 100-300 epochs)");
+    println!(
+        "{:<30} {:<10} {:>8} {:>9} {:>8} {:>10} {:>10}",
+        "Optimizer", "Model", "TA(%)", "VL", "WCT(s)", "opt(MB)", "total(MB)"
+    );
+    std::fs::create_dir_all("bench_out").ok();
+    for arm in &arms {
+        let mut cfg = RunConfig::default();
+        cfg.name = format!("table2_{}_{}", arm.model, arm.label.replace(' ', "_"));
+        cfg.model = arm.model.to_string();
+        cfg.steps = (steps as f32 * arm.steps_mult) as usize;
+        cfg.first.kind = arm.f;
+        cfg.first.lr = arm.lr;
+        cfg.first.weight_decay = if arm.f == FirstOrderKind::Sgdm { 5e-4 } else { 0.05 };
+        cfg.second.kind = if arm.bits == 0 { SecondOrderKind::None } else { SecondOrderKind::Shampoo };
+        cfg.second.quant.bits = if arm.bits == 0 { 4 } else { arm.bits };
+        cfg.second.update_precond_every = 10;
+        cfg.second.update_invroot_every = 30;
+        cfg.schedule = Schedule::Cosine { warmup: cfg.steps / 20 };
+        cfg.eval_every = (cfg.steps / 4).max(1);
+        cfg.eval_batches = 8;
+        cfg.log_every = (cfg.steps / 20).max(1);
+        let mut t = Trainer::new(&rt, cfg.clone())?;
+        let res = t.train(
+            &rt,
+            Some(std::path::Path::new(&format!("bench_out/{}.csv", cfg.name))),
+        )?;
+        let e = res.final_eval.as_ref().unwrap();
+        println!(
+            "{:<30} {:<10} {:>8} {:>9.4} {:>8.1} {:>10.2} {:>10.2}",
+            arm.label,
+            arm.model,
+            e.accuracy.map(|a| format!("{:.2}", a * 100.0)).unwrap_or("-".into()),
+            e.loss,
+            res.wall_secs,
+            res.memory.optimizer_mb(),
+            res.memory.total_mb()
+        );
+    }
+    println!("# curves (Figures 1/4): bench_out/table2_*.csv");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Bench: regenerates Table 3 — quantization-technique ablation
+//! (QM ∈ {A, U} × OR × {DT, Linear-2} × {3, 4}-bit) on the transformer LM.
+//! Delegates to the same arms as examples/ablation_sweep.rs but sized for
+//! `cargo bench` (SHAMPOO4_BENCH_STEPS, default 120).
+
+use anyhow::Result;
+use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
+use shampoo4::coordinator::Trainer;
+use shampoo4::quant::Mapping;
+use shampoo4::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("SHAMPOO4_BENCH_STEPS")
+        .ok().and_then(|v| v.parse().ok()).unwrap_or(120);
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    println!("# Table 3 @ tlm_tiny, {steps} steps (paper: Swin-Tiny, 100 epochs)");
+    println!("{:<10} {:>4} {:>3} {:>4} {:>9} {:>9}", "mapping", "bits", "QM", "OR", "TL", "VL");
+    let arms: Vec<(Mapping, u32, bool, bool)> = vec![
+        (Mapping::Linear2, 4, false, false),
+        (Mapping::Dt, 4, true, false),
+        (Mapping::Linear2, 4, true, false),
+        (Mapping::Linear2, 4, true, true),
+        (Mapping::Linear2, 3, false, false),
+        (Mapping::Dt, 3, true, false),
+        (Mapping::Linear2, 3, true, false),
+        (Mapping::Linear2, 3, true, true),
+    ];
+    for (mapping, bits, eigen, rect) in arms {
+        let mut cfg = RunConfig::default();
+        cfg.name = format!("t3b_{}_{bits}_{eigen}_{rect}", mapping.name());
+        cfg.model = "tlm_tiny".into();
+        cfg.steps = steps;
+        cfg.first.kind = FirstOrderKind::AdamW;
+        cfg.first.lr = 2e-3;
+        cfg.second.kind = SecondOrderKind::Shampoo;
+        cfg.second.quant.mapping = mapping;
+        cfg.second.quant.bits = bits;
+        cfg.second.quant.quantize_eigen = eigen;
+        cfg.second.quant.rectify = rect;
+        cfg.second.update_precond_every = 20;
+        cfg.second.update_invroot_every = 40;
+        cfg.schedule = Schedule::Cosine { warmup: steps / 20 };
+        cfg.eval_every = 0;
+        cfg.eval_batches = 4;
+        cfg.log_every = steps;
+        let row = (|| -> Result<(f32, f32)> {
+            let mut t = Trainer::new(&rt, cfg.clone())?;
+            let res = t.train(&rt, None)?;
+            Ok((
+                res.losses.last().map(|(_, l)| *l).unwrap_or(f32::NAN),
+                res.final_eval.map(|e| e.loss).unwrap_or(f32::NAN),
+            ))
+        })();
+        match row {
+            Ok((tl, vl)) => println!(
+                "{:<10} {:>4} {:>3} {:>4} {:>9.4} {:>9.4}",
+                mapping.name(), bits, if eigen { "U" } else { "A" },
+                if rect { "yes" } else { "no" }, tl, vl
+            ),
+            Err(e) => println!(
+                "{:<10} {:>4} {:>3} {:>4}  NaN/FAILED ({e})",
+                mapping.name(), bits, if eigen { "U" } else { "A" },
+                if rect { "yes" } else { "no" }
+            ),
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Bench: regenerates Table 4 — applying the 4-bit quantization techniques
+//! to K-FAC, AdaBK, and CASPR (vs their 32-bit versions) on the MLP
+//! classifier (the K-FAC family needs per-layer activation statistics).
+//! SHAMPOO4_BENCH_STEPS (default 150).
+
+use anyhow::Result;
+use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
+use shampoo4::coordinator::Trainer;
+use shampoo4::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::var("SHAMPOO4_BENCH_STEPS")
+        .ok().and_then(|v| v.parse().ok()).unwrap_or(150);
+    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    println!("# Table 4 @ mlp_base, {steps} steps (paper: Swin-Tiny/CIFAR-100)");
+    println!("{:<28} {:>7} {:>9} {:>9} {:>10}", "Optimizer", "TA(%)", "VL", "WCT(s)", "opt(MB)");
+    let arms: Vec<(SecondOrderKind, u32)> = vec![
+        (SecondOrderKind::KFac, 32),
+        (SecondOrderKind::KFac, 4),
+        (SecondOrderKind::AdaBk, 32),
+        (SecondOrderKind::AdaBk, 4),
+        (SecondOrderKind::Caspr, 32),
+        (SecondOrderKind::Caspr, 4),
+        (SecondOrderKind::Shampoo, 4),
+    ];
+    for (kind, bits) in arms {
+        let mut cfg = RunConfig::default();
+        cfg.name = format!("t4_{}_{bits}", kind.name());
+        cfg.model = "mlp_base".into();
+        cfg.steps = steps;
+        cfg.first.kind = FirstOrderKind::AdamW;
+        cfg.first.lr = 1e-3;
+        cfg.second.kind = kind;
+        cfg.second.quant.bits = bits;
+        // paper: K-FAC/AdaBK use beta=0.9 and longer intervals
+        if matches!(kind, SecondOrderKind::KFac | SecondOrderKind::AdaBk) {
+            cfg.second.beta = 0.9;
+            cfg.second.eps = if kind == SecondOrderKind::KFac { 0.1 } else { 0.001 };
+        }
+        cfg.second.update_precond_every = 20;
+        cfg.second.update_invroot_every = 60;
+        cfg.schedule = Schedule::Cosine { warmup: steps / 20 };
+        cfg.eval_every = 0;
+        cfg.eval_batches = 8;
+        cfg.log_every = steps;
+        let mut t = Trainer::new(&rt, cfg)?;
+        let res = t.train(&rt, None)?;
+        let e = res.final_eval.as_ref().unwrap();
+        println!(
+            "{:<28} {:>7.2} {:>9.4} {:>9.1} {:>10.2}",
+            format!("AdamW+{}-bit {}", bits, kind.name()),
+            e.accuracy.unwrap_or(0.0) * 100.0,
+            e.loss,
+            res.wall_secs,
+            res.memory.optimizer_mb()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,392 @@
+//! Run configuration: one TOML file describes a full training run
+//! (model, data, first-order optimizer, second-order preconditioner,
+//! quantization, schedule). See configs/ for shipped presets.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::quant::Mapping;
+use crate::util::tomlcfg::TomlDoc;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FirstOrderKind {
+    Sgdm,
+    AdamW,
+    NAdamW,
+    Adagrad,
+    SgdScheduleFree,
+    AdamWScheduleFree,
+    MFac,
+}
+
+impl FirstOrderKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sgdm" | "sgd" => Self::Sgdm,
+            "adamw" => Self::AdamW,
+            "nadamw" => Self::NAdamW,
+            "adagrad" => Self::Adagrad,
+            "sgdschedulefree" | "sgd_schedule_free" => Self::SgdScheduleFree,
+            "adamwschedulefree" | "adamw_schedule_free" => Self::AdamWScheduleFree,
+            "mfac" | "m-fac" => Self::MFac,
+            other => bail!("unknown first-order optimizer {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sgdm => "SGDM",
+            Self::AdamW => "AdamW",
+            Self::NAdamW => "NAdamW",
+            Self::Adagrad => "Adagrad",
+            Self::SgdScheduleFree => "SGDScheduleFree",
+            Self::AdamWScheduleFree => "AdamWScheduleFree",
+            Self::MFac => "M-FAC",
+        }
+    }
+}
+
+/// Second-order preconditioner family (Algorithm 3/5 + Appendix A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SecondOrderKind {
+    None,
+    Shampoo,
+    Caspr,
+    KFac,
+    AdaBk,
+}
+
+impl SecondOrderKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "" => Self::None,
+            "shampoo" => Self::Shampoo,
+            "caspr" => Self::Caspr,
+            "kfac" | "k-fac" => Self::KFac,
+            "adabk" | "ada_bk" => Self::AdaBk,
+            other => bail!("unknown second-order optimizer {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Shampoo => "Shampoo",
+            Self::Caspr => "CASPR",
+            Self::KFac => "K-FAC",
+            Self::AdaBk => "AdaBK",
+        }
+    }
+
+    /// Inverse-root exponent denominator α: Â = (L + ρI)^{-1/α}.
+    pub fn alpha(&self) -> u32 {
+        match self {
+            Self::KFac => 1,
+            Self::AdaBk => 2,
+            _ => 4,
+        }
+    }
+}
+
+/// Quantized-state policy for the second-order states.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantConfig {
+    /// 32 = dense baseline (no quantization).
+    pub bits: u32,
+    pub mapping: Mapping,
+    /// Quantize the eigenvector matrix (ours) vs the preconditioner (naive).
+    pub quantize_eigen: bool,
+    /// Björck rectification on (t1/t2 from the manifest defaults).
+    pub rectify: bool,
+    /// Matrices with fewer elements than this stay 32-bit (paper: 4096).
+    pub min_quant_elems: usize,
+}
+
+impl Default for QuantConfig {
+    fn default() -> Self {
+        Self {
+            bits: 4,
+            mapping: Mapping::Linear2,
+            quantize_eigen: true,
+            rectify: true,
+            min_quant_elems: 4096,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SecondOrderConfig {
+    pub kind: SecondOrderKind,
+    pub quant: QuantConfig,
+    /// Preconditioner update interval (T1).
+    pub update_precond_every: usize,
+    /// Inverse-root update interval (T2).
+    pub update_invroot_every: usize,
+    /// EMA decay β for preconditioners.
+    pub beta: f32,
+    /// Dampening ε.
+    pub eps: f32,
+    /// Max preconditioner order (blocks above are split).
+    pub max_order: usize,
+    /// Start preconditioning after this step (warmup on pure F).
+    pub start_step: usize,
+}
+
+impl Default for SecondOrderConfig {
+    fn default() -> Self {
+        Self {
+            kind: SecondOrderKind::Shampoo,
+            quant: QuantConfig::default(),
+            update_precond_every: 100,
+            update_invroot_every: 500,
+            beta: 0.95,
+            eps: 1e-4,
+            max_order: 128,
+            start_step: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct FirstOrderConfig {
+    pub kind: FirstOrderKind,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub momentum: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// M-FAC gradient history length.
+    pub mfac_m: usize,
+}
+
+impl Default for FirstOrderConfig {
+    fn default() -> Self {
+        Self {
+            kind: FirstOrderKind::AdamW,
+            lr: 1e-3,
+            weight_decay: 0.05,
+            momentum: 0.9,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            mfac_m: 8,
+        }
+    }
+}
+
+/// Learning-rate schedule (Appendix G uses multi-step for CNNs, cosine for
+/// transformers, plus the schedule-free arm).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant,
+    Cosine { warmup: usize },
+    MultiStep { warmup: usize, decay_every_frac: f32, gamma: f32 },
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub name: String,
+    pub model: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub first: FirstOrderConfig,
+    pub second: SecondOrderConfig,
+    pub schedule: Schedule,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub log_every: usize,
+    pub artifact_dir: String,
+    /// Record dynamic quantization error against a 32-bit shadow
+    /// preconditioner (Figures 7/8).
+    pub shadow_quant_error: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            name: "run".into(),
+            model: "mlp_base".into(),
+            steps: 200,
+            seed: 0,
+            first: FirstOrderConfig::default(),
+            second: SecondOrderConfig::default(),
+            schedule: Schedule::Cosine { warmup: 10 },
+            eval_every: 100,
+            eval_batches: 8,
+            log_every: 10,
+            artifact_dir: "artifacts".into(),
+            shadow_quant_error: false,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut cfg = RunConfig::default();
+        cfg.name = doc.str_or("name", &cfg.name);
+        cfg.model = doc.str_or("model.kind", &cfg.model);
+        cfg.steps = doc.usize_or("run.steps", cfg.steps);
+        cfg.seed = doc.i64_or("run.seed", cfg.seed as i64) as u64;
+        cfg.eval_every = doc.usize_or("run.eval_every", cfg.eval_every);
+        cfg.eval_batches = doc.usize_or("run.eval_batches", cfg.eval_batches);
+        cfg.log_every = doc.usize_or("run.log_every", cfg.log_every);
+        cfg.artifact_dir = doc.str_or("run.artifact_dir", &cfg.artifact_dir);
+        cfg.shadow_quant_error = doc.bool_or("run.shadow_quant_error", false);
+
+        let f = &mut cfg.first;
+        f.kind = FirstOrderKind::parse(&doc.str_or("optimizer.kind", "adamw"))?;
+        f.lr = doc.f64_or("optimizer.lr", f.lr as f64) as f32;
+        f.weight_decay = doc.f64_or("optimizer.weight_decay", f.weight_decay as f64) as f32;
+        f.momentum = doc.f64_or("optimizer.momentum", f.momentum as f64) as f32;
+        f.beta1 = doc.f64_or("optimizer.beta1", f.beta1 as f64) as f32;
+        f.beta2 = doc.f64_or("optimizer.beta2", f.beta2 as f64) as f32;
+        f.eps = doc.f64_or("optimizer.eps", f.eps as f64) as f32;
+        f.mfac_m = doc.usize_or("optimizer.mfac_m", f.mfac_m);
+
+        let s = &mut cfg.second;
+        s.kind = SecondOrderKind::parse(&doc.str_or("shampoo.kind", "shampoo"))?;
+        if !doc.bool_or("shampoo.enabled", true) {
+            s.kind = SecondOrderKind::None;
+        }
+        s.update_precond_every = doc.usize_or("shampoo.t1", s.update_precond_every);
+        s.update_invroot_every = doc.usize_or("shampoo.t2", s.update_invroot_every);
+        s.beta = doc.f64_or("shampoo.beta", s.beta as f64) as f32;
+        s.eps = doc.f64_or("shampoo.eps", s.eps as f64) as f32;
+        s.max_order = doc.usize_or("shampoo.max_order", s.max_order);
+        s.start_step = doc.usize_or("shampoo.start_step", s.start_step);
+
+        let q = &mut s.quant;
+        q.bits = doc.usize_or("quant.bits", q.bits as usize) as u32;
+        q.mapping = Mapping::parse(&doc.str_or("quant.mapping", "linear2"))
+            .context("quant.mapping")?;
+        q.quantize_eigen = doc.bool_or("quant.quantize_eigen", q.quantize_eigen);
+        q.rectify = doc.bool_or("quant.rectify", q.rectify);
+        q.min_quant_elems = doc.usize_or("quant.min_quant_elems", q.min_quant_elems);
+
+        cfg.schedule = match doc.str_or("schedule.kind", "cosine").as_str() {
+            "constant" => Schedule::Constant,
+            "cosine" => Schedule::Cosine { warmup: doc.usize_or("schedule.warmup", 10) },
+            "multistep" => Schedule::MultiStep {
+                warmup: doc.usize_or("schedule.warmup", 10),
+                decay_every_frac: doc.f64_or("schedule.decay_every_frac", 0.3) as f32,
+                gamma: doc.f64_or("schedule.gamma", 0.1) as f32,
+            },
+            other => bail!("unknown schedule {other:?}"),
+        };
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// LR multiplier at a step (the F's base lr × this).
+    pub fn lr_at(&self, step: usize) -> f32 {
+        match self.schedule {
+            Schedule::Constant => 1.0,
+            Schedule::Cosine { warmup } => {
+                if step < warmup {
+                    (step + 1) as f32 / warmup.max(1) as f32
+                } else {
+                    let t = (step - warmup) as f32
+                        / (self.steps.saturating_sub(warmup)).max(1) as f32;
+                    0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos())
+                }
+            }
+            Schedule::MultiStep { warmup, decay_every_frac, gamma } => {
+                if step < warmup {
+                    (step + 1) as f32 / warmup.max(1) as f32
+                } else {
+                    let phase = (step as f32 / self.steps.max(1) as f32
+                        / decay_every_frac) as usize;
+                    gamma.powi(phase as i32)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+name = "swin-like"
+[model]
+kind = "tlm_small"
+[run]
+steps = 400
+seed = 3
+[optimizer]
+kind = "adamw"
+lr = 0.001
+weight_decay = 0.05
+[shampoo]
+kind = "shampoo"
+t1 = 100
+t2 = 500
+beta = 0.95
+[quant]
+bits = 4
+mapping = "linear2"
+quantize_eigen = true
+[schedule]
+kind = "cosine"
+warmup = 20
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.model, "tlm_small");
+        assert_eq!(cfg.steps, 400);
+        assert_eq!(cfg.second.update_precond_every, 100);
+        assert_eq!(cfg.second.quant.bits, 4);
+        assert_eq!(cfg.first.kind, FirstOrderKind::AdamW);
+        assert!(matches!(cfg.schedule, Schedule::Cosine { warmup: 20 }));
+    }
+
+    #[test]
+    fn disabled_shampoo() {
+        let cfg = RunConfig::from_toml_str("[shampoo]\nenabled = false").unwrap();
+        assert_eq!(cfg.second.kind, SecondOrderKind::None);
+    }
+
+    #[test]
+    fn bad_optimizer_rejected() {
+        assert!(RunConfig::from_toml_str("[optimizer]\nkind = \"zzz\"").is_err());
+    }
+
+    #[test]
+    fn cosine_schedule_shape() {
+        let mut cfg = RunConfig::default();
+        cfg.steps = 100;
+        cfg.schedule = Schedule::Cosine { warmup: 10 };
+        assert!(cfg.lr_at(0) < 0.2);
+        assert!((cfg.lr_at(10) - 1.0).abs() < 0.01);
+        assert!(cfg.lr_at(99) < 0.01);
+    }
+
+    #[test]
+    fn multistep_decays() {
+        let mut cfg = RunConfig::default();
+        cfg.steps = 100;
+        cfg.schedule = Schedule::MultiStep { warmup: 0, decay_every_frac: 0.3, gamma: 0.1 };
+        assert!((cfg.lr_at(1) - 1.0).abs() < 1e-6);
+        assert!((cfg.lr_at(35) - 0.1).abs() < 1e-6);
+        assert!((cfg.lr_at(65) - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn alpha_per_kind() {
+        assert_eq!(SecondOrderKind::Shampoo.alpha(), 4);
+        assert_eq!(SecondOrderKind::AdaBk.alpha(), 2);
+        assert_eq!(SecondOrderKind::KFac.alpha(), 1);
+    }
+}

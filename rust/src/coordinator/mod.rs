@@ -1,0 +1,22 @@
+//! L3 coordinator: the training framework around the paper's optimizer.
+//!
+//! * `partition`    — Shampoo blocking of parameters into bucket orders
+//! * `state`        — quantized / dense / naive preconditioner block states
+//! * `second_order` — Algorithm 3 orchestration over the AOT artifacts
+//! * `model`        — parameter buffers + model step/eval marshaling
+//! * `trainer`      — the training loop, eval, metrics, checkpoints
+//! * `shadow`       — 32-bit shadow for dynamic quant-error (Figs 7/8)
+//! * `memory`       — analytic planner (Table 13) sharing the live
+//!                    byte-accounting model
+
+pub mod memory;
+pub mod model;
+pub mod partition;
+pub mod second_order;
+pub mod shadow;
+pub mod state;
+pub mod trainer;
+
+pub use model::ModelHandle;
+pub use second_order::SecondOrder;
+pub use trainer::{EvalPoint, MemoryReport, TrainResult, Trainer};

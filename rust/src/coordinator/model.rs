@@ -1,0 +1,195 @@
+//! Model handle: host-side parameter buffers + marshaling into the model
+//! step/eval artifacts. Initialization mirrors python/compile/model.py
+//! (same distribution families; bit-identical init is not required — the
+//! compute graphs are identical).
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{corpus::BigramCorpus, vision::VisionDataset, Batch};
+use crate::runtime::{HostTensor, ModelSpec, Runtime};
+use crate::util::rng::Rng;
+
+pub struct ModelHandle {
+    pub name: String,
+    pub spec: ModelSpec,
+    pub params: Vec<Vec<f32>>,
+    pub shapes: Vec<Vec<usize>>,
+    pub names: Vec<String>,
+}
+
+impl ModelHandle {
+    pub fn new(rt: &Runtime, name: &str, seed: u64) -> Result<Self> {
+        let spec = rt
+            .manifest
+            .models
+            .get(name)
+            .with_context(|| format!("unknown model {name}"))?
+            .clone();
+        let shapes: Vec<Vec<usize>> = spec.params.iter().map(|p| p.shape.clone()).collect();
+        let names: Vec<String> = spec.params.iter().map(|p| p.name.clone()).collect();
+        let mut rng = Rng::new(seed ^ 0x0DE1_0001);
+        let params = match spec.kind.as_str() {
+            "mlp" => init_mlp(&names, &shapes, &mut rng),
+            "tlm" => init_tlm(&names, &shapes, spec.params.len(), &mut rng),
+            other => bail!("unknown model kind {other}"),
+        };
+        Ok(Self { name: name.to_string(), spec, params, shapes, names })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    pub fn params_bytes(&self) -> usize {
+        self.param_count() * 4
+    }
+
+    fn param_tensors(&self, params: &[Vec<f32>]) -> Vec<HostTensor> {
+        params
+            .iter()
+            .zip(&self.shapes)
+            .map(|(p, s)| HostTensor::f32(s, p.clone()))
+            .collect()
+    }
+
+    fn batch_tensors(&self, batch: &Batch) -> Result<Vec<HostTensor>> {
+        Ok(match batch {
+            Batch::Vision { x, y, batch, dim } => vec![
+                HostTensor::f32(&[*batch, *dim], x.clone()),
+                HostTensor::i32(&[*batch], y.clone()),
+            ],
+            Batch::Tokens { tokens, batch, seq_plus1 } => vec![HostTensor::i32(
+                &[*batch, *seq_plus1],
+                tokens.clone(),
+            )],
+        })
+    }
+
+    /// Run the fwd/bwd step artifact: returns (loss, grads, kfac_stats).
+    /// kfac_stats is empty for transformer models.
+    pub fn step(
+        &self,
+        rt: &Runtime,
+        batch: &Batch,
+    ) -> Result<(f32, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        let mut inputs = self.param_tensors(&self.params);
+        inputs.extend(self.batch_tensors(batch)?);
+        let outs = rt.execute(&self.spec.step, &inputs)?;
+        let loss = outs[0].as_f32()?[0];
+        let np = self.params.len();
+        let mut grads = Vec::with_capacity(np);
+        for o in &outs[1..1 + np] {
+            grads.push(o.clone().into_f32()?);
+        }
+        let mut stats = Vec::new();
+        for o in &outs[1 + np..] {
+            stats.push(o.clone().into_f32()?);
+        }
+        Ok((loss, grads, stats))
+    }
+
+    /// Run the eval artifact with given parameters (may differ from the
+    /// training iterate, e.g. schedule-free averages).
+    /// Returns (loss, correct-or-None).
+    pub fn eval(
+        &self,
+        rt: &Runtime,
+        params: &[Vec<f32>],
+        batch: &Batch,
+    ) -> Result<(f32, Option<usize>)> {
+        let mut inputs = self.param_tensors(params);
+        inputs.extend(self.batch_tensors(batch)?);
+        let outs = rt.execute(&self.spec.eval, &inputs)?;
+        let loss = outs[0].as_f32()?[0];
+        let correct = if outs.len() > 1 {
+            Some(outs[1].as_i32()?[0] as usize)
+        } else {
+            None
+        };
+        Ok((loss, correct))
+    }
+
+    /// Build the data source matching this model.
+    pub fn data_source(&self, seed: u64) -> DataSource {
+        match self.spec.kind.as_str() {
+            "mlp" => DataSource::Vision(VisionDataset::new(
+                self.spec.dims[0],
+                self.spec.classes,
+                seed,
+            )),
+            _ => DataSource::Corpus(BigramCorpus::new(self.spec.vocab, seed)),
+        }
+    }
+
+    pub fn make_batch(&self, src: &DataSource, test: bool, index: u64) -> Batch {
+        match src {
+            DataSource::Vision(ds) => {
+                let (x, y) = ds.batch(
+                    self.spec.batch,
+                    if test { crate::data::vision::Split::Test } else { crate::data::vision::Split::Train },
+                    index,
+                );
+                Batch::Vision { x, y, batch: self.spec.batch, dim: self.spec.dims[0] }
+            }
+            DataSource::Corpus(c) => {
+                let toks = c.batch(self.spec.batch, self.spec.seq + 1, test, index);
+                Batch::Tokens {
+                    tokens: toks,
+                    batch: self.spec.batch,
+                    seq_plus1: self.spec.seq + 1,
+                }
+            }
+        }
+    }
+}
+
+pub enum DataSource {
+    Vision(VisionDataset),
+    Corpus(BigramCorpus),
+}
+
+fn init_mlp(names: &[String], shapes: &[Vec<usize>], rng: &mut Rng) -> Vec<Vec<f32>> {
+    names
+        .iter()
+        .zip(shapes)
+        .map(|(name, shape)| {
+            if name.starts_with('w') && shape.len() == 2 {
+                let std = (2.0 / shape[0] as f64).sqrt() as f32;
+                rng.normal_vec(shape.iter().product())
+                    .into_iter()
+                    .map(|x| x * std)
+                    .collect()
+            } else {
+                vec![0.0; shape.iter().product()]
+            }
+        })
+        .collect()
+}
+
+fn init_tlm(names: &[String], shapes: &[Vec<usize>], _np: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    // depth-scaled init like python tlm_init
+    let n_layers = names
+        .iter()
+        .filter(|n| n.ends_with(".wqkv"))
+        .count()
+        .max(1);
+    names
+        .iter()
+        .zip(shapes)
+        .map(|(name, shape)| {
+            let n: usize = shape.iter().product();
+            if name.ends_with("_g") {
+                vec![1.0; n]
+            } else if name.ends_with("_b") {
+                vec![0.0; n]
+            } else {
+                let std = if name.ends_with(".wo") || name.ends_with(".w2") {
+                    0.02 / (2.0 * n_layers as f64).sqrt()
+                } else {
+                    0.02
+                } as f32;
+                rng.normal_vec(n).into_iter().map(|x| x * std).collect()
+            }
+        })
+        .collect()
+}

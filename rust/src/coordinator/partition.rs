@@ -1,0 +1,192 @@
+//! Parameter partitioner: Shampoo blocking (Anil et al. / paper §2.1).
+//!
+//! Each 2-D parameter is split into row×col blocks of at most `max_order`,
+//! and each block is padded up to the smallest *bucket* order (manifest
+//! buckets, default {32, 64, 128}) so a bounded set of AOT artifacts covers
+//! every shape. 1-D parameters (biases, LayerNorm gains) are not
+//! preconditioned — they go straight to F, as in practical Shampoo.
+
+/// One preconditioned block of a parameter matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Block {
+    pub param_idx: usize,
+    /// offsets within the parameter matrix
+    pub row0: usize,
+    pub col0: usize,
+    /// actual content size
+    pub rows: usize,
+    pub cols: usize,
+    /// padded bucket orders fed to the artifacts (rows ≤ bm, cols ≤ bn)
+    pub bm: usize,
+    pub bn: usize,
+}
+
+impl Block {
+    pub fn padded(&self) -> bool {
+        self.rows != self.bm || self.cols != self.bn
+    }
+}
+
+/// Partition a set of parameter shapes into blocks.
+///
+/// `buckets` must be sorted ascending; `max_order` is the largest allowed
+/// bucket (blocks are split so both dims ≤ max_order).
+pub fn partition(
+    shapes: &[Vec<usize>],
+    buckets: &[usize],
+    max_order: usize,
+) -> Vec<Block> {
+    assert!(!buckets.is_empty());
+    assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets must ascend");
+    let cap = max_order.min(*buckets.last().unwrap());
+    let mut out = Vec::new();
+    for (pi, shape) in shapes.iter().enumerate() {
+        if shape.len() != 2 || shape[0] < 2 || shape[1] < 2 {
+            continue; // 1-D / scalar / degenerate: F only
+        }
+        let (r, c) = (shape[0], shape[1]);
+        for row0 in (0..r).step_by(cap) {
+            let rows = cap.min(r - row0);
+            for col0 in (0..c).step_by(cap) {
+                let cols = cap.min(c - col0);
+                out.push(Block {
+                    param_idx: pi,
+                    row0,
+                    col0,
+                    rows,
+                    cols,
+                    bm: bucket_for(rows, buckets),
+                    bn: bucket_for(cols, buckets),
+                });
+            }
+        }
+    }
+    out
+}
+
+/// Smallest bucket ≥ n (n must not exceed the largest bucket).
+pub fn bucket_for(n: usize, buckets: &[usize]) -> usize {
+    for &b in buckets {
+        if b >= n {
+            return b;
+        }
+    }
+    panic!("dimension {n} exceeds largest bucket {:?}", buckets.last())
+}
+
+/// Extract a zero-padded block from a row-major parameter/grad buffer.
+pub fn extract_block(src: &[f32], shape: &[usize], b: &Block) -> Vec<f32> {
+    let c = shape[1];
+    let mut out = vec![0.0f32; b.bm * b.bn];
+    for i in 0..b.rows {
+        let srow = (b.row0 + i) * c + b.col0;
+        out[i * b.bn..i * b.bn + b.cols]
+            .copy_from_slice(&src[srow..srow + b.cols]);
+    }
+    out
+}
+
+/// Write a padded block's content region back into the parameter buffer.
+pub fn scatter_block(dst: &mut [f32], shape: &[usize], b: &Block, data: &[f32]) {
+    assert_eq!(data.len(), b.bm * b.bn);
+    let c = shape[1];
+    for i in 0..b.rows {
+        let drow = (b.row0 + i) * c + b.col0;
+        dst[drow..drow + b.cols].copy_from_slice(&data[i * b.bn..i * b.bn + b.cols]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    const BUCKETS: &[usize] = &[32, 64, 128];
+
+    #[test]
+    fn exact_multiple_shapes_unpadded() {
+        let blocks = partition(&[vec![256, 128]], BUCKETS, 128);
+        assert_eq!(blocks.len(), 2);
+        assert!(blocks.iter().all(|b| !b.padded() && b.bm == 128 && b.bn == 128));
+    }
+
+    #[test]
+    fn remainders_get_padded_buckets() {
+        let blocks = partition(&[vec![150, 40]], BUCKETS, 128);
+        // rows: 128 + 22 ; cols: 40
+        assert_eq!(blocks.len(), 2);
+        assert_eq!((blocks[0].bm, blocks[0].bn), (128, 64));
+        assert_eq!((blocks[1].rows, blocks[1].bm), (22, 32));
+    }
+
+    #[test]
+    fn one_d_params_skipped() {
+        let blocks = partition(&[vec![128], vec![128, 128], vec![]], BUCKETS, 128);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].param_idx, 1);
+    }
+
+    #[test]
+    fn partition_covers_every_element_once() {
+        prop::check("blocks tile the matrix exactly", 20, |rng| {
+            let r = 2 + rng.below(300);
+            let c = 2 + rng.below(300);
+            let blocks = partition(&[vec![r, c]], BUCKETS, 128);
+            let mut seen = vec![0u8; r * c];
+            for b in &blocks {
+                if b.rows > b.bm || b.cols > b.bn {
+                    return Err("content exceeds bucket".into());
+                }
+                for i in 0..b.rows {
+                    for j in 0..b.cols {
+                        let idx = (b.row0 + i) * c + (b.col0 + j);
+                        seen[idx] += 1;
+                    }
+                }
+            }
+            if seen.iter().any(|&s| s != 1) {
+                return Err(format!("coverage broken for {r}x{c}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn extract_scatter_roundtrip() {
+        prop::check("extract/scatter roundtrip", 20, |rng| {
+            let r = 2 + rng.below(200);
+            let c = 2 + rng.below(200);
+            let src: Vec<f32> = (0..r * c).map(|_| rng.normal_f32()).collect();
+            let shape = vec![r, c];
+            let blocks = partition(&[shape.clone()], BUCKETS, 128);
+            let mut dst = vec![0.0f32; r * c];
+            for b in &blocks {
+                let blk = extract_block(&src, &shape, b);
+                // padding region must be zero
+                for i in 0..b.bm {
+                    for j in 0..b.bn {
+                        if (i >= b.rows || j >= b.cols) && blk[i * b.bn + j] != 0.0 {
+                            return Err("padding not zero".into());
+                        }
+                    }
+                }
+                scatter_block(&mut dst, &shape, b, &blk);
+            }
+            prop::assert_close(&dst, &src, 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    fn bucket_for_picks_smallest() {
+        assert_eq!(bucket_for(1, BUCKETS), 32);
+        assert_eq!(bucket_for(32, BUCKETS), 32);
+        assert_eq!(bucket_for(33, BUCKETS), 64);
+        assert_eq!(bucket_for(128, BUCKETS), 128);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bucket_overflow_panics() {
+        bucket_for(129, BUCKETS);
+    }
+}

@@ -1,0 +1,250 @@
+//! Second-order orchestration: owns every preconditioner block, schedules
+//! PU (every T1) and PIRU (every T2) through the AOT artifacts, and
+//! preconditions gradients (every step) — Algorithm 3 driven from Rust.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{SecondOrderConfig, SecondOrderKind};
+use crate::coordinator::model::ModelHandle;
+use crate::coordinator::partition::{extract_block, partition, scatter_block, Block};
+use crate::coordinator::state::{codebook_for, run_invroot, run_pu, SideState};
+use crate::linalg::Mat;
+use crate::runtime::{HostTensor, Runtime};
+
+pub struct BlockPre {
+    pub block: Block,
+    pub left: SideState,
+    pub right: SideState,
+    /// cached artifact-input tensors for the inverse roots (§Perf L3-2):
+    /// rebuilt only when PIRU runs (every T2), not on every step's
+    /// precondition — saves the nibble-unpack + clone per block per step.
+    inv_cache: Option<Vec<HostTensor>>,
+}
+
+pub struct SecondOrder {
+    pub cfg: SecondOrderConfig,
+    pub cb: Vec<f32>,
+    pub blocks: Vec<BlockPre>,
+    /// K-FAC/AdaBK mode: whole-layer preconditioners fed by activation /
+    /// gradient statistics instead of GGᵀ (Algorithm 5).
+    pub kfac_mode: bool,
+    /// counts of host-fallback preconditions (observability)
+    pub host_fallbacks: u64,
+}
+
+impl SecondOrder {
+    pub fn new(cfg: &SecondOrderConfig, model: &ModelHandle, buckets: &[usize]) -> Result<Self> {
+        let cb = codebook_for(&cfg.quant);
+        let kfac_mode = matches!(cfg.kind, SecondOrderKind::KFac | SecondOrderKind::AdaBk);
+        let blocks = if kfac_mode {
+            if model.spec.kind != "mlp" {
+                return Err(anyhow!(
+                    "K-FAC/AdaBK requires the MLP model (activation statistics)"
+                ));
+            }
+            // whole-layer preconditioners; MLP dims are bucket-exact
+            let mut kfac_buckets = buckets.to_vec();
+            for &d in &model.spec.dims {
+                if !kfac_buckets.contains(&d) {
+                    kfac_buckets.push(d);
+                }
+            }
+            kfac_buckets.sort_unstable();
+            let max = *kfac_buckets.last().unwrap();
+            let weight_shapes: Vec<Vec<usize>> = model
+                .shapes
+                .iter()
+                .map(|s| if s.len() == 2 { s.clone() } else { vec![] })
+                .collect();
+            partition(&weight_shapes, &kfac_buckets, max)
+        } else {
+            partition(&model.shapes, buckets, cfg.max_order)
+        };
+        let blocks = blocks
+            .into_iter()
+            .map(|b| BlockPre {
+                left: SideState::new(b.bm, cfg, &cb),
+                right: SideState::new(b.bn, cfg, &cb),
+                block: b,
+                inv_cache: None,
+            })
+            .collect();
+        Ok(Self { cfg: cfg.clone(), cb, blocks, kfac_mode, host_fallbacks: 0 })
+    }
+
+    pub fn state_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.left.state_bytes() + b.right.state_bytes())
+            .sum()
+    }
+
+    /// PU for every block (Algorithm 3 line 6). For Shampoo/CASPR the
+    /// statistics are GGᵀ/GᵀG of the current block gradient (via the gram
+    /// artifact); for K-FAC/AdaBK they are the layer statistics from the
+    /// model step (`stats[2i]` = XᵀX/bs, `stats[2i+1]` = δYᵀδY·bs).
+    pub fn update_preconditioners(
+        &mut self,
+        rt: &Runtime,
+        model: &ModelHandle,
+        grads: &[Vec<f32>],
+        stats: &[Vec<f32>],
+    ) -> Result<()> {
+        let beta = self.cfg.beta;
+        let kind = self.cfg.kind;
+        let bits = self.cfg.quant.bits;
+        for (bi, bp) in self.blocks.iter_mut().enumerate() {
+            let (m, n) = (bp.block.bm, bp.block.bn);
+            let (l_stat, r_stat) = if self.kfac_mode {
+                // layer index = bi (one block per 2-D weight, in order)
+                let r = &stats[2 * bi]; // XᵀX/bs  (in, in)
+                let l = &stats[2 * bi + 1]; // δYᵀδY·bs (out, out)
+                (
+                    HostTensor::f32(&[m, m], r.clone()),
+                    HostTensor::f32(&[n, n], l.clone()),
+                )
+            } else {
+                let g = extract_block(
+                    &grads[bp.block.param_idx],
+                    &model.shapes[bp.block.param_idx],
+                    &bp.block,
+                );
+                let outs = rt.execute(
+                    &format!("gram_{m}x{n}"),
+                    &[HostTensor::f32(&[m, n], g)],
+                )?;
+                (outs[0].clone(), outs[1].clone())
+            };
+            run_pu(rt, &mut bp.left, l_stat, beta, &self.cb, kind, bits)?;
+            run_pu(rt, &mut bp.right, r_stat, beta, &self.cb, kind, bits)?;
+        }
+        Ok(())
+    }
+
+    /// PIRU / inverse-root for every block (Algorithm 3 line 10).
+    pub fn update_invroots(&mut self, rt: &Runtime) -> Result<()> {
+        let eps = self.cfg.eps;
+        let kind = self.cfg.kind;
+        let bits = self.cfg.quant.bits;
+        for bp in self.blocks.iter_mut() {
+            run_invroot(rt, &mut bp.left, eps, &self.cb, kind, bits)?;
+            run_invroot(rt, &mut bp.right, eps, &self.cb, kind, bits)?;
+            bp.inv_cache = None; // invalidate cached precondition inputs
+        }
+        Ok(())
+    }
+
+    /// Precondition all gradients in place (Algorithm 3 lines 13–14).
+    pub fn precondition(
+        &mut self,
+        rt: &Runtime,
+        model: &ModelHandle,
+        grads: &mut [Vec<f32>],
+    ) -> Result<()> {
+        let caspr = self.cfg.kind == SecondOrderKind::Caspr;
+        for bp in self.blocks.iter_mut() {
+            let (m, n) = (bp.block.bm, bp.block.bn);
+            let shape = &model.shapes[bp.block.param_idx];
+            let g = extract_block(&grads[bp.block.param_idx], shape, &bp.block);
+
+            let artifact = match (&bp.left, &bp.right) {
+                (SideState::Dense { .. }, SideState::Dense { .. }) => {
+                    let name = if caspr {
+                        format!("caspr32_{m}x{n}")
+                    } else {
+                        format!("precond32_{m}x{n}")
+                    };
+                    rt.has_artifact(&name).then_some(name)
+                }
+                (SideState::Dense { .. }, _) | (_, SideState::Dense { .. }) => None,
+                _ => {
+                    let name = if caspr {
+                        format!("caspr4_{m}x{n}")
+                    } else {
+                        format!("precond4_{m}x{n}")
+                    };
+                    rt.has_artifact(&name).then_some(name)
+                }
+            };
+
+            let gt = match artifact {
+                Some(name) => {
+                    if bp.inv_cache.is_none() {
+                        let mut state = bp.left.invroot_inputs()?;
+                        state.extend(bp.right.invroot_inputs()?);
+                        if !bp.left.is_dense() {
+                            state.push(HostTensor::f32(&[16], self.cb.clone()));
+                        }
+                        bp.inv_cache = Some(state);
+                    }
+                    let mut inputs = vec![HostTensor::f32(&[m, n], g)];
+                    inputs.extend(bp.inv_cache.as_ref().unwrap().iter().cloned());
+                    let outs = rt.execute(&name, &inputs)?;
+                    outs[0].clone().into_f32()?
+                }
+                None => {
+                    // host mirror: mixed arms or no matching artifact pair
+                    self.host_fallbacks += 1;
+                    precondition_host(
+                        &g,
+                        m,
+                        n,
+                        &bp.left.invroot_host(&self.cb, 0),
+                        &bp.right.invroot_host(&self.cb, 0),
+                        caspr,
+                    )
+                }
+            };
+            scatter_block(&mut grads[bp.block.param_idx], shape, &bp.block, &gt);
+        }
+        Ok(())
+    }
+}
+
+/// Host mirror of precond32/caspr32 + grafting.
+pub fn precondition_host(
+    g: &[f32],
+    m: usize,
+    n: usize,
+    lhat: &Mat,
+    rhat: &Mat,
+    caspr: bool,
+) -> Vec<f32> {
+    let gm = Mat::from_vec(m, n, g.to_vec());
+    let ghat = if caspr {
+        let j = lhat.matmul(&gm).add(&gm.matmul(rhat));
+        lhat.matmul(&j).add(&j.matmul(rhat))
+    } else {
+        lhat.matmul(&gm).matmul(rhat)
+    };
+    let ng = gm.frobenius();
+    let nh = ghat.frobenius().max(1e-30);
+    ghat.scale((ng / nh) as f32).data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_precondition_identity() {
+        let g: Vec<f32> = (0..12).map(|i| i as f32).collect();
+        let out = precondition_host(&g, 3, 4, &Mat::eye(3), &Mat::eye(4), false);
+        for (a, b) in out.iter().zip(&g) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // CASPR with identity states: J = 2G, Ĝ = 4G, grafted back to ‖G‖
+        let out = precondition_host(&g, 3, 4, &Mat::eye(3), &Mat::eye(4), true);
+        for (a, b) in out.iter().zip(&g) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn host_precondition_grafts_norm() {
+        let g = vec![1.0f32; 16];
+        let out = precondition_host(&g, 4, 4, &Mat::eye(4).scale(10.0), &Mat::eye(4), false);
+        let norm: f32 = out.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 4.0).abs() < 1e-3); // ‖G‖_F preserved
+    }
+}

@@ -1,0 +1,105 @@
+//! Shadow tracker: maintains a 32-bit preconditioner for one tracked block
+//! alongside the quantized run and measures the dynamic quantization errors
+//! of Figures 7/8 (NRE/AE of L₄ vs L₃₂ and of their inverse 4-th roots).
+
+use anyhow::Result;
+
+use crate::config::SecondOrderConfig;
+use crate::coordinator::model::ModelHandle;
+use crate::coordinator::partition::extract_block;
+use crate::coordinator::second_order::SecondOrder;
+use crate::coordinator::state::SideState;
+use crate::errors::{angle_error_deg, nre};
+use crate::linalg::{invroot_eigh, Mat};
+use crate::runtime::{HostTensor, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct ShadowRow {
+    pub step: usize,
+    pub nre_precond: f64,
+    pub ae_precond_deg: f64,
+    pub nre_invroot: f64,
+    pub ae_invroot_deg: f64,
+}
+
+pub struct ShadowTracker {
+    /// index of the tracked block in SecondOrder::blocks
+    pub block_idx: usize,
+    /// 32-bit shadow left preconditioner
+    l32: Mat,
+    beta: f32,
+    eps: f32,
+    rectify: usize,
+}
+
+impl ShadowTracker {
+    /// Track the first quantized block (the paper tracks one 1200×1200 left
+    /// preconditioner of a Swin-Tiny parameter; we track the first
+    /// max-bucket block).
+    pub fn new(second: &SecondOrder, cfg: &SecondOrderConfig) -> Option<Self> {
+        let idx = second
+            .blocks
+            .iter()
+            .position(|b| !matches!(b.left, SideState::Dense { .. }))?;
+        let n = second.blocks[idx].block.bm;
+        Some(Self {
+            block_idx: idx,
+            l32: Mat::eye(n).scale(cfg.eps),
+            beta: cfg.beta,
+            eps: cfg.eps,
+            rectify: if cfg.quant.rectify { 1 } else { 0 },
+        })
+    }
+
+    /// Mirror the PU EMA on the 32-bit shadow using the same statistics.
+    pub fn update_shadow(
+        &mut self,
+        rt: &Runtime,
+        second: &SecondOrder,
+        model: &ModelHandle,
+        grads: &[Vec<f32>],
+        stats: &[Vec<f32>],
+    ) -> Result<()> {
+        let bp = &second.blocks[self.block_idx];
+        let (m, n) = (bp.block.bm, bp.block.bn);
+        let l_stat: Vec<f32> = if second.kfac_mode {
+            stats[2 * self.block_idx].clone()
+        } else {
+            let g = extract_block(
+                &grads[bp.block.param_idx],
+                &model.shapes[bp.block.param_idx],
+                &bp.block,
+            );
+            let outs = rt.execute(&format!("gram_{m}x{n}"), &[HostTensor::f32(&[m, n], g)])?;
+            outs[0].clone().into_f32()?
+        };
+        let stat = Mat::from_vec(m, m, l_stat);
+        self.l32 = self.l32.scale(self.beta).add(&stat.scale(1.0 - self.beta));
+        Ok(())
+    }
+
+    /// Measure NRE/AE of the quantized L and its inverse root against the
+    /// 32-bit shadow (host-exact eigendecomposition for the reference).
+    pub fn measure(&self, step: usize, second: &SecondOrder) -> Result<Option<ShadowRow>> {
+        let bp = &second.blocks[self.block_idx];
+        let l4 = bp.left.precond_host(&second.cb, self.rectify);
+        let nre_p = nre(&l4, &self.l32);
+        let ae_p = angle_error_deg(&l4, &self.l32);
+
+        // inverse roots with the paper's dampening (ε·λmax ridge)
+        let lam_max = crate::linalg::power_iteration(&self.l32, 20).max(1e-30);
+        let ref32 = invroot_eigh(
+            &self.l32.add_scaled_eye(lam_max * self.eps),
+            4.0,
+            1e-30,
+        );
+        let inv4 = bp.left.invroot_host(&second.cb, 0);
+        Ok(Some(ShadowRow {
+            step,
+            nre_precond: nre_p,
+            ae_precond_deg: ae_p,
+            nre_invroot: nre(&inv4, &ref32),
+            ae_invroot_deg: angle_error_deg(&inv4, &ref32),
+        }))
+    }
+}

@@ -1,0 +1,405 @@
+//! Per-block preconditioner state: the quantized (ours), dense (32-bit
+//! baseline), and naive (quantize-A) arms of the paper, with exact byte
+//! accounting and the host-side mirror used when no artifact pair matches.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{QuantConfig, SecondOrderConfig, SecondOrderKind};
+use crate::linalg::{bjorck, Mat};
+use crate::quant::{
+    dequantize_matrix_cols, quantize_matrix_cols, runtime_codebook, QuantizedVec,
+};
+use crate::runtime::{HostTensor, Runtime};
+
+/// One side (L or R) of a block's preconditioner pair.
+#[derive(Debug, Clone)]
+pub enum SideState {
+    /// Ours: eigenvalues + quantized eigenbasis; inverse root as 32-bit
+    /// diagonal + quantized off-diagonal (Algorithms 1–3).
+    Quantized {
+        lam: Vec<f32>,
+        codes: QuantizedVec,
+        inv_diag: Vec<f32>,
+        inv_codes: QuantizedVec,
+    },
+    /// 32-bit baseline (Algorithm 4): dense L and L̂.
+    Dense { l: Mat, lhat: Mat },
+    /// Naive arm (§3.1): A quantized directly (diag in 32-bit), inverse
+    /// root also quantized; Schur–Newton recomputes it.
+    Naive {
+        diag: Vec<f32>,
+        codes: QuantizedVec,
+        inv_diag: Vec<f32>,
+        inv_codes: QuantizedVec,
+    },
+}
+
+impl SideState {
+    pub fn new(n: usize, cfg: &SecondOrderConfig, cb: &[f32]) -> SideState {
+        let q = &cfg.quant;
+        let quantizable = q.bits < 32 && n * n >= q.min_quant_elems;
+        if !quantizable {
+            return SideState::Dense {
+                l: Mat::eye(n).scale(cfg.eps),
+                lhat: Mat::eye(n),
+            };
+        }
+        if q.quantize_eigen {
+            let eye = Mat::eye(n);
+            let codes = quantize_matrix_cols(&eye.data, n, cb, q.bits);
+            let zeros = vec![0.0f32; n * n];
+            let inv_codes = quantize_matrix_cols(&zeros, n, cb, q.bits);
+            SideState::Quantized {
+                lam: vec![cfg.eps; n],
+                codes,
+                inv_diag: vec![1.0; n],
+                inv_codes,
+            }
+        } else {
+            // naive: A₀ = ε·I stored as (diag, quantized zeros)
+            let zeros = vec![0.0f32; n * n];
+            let codes = quantize_matrix_cols(&zeros, n, cb, q.bits);
+            let inv_codes = quantize_matrix_cols(&zeros, n, cb, q.bits);
+            SideState::Naive {
+                diag: vec![cfg.eps; n],
+                codes,
+                inv_diag: vec![1.0; n],
+                inv_codes,
+            }
+        }
+    }
+
+    pub fn order(&self) -> usize {
+        match self {
+            SideState::Quantized { lam, .. } => lam.len(),
+            SideState::Dense { l, .. } => l.rows,
+            SideState::Naive { diag, .. } => diag.len(),
+        }
+    }
+
+    /// Exact state bytes (preconditioner + inverse root).
+    pub fn state_bytes(&self) -> usize {
+        match self {
+            SideState::Quantized { lam, codes, inv_diag, inv_codes } => {
+                lam.len() * 4
+                    + codes.state_bytes()
+                    + inv_diag.len() * 4
+                    + inv_codes.state_bytes()
+            }
+            SideState::Dense { l, lhat } => (l.data.len() + lhat.data.len()) * 4,
+            SideState::Naive { diag, codes, inv_diag, inv_codes } => {
+                diag.len() * 4
+                    + codes.state_bytes()
+                    + inv_diag.len() * 4
+                    + inv_codes.state_bytes()
+            }
+        }
+    }
+
+    /// Host-side reconstruction of Â (the inverse root) — used by the
+    /// fallback preconditioner and the shadow/error analyses.
+    pub fn invroot_host(&self, cb: &[f32], rectify: usize) -> Mat {
+        match self {
+            SideState::Dense { lhat, .. } => lhat.clone(),
+            SideState::Quantized { inv_diag, inv_codes, .. }
+            | SideState::Naive { inv_diag, inv_codes, .. } => {
+                let n = inv_diag.len();
+                let off = dequantize_matrix_cols(inv_codes, n, cb);
+                let mut m = Mat::from_vec(n, n, off);
+                for i in 0..n {
+                    m[(i, i)] = inv_diag[i];
+                }
+                let _ = rectify; // Â is not an orthogonal matrix; no OR here
+                m
+            }
+        }
+    }
+
+    /// Host-side reconstruction of the preconditioner A itself
+    /// (shadow-mode NRE/AE, Figures 7/8).
+    pub fn precond_host(&self, cb: &[f32], rectify: usize) -> Mat {
+        match self {
+            SideState::Dense { l, .. } => l.clone(),
+            SideState::Quantized { lam, codes, .. } => {
+                let n = lam.len();
+                let v0 = dequantize_matrix_cols(codes, n, cb);
+                let mut v = Mat::from_vec(n, n, v0);
+                if rectify > 0 {
+                    v = bjorck(&v, rectify);
+                }
+                Mat::sandwich(&v, lam)
+            }
+            SideState::Naive { diag, codes, .. } => {
+                let n = diag.len();
+                let off = dequantize_matrix_cols(codes, n, cb);
+                let mut m = Mat::from_vec(n, n, off);
+                m.symmetrize();
+                for i in 0..n {
+                    m[(i, i)] = diag[i];
+                }
+                m
+            }
+        }
+    }
+
+    // ---- artifact marshaling -------------------------------------------
+
+    /// Inputs encoding this side's *preconditioner* state for pu artifacts.
+    pub fn pu_inputs(&self) -> Result<Vec<HostTensor>> {
+        match self {
+            SideState::Quantized { lam, codes, .. } => Ok(quant_state_tensors(lam, codes)),
+            SideState::Naive { diag, codes, .. } => Ok(quant_state_tensors(diag, codes)),
+            SideState::Dense { l, .. } => Ok(vec![HostTensor::f32(
+                &[l.rows, l.cols],
+                l.data.clone(),
+            )]),
+        }
+    }
+
+    /// Inputs encoding this side's *inverse root* for precond artifacts.
+    pub fn invroot_inputs(&self) -> Result<Vec<HostTensor>> {
+        match self {
+            SideState::Quantized { inv_diag, inv_codes, .. }
+            | SideState::Naive { inv_diag, inv_codes, .. } => {
+                Ok(quant_state_tensors(inv_diag, inv_codes))
+            }
+            SideState::Dense { lhat, .. } => Ok(vec![HostTensor::f32(
+                &[lhat.rows, lhat.cols],
+                lhat.data.clone(),
+            )]),
+        }
+    }
+
+    /// Update the preconditioner state from pu artifact outputs.
+    pub fn absorb_pu(&mut self, outs: &[HostTensor], bits: u32) -> Result<()> {
+        match self {
+            SideState::Quantized { lam, codes, .. } => {
+                *lam = outs[0].clone().into_f32()?;
+                *codes = quantized_from_tensors(&outs[1], &outs[2], bits)?;
+            }
+            SideState::Naive { diag, codes, .. } => {
+                *diag = outs[0].clone().into_f32()?;
+                *codes = quantized_from_tensors(&outs[1], &outs[2], bits)?;
+            }
+            SideState::Dense { l, .. } => {
+                let n = l.rows;
+                l.data = outs[0].clone().into_f32()?;
+                assert_eq!(l.data.len(), n * n);
+            }
+        }
+        Ok(())
+    }
+
+    /// Update the inverse-root state from piru / invroot artifact outputs.
+    pub fn absorb_invroot(&mut self, outs: &[HostTensor], bits: u32) -> Result<()> {
+        match self {
+            SideState::Quantized { inv_diag, inv_codes, .. }
+            | SideState::Naive { inv_diag, inv_codes, .. } => {
+                *inv_diag = outs[0].clone().into_f32()?;
+                *inv_codes = quantized_from_tensors(&outs[1], &outs[2], bits)?;
+            }
+            SideState::Dense { lhat, .. } => {
+                let n = lhat.rows;
+                lhat.data = outs[0].clone().into_f32()?;
+                assert_eq!(lhat.data.len(), n * n);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, SideState::Dense { .. })
+    }
+}
+
+fn quant_state_tensors(diag: &[f32], q: &QuantizedVec) -> Vec<HostTensor> {
+    let nb = q.scales.len();
+    let blk = q.block;
+    vec![
+        HostTensor::f32(&[diag.len()], diag.to_vec()),
+        HostTensor::u8(&[nb, blk], q.codes_u8()),
+        HostTensor::f32(&[nb], q.scales.clone()),
+    ]
+}
+
+fn quantized_from_tensors(codes: &HostTensor, scales: &HostTensor, bits: u32) -> Result<QuantizedVec> {
+    let blk = *codes
+        .shape
+        .last()
+        .ok_or_else(|| anyhow!("codes tensor must be 2-D"))?;
+    let raw = codes.as_u8()?;
+    Ok(QuantizedVec {
+        packed: crate::quant::pack_bits(raw, bits),
+        scales: scales.as_f32()?.to_vec(),
+        len: raw.len(),
+        bits,
+        block: blk,
+    })
+}
+
+/// Which artifact family a side uses at a given order.
+pub fn artifact_arm(side: &SideState) -> &'static str {
+    match side {
+        SideState::Quantized { .. } => "quant",
+        SideState::Dense { .. } => "dense",
+        SideState::Naive { .. } => "naive",
+    }
+}
+
+/// Build the runtime codebook for a quant config.
+pub fn codebook_for(q: &QuantConfig) -> Vec<f32> {
+    if q.bits >= 32 {
+        // unused; return a dummy 16-entry book
+        return vec![0.0; 16];
+    }
+    runtime_codebook(q.mapping, q.bits)
+}
+
+/// The exponent tag piru/invroot artifacts use for a second-order kind.
+pub fn exponent_tag(kind: SecondOrderKind) -> &'static str {
+    match kind.alpha() {
+        1 => "_e1",
+        2 => "_e2",
+        _ => "",
+    }
+}
+
+/// Execute the appropriate PU artifact for one side.
+pub fn run_pu(
+    rt: &Runtime,
+    side: &mut SideState,
+    m_stat: HostTensor,
+    beta: f32,
+    cb: &[f32],
+    kind: SecondOrderKind,
+    bits: u32,
+) -> Result<()> {
+    let n = side.order();
+    let kfac_like = matches!(kind, SecondOrderKind::KFac | SecondOrderKind::AdaBk);
+    let mut inputs = side.pu_inputs()?;
+    inputs.push(m_stat);
+    inputs.push(HostTensor::scalar_f32(beta));
+    let name = match side {
+        SideState::Quantized { .. } => {
+            inputs.push(HostTensor::f32(&[16], cb.to_vec()));
+            if kfac_like && n == 128 {
+                "pu_kfac_128".to_string()
+            } else {
+                format!("pu_{n}")
+            }
+        }
+        SideState::Naive { .. } => {
+            inputs.push(HostTensor::f32(&[16], cb.to_vec()));
+            format!("pu_naive_{n}")
+        }
+        SideState::Dense { .. } => format!("pu_dense_{n}"),
+    };
+    let outs = rt.execute(&name, &inputs)?;
+    side.absorb_pu(&outs, bits)
+}
+
+/// Execute the appropriate PIRU / inverse-root artifact for one side.
+pub fn run_invroot(
+    rt: &Runtime,
+    side: &mut SideState,
+    eps: f32,
+    cb: &[f32],
+    kind: SecondOrderKind,
+    bits: u32,
+) -> Result<()> {
+    let n = side.order();
+    let tag = exponent_tag(kind);
+    let mut inputs = match side {
+        SideState::Dense { .. } => side.pu_inputs()?, // dense: (l,)
+        _ => side.pu_inputs()?,                       // quant/naive: (diag, codes, scales)
+    };
+    inputs.push(HostTensor::scalar_f32(eps));
+    let name = match side {
+        SideState::Quantized { .. } => {
+            inputs.push(HostTensor::f32(&[16], cb.to_vec()));
+            format!("piru{tag}_{n}")
+        }
+        SideState::Naive { .. } => {
+            inputs.push(HostTensor::f32(&[16], cb.to_vec()));
+            // naive inverse root is Schur–Newton at s = -1/4 only (the
+            // naive arm is a Shampoo ablation; K-FAC naive is not a paper
+            // configuration)
+            format!("invroot_naive_{n}")
+        }
+        SideState::Dense { .. } => format!("invroot_dense{tag}_{n}"),
+    };
+    let outs = rt.execute(&name, &inputs)?;
+    side.absorb_invroot(&outs, bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SecondOrderConfig;
+    use crate::quant::Mapping;
+
+    fn cfg(bits: u32, eigen: bool) -> SecondOrderConfig {
+        let mut c = SecondOrderConfig::default();
+        c.quant.bits = bits;
+        c.quant.quantize_eigen = eigen;
+        c.quant.mapping = Mapping::Linear2;
+        c
+    }
+
+    #[test]
+    fn small_matrices_stay_dense() {
+        let c = cfg(4, true);
+        let cb = codebook_for(&c.quant);
+        let s = SideState::new(32, &c, &cb); // 32² = 1024 < 4096
+        assert!(s.is_dense());
+        let s = SideState::new(64, &c, &cb); // 64² = 4096: quantized
+        assert!(!s.is_dense());
+    }
+
+    #[test]
+    fn init_states_reconstruct_identity_scaled() {
+        let c = cfg(4, true);
+        let cb = codebook_for(&c.quant);
+        let s = SideState::new(64, &c, &cb);
+        // A₀ ≈ ε·I ; Â₀ = I
+        let a = s.precond_host(&cb, 0);
+        let eye_eps = Mat::eye(64).scale(c.eps);
+        assert!(a.sub(&eye_eps).frobenius() < 1e-4);
+        let ah = s.invroot_host(&cb, 0);
+        assert!(ah.sub(&Mat::eye(64)).frobenius() < 1e-6);
+    }
+
+    #[test]
+    fn naive_init_reconstructs_identity_scaled() {
+        let c = cfg(4, false);
+        let cb = codebook_for(&c.quant);
+        let s = SideState::new(64, &c, &cb);
+        assert!(matches!(s, SideState::Naive { .. }));
+        let a = s.precond_host(&cb, 0);
+        assert!(a.sub(&Mat::eye(64).scale(c.eps)).frobenius() < 1e-4);
+    }
+
+    #[test]
+    fn state_bytes_scale_with_bits() {
+        let cb4 = codebook_for(&cfg(4, true).quant);
+        let s4 = SideState::new(128, &cfg(4, true), &cb4);
+        let s32 = SideState::new(128, &cfg(32, true), &cb4);
+        // 4-bit: 2 quantized matrices + 2 f32 vectors ≈ (2·(8192+1024) + 1024)
+        // 32-bit: 2 dense matrices = 2·65536 B
+        let b4 = s4.state_bytes();
+        let b32 = s32.state_bytes();
+        assert!(b32 as f64 / b4 as f64 > 6.0, "{b32} / {b4}");
+    }
+
+    #[test]
+    fn pu_inputs_shapes() {
+        let c = cfg(4, true);
+        let cb = codebook_for(&c.quant);
+        let s = SideState::new(64, &c, &cb);
+        let ins = s.pu_inputs().unwrap();
+        assert_eq!(ins.len(), 3);
+        assert_eq!(ins[0].shape, vec![64]);
+        assert_eq!(ins[1].shape, vec![64, 64]); // 4096/64 blocks × 64
+        assert_eq!(ins[2].shape, vec![64]);
+    }
+}

@@ -1,0 +1,312 @@
+//! The training loop (Algorithm 3 end-to-end): data pipeline → model step
+//! artifact → second-order preconditioning → native first-order update,
+//! with eval, metrics, checkpointing, exact memory accounting, and the
+//! optional 32-bit shadow for dynamic quantization-error tracking
+//! (Figures 7/8).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::{RunConfig, SecondOrderKind};
+use crate::coordinator::model::{DataSource, ModelHandle};
+use crate::coordinator::second_order::SecondOrder;
+use crate::coordinator::shadow::ShadowTracker;
+use crate::errors;
+use crate::optim::{build_first_order, FirstOrder};
+use crate::runtime::Runtime;
+
+#[derive(Debug, Clone)]
+pub struct EvalPoint {
+    pub step: usize,
+    pub loss: f32,
+    /// classification accuracy in [0,1] when the model reports it
+    pub accuracy: Option<f64>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct MemoryReport {
+    pub params_bytes: usize,
+    pub grads_bytes: usize,
+    pub first_order_bytes: usize,
+    pub second_order_bytes: usize,
+}
+
+impl MemoryReport {
+    pub fn total(&self) -> usize {
+        self.params_bytes + self.grads_bytes + self.first_order_bytes + self.second_order_bytes
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total() as f64 / (1024.0 * 1024.0)
+    }
+
+    pub fn optimizer_mb(&self) -> f64 {
+        (self.first_order_bytes + self.second_order_bytes) as f64 / (1024.0 * 1024.0)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub name: String,
+    pub losses: Vec<(usize, f32)>,
+    pub evals: Vec<EvalPoint>,
+    pub final_eval: Option<EvalPoint>,
+    pub wall_secs: f64,
+    pub memory: MemoryReport,
+    pub shadow_rows: Vec<crate::coordinator::shadow::ShadowRow>,
+    pub host_fallbacks: u64,
+}
+
+impl TrainResult {
+    pub fn final_accuracy_pct(&self) -> Option<f64> {
+        self.final_eval.as_ref().and_then(|e| e.accuracy).map(|a| a * 100.0)
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.final_eval.as_ref().map(|e| e.loss)
+    }
+}
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub model: ModelHandle,
+    pub first: Box<dyn FirstOrder>,
+    pub second: Option<SecondOrder>,
+    pub data: DataSource,
+    shadow: Option<ShadowTracker>,
+    flat_len: usize,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, cfg: RunConfig) -> Result<Self> {
+        let model = ModelHandle::new(rt, &cfg.model, cfg.seed)?;
+        let flat_len = model.param_count();
+        let warmup = match cfg.schedule {
+            crate::config::Schedule::Cosine { warmup } => warmup,
+            crate::config::Schedule::MultiStep { warmup, .. } => warmup,
+            _ => 10,
+        };
+        let first = build_first_order(&cfg.first, flat_len, warmup);
+        let second = if cfg.second.kind == SecondOrderKind::None {
+            None
+        } else {
+            Some(SecondOrder::new(
+                &cfg.second,
+                &model,
+                &rt.manifest.buckets,
+            )?)
+        };
+        let shadow = if cfg.shadow_quant_error {
+            second.as_ref().and_then(|s| ShadowTracker::new(s, &cfg.second))
+        } else {
+            None
+        };
+        let data = model.data_source(cfg.seed);
+        Ok(Self { cfg, model, first, second, data, shadow, flat_len })
+    }
+
+    fn flatten(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(bufs.iter().map(|b| b.len()).sum());
+        for b in bufs {
+            out.extend_from_slice(b);
+        }
+        out
+    }
+
+    fn scatter(flat: &[f32], bufs: &mut [Vec<f32>]) {
+        let mut off = 0;
+        for b in bufs.iter_mut() {
+            let len = b.len();
+            b.copy_from_slice(&flat[off..off + len]);
+            off += len;
+        }
+    }
+
+    pub fn memory_report(&self) -> MemoryReport {
+        MemoryReport {
+            params_bytes: self.model.params_bytes(),
+            grads_bytes: self.model.params_bytes(),
+            first_order_bytes: self.first.state_bytes(),
+            second_order_bytes: self.second.as_ref().map(|s| s.state_bytes()).unwrap_or(0),
+        }
+    }
+
+    /// Evaluate on `batches` held-out batches with the optimizer's eval
+    /// parameters (schedule-free averages where applicable).
+    pub fn evaluate(&self, rt: &Runtime, step: usize, batches: usize) -> Result<EvalPoint> {
+        let flat = Self::flatten(&self.model.params);
+        let eval_flat = self.first.eval_params(&flat);
+        let mut eval_params = self.model.params.clone();
+        Self::scatter(&eval_flat, &mut eval_params);
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut has_acc = false;
+        for i in 0..batches {
+            let batch = self.model.make_batch(&self.data, true, i as u64);
+            let (loss, corr) = self.model.eval(rt, &eval_params, &batch)?;
+            loss_sum += loss as f64;
+            if let Some(c) = corr {
+                has_acc = true;
+                correct += c;
+                total += self.model.spec.batch;
+            }
+        }
+        Ok(EvalPoint {
+            step,
+            loss: (loss_sum / batches.max(1) as f64) as f32,
+            accuracy: has_acc.then(|| correct as f64 / total.max(1) as f64),
+        })
+    }
+
+    /// Run the configured number of steps. `metrics_path`: optional CSV.
+    pub fn train(&mut self, rt: &Runtime, metrics_path: Option<&Path>) -> Result<TrainResult> {
+        let mut csv = match metrics_path {
+            Some(p) => {
+                if let Some(dir) = p.parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                let mut w = std::fs::File::create(p)
+                    .with_context(|| format!("creating {}", p.display()))?;
+                use std::io::Write;
+                writeln!(w, "step,loss,lr,eval_loss,eval_acc,elapsed_s")?;
+                Some(w)
+            }
+            None => None,
+        };
+        let t0 = Instant::now();
+        let mut losses = Vec::new();
+        let mut evals = Vec::new();
+        let mut shadow_rows = Vec::new();
+        let s2cfg = self.cfg.second.clone();
+
+        for step in 1..=self.cfg.steps {
+            let batch = self.model.make_batch(&self.data, false, step as u64);
+            let (loss, mut grads, stats) = self.model.step(rt, &batch)?;
+
+            if let Some(second) = self.second.as_mut() {
+                if step >= s2cfg.start_step {
+                    if step % s2cfg.update_precond_every == 0 {
+                        second.update_preconditioners(rt, &self.model, &grads, &stats)?;
+                        if let Some(sh) = self.shadow.as_mut() {
+                            sh.update_shadow(rt, second, &self.model, &grads, &stats)?;
+                        }
+                    }
+                    if step % s2cfg.update_invroot_every == 0 {
+                        second.update_invroots(rt)?;
+                        if let Some(sh) = self.shadow.as_mut() {
+                            if let Some(row) = sh.measure(step, second)? {
+                                shadow_rows.push(row);
+                            }
+                        }
+                    }
+                    second.precondition(rt, &self.model, &mut grads)?;
+                }
+            }
+
+            // native first-order update over the flat parameter vector
+            let mut flat_p = Self::flatten(&self.model.params);
+            let flat_g = Self::flatten(&grads);
+            debug_assert_eq!(flat_p.len(), self.flat_len);
+            let lr = self.cfg.first.lr * self.cfg.lr_at(step - 1);
+            self.first.step(&mut flat_p, &flat_g, lr);
+            Self::scatter(&flat_p, &mut self.model.params);
+
+            if step % self.cfg.log_every == 0 || step == 1 {
+                losses.push((step, loss));
+            }
+            let do_eval = self.cfg.eval_every > 0 && step % self.cfg.eval_every == 0;
+            let ev = if do_eval {
+                let e = self.evaluate(rt, step, self.cfg.eval_batches)?;
+                evals.push(e.clone());
+                Some(e)
+            } else {
+                None
+            };
+            if let Some(w) = csv.as_mut() {
+                use std::io::Write;
+                writeln!(
+                    w,
+                    "{step},{loss},{lr},{},{},{:.3}",
+                    ev.as_ref().map(|e| e.loss.to_string()).unwrap_or_default(),
+                    ev.as_ref()
+                        .and_then(|e| e.accuracy)
+                        .map(|a| format!("{a:.4}"))
+                        .unwrap_or_default(),
+                    t0.elapsed().as_secs_f64()
+                )?;
+            }
+        }
+
+        let final_eval = if self.cfg.eval_batches > 0 {
+            Some(self.evaluate(rt, self.cfg.steps, self.cfg.eval_batches.max(8))?)
+        } else {
+            None
+        };
+        Ok(TrainResult {
+            name: self.cfg.name.clone(),
+            losses,
+            evals,
+            final_eval,
+            wall_secs: t0.elapsed().as_secs_f64(),
+            memory: self.memory_report(),
+            shadow_rows,
+            host_fallbacks: self.second.as_ref().map(|s| s.host_fallbacks).unwrap_or(0),
+        })
+    }
+
+    /// Save parameters + step metadata (JSON header, raw f32 LE payload).
+    pub fn save_checkpoint(&self, path: &Path, step: usize) -> Result<()> {
+        use std::io::Write;
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = crate::util::json::Json::obj(vec![
+            ("model", crate::util::json::Json::Str(self.model.name.clone())),
+            ("step", crate::util::json::Json::Num(step as f64)),
+            (
+                "param_count",
+                crate::util::json::Json::Num(self.model.param_count() as f64),
+            ),
+        ])
+        .to_string();
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{header}")?;
+        for p in &self.model.params {
+            let bytes: Vec<u8> = p.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    /// Load a checkpoint written by `save_checkpoint`. Returns the step.
+    pub fn load_checkpoint(&mut self, path: &Path) -> Result<usize> {
+        use std::io::Read;
+        let mut f = std::fs::File::open(path)?;
+        let mut all = Vec::new();
+        f.read_to_end(&mut all)?;
+        let nl = all
+            .iter()
+            .position(|&b| b == b'\n')
+            .context("missing checkpoint header")?;
+        let header = crate::util::json::Json::parse(std::str::from_utf8(&all[..nl])?)
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let model = header.get("model").and_then(|j| j.as_str()).context("model")?;
+        if model != self.model.name {
+            anyhow::bail!("checkpoint is for {model}, trainer has {}", self.model.name);
+        }
+        let mut off = nl + 1;
+        for p in self.model.params.iter_mut() {
+            for x in p.iter_mut() {
+                *x = f32::from_le_bytes(all[off..off + 4].try_into().unwrap());
+                off += 4;
+            }
+        }
+        Ok(header.get("step").and_then(|j| j.as_usize()).unwrap_or(0))
+    }
+}
+
+/// Convenience: NRE between two host matrices (re-export for shadow users).
+pub use errors::nre as matrix_nre;

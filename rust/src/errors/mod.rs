@@ -1,0 +1,220 @@
+//! Quantization-error analysis: the machinery behind Tables 1/5/6/7 and
+//! Figures 2/3/6 of the paper.
+//!
+//! Everything here is exact host-side math (order-1200 eigendecompositions
+//! via `linalg::eigh`), independent of the artifacts — it validates the
+//! *numeric format*, while the runtime path validates the *system*.
+
+pub mod spectrum;
+
+use crate::linalg::{bjorck, eigh, Mat};
+use crate::quant::{dequantize_matrix_cols, quantize_matrix_cols, Mapping};
+
+/// Normwise relative error ‖X−Y‖_F / ‖Y‖_F (paper §3.1).
+pub fn nre(x: &Mat, y: &Mat) -> f64 {
+    x.sub(y).frobenius() / y.frobenius().max(1e-300)
+}
+
+/// Angle error in degrees: arccos(⟨X,Y⟩/(‖X‖‖Y‖)) (paper §3.1).
+pub fn angle_error_deg(x: &Mat, y: &Mat) -> f64 {
+    let c = x.inner(y) / (x.frobenius() * y.frobenius()).max(1e-300);
+    c.clamp(-1.0, 1.0).acos().to_degrees()
+}
+
+/// Which matrix is quantized (Table 1 "QM" column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantTarget {
+    /// The preconditioner A itself (diagonal kept in 32-bit — the paper's
+    /// "slightly improved" naive arm).
+    Precond,
+    /// The eigenvector matrix U (ours).
+    Eigen,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct QuantScheme {
+    pub mapping: Mapping,
+    pub bits: u32,
+    pub target: QuantTarget,
+    /// Björck rectification iterations (0 = no OR).
+    pub rectify: usize,
+    pub block: usize,
+}
+
+/// Result row of the Table-1 experiment.
+#[derive(Debug, Clone)]
+pub struct ErrorRow {
+    pub scheme: QuantScheme,
+    pub nre: f64,
+    pub ae_deg: f64,
+}
+
+/// Quantization errors in f(A) = A^s of scheme at PD matrix A (Table 1,
+/// s = -1/4). `exclude_diag_in_f`: measure in f(A) − Diag(diag(f(A)))
+/// instead (Table 6).
+pub fn quant_error_in_power(
+    a: &Mat,
+    s: f64,
+    scheme: QuantScheme,
+    exclude_diag_in_f: bool,
+) -> ErrorRow {
+    let n = a.rows;
+    let cb = crate::quant::codebook(scheme.mapping, scheme.bits);
+    let e = eigh(a);
+    let f_exact = e.matrix_power(s, 1e-30);
+
+    let f_quant = match scheme.target {
+        QuantTarget::Precond => {
+            // quantize A excluding its diagonal, then recompute the power
+            let diag = a.diagonal();
+            let mut off = a.clone();
+            for i in 0..n {
+                off[(i, i)] = 0.0;
+            }
+            let q = quantize_matrix_cols(&off.data, n, &cb, scheme.bits);
+            let mut aq = Mat::from_vec(n, n, dequantize_matrix_cols(&q, n, &cb));
+            // restore exact diagonal, resymmetrize (column-blocked
+            // quantization breaks symmetry slightly)
+            aq.symmetrize();
+            for i in 0..n {
+                aq[(i, i)] = diag[i];
+            }
+            // The paper defines A^s via SVD (§2 Notations): Λ holds
+            // *singular values*, so eigenvalues pushed negative by
+            // quantization enter as their magnitudes.
+            eigh(&aq).apply_fn(|x| x.abs().max(1e-30).powf(s))
+        }
+        QuantTarget::Eigen => {
+            let q = quantize_matrix_cols(&e.vecs.data, n, &cb, scheme.bits);
+            let mut v = Mat::from_vec(n, n, dequantize_matrix_cols(&q, n, &cb));
+            if scheme.rectify > 0 {
+                v = bjorck(&v, scheme.rectify);
+            }
+            let d: Vec<f32> = e
+                .vals
+                .iter()
+                .map(|&x| (x as f64).max(1e-30).powf(s) as f32)
+                .collect();
+            Mat::sandwich(&v, &d)
+        }
+    };
+
+    let (fx, fy) = if exclude_diag_in_f {
+        (strip_diag(&f_quant), strip_diag(&f_exact))
+    } else {
+        (f_quant, f_exact)
+    };
+    ErrorRow {
+        scheme,
+        nre: nre(&fx, &fy),
+        ae_deg: angle_error_deg(&fx, &fy),
+    }
+}
+
+fn strip_diag(a: &Mat) -> Mat {
+    let mut out = a.clone();
+    for i in 0..a.rows {
+        out[(i, i)] = 0.0;
+    }
+    out
+}
+
+/// Figure 3: elementwise mean error between (VΛˢVᵀ)^{-1/s}·(VΛVᵀ) and I,
+/// where V is the rectified quantized eigenbasis.
+pub fn rectification_error(a: &Mat, s: f64, t2: usize, mapping: Mapping, bits: u32) -> f64 {
+    let n = a.rows;
+    let cb = crate::quant::codebook(mapping, bits);
+    let e = eigh(a);
+    let q = quantize_matrix_cols(&e.vecs.data, n, &cb, bits);
+    let mut v = Mat::from_vec(n, n, dequantize_matrix_cols(&q, n, &cb));
+    if t2 > 0 {
+        v = bjorck(&v, t2);
+    }
+    let ds: Vec<f32> = e
+        .vals
+        .iter()
+        .map(|&x| (x as f64).max(1e-30).powf(s) as f32)
+        .collect();
+    let vs = Mat::sandwich(&v, &ds);
+    // (VΛˢVᵀ)^{-1/s}
+    let inv = eigh(&vs).matrix_power(-1.0 / s, 1e-30);
+    let va = Mat::sandwich(&v, &e.vals);
+    let prod = inv.matmul(&va);
+    let eye = Mat::eye(n);
+    let diff = prod.sub(&eye);
+    diff.data.iter().map(|&x| x.abs() as f64).sum::<f64>() / (n * n) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn metrics_basic() {
+        let a = Mat::eye(4);
+        let b = Mat::eye(4).scale(1.1);
+        assert!(nre(&b, &a) > 0.09 && nre(&b, &a) < 0.11);
+        assert!(angle_error_deg(&b, &a) < 1e-2); // parallel matrices
+        let c = Mat::from_vec(2, 2, vec![0.0, 1.0, -1.0, 0.0]);
+        let d = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        assert!((angle_error_deg(&c, &d) - 90.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn eigen_quantization_beats_precond_on_wide_spectrum() {
+        // The paper's central claim (§3.1/§4) at a laptop-scale order.
+        let mut rng = Rng::new(42);
+        let a = spectrum::synthetic_two_level(256, 1000.0, 1e-3, 4, &mut rng);
+        let base = QuantScheme {
+            mapping: Mapping::Dt,
+            bits: 4,
+            target: QuantTarget::Precond,
+            rectify: 0,
+            block: 64,
+        };
+        let row_a = quant_error_in_power(&a, -0.25, base, false);
+        let row_u = quant_error_in_power(
+            &a,
+            -0.25,
+            QuantScheme { target: QuantTarget::Eigen, ..base },
+            false,
+        );
+        assert!(
+            row_u.nre < 0.5 * row_a.nre,
+            "eigen {} vs precond {}",
+            row_u.nre,
+            row_a.nre
+        );
+    }
+
+    #[test]
+    fn rectification_reduces_error() {
+        let mut rng = Rng::new(43);
+        let a = spectrum::synthetic_loglinear(128, 3e4, &mut rng);
+        let base = QuantScheme {
+            mapping: Mapping::Linear2,
+            bits: 4,
+            target: QuantTarget::Eigen,
+            rectify: 0,
+            block: 64,
+        };
+        let without = quant_error_in_power(&a, -0.25, base, false);
+        let with = quant_error_in_power(
+            &a,
+            -0.25,
+            QuantScheme { rectify: 1, ..base },
+            false,
+        );
+        assert!(with.nre < without.nre, "{} vs {}", with.nre, without.nre);
+    }
+
+    #[test]
+    fn rectification_error_decreases_with_t2() {
+        let mut rng = Rng::new(44);
+        let a = spectrum::synthetic_loglinear(96, 1e4, &mut rng);
+        let e0 = rectification_error(&a, -0.25, 0, Mapping::Linear2, 4);
+        let e4 = rectification_error(&a, -0.25, 4, Mapping::Linear2, 4);
+        assert!(e4 < e0, "{e4} vs {e0}");
+    }
+}

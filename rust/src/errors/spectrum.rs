@@ -1,0 +1,100 @@
+//! Spectrum construction for the paper's error analyses.
+//!
+//! The paper's A₁ is a real preconditioner from a Swin-Tiny run; we provide
+//! (a) a spectrum-matched synthetic (log-linear decay with the Figure-6
+//! condition number ≈ 37235) and (b) harvested spectra from our own training
+//! runs (saved by the coordinator's shadow mode). A₂ is the paper's exact
+//! two-level construction.
+
+use crate::linalg::{qr::random_orthogonal, Mat};
+use crate::util::rng::Rng;
+
+/// Log-linearly decaying spectrum: λ_i = λmax · cond^{-i/(n-1)}.
+pub fn loglinear_spectrum(n: usize, cond: f64) -> Vec<f32> {
+    (0..n)
+        .map(|i| (cond.powf(-(i as f64) / (n as f64 - 1.0))) as f32)
+        .collect()
+}
+
+/// Paper's A₂: two distinct eigenvalues (m large ones = c·λ, n small = λ).
+pub fn two_level_spectrum(n: usize, c: f64, lam: f64, m_large: usize) -> Vec<f32> {
+    (0..n)
+        .map(|i| if i < m_large { (c * lam) as f32 } else { lam as f32 })
+        .collect()
+}
+
+/// PD matrix with the given spectrum and a random orthogonal eigenbasis.
+pub fn pd_from_spectrum(vals: &[f32], rng: &mut Rng) -> Mat {
+    let q = random_orthogonal(vals.len(), rng);
+    Mat::sandwich(&q, vals)
+}
+
+/// Spectrum-matched A₁ analogue: cond(A) ≈ 37235 (Figure 6), log-linear.
+pub fn synthetic_loglinear(n: usize, cond: f64, rng: &mut Rng) -> Mat {
+    pd_from_spectrum(&loglinear_spectrum(n, cond), rng)
+}
+
+/// Paper's synthetic A₂.
+pub fn synthetic_two_level(n: usize, c: f64, lam: f64, m_large: usize, rng: &mut Rng) -> Mat {
+    pd_from_spectrum(&two_level_spectrum(n, c, lam, m_large), rng)
+}
+
+/// Contract a spectrum toward its minimum (Figure 6):
+/// h(λ) = τ·(λ − λmin) + λmin.
+pub fn contract_spectrum(vals: &[f32], tau: f64) -> Vec<f32> {
+    let lam_min = vals.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    vals.iter()
+        .map(|&l| (tau * (l as f64 - lam_min) + lam_min) as f32)
+        .collect()
+}
+
+/// Condition number of a spectrum.
+pub fn cond(vals: &[f32]) -> f64 {
+    let mx = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let mn = vals.iter().cloned().fold(f32::INFINITY, f32::min) as f64;
+    mx / mn.max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::eigh;
+
+    #[test]
+    fn loglinear_has_requested_cond() {
+        let s = loglinear_spectrum(100, 37235.0);
+        assert!((cond(&s) - 37235.0).abs() / 37235.0 < 1e-3);
+        assert!(s.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn two_level_counts() {
+        let s = two_level_spectrum(10, 1000.0, 1e-3, 3);
+        assert_eq!(s.iter().filter(|&&x| x > 0.5).count(), 3);
+        assert!((cond(&s) - 1000.0).abs() < 1e-6 * 1000.0);
+    }
+
+    #[test]
+    fn pd_from_spectrum_has_spectrum() {
+        let mut rng = Rng::new(1);
+        let vals = loglinear_spectrum(48, 100.0);
+        let a = pd_from_spectrum(&vals, &mut rng);
+        let mut got = eigh(&a).vals;
+        got.reverse(); // descending like vals
+        for (g, w) in got.iter().zip(&vals) {
+            assert!((g - w).abs() < 1e-3 * w.abs().max(1e-3), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn contraction_shrinks_cond() {
+        let s = loglinear_spectrum(64, 1e4);
+        let c = contract_spectrum(&s, 0.01);
+        assert!(cond(&c) < cond(&s) / 50.0);
+        // tau = 1 is identity
+        let id = contract_spectrum(&s, 1.0);
+        for (a, b) in id.iter().zip(&s) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

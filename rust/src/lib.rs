@@ -1,0 +1,18 @@
+//! 4-bit Shampoo: memory-efficient second-order network training
+//! (reproduction of Wang, Li, Zhou, Huang — NeurIPS 2024).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!  * L1 — Pallas quantization/matmul kernels (python/compile/kernels),
+//!  * L2 — JAX Shampoo math + model graphs, AOT-lowered to HLO text,
+//!  * L3 — this crate: the training coordinator, quantized optimizer-state
+//!    management, synthetic data pipelines, and the PJRT runtime.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod errors;
+pub mod linalg;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,312 @@
+//! Dense row-major f32 matrices with the operations the error-analysis
+//! harness and the coordinator's host-side math need. Deliberately simple
+//! and allocation-explicit; the blocked matmul is the only tuned routine
+//! (it is on the Table-1 bench path at order 1200).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>, // row-major
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn diag(d: &[f32]) -> Mat {
+        let mut m = Mat::zeros(d.len(), d.len());
+        for (i, &x) in d.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat::from_vec(rows, cols, rng.normal_vec(rows * cols))
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    pub fn diagonal(&self) -> Vec<f32> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat::from_vec(self.rows, self.cols, self.data.iter().map(|x| x * s).collect())
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+        )
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        )
+    }
+
+    /// self + s·I
+    pub fn add_scaled_eye(&self, s: f32) -> Mat {
+        assert!(self.is_square());
+        let mut m = self.clone();
+        for i in 0..self.rows {
+            m[(i, i)] += s;
+        }
+        m
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn inner(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a as f64 * b as f64)
+            .sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Blocked matmul: C = A·B. f64 accumulation over the k-panel keeps
+    /// order-1200 products accurate enough for NRE measurements.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul dims {}x{} · {}x{}", self.rows, self.cols, b.rows, b.cols);
+        let (m, k, n) = (self.rows, self.cols, b.cols);
+        let mut c = Mat::zeros(m, n);
+        // i-k-j loop order: streams B rows and C rows sequentially.
+        const KB: usize = 64;
+        for i in 0..m {
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for k0 in (0..k).step_by(KB) {
+                let kend = (k0 + KB).min(k);
+                for kk in k0..kend {
+                    let a = self.data[i * k + kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for j in 0..n {
+                        crow[j] += a * brow[j];
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// C = Aᵀ·A (Gram), exploiting symmetry.
+    pub fn gram_t(&self) -> Mat {
+        let (m, n) = (self.rows, self.cols);
+        let mut c = Mat::zeros(n, n);
+        for i in 0..m {
+            let row = self.row(i);
+            for a in 0..n {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let dst = &mut c.data[a * n..(a + 1) * n];
+                for bcol in a..n {
+                    dst[bcol] += ra * row[bcol];
+                }
+            }
+        }
+        for a in 0..n {
+            for bcol in 0..a {
+                c.data[a * n + bcol] = c.data[bcol * n + a];
+            }
+        }
+        c
+    }
+
+    /// C = A·Aᵀ (Gram on rows).
+    pub fn gram(&self) -> Mat {
+        self.transpose().gram_t()
+    }
+
+    /// V·diag(d)·Vᵀ — preconditioner reconstruction.
+    pub fn sandwich(v: &Mat, d: &[f32]) -> Mat {
+        assert_eq!(v.cols, d.len());
+        let mut vd = v.clone();
+        for i in 0..v.rows {
+            let row = vd.row_mut(i);
+            for j in 0..d.len() {
+                row[j] *= d[j];
+            }
+        }
+        vd.matmul(&v.transpose())
+    }
+
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows)
+            .map(|i| {
+                self.row(i)
+                    .iter()
+                    .zip(x)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum::<f64>() as f32
+            })
+            .collect()
+    }
+
+    /// Symmetrize in place: (A + Aᵀ)/2.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                self[(i, j)] = v;
+                self[(j, i)] = v;
+            }
+        }
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity_property() {
+        prop::check("A·I = A", 20, |rng| {
+            let m = 1 + rng.below(20);
+            let n = 1 + rng.below(20);
+            let a = Mat::randn(m, n, rng);
+            let c = a.matmul(&Mat::eye(n));
+            prop::assert_close(&c.data, &a.data, 1e-6, 1e-6)
+        });
+    }
+
+    #[test]
+    fn matmul_associativity_property() {
+        prop::check("(AB)C = A(BC)", 10, |rng| {
+            let (m, k, l, n) = (1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12));
+            let a = Mat::randn(m, k, rng);
+            let b = Mat::randn(k, l, rng);
+            let c = Mat::randn(l, n, rng);
+            let lhs = a.matmul(&b).matmul(&c);
+            let rhs = a.matmul(&b.matmul(&c));
+            prop::assert_close(&lhs.data, &rhs.data, 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        prop::check("AᵀA = gram_t(A)", 15, |rng| {
+            let a = Mat::randn(1 + rng.below(15), 1 + rng.below(15), rng);
+            let want = a.transpose().matmul(&a);
+            prop::assert_close(&a.gram_t().data, &want.data, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn sandwich_matches_explicit() {
+        prop::check("VDVᵀ", 10, |rng| {
+            let n = 1 + rng.below(12);
+            let v = Mat::randn(n, n, rng);
+            let d: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let want = v.matmul(&Mat::diag(&d)).matmul(&v.transpose());
+            prop::assert_close(&Mat::sandwich(&v, &d).data, &want.data, 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop::check("(Aᵀ)ᵀ = A", 10, |rng| {
+            let a = Mat::randn(1 + rng.below(10), 1 + rng.below(10), rng);
+            prop::assert_close(&a.transpose().transpose().data, &a.data, 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    fn frobenius_and_inner() {
+        let a = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.frobenius() - 5.0).abs() < 1e-12);
+        assert!((a.inner(&a) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        prop::check("Ax", 10, |rng| {
+            let (m, n) = (1 + rng.below(12), 1 + rng.below(12));
+            let a = Mat::randn(m, n, rng);
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let xm = Mat::from_vec(n, 1, x.clone());
+            prop::assert_close(&a.matvec(&x), &a.matmul(&xm).data, 1e-4, 1e-4)
+        });
+    }
+}

@@ -1,0 +1,367 @@
+//! Symmetric eigendecomposition — the exact reference for the paper's
+//! error analyses (Tables 1/5/6/7, Figures 2/3/6) at order 1200.
+//!
+//! Two solvers, cross-checked in tests:
+//!  * `eigh_jacobi` — cyclic Jacobi; simple, very accurate, O(n³ · sweeps);
+//!  * `eigh`        — Householder tridiagonalization + implicit-shift QL
+//!    (tred2/tqli), ~4/3·n³; the fast path used by the benches.
+//!
+//! Both return eigenvalues ascending with matching eigenvector columns.
+
+use super::dense::Mat;
+
+/// Eigendecomposition result: A = V · diag(vals) · Vᵀ.
+pub struct Eigh {
+    pub vals: Vec<f32>,   // ascending
+    pub vecs: Mat,        // columns are eigenvectors
+}
+
+impl Eigh {
+    /// Reconstruct f(A) = V·diag(f(λ))·Vᵀ.
+    pub fn apply_fn(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let d: Vec<f32> = self.vals.iter().map(|&x| f(x as f64) as f32).collect();
+        Mat::sandwich(&self.vecs, &d)
+    }
+
+    /// A^s with eigenvalue floor (negative/zero eigenvalues clamped).
+    pub fn matrix_power(&self, s: f64, floor: f64) -> Mat {
+        self.apply_fn(|x| x.max(floor).powf(s))
+    }
+}
+
+/// Cyclic Jacobi eigenvalue algorithm (reference implementation).
+pub fn eigh_jacobi(a: &Mat, max_sweeps: usize) -> Eigh {
+    assert!(a.is_square());
+    let n = a.rows;
+    // work in f64 for accuracy
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _ in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + frob64(&m)) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q
+                for k in 0..n {
+                    let akp = m[k * n + p];
+                    let akq = m[k * n + q];
+                    m[k * n + p] = c * akp - s * akq;
+                    m[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = m[p * n + k];
+                    let aqk = m[q * n + k];
+                    m[p * n + k] = c * apk - s * aqk;
+                    m[q * n + k] = s * apk + c * aqk;
+                }
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut vals: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    sort_eig(&mut vals, &mut v, n);
+    Eigh {
+        vals: vals.iter().map(|&x| x as f32).collect(),
+        vecs: Mat::from_vec(n, n, v.iter().map(|&x| x as f32).collect()),
+    }
+}
+
+fn frob64(m: &[f64]) -> f64 {
+    m.iter().map(|&x| x * x).sum::<f64>().sqrt()
+}
+
+fn sort_eig(vals: &mut [f64], vecs: &mut [f64], n: usize) {
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+    let old_vals = vals.to_vec();
+    let old_vecs = vecs.to_vec();
+    for (new, &old) in idx.iter().enumerate() {
+        vals[new] = old_vals[old];
+        for r in 0..n {
+            vecs[r * n + new] = old_vecs[r * n + old];
+        }
+    }
+}
+
+/// Householder tridiagonalization + implicit-shift QL (tred2/tqli).
+/// The fast exact solver for the order-1200 error analyses.
+pub fn eigh(a: &Mat) -> Eigh {
+    assert!(a.is_square());
+    let n = a.rows;
+    let mut z: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut d = vec![0.0f64; n];
+    let mut e = vec![0.0f64; n];
+    tred2(&mut z, &mut d, &mut e, n);
+    tqli(&mut d, &mut e, &mut z, n);
+    sort_eig(&mut d, &mut z, n);
+    Eigh {
+        vals: d.iter().map(|&x| x as f32).collect(),
+        vecs: Mat::from_vec(n, n, z.iter().map(|&x| x as f32).collect()),
+    }
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form.
+/// (Numerical Recipes tred2, with eigenvector accumulation.)
+fn tred2(z: &mut [f64], d: &mut [f64], e: &mut [f64], n: usize) {
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += z[i * n + k].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[i * n + l];
+            } else {
+                for k in 0..=l {
+                    z[i * n + k] /= scale;
+                    h += z[i * n + k] * z[i * n + k];
+                }
+                let mut f = z[i * n + l];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[i * n + l] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[j * n + i] = z[i * n + j] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[j * n + k] * z[i * n + k];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[k * n + j] * z[i * n + k];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[i * n + j];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[i * n + j];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        z[j * n + k] -= f * e[k] + g * z[i * n + k];
+                    }
+                }
+            }
+        } else {
+            e[i] = z[i * n + l];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[i * n + k] * z[k * n + j];
+                }
+                for k in 0..i {
+                    z[k * n + j] -= g * z[k * n + i];
+                }
+            }
+        }
+        d[i] = z[i * n + i];
+        z[i * n + i] = 1.0;
+        for j in 0..i {
+            z[j * n + i] = 0.0;
+            z[i * n + j] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL with eigenvector accumulation (Numerical Recipes tqli).
+fn tqli(d: &mut [f64], e: &mut [f64], z: &mut [f64], n: usize) {
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tqli: too many iterations");
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + if g >= 0.0 { r.abs() } else { -r.abs() });
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                for k in 0..n {
+                    f = z[k * n + i + 1];
+                    z[k * n + i + 1] = s * z[k * n + i] + c * f;
+                    z[k * n + i] = c * z[k * n + i] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_sym(n: usize, rng: &mut Rng) -> Mat {
+        let b = Mat::randn(n, n, rng);
+        let mut a = b.add(&b.transpose()).scale(0.5);
+        a.symmetrize();
+        a
+    }
+
+    fn check_decomp(a: &Mat, e: &Eigh, tol: f32) -> Result<(), String> {
+        let rec = Mat::sandwich(&e.vecs, &e.vals);
+        prop::assert_close(&rec.data, &a.data, tol, tol)?;
+        // orthogonality
+        let vtv = e.vecs.transpose().matmul(&e.vecs);
+        let eye = Mat::eye(a.rows);
+        prop::assert_close(&vtv.data, &eye.data, tol, tol)?;
+        // ascending
+        for w in e.vals.windows(2) {
+            if w[0] > w[1] + 1e-6 {
+                return Err(format!("not ascending: {} > {}", w[0], w[1]));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        prop::check("jacobi: VΛVᵀ = A", 10, |rng| {
+            let n = 2 + rng.below(20);
+            let a = random_sym(n, rng);
+            check_decomp(&a, &eigh_jacobi(&a, 30), 2e-4)
+        });
+    }
+
+    #[test]
+    fn tqli_reconstructs() {
+        prop::check("tred2/tqli: VΛVᵀ = A", 10, |rng| {
+            let n = 2 + rng.below(40);
+            let a = random_sym(n, rng);
+            check_decomp(&a, &eigh(&a), 5e-4)
+        });
+    }
+
+    #[test]
+    fn solvers_agree_on_eigenvalues() {
+        prop::check("jacobi ≍ tqli", 8, |rng| {
+            let n = 2 + rng.below(24);
+            let a = random_sym(n, rng);
+            let e1 = eigh_jacobi(&a, 30);
+            let e2 = eigh(&a);
+            prop::assert_close(&e1.vals, &e2.vals, 1e-3, 1e-3)
+        });
+    }
+
+    #[test]
+    fn known_spectrum() {
+        // diag(1, 2, 3) rotated by a known orthogonal matrix
+        let mut rng = Rng::new(77);
+        let n = 3;
+        let g = Mat::randn(n, n, &mut rng);
+        let q = super::super::qr::householder_qr(&g).0;
+        let a = Mat::sandwich(&q, &[1.0, 2.0, 3.0]);
+        let e = eigh(&a);
+        prop::assert_close(&e.vals, &[1.0, 2.0, 3.0], 1e-4, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn matrix_power_inverse_root() {
+        let mut rng = Rng::new(5);
+        let n = 24;
+        let b = Mat::randn(n, n + 4, &mut rng);
+        let a = b.gram().scale(1.0 / n as f32).add_scaled_eye(0.1);
+        let e = eigh(&a);
+        let inv4 = e.matrix_power(-0.25, 1e-12);
+        // (A^{-1/4})⁴ · A ≈ I
+        let p2 = inv4.matmul(&inv4);
+        let p4 = p2.matmul(&p2);
+        let prod = p4.matmul(&a);
+        prop::assert_close(&prod.data, &Mat::eye(n).data, 2e-2, 2e-2).unwrap();
+    }
+
+    #[test]
+    fn handles_degenerate_spectrum() {
+        // repeated eigenvalues (the paper's synthetic A₂ has only two)
+        let mut rng = Rng::new(9);
+        let n = 16;
+        let g = Mat::randn(n, n, &mut rng);
+        let q = super::super::qr::householder_qr(&g).0;
+        let mut d = vec![1.0f32; n];
+        for x in d.iter_mut().take(n / 2) {
+            *x = 1000.0;
+        }
+        let a = Mat::sandwich(&q, &d);
+        let e = eigh(&a);
+        let rec = Mat::sandwich(&e.vecs, &e.vals);
+        prop::assert_close(&rec.data, &a.data, 0.5, 1e-3).unwrap();
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense linear algebra substrate (in-tree; offline build).
+//!
+//! Exact references for the paper's error analyses at order 1200
+//! (Tables 1/5/6/7, Figures 2/3/6) and host-side math for the coordinator.
+
+pub mod dense;
+pub mod eig;
+pub mod qr;
+pub mod roots;
+
+pub use dense::Mat;
+pub use eig::{eigh, eigh_jacobi, Eigh};
+pub use qr::{householder_qr, random_orthogonal};
+pub use roots::{
+    bjorck, bjorck_step, invroot_eigh, orthogonality_error, power_iteration,
+    schur_newton_invroot,
+};

@@ -1,0 +1,142 @@
+//! Householder QR (exact reference for the CGS2 orthogonalizer in L2) and
+//! random orthogonal matrix generation for the synthetic spectra of the
+//! paper's error analyses (A₂ in Table 1, spectrum-matched A₁).
+
+use super::dense::Mat;
+use crate::util::rng::Rng;
+
+/// Householder QR: A = Q·R with Q orthogonal (m×m) and R upper triangular.
+/// Returns (Q, R). For the square matrices used here m == n.
+pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    let mut r: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut q = vec![0.0f64; m * m];
+    for i in 0..m {
+        q[i * m + i] = 1.0;
+    }
+    for k in 0..n.min(m.saturating_sub(1)) {
+        // Householder vector for column k
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r[i * n + k] * r[i * n + k];
+        }
+        let norm = norm.sqrt();
+        if norm < 1e-300 {
+            continue;
+        }
+        let alpha = if r[k * n + k] > 0.0 { -norm } else { norm };
+        let mut v = vec![0.0f64; m];
+        v[k] = r[k * n + k] - alpha;
+        for i in (k + 1)..m {
+            v[i] = r[i * n + k];
+        }
+        let vnorm2: f64 = v[k..].iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        // R <- (I - 2vvᵀ/|v|²) R
+        for j in k..n {
+            let dot: f64 = (k..m).map(|i| v[i] * r[i * n + j]).sum();
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[i * n + j] -= f * v[i];
+            }
+        }
+        // Q <- Q (I - 2vvᵀ/|v|²)
+        for i in 0..m {
+            let dot: f64 = (k..m).map(|j| q[i * m + j] * v[j]).sum();
+            let f = 2.0 * dot / vnorm2;
+            for j in k..m {
+                q[i * m + j] -= f * v[j];
+            }
+        }
+    }
+    // zero the numerically-subdiagonal part of R
+    for i in 0..m {
+        for j in 0..n.min(i) {
+            r[i * n + j] = 0.0;
+        }
+    }
+    (
+        Mat::from_vec(m, m, q.iter().map(|&x| x as f32).collect()),
+        Mat::from_vec(m, n, r.iter().map(|&x| x as f32).collect()),
+    )
+}
+
+/// Random orthogonal matrix: QR of a Gaussian matrix with sign-fixed R
+/// diagonal (Haar-ish; exact Haar is not needed for the error analyses).
+pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Mat {
+    let g = Mat::randn(n, n, rng);
+    let (mut q, r) = householder_qr(&g);
+    // fix signs so the distribution is not biased by the QR convention
+    for j in 0..n {
+        if r[(j, j)] < 0.0 {
+            for i in 0..n {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn qr_reconstructs() {
+        prop::check("QR = A", 15, |rng| {
+            let n = 1 + rng.below(24);
+            let a = Mat::randn(n, n, rng);
+            let (q, r) = householder_qr(&a);
+            prop::assert_close(&q.matmul(&r).data, &a.data, 1e-4, 1e-3)
+        });
+    }
+
+    #[test]
+    fn q_is_orthogonal() {
+        prop::check("QᵀQ = I", 15, |rng| {
+            let n = 1 + rng.below(24);
+            let a = Mat::randn(n, n, rng);
+            let (q, _) = householder_qr(&a);
+            prop::assert_close(
+                &q.transpose().matmul(&q).data,
+                &Mat::eye(n).data,
+                1e-4,
+                1e-4,
+            )
+        });
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        prop::check("R upper", 10, |rng| {
+            let n = 2 + rng.below(16);
+            let a = Mat::randn(n, n, rng);
+            let (_, r) = householder_qr(&a);
+            for i in 0..n {
+                for j in 0..i {
+                    if r[(i, j)].abs() > 1e-5 {
+                        return Err(format!("R[{i},{j}] = {}", r[(i, j)]));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn random_orthogonal_is_orthogonal() {
+        prop::check("rand orth", 10, |rng| {
+            let n = 2 + rng.below(32);
+            let q = random_orthogonal(n, rng);
+            prop::assert_close(
+                &q.gram_t().data,
+                &Mat::eye(n).data,
+                1e-4,
+                1e-4,
+            )
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Matrix-root toolbox: the Rust mirrors of the L2 algorithms (power
+//! iteration, Schur–Newton inverse p-th root, Björck orthonormalization).
+//! Used by the error-analysis harness (where exactness matters more than
+//! speed) and cross-checked against the eigendecomposition reference.
+
+use super::dense::Mat;
+use super::eig::eigh;
+
+/// λ_max estimate by power iteration (deterministic start, like L2).
+pub fn power_iteration(a: &Mat, iters: usize) -> f32 {
+    assert!(a.is_square());
+    let n = a.rows;
+    let mut v = vec![1.0f32 / (n as f32).sqrt(); n];
+    for _ in 0..iters {
+        let w = a.matvec(&v);
+        let norm = w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt() as f32;
+        if norm < 1e-30 {
+            return 0.0;
+        }
+        for (vi, wi) in v.iter_mut().zip(&w) {
+            *vi = wi / norm;
+        }
+    }
+    let av = a.matvec(&v);
+    v.iter().zip(&av).map(|(&x, &y)| (x as f64) * (y as f64)).sum::<f64>() as f32
+}
+
+/// A^{-1/p} by the coupled Newton (Schur–Newton) iteration with
+/// best-iterate selection (same guard as L2: quantized inputs can be
+/// indefinite and the iteration diverges on negative eigendirections).
+pub fn schur_newton_invroot(a: &Mat, p: u32, iters: usize) -> Mat {
+    assert!(a.is_square());
+    let n = a.rows;
+    let lam_max = power_iteration(a, 20).max(1e-30);
+    let z = 1.0 / lam_max;
+    let eye = Mat::eye(n);
+    let mut m = a.scale(z);
+    let mut x = Mat::eye(n).scale(z.powf(1.0 / p as f32));
+    let mut best_x = x.clone();
+    let mut best_err = m.sub(&eye).max_abs();
+    for _ in 0..iters {
+        let t = eye.scale((p + 1) as f32).sub(&m).scale(1.0 / p as f32);
+        let x_new = x.matmul(&t);
+        let tp = match p {
+            2 => t.matmul(&t),
+            4 => {
+                let t2 = t.matmul(&t);
+                t2.matmul(&t2)
+            }
+            _ => {
+                let mut acc = t.clone();
+                for _ in 0..p - 1 {
+                    acc = acc.matmul(&t);
+                }
+                acc
+            }
+        };
+        let m_new = tp.matmul(&m);
+        let err = m_new.sub(&eye).max_abs();
+        if !err.is_finite() {
+            break;
+        }
+        x = x_new;
+        m = m_new;
+        if err < best_err {
+            best_err = err;
+            best_x = x.clone();
+        }
+    }
+    best_x.symmetrize();
+    best_x
+}
+
+/// Exact A^{-1/p} via eigendecomposition (the measurement reference).
+pub fn invroot_eigh(a: &Mat, p: f64, floor: f64) -> Mat {
+    eigh(a).matrix_power(-1.0 / p, floor)
+}
+
+/// One Björck orthonormalization step: V ← 1.5·V − 0.5·V·VᵀV (paper eq. 2).
+pub fn bjorck_step(v: &Mat) -> Mat {
+    let g = v.gram_t(); // VᵀV
+    v.scale(1.5).sub(&v.matmul(&g).scale(0.5))
+}
+
+pub fn bjorck(v: &Mat, iters: usize) -> Mat {
+    let mut out = v.clone();
+    for _ in 0..iters {
+        out = bjorck_step(&out);
+    }
+    out
+}
+
+/// Orthogonality deviation ‖VᵀV − I‖_F (rectification diagnostics).
+pub fn orthogonality_error(v: &Mat) -> f64 {
+    let g = v.gram_t();
+    let eye = Mat::eye(v.cols);
+    g.sub(&eye).frobenius()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::random_orthogonal;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn pd_with_spectrum(vals: &[f32], rng: &mut Rng) -> (Mat, Mat) {
+        let q = random_orthogonal(vals.len(), rng);
+        (Mat::sandwich(&q, vals), q)
+    }
+
+    #[test]
+    fn power_iteration_finds_lam_max() {
+        prop::check("λmax", 10, |rng| {
+            let n = 4 + rng.below(24);
+            let vals: Vec<f32> = (0..n).map(|i| 1.0 + i as f32).collect();
+            let (a, _) = pd_with_spectrum(&vals, rng);
+            let est = power_iteration(&a, 100);
+            let want = n as f32;
+            if (est - want).abs() / want > 5e-3 {
+                return Err(format!("{est} vs {want}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn schur_newton_matches_eigh() {
+        prop::check("A^{-1/4}", 6, |rng| {
+            let n = 6 + rng.below(20);
+            let vals: Vec<f32> = (0..n).map(|i| 0.5 + 0.37 * i as f32).collect();
+            let (a, _) = pd_with_spectrum(&vals, rng);
+            let sn = schur_newton_invroot(&a, 4, 30);
+            let ex = invroot_eigh(&a, 4.0, 1e-12);
+            let rel = sn.sub(&ex).frobenius() / ex.frobenius();
+            if rel > 1e-2 {
+                return Err(format!("rel err {rel}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn schur_newton_survives_indefinite_input() {
+        // quantization can push small eigenvalues negative; the iteration
+        // must return something finite (best-iterate guard)
+        let mut rng = Rng::new(4);
+        let vals: Vec<f32> = (0..16).map(|i| if i == 0 { -1e-3 } else { 1.0 + i as f32 }).collect();
+        let (a, _) = pd_with_spectrum(&vals, &mut rng);
+        let x = schur_newton_invroot(&a, 4, 25);
+        assert!(x.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn bjorck_rectifies() {
+        prop::check("björck improves orthogonality", 10, |rng| {
+            let n = 8 + rng.below(24);
+            let q = random_orthogonal(n, rng);
+            let noise = Mat::randn(n, n, rng).scale(0.02);
+            let v = q.add(&noise);
+            let e0 = orthogonality_error(&v);
+            let e1 = orthogonality_error(&bjorck(&v, 1));
+            let e2 = orthogonality_error(&bjorck(&v, 2));
+            if !(e1 < 0.6 * e0 && e2 <= e1 + 1e-9) {
+                return Err(format!("e0={e0} e1={e1} e2={e2}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn invroot_eigh_identity() {
+        let a = Mat::eye(8).scale(16.0);
+        let x = invroot_eigh(&a, 4.0, 1e-12);
+        // 16^{-1/4} = 0.5
+        prop::assert_close(&x.data, &Mat::eye(8).scale(0.5).data, 1e-5, 1e-5).unwrap();
+    }
+}

@@ -1,0 +1,273 @@
+//! shampoo4 — CLI launcher for the 4-bit Shampoo training framework.
+//!
+//! Subcommands:
+//!   train        [--config cfg.toml] [--model M] [--steps N] [--optimizer F]
+//!                [--shampoo-bits 4|32] [--kind shampoo|caspr|kfac|adabk]
+//!                [--mapping linear2|dt] [--quantize-eigen true|false]
+//!                [--out runs/NAME] [--shadow-quant-error]
+//!   quant-error  [--n 1200] [--bits 4] [--block 64]
+//!                (Table 1/5/6/7, Figures 2/3/5/6 — see benches for the
+//!                full sweeps)
+//!   memory-plan  [--budget-mb 81920]  (Table 13)
+//!   artifacts    — list loaded artifacts and model specs
+//!
+//! Python never runs here: artifacts must already exist (make artifacts).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use shampoo4::config::{FirstOrderKind, RunConfig, SecondOrderKind};
+use shampoo4::coordinator::memory::{plan, OptimizerPlan, PlannedModel};
+use shampoo4::coordinator::Trainer;
+use shampoo4::quant::Mapping;
+use shampoo4::runtime::Runtime;
+use shampoo4::util::cli::Args;
+
+const BOOL_FLAGS: &[&str] = &["shadow-quant-error", "help", "quiet"];
+
+fn main() -> Result<()> {
+    let args = Args::parse(BOOL_FLAGS);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&args),
+        "quant-error" => cmd_quant_error(&args),
+        "memory-plan" => cmd_memory_plan(&args),
+        "artifacts" => cmd_artifacts(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "shampoo4 — 4-bit Shampoo training framework (NeurIPS 2024 reproduction)\n\
+         \n\
+         USAGE: shampoo4 <train|quant-error|memory-plan|artifacts> [options]\n\
+         \n\
+         train        run a training job (see configs/*.toml presets)\n\
+         quant-error  quantization error analysis (Table 1 family)\n\
+         memory-plan  analytic LLaMA2-7B memory table (Table 13)\n\
+         artifacts    list AOT artifacts and models\n"
+    );
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifact-dir", "artifacts"))
+}
+
+pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(s) = args.get("steps") {
+        cfg.steps = s.parse().context("--steps")?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse().context("--seed")?;
+    }
+    if let Some(o) = args.get("optimizer") {
+        cfg.first.kind = FirstOrderKind::parse(o)?;
+    }
+    if let Some(lr) = args.get("lr") {
+        cfg.first.lr = lr.parse().context("--lr")?;
+    }
+    if let Some(k) = args.get("kind") {
+        cfg.second.kind = SecondOrderKind::parse(k)?;
+    }
+    if let Some(b) = args.get("shampoo-bits") {
+        cfg.second.quant.bits = b.parse().context("--shampoo-bits")?;
+    }
+    if let Some(m) = args.get("mapping") {
+        cfg.second.quant.mapping =
+            Mapping::parse(m).with_context(|| format!("bad --mapping {m}"))?;
+    }
+    if let Some(v) = args.get("quantize-eigen") {
+        cfg.second.quant.quantize_eigen = v == "true";
+    }
+    if let Some(v) = args.get("rectify") {
+        cfg.second.quant.rectify = v == "true";
+    }
+    if let Some(v) = args.get("t1") {
+        cfg.second.update_precond_every = v.parse().context("--t1")?;
+    }
+    if let Some(v) = args.get("t2") {
+        cfg.second.update_invroot_every = v.parse().context("--t2")?;
+    }
+    if let Some(v) = args.get("eps") {
+        cfg.second.eps = v.parse().context("--eps")?;
+    }
+    if let Some(v) = args.get("eval-every") {
+        cfg.eval_every = v.parse().context("--eval-every")?;
+    }
+    if args.flag("shadow-quant-error") {
+        cfg.shadow_quant_error = true;
+    }
+    if let Some(n) = args.get("name") {
+        cfg.name = n.to_string();
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(p) => RunConfig::from_file(Path::new(p))?,
+        None => RunConfig::default(),
+    };
+    apply_cli_overrides(&mut cfg, args)?;
+    let dir = artifact_dir(args);
+    let rt = Runtime::new(&dir)?;
+    println!(
+        "platform={} model={} steps={} F={} second={} bits={} mapping={}",
+        rt.platform(),
+        cfg.model,
+        cfg.steps,
+        cfg.first.kind.name(),
+        cfg.second.kind.name(),
+        cfg.second.quant.bits,
+        cfg.second.quant.mapping.name(),
+    );
+    let out_dir = PathBuf::from(args.get_or("out", &format!("runs/{}", cfg.name)));
+    let mut trainer = Trainer::new(&rt, cfg.clone())?;
+    let mem0 = trainer.memory_report();
+    println!(
+        "params={:.2}MB first-order={:.2}MB second-order={:.2}MB total={:.2}MB",
+        mem0.params_bytes as f64 / 1048576.0,
+        mem0.first_order_bytes as f64 / 1048576.0,
+        mem0.second_order_bytes as f64 / 1048576.0,
+        mem0.total_mb()
+    );
+    let res = trainer.train(&rt, Some(&out_dir.join("metrics.csv")))?;
+    trainer.save_checkpoint(&out_dir.join("checkpoint.bin"), cfg.steps)?;
+    for (step, loss) in res.losses.iter().rev().take(5).rev() {
+        println!("step {step:>6} loss {loss:.4}");
+    }
+    if let Some(e) = &res.final_eval {
+        match e.accuracy {
+            Some(a) => println!(
+                "final eval: loss {:.4} acc {:.2}%  (wall {:.1}s)",
+                e.loss,
+                a * 100.0,
+                res.wall_secs
+            ),
+            None => println!("final eval: loss {:.4}  (wall {:.1}s)", e.loss, res.wall_secs),
+        }
+    }
+    if !res.shadow_rows.is_empty() {
+        println!("step,nre_precond,ae_precond,nre_invroot,ae_invroot");
+        for r in &res.shadow_rows {
+            println!(
+                "{},{:.4},{:.3},{:.4},{:.3}",
+                r.step, r.nre_precond, r.ae_precond_deg, r.nre_invroot, r.ae_invroot_deg
+            );
+        }
+    }
+    println!(
+        "memory: total={:.2}MB optimizer={:.2}MB host_fallback_preconds={}",
+        res.memory.total_mb(),
+        res.memory.optimizer_mb(),
+        res.host_fallbacks
+    );
+    Ok(())
+}
+
+fn cmd_quant_error(args: &Args) -> Result<()> {
+    use shampoo4::errors::{quant_error_in_power, spectrum, QuantScheme, QuantTarget};
+    use shampoo4::util::rng::Rng;
+
+    let n = args.get_usize("n", 1200);
+    let bits = args.get_usize("bits", 4) as u32;
+    let block = args.get_usize("block", 64);
+    let mut rng = Rng::new(args.get_usize("seed", 0) as u64);
+    println!("building A1 (spectrum-matched real, cond≈37235) and A2 (two-level), order {n}");
+    let a1 = spectrum::synthetic_loglinear(n, 37235.0, &mut rng);
+    let a2 = spectrum::synthetic_two_level(n, 1000.0, 1e-3, n / 20, &mut rng);
+    println!("matrix,mapping,bits,qm,or,nre,ae_deg");
+    for (mname, a) in [("A1", &a1), ("A2", &a2)] {
+        for mapping in [Mapping::Dt, Mapping::Linear2] {
+            for (target, rect) in [
+                (QuantTarget::Precond, 0),
+                (QuantTarget::Eigen, 0),
+                (QuantTarget::Eigen, 1),
+            ] {
+                let row = quant_error_in_power(
+                    a,
+                    -0.25,
+                    QuantScheme { mapping, bits, target, rectify: rect, block },
+                    false,
+                );
+                println!(
+                    "{mname},{},{bits},{},{},{:.4},{:.4}",
+                    mapping.name(),
+                    if target == QuantTarget::Eigen { "U" } else { "A" },
+                    if rect > 0 { "yes" } else { "no" },
+                    row.nre,
+                    row.ae_deg
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_memory_plan(args: &Args) -> Result<()> {
+    let budget = args.get_usize("budget-mb", 81920) * 1024 * 1024;
+    let m = PlannedModel::llama2_7b();
+    println!(
+        "model {} ({:.2}B params), budget {:.0} MB",
+        m.name,
+        m.param_count() as f64 / 1e9,
+        budget as f64 / 1048576.0
+    );
+    println!("optimizer,batch,total_mb,fits");
+    let plans = [
+        ("8-bit AdamW", plan(&m, OptimizerPlan::Adam { bits: 8 })),
+        (
+            "8-bit AdamW + 32-bit Shampoo",
+            plan(&m, OptimizerPlan::AdamShampoo { adam_bits: 8, shampoo_bits: 32, max_order: 2048 }),
+        ),
+        (
+            "8-bit AdamW + 4-bit Shampoo (our)",
+            plan(&m, OptimizerPlan::AdamShampoo { adam_bits: 8, shampoo_bits: 4, max_order: 2048 }),
+        ),
+    ];
+    for (name, p) in &plans {
+        for batch in [2usize, 64, 128, 256] {
+            let total = p.total_at_batch(batch);
+            println!(
+                "{name},{batch},{:.0},{}",
+                total as f64 / 1048576.0,
+                if total <= budget { "yes" } else { "OOM" }
+            );
+        }
+        println!("{name},max_batch,{},-", p.max_batch(budget));
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    if !dir.join("manifest.json").exists() {
+        bail!("no manifest at {} — run `make artifacts`", dir.display());
+    }
+    let rt = Runtime::new(&dir)?;
+    let mut names: Vec<_> = rt.manifest.artifacts.keys().collect();
+    names.sort();
+    println!("{} artifacts:", names.len());
+    for n in names {
+        let s = rt.spec(n)?;
+        println!("  {n}  ({} in / {} out)", s.inputs.len(), s.outputs.len());
+    }
+    println!("models:");
+    for (name, m) in &rt.manifest.models {
+        println!(
+            "  {name}: kind={} params={} batch={}",
+            m.kind,
+            m.params.len(),
+            m.batch
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,336 @@
+//! First-order optimizers F (eq. 1) — native Rust elementwise hot path
+//! (DESIGN.md decision 7), cross-checked against the L2 artifact versions in
+//! rust/tests/runtime_integration.rs.
+//!
+//! Implemented: SGDM, AdamW, NAdamW, Adagrad (the paper's Fs), plus the
+//! comparison arms of Appendix H: schedule-free SGD/AdamW [Defazio et al.]
+//! and M-FAC (separate module).
+
+/// A first-order optimizer over a flat parameter vector.
+pub trait FirstOrder {
+    /// One update. `params` holds the *training* iterate (for schedule-free
+    /// methods this is the gradient point y); `grad` its gradient; `lr` the
+    /// scheduled learning rate.
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
+
+    /// Parameters to use for evaluation (schedule-free returns the average).
+    fn eval_params(&self, current: &[f32]) -> Vec<f32> {
+        current.to_vec()
+    }
+
+    /// Exact optimizer-state bytes (for the Table 2/13 memory accounting).
+    fn state_bytes(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct Sgdm {
+    buf: Vec<f32>,
+    pub momentum: f32,
+    pub weight_decay: f32,
+}
+
+impl Sgdm {
+    pub fn new(n: usize, momentum: f32, weight_decay: f32) -> Self {
+        Self { buf: vec![0.0; n], momentum, weight_decay }
+    }
+}
+
+impl FirstOrder for Sgdm {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        for i in 0..params.len() {
+            let g = grad[i] + self.weight_decay * params[i];
+            self.buf[i] = self.momentum * self.buf[i] + g;
+            params[i] -= lr * self.buf[i];
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.buf.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "SGDM"
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct AdamW {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    step: u64,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub nesterov: bool,
+}
+
+impl AdamW {
+    pub fn new(n: usize, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
+        Self {
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            step: 0,
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            nesterov: false,
+        }
+    }
+
+    /// NAdamW [Dozat 2016]: Nesterov momentum inside AdamW.
+    pub fn nadamw(n: usize, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
+        Self { nesterov: true, ..Self::new(n, beta1, beta2, eps, weight_decay) }
+    }
+}
+
+impl FirstOrder for AdamW {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        self.step += 1;
+        let t = self.step as f32;
+        let bc1 = 1.0 - self.beta1.powf(t);
+        let bc2 = 1.0 - self.beta2.powf(t);
+        let bc1_next = 1.0 - self.beta1.powf(t + 1.0);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mh = if self.nesterov {
+                (self.beta1 * self.m[i] + (1.0 - self.beta1) * g) / bc1_next
+            } else {
+                self.m[i] / bc1
+            };
+            let vh = self.v[i] / bc2;
+            params[i] -= lr * (mh / (vh.sqrt() + self.eps) + self.weight_decay * params[i]);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        (self.m.len() + self.v.len()) * 4
+    }
+
+    fn name(&self) -> &'static str {
+        if self.nesterov { "NAdamW" } else { "AdamW" }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+pub struct Adagrad {
+    acc: Vec<f32>,
+    pub eps: f32,
+    pub weight_decay: f32,
+}
+
+impl Adagrad {
+    pub fn new(n: usize, eps: f32, weight_decay: f32) -> Self {
+        Self { acc: vec![0.0; n], eps, weight_decay }
+    }
+}
+
+impl FirstOrder for Adagrad {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        for i in 0..params.len() {
+            let g = grad[i] + self.weight_decay * params[i];
+            self.acc[i] += g * g;
+            params[i] -= lr * g / (self.acc[i].sqrt() + self.eps);
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.acc.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "Adagrad"
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Schedule-free optimizers [Defazio et al. 2024, "The Road Less Scheduled"]
+/// — the Appendix H.1 comparison arm (Table 9). The caller's parameter
+/// buffer holds y_t = (1−β)·z_t + β·x_t (the gradient point); `eval_params`
+/// returns the Polyak-style average x_t.
+pub struct ScheduleFree {
+    z: Vec<f32>,
+    x: Vec<f32>,
+    t: u64,
+    pub beta: f32,
+    pub weight_decay: f32,
+    /// Some => AdamW-normalized base step (beta2, eps); None => SGD.
+    adam: Option<(f32, f32, Vec<f32>)>,
+    warmup: u64,
+    lr_sum_sq: f64,
+    initialized: bool,
+}
+
+impl ScheduleFree {
+    pub fn sgd(n: usize, beta: f32, weight_decay: f32, warmup: usize) -> Self {
+        Self {
+            z: vec![0.0; n],
+            x: vec![0.0; n],
+            t: 0,
+            beta,
+            weight_decay,
+            adam: None,
+            warmup: warmup as u64,
+            lr_sum_sq: 0.0,
+            initialized: false,
+        }
+    }
+
+    pub fn adamw(n: usize, beta: f32, beta2: f32, eps: f32, weight_decay: f32,
+                 warmup: usize) -> Self {
+        Self {
+            adam: Some((beta2, eps, vec![0.0; n])),
+            ..Self::sgd(n, beta, weight_decay, warmup)
+        }
+    }
+}
+
+impl FirstOrder for ScheduleFree {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        if !self.initialized {
+            self.z.copy_from_slice(params);
+            self.x.copy_from_slice(params);
+            self.initialized = true;
+        }
+        self.t += 1;
+        // internal warmup ramp (the method is schedule-free, warmup excepted)
+        let ramp = (self.t as f32 / self.warmup.max(1) as f32).min(1.0);
+        let gamma = lr * ramp;
+        // weight x by γ² (paper's recommended weighting)
+        self.lr_sum_sq += (gamma as f64) * (gamma as f64);
+        let c = if self.lr_sum_sq > 0.0 {
+            ((gamma as f64) * (gamma as f64) / self.lr_sum_sq) as f32
+        } else {
+            1.0
+        };
+        let bc2 = self.adam.as_ref().map(|(b2, _, _)| 1.0 - b2.powf(self.t as f32));
+        for i in 0..params.len() {
+            let g = grad[i] + self.weight_decay * params[i];
+            let step_dir = match &mut self.adam {
+                None => g,
+                Some((b2, eps, v)) => {
+                    v[i] = *b2 * v[i] + (1.0 - *b2) * g * g;
+                    let vh = v[i] / bc2.unwrap();
+                    g / (vh.sqrt() + *eps)
+                }
+            };
+            self.z[i] -= gamma * step_dir;
+            self.x[i] = (1.0 - c) * self.x[i] + c * self.z[i];
+            // next gradient point y = (1−β)z + βx
+            params[i] = (1.0 - self.beta) * self.z[i] + self.beta * self.x[i];
+        }
+    }
+
+    fn eval_params(&self, current: &[f32]) -> Vec<f32> {
+        if self.initialized {
+            self.x.clone()
+        } else {
+            current.to_vec()
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        let base = (self.z.len() + self.x.len()) * 4;
+        base + self.adam.as_ref().map(|(_, _, v)| v.len() * 4).unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        if self.adam.is_some() { "AdamWScheduleFree" } else { "SGDScheduleFree" }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Quadratic f(x) = ½‖x − x*‖²: every optimizer must converge.
+    fn run_quadratic(opt: &mut dyn FirstOrder, lr: f32, steps: usize) -> f32 {
+        let target = [1.0f32, -2.0, 3.0, 0.5];
+        let mut p = vec![0.0f32; 4];
+        for _ in 0..steps {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g, lr);
+        }
+        let ev = opt.eval_params(&p);
+        ev.iter()
+            .zip(&target)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt()
+    }
+
+    #[test]
+    fn sgdm_converges() {
+        let mut o = Sgdm::new(4, 0.9, 0.0);
+        assert!(run_quadratic(&mut o, 0.05, 300) < 1e-3);
+    }
+
+    #[test]
+    fn adamw_converges() {
+        let mut o = AdamW::new(4, 0.9, 0.999, 1e-8, 0.0);
+        assert!(run_quadratic(&mut o, 0.05, 800) < 1e-2);
+    }
+
+    #[test]
+    fn nadamw_converges() {
+        let mut o = AdamW::nadamw(4, 0.9, 0.999, 1e-8, 0.0);
+        assert!(run_quadratic(&mut o, 0.05, 800) < 1e-2);
+    }
+
+    #[test]
+    fn adagrad_converges() {
+        let mut o = Adagrad::new(4, 1e-10, 0.0);
+        assert!(run_quadratic(&mut o, 0.5, 800) < 1e-2);
+    }
+
+    #[test]
+    fn schedule_free_sgd_converges() {
+        let mut o = ScheduleFree::sgd(4, 0.9, 0.0, 10);
+        assert!(run_quadratic(&mut o, 0.1, 600) < 1e-2);
+    }
+
+    #[test]
+    fn schedule_free_adamw_converges() {
+        let mut o = ScheduleFree::adamw(4, 0.9, 0.999, 1e-8, 0.0, 10);
+        assert!(run_quadratic(&mut o, 0.05, 800) < 2e-2);
+    }
+
+    #[test]
+    fn adamw_matches_reference_formula() {
+        // hand-computed single AdamW step
+        let mut o = AdamW::new(1, 0.9, 0.999, 1e-8, 0.01);
+        let mut p = vec![1.0f32];
+        o.step(&mut p, &[0.5], 0.1);
+        // m=0.05, v=0.00025/..., mh=0.05/0.1=0.5, vh=0.00025/0.001=0.25
+        // p = 1 - 0.1*(0.5/(0.5+1e-8) + 0.01*1) = 1 - 0.1*1.00999 ≈ 0.899
+        assert!((p[0] - 0.899).abs() < 1e-3, "{}", p[0]);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut o = Sgdm::new(1, 0.0, 0.1);
+        let mut p = vec![1.0f32];
+        o.step(&mut p, &[0.0], 0.5);
+        assert!(p[0] < 1.0);
+    }
+
+    #[test]
+    fn state_bytes() {
+        assert_eq!(Sgdm::new(10, 0.9, 0.0).state_bytes(), 40);
+        assert_eq!(AdamW::new(10, 0.9, 0.999, 1e-8, 0.0).state_bytes(), 80);
+        assert_eq!(ScheduleFree::sgd(10, 0.9, 0.0, 1).state_bytes(), 80);
+        assert_eq!(
+            ScheduleFree::adamw(10, 0.9, 0.999, 1e-8, 0.0, 1).state_bytes(),
+            120
+        );
+    }
+}

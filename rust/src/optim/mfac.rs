@@ -1,0 +1,232 @@
+//! M-FAC [Frantar et al. 2021]: matrix-free inverse-Hessian-vector products
+//! from a window of m recent gradients — the Appendix H.1 comparison arm
+//! (Table 11). The paper's point is that M-FAC's m dense gradient copies
+//! make it far *less* memory-efficient than 4-bit Shampoo; we reproduce
+//! that by exact state accounting.
+//!
+//! H ≈ λI + (1/m)·Σ g_i g_iᵀ = λI + (1/m)GᵀG with G the m×d gradient
+//! window. By Woodbury:
+//!   H⁻¹v = (1/λ)·[ v − Gᵀ·(mλ·I_m + G·Gᵀ)⁻¹·G·v ].
+//! The m×m solve is exact Gaussian elimination (m ≤ 64).
+
+use super::first_order::FirstOrder;
+
+pub struct MFac {
+    /// ring buffer of the last m gradients (each d long)
+    grads: Vec<Vec<f32>>,
+    head: usize,
+    filled: usize,
+    m: usize,
+    pub damp: f32,
+    pub momentum: f32,
+    buf: Vec<f32>,
+    pub weight_decay: f32,
+}
+
+impl MFac {
+    pub fn new(dim: usize, m: usize, damp: f32, momentum: f32, weight_decay: f32) -> Self {
+        Self {
+            grads: Vec::new(),
+            head: 0,
+            filled: 0,
+            m,
+            damp,
+            momentum,
+            buf: vec![0.0; dim],
+            weight_decay,
+        }
+    }
+
+    fn push_grad(&mut self, g: &[f32]) {
+        if self.grads.len() < self.m {
+            self.grads.push(g.to_vec());
+            self.filled = self.grads.len();
+        } else {
+            self.grads[self.head].copy_from_slice(g);
+            self.head = (self.head + 1) % self.m;
+            self.filled = self.m;
+        }
+    }
+
+    /// H⁻¹·v via Woodbury with the current window.
+    fn ihvp(&self, v: &[f32]) -> Vec<f32> {
+        let k = self.filled;
+        if k == 0 {
+            return v.iter().map(|x| x / self.damp).collect();
+        }
+        // Gv (k) and GGᵀ (k×k)
+        let mut gv = vec![0.0f64; k];
+        let mut ggt = vec![0.0f64; k * k];
+        for i in 0..k {
+            let gi = &self.grads[i];
+            gv[i] = gi.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum();
+            for j in i..k {
+                let gj = &self.grads[j];
+                let dot: f64 = gi.iter().zip(gj).map(|(&a, &b)| a as f64 * b as f64).sum();
+                ggt[i * k + j] = dot;
+                ggt[j * k + i] = dot;
+            }
+        }
+        // A = m·λ·I + GGᵀ ;  solve A·x = Gv
+        let mlam = self.m as f64 * self.damp as f64;
+        for i in 0..k {
+            ggt[i * k + i] += mlam;
+        }
+        let x = solve_small(&mut ggt, &mut gv, k);
+        // out = (v − Gᵀx)/λ
+        let mut out = v.to_vec();
+        for i in 0..k {
+            let xi = x[i] as f32;
+            if xi != 0.0 {
+                for (o, &gi) in out.iter_mut().zip(&self.grads[i]) {
+                    *o -= xi * gi;
+                }
+            }
+        }
+        let inv = 1.0 / self.damp;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+        out
+    }
+}
+
+/// Gaussian elimination with partial pivoting; consumes a and b.
+fn solve_small(a: &mut [f64], b: &mut [f64], n: usize) -> Vec<f64> {
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        if d.abs() < 1e-300 {
+            continue; // singular direction; Woodbury damping should prevent
+        }
+        for r in (col + 1)..n {
+            let f = a[r * n + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for col in (0..n).rev() {
+        let mut acc = b[col];
+        for c in (col + 1)..n {
+            acc -= a[col * n + c] * x[c];
+        }
+        let d = a[col * n + col];
+        x[col] = if d.abs() < 1e-300 { 0.0 } else { acc / d };
+    }
+    x
+}
+
+impl FirstOrder for MFac {
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        let g: Vec<f32> = grad
+            .iter()
+            .zip(params.iter())
+            .map(|(&g, &p)| g + self.weight_decay * p)
+            .collect();
+        self.push_grad(&g);
+        let update = self.ihvp(&g);
+        for i in 0..params.len() {
+            self.buf[i] = self.momentum * self.buf[i] + update[i];
+            params[i] -= lr * self.buf[i];
+        }
+    }
+
+    fn state_bytes(&self) -> usize {
+        // the m dense gradient copies dominate — the paper's Table 11 point
+        self.grads.iter().map(|g| g.len() * 4).sum::<usize>() + self.buf.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "M-FAC"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn solve_small_known_system() {
+        // [[2,1],[1,3]] x = [3,5] -> x = [0.8, 1.4]
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![3.0, 5.0];
+        let x = solve_small(&mut a, &mut b, 2);
+        assert!((x[0] - 0.8).abs() < 1e-12);
+        assert!((x[1] - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ihvp_matches_direct_inverse() {
+        // small dim: build H densely and compare
+        let mut rng = Rng::new(3);
+        let d = 6;
+        let m = 4;
+        let mut opt = MFac::new(d, m, 0.5, 0.0, 0.0);
+        let grads: Vec<Vec<f32>> = (0..m).map(|_| rng.normal_vec(d)).collect();
+        for g in &grads {
+            opt.push_grad(g);
+        }
+        let v = rng.normal_vec(d);
+        let got = opt.ihvp(&v);
+        // dense H = λI + (1/m)ΣggT
+        let mut h = vec![0.0f64; d * d];
+        for i in 0..d {
+            h[i * d + i] = 0.5;
+        }
+        for g in &grads {
+            for i in 0..d {
+                for j in 0..d {
+                    h[i * d + j] += g[i] as f64 * g[j] as f64 / m as f64;
+                }
+            }
+        }
+        let mut rhs: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        let want = solve_small(&mut h, &mut rhs, d);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((*a as f64 - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        let target = [1.0f32, -2.0, 3.0, 0.5];
+        let mut opt = MFac::new(4, 8, 0.1, 0.9, 0.0);
+        let mut p = vec![0.0f32; 4];
+        for _ in 0..300 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(a, b)| a - b).collect();
+            opt.step(&mut p, &g, 0.05);
+        }
+        let err: f32 = p.iter().zip(&target).map(|(a, b)| (a - b).abs()).sum();
+        assert!(err < 0.05, "{err}");
+    }
+
+    #[test]
+    fn state_bytes_grow_with_window() {
+        let mut opt = MFac::new(100, 8, 0.1, 0.9, 0.0);
+        assert_eq!(opt.state_bytes(), 400); // just momentum
+        for _ in 0..10 {
+            opt.push_grad(&vec![0.0; 100]);
+        }
+        // 8 gradient copies * 400 B + momentum 400 B
+        assert_eq!(opt.state_bytes(), 8 * 400 + 400);
+    }
+}

@@ -1,0 +1,43 @@
+//! Optimizers: native first-order hot path (F of eq. 1) and the comparison
+//! arms of Appendix H. Second-order preconditioning lives in `coordinator`
+//! (it orchestrates the AOT artifacts).
+
+pub mod first_order;
+pub mod mfac;
+
+pub use first_order::{Adagrad, AdamW, FirstOrder, ScheduleFree, Sgdm};
+pub use mfac::MFac;
+
+use crate::config::{FirstOrderConfig, FirstOrderKind};
+
+/// Build a first-order optimizer for an n-parameter model.
+pub fn build_first_order(cfg: &FirstOrderConfig, n: usize, warmup: usize) -> Box<dyn FirstOrder> {
+    match cfg.kind {
+        FirstOrderKind::Sgdm => Box::new(Sgdm::new(n, cfg.momentum, cfg.weight_decay)),
+        FirstOrderKind::AdamW => {
+            Box::new(AdamW::new(n, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay))
+        }
+        FirstOrderKind::NAdamW => {
+            Box::new(AdamW::nadamw(n, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay))
+        }
+        FirstOrderKind::Adagrad => Box::new(Adagrad::new(n, 1e-10, cfg.weight_decay)),
+        FirstOrderKind::SgdScheduleFree => {
+            Box::new(ScheduleFree::sgd(n, 0.9, cfg.weight_decay, warmup))
+        }
+        FirstOrderKind::AdamWScheduleFree => Box::new(ScheduleFree::adamw(
+            n,
+            0.9,
+            cfg.beta2,
+            cfg.eps,
+            cfg.weight_decay,
+            warmup,
+        )),
+        FirstOrderKind::MFac => Box::new(MFac::new(
+            n,
+            cfg.mfac_m,
+            0.1,
+            cfg.momentum,
+            cfg.weight_decay,
+        )),
+    }
+}

@@ -1,0 +1,219 @@
+//! Block-wise quantizer — exact Rust mirror of the L1 Pallas kernel
+//! (python/compile/kernels/quant.py): absmax normalization per block of 64,
+//! nearest-codebook-entry argmin with lowest-index ties.
+//!
+//! Used (a) natively by the error-analysis harness (8-bit rows of Table 7
+//! never touch artifacts) and (b) by the coordinator to create/unpack the
+//! packed state buffers it feeds the artifacts.
+
+use super::codebook::Boundaries;
+use super::pack::{pack_bits, packed_len, unpack_bits};
+
+pub const BLOCK: usize = 64;
+
+/// Quantized vector: packed codes + one f32 scale per block.
+#[derive(Debug, Clone)]
+pub struct QuantizedVec {
+    pub packed: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub len: usize,
+    pub bits: u32,
+    pub block: usize,
+}
+
+impl QuantizedVec {
+    /// Exact storage bytes of this state (the paper's memory accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.packed.len() + self.scales.len() * 4
+    }
+
+    /// Unpack codes to one-per-byte (artifact boundary format).
+    pub fn codes_u8(&self) -> Vec<u8> {
+        unpack_bits(&self.packed, self.bits, self.len)
+    }
+}
+
+/// Quantize with blocks of `block` consecutive elements. `x.len()` must be a
+/// multiple of `block` (callers arrange column-major layout so blocks stay
+/// within one column of an eigenvector matrix, paper §3.3).
+pub fn quantize(x: &[f32], cb: &[f32], bits: u32, block: usize) -> QuantizedVec {
+    assert_eq!(x.len() % block, 0, "len {} % block {block}", x.len());
+    assert!(cb.len() >= (1usize << bits));
+    let nblocks = x.len() / block;
+    let mut codes = Vec::with_capacity(x.len());
+    let mut scales = Vec::with_capacity(nblocks);
+    // §Perf L3-1: binary search over precomputed decision boundaries
+    // instead of a 2^b-way argmin per element (see codebook::Boundaries).
+    let bounds = Boundaries::new(cb);
+    for b in 0..nblocks {
+        let blk = &x[b * block..(b + 1) * block];
+        let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax } else { 1.0 };
+        let inv = 1.0 / scale;
+        scales.push(scale);
+        for &v in blk {
+            codes.push(bounds.nearest(v * inv));
+        }
+    }
+    QuantizedVec {
+        packed: pack_bits(&codes, bits),
+        scales,
+        len: x.len(),
+        bits,
+        block,
+    }
+}
+
+/// Dequantize: R(codes) ⊙ scales.
+pub fn dequantize(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
+    let codes = q.codes_u8();
+    let mut out = Vec::with_capacity(q.len);
+    for (i, &c) in codes.iter().enumerate() {
+        out.push(cb[c as usize] * q.scales[i / q.block]);
+    }
+    out
+}
+
+/// Quantize a square order-n matrix (row-major) with blocks running down
+/// columns (§3.3): we quantize the transpose's rows. Block = min(64, n).
+pub fn quantize_matrix_cols(a: &[f32], n: usize, cb: &[f32], bits: u32) -> QuantizedVec {
+    assert_eq!(a.len(), n * n);
+    let block = BLOCK.min(n);
+    // transpose to column-major so each block of 64 is within a column
+    let mut t = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            t[j * n + i] = a[i * n + j];
+        }
+    }
+    quantize(&t, cb, bits, block)
+}
+
+/// Inverse of `quantize_matrix_cols`: returns row-major order-n matrix.
+pub fn dequantize_matrix_cols(q: &QuantizedVec, n: usize, cb: &[f32]) -> Vec<f32> {
+    let t = dequantize(q, cb);
+    let mut a = vec![0.0f32; n * n];
+    for j in 0..n {
+        for i in 0..n {
+            a[i * n + j] = t[j * n + i];
+        }
+    }
+    a
+}
+
+/// Memory model: bytes for an order-n matrix state at `bits` with per-block
+/// f32 scales — the "32/(4+0.5) ≈ 7x" arithmetic of Appendix G.
+pub fn matrix_state_bytes(n: usize, bits: u32, block: usize) -> usize {
+    let elems = n * n;
+    packed_len(elems, bits) + (elems / block.min(n).max(1)) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::{codebook, Mapping};
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_error_bounded() {
+        let cb = codebook(Mapping::Linear2, 4);
+        let max_gap = cb.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
+        prop::check("quantize roundtrip bound", 20, |rng| {
+            let nblocks = 1 + rng.below(8);
+            let x: Vec<f32> = (0..nblocks * 64).map(|_| rng.normal_f32()).collect();
+            let q = quantize(&x, &cb, 4, 64);
+            let d = dequantize(&q, &cb);
+            for (b, chunk) in x.chunks(64).enumerate() {
+                let scale = q.scales[b];
+                for (i, (&xv, &dv)) in chunk.iter().zip(&d[b * 64..]).enumerate() {
+                    let bound = 0.5 * max_gap * scale + 1e-6;
+                    if (xv - dv).abs() > bound {
+                        return Err(format!("block {b} elem {i}: {xv} vs {dv}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_blocks_are_exact() {
+        let cb = codebook(Mapping::Linear2, 4);
+        let x = vec![0.0f32; 128];
+        let q = quantize(&x, &cb, 4, 64);
+        assert_eq!(q.scales, vec![1.0, 1.0]);
+        assert_eq!(dequantize(&q, &cb), x);
+    }
+
+    #[test]
+    fn state_bytes_accounting() {
+        let cb = codebook(Mapping::Linear2, 4);
+        let x = vec![0.5f32; 64 * 64];
+        let q = quantize(&x, &cb, 4, 64);
+        // 4096 codes at 4-bit = 2048 bytes; 64 scales * 4 = 256 bytes
+        assert_eq!(q.state_bytes(), 2048 + 256);
+        assert_eq!(matrix_state_bytes(64, 4, 64), 2048 + 256);
+        // the Appendix-G ratio: 32-bit / (4-bit + 0.5 overhead) ≈ 7.1x
+        let fp32 = 64 * 64 * 4;
+        let ratio = fp32 as f64 / q.state_bytes() as f64;
+        assert!((ratio - 7.1).abs() < 0.2, "{ratio}");
+    }
+
+    #[test]
+    fn matrix_cols_roundtrip_matches_python_layout() {
+        // column with huge entry must not pollute other columns (same test
+        // as python tests/test_quant_kernels.py::test_column_blocking)
+        let cb = codebook(Mapping::Linear2, 4);
+        let n = 64;
+        let mut a = vec![0.01f32; n * n];
+        a[0] = 100.0; // a[0,0]
+        let q = quantize_matrix_cols(&a, n, &cb, 4);
+        let d = dequantize_matrix_cols(&q, n, &cb);
+        for i in 0..n {
+            for j in 1..n {
+                assert!((d[i * n + j] - 0.01).abs() < 0.005, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn three_bit_roundtrip() {
+        let cb = codebook(Mapping::Dt, 3);
+        prop::check("3-bit roundtrip stores 3 bits", 10, |rng| {
+            let x: Vec<f32> = (0..128).map(|_| rng.normal_f32()).collect();
+            let q = quantize(&x, &cb, 3, 64);
+            if q.packed.len() != 48 {
+                return Err(format!("packed {} bytes", q.packed.len()));
+            }
+            let d = dequantize(&q, &cb);
+            // every dequantized value is a scaled codebook entry
+            for (b, chunk) in d.chunks(64).enumerate() {
+                for &v in chunk {
+                    let normed = v / q.scales[b];
+                    if !cb.iter().any(|&c| (c - normed).abs() < 1e-5) {
+                        return Err(format!("{normed} not in codebook"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn eight_bit_much_tighter_than_four() {
+        let cb8 = codebook(Mapping::Dt, 8);
+        let cb4 = codebook(Mapping::Dt, 4);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+        let err = |bits: u32, cb: &[f32]| {
+            let q = quantize(&x, cb, bits, 64);
+            let d = dequantize(&q, cb);
+            x.iter()
+                .zip(&d)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert!(err(8, &cb8) < 0.2 * err(4, &cb4));
+    }
+}

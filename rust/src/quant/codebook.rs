@@ -1,0 +1,272 @@
+//! Quantization codebooks — exact Rust mirror of python/compile/quantizer.py
+//! (cross-checked against the paper's Appendix C tables in tests and against
+//! the Python implementation via the golden artifacts).
+
+/// Quantization mapping R (paper §2.2 / §3.3 / Appendix C).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mapping {
+    /// Dynamic tree quantization [Dettmers 2016].
+    Dt,
+    /// Linear square quantization, paper eq. (3).
+    Linear2,
+    /// Plain linear quantization (reference arm).
+    Linear,
+}
+
+impl Mapping {
+    pub fn parse(s: &str) -> Option<Mapping> {
+        match s.to_ascii_lowercase().as_str() {
+            "dt" | "dynamic_tree" => Some(Mapping::Dt),
+            "linear2" | "linear-2" | "linear_square" => Some(Mapping::Linear2),
+            "linear" => Some(Mapping::Linear),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mapping::Dt => "dt",
+            Mapping::Linear2 => "linear2",
+            Mapping::Linear => "linear",
+        }
+    }
+}
+
+/// Sorted codebook for (mapping, bits).
+pub fn codebook(mapping: Mapping, bits: u32) -> Vec<f32> {
+    let out = match mapping {
+        Mapping::Dt => dt_codebook(bits),
+        Mapping::Linear2 => linear2_codebook(bits),
+        Mapping::Linear => linear_codebook(bits),
+    };
+    debug_assert_eq!(out.len(), 1 << bits);
+    out
+}
+
+/// DT codebook: {0, 1} ∪ {±q_k·10^{-E}}, b = 2+E+F,
+/// q_k = (p_k + p_{k+1})/2, p_j = 0.9·j/2^F + 0.1  (Appendix C).
+pub fn dt_codebook(bits: u32) -> Vec<f32> {
+    assert!(bits >= 2);
+    let mut values: Vec<f64> = vec![0.0, 1.0];
+    for e in 0..=(bits - 2) {
+        let f = bits - 2 - e;
+        let pow = 2usize.pow(f);
+        let p: Vec<f64> = (0..=pow).map(|j| 0.9 * j as f64 / pow as f64 + 0.1).collect();
+        for k in 0..pow {
+            let q = 0.5 * (p[k] + p[k + 1]) * 10f64.powi(-(e as i32));
+            values.push(q);
+            values.push(-q);
+        }
+    }
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    values.dedup();
+    assert_eq!(values.len(), 1 << bits);
+    values.into_iter().map(|x| x as f32).collect()
+}
+
+/// Linear-2 codebook, paper eq. (3).
+pub fn linear2_codebook(bits: u32) -> Vec<f32> {
+    let n = 1usize << bits;
+    let mid = (1usize << (bits - 1)) - 1;
+    (0..n)
+        .map(|j| {
+            let base = -1.0 + 2.0 * j as f64 / (n - 1) as f64;
+            if j < mid {
+                -(base * base) as f32
+            } else if j == mid {
+                0.0
+            } else {
+                (base * base) as f32
+            }
+        })
+        .collect()
+}
+
+pub fn linear_codebook(bits: u32) -> Vec<f32> {
+    let n = 1usize << bits;
+    (0..n)
+        .map(|j| (-1.0 + 2.0 * j as f64 / (n - 1) as f64) as f32)
+        .collect()
+}
+
+/// The 16-entry runtime codebook fed to artifacts: 4-bit books verbatim;
+/// 3-bit books padded by repeating the final entry (argmin picks the first
+/// occurrence, so emitted codes stay < 8 — see aot.py docstring).
+pub fn runtime_codebook(mapping: Mapping, bits: u32) -> Vec<f32> {
+    assert!(bits == 3 || bits == 4, "runtime artifacts support 3/4-bit");
+    let mut cb = codebook(mapping, bits);
+    let last = *cb.last().unwrap();
+    while cb.len() < 16 {
+        cb.push(last);
+    }
+    cb
+}
+
+/// Nearest codebook index (ties resolve to the lowest index, matching the
+/// jnp.argmin semantics of the L1 kernel). Linear scan — the exact
+/// reference; `Boundaries::nearest` below is the hot-path version.
+pub fn nearest(cb: &[f32], x: f32) -> u8 {
+    let mut best = 0usize;
+    let mut best_d = (x - cb[0]).abs();
+    for (i, &c) in cb.iter().enumerate().skip(1) {
+        let d = (x - c).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best as u8
+}
+
+/// Precomputed decision boundaries for a *sorted* codebook: entry i wins on
+/// (mid[i-1], mid[i]] where mid[i] = (cb[i]+cb[i+1])/2. Nearest-neighbour
+/// lookup becomes a binary search over 2^b − 1 midpoints (§Perf
+/// optimization L3-1; cross-checked against `nearest` by property test).
+///
+/// Tie semantics: jnp.argmin picks the LOWEST index on exact midpoint ties,
+/// i.e. x == mid[i] maps to i, so the search uses `mid[j] < x` strictly.
+pub struct Boundaries {
+    mids: Vec<f32>,
+    /// canonical (lowest) index per position — collapses duplicate runs in
+    /// padded runtime codebooks so emitted codes always match `nearest`
+    /// (critical: 3-bit packing requires codes < 8 even if a rounding
+    /// artifact pushes x past the last unique entry)
+    remap: Vec<u8>,
+}
+
+impl Boundaries {
+    pub fn new(cb: &[f32]) -> Self {
+        debug_assert!(cb.windows(2).all(|w| w[0] <= w[1]), "codebook must be sorted");
+        let mut remap = vec![0u8; cb.len()];
+        for i in 1..cb.len() {
+            remap[i] = if cb[i] == cb[i - 1] { remap[i - 1] } else { i as u8 };
+        }
+        Self {
+            mids: cb.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect(),
+            remap,
+        }
+    }
+
+    #[inline]
+    pub fn nearest(&self, x: f32) -> u8 {
+        self.remap[self.mids.partition_point(|&m| m < x)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Appendix C tables, verbatim.
+    const DT4: [f32; 16] = [
+        -0.8875, -0.6625, -0.4375, -0.2125, -0.0775, -0.0325, -0.0055, 0.0,
+        0.0055, 0.0325, 0.0775, 0.2125, 0.4375, 0.6625, 0.8875, 1.0,
+    ];
+    const DT3: [f32; 8] = [-0.775, -0.325, -0.055, 0.0, 0.055, 0.325, 0.775, 1.0];
+    const L24: [f32; 16] = [
+        -1.0, -0.7511, -0.5378, -0.36, -0.2178, -0.1111, -0.04, 0.0, 0.0044,
+        0.04, 0.1111, 0.2178, 0.36, 0.5378, 0.7511, 1.0,
+    ];
+
+    #[test]
+    fn dt4_matches_paper() {
+        let cb = dt_codebook(4);
+        for (a, b) in cb.iter().zip(DT4.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dt3_matches_paper() {
+        let cb = dt_codebook(3);
+        for (a, b) in cb.iter().zip(DT3.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn linear2_4_matches_paper() {
+        let cb = linear2_codebook(4);
+        for (a, b) in cb.iter().zip(L24.iter()) {
+            assert!((a - b).abs() < 5e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn dt8_has_256_sorted_entries() {
+        let cb = dt_codebook(8);
+        assert_eq!(cb.len(), 256);
+        assert!(cb.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(*cb.last().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn runtime_codebook_padding() {
+        let cb = runtime_codebook(Mapping::Dt, 3);
+        assert_eq!(cb.len(), 16);
+        assert_eq!(cb[7], 1.0);
+        assert_eq!(cb[15], 1.0);
+        // codes emitted against the padded book stay below 8
+        for x in [-1.0f32, -0.2, 0.0, 0.3, 0.99, 1.0] {
+            assert!(nearest(&cb, x) < 8, "{x}");
+        }
+    }
+
+    #[test]
+    fn nearest_ties_take_lowest_index() {
+        let cb = vec![-1.0, 0.0, 0.0, 1.0];
+        assert_eq!(nearest(&cb, 0.0), 1);
+        assert_eq!(nearest(&cb, -0.5), 0); // exact tie -1.0 vs 0.0 -> lowest
+    }
+
+    #[test]
+    fn boundaries_match_linear_scan() {
+        use crate::util::prop;
+        for (mapping, bits) in [
+            (Mapping::Dt, 4u32),
+            (Mapping::Linear2, 4),
+            (Mapping::Dt, 8),
+            (Mapping::Linear2, 3),
+        ] {
+            let cb = codebook(mapping, bits);
+            let b = Boundaries::new(&cb);
+            prop::check(
+                &format!("boundaries == argmin {mapping:?}/{bits}"),
+                20,
+                |rng| {
+                    for _ in 0..200 {
+                        let x = (rng.normal() * 0.7) as f32;
+                        let want = nearest(&cb, x);
+                        let got = b.nearest(x);
+                        if want != got {
+                            // allow only exact-tie flips (equal distances)
+                            let dw = (x - cb[want as usize]).abs();
+                            let dg = (x - cb[got as usize]).abs();
+                            if (dw - dg).abs() > 1e-7 {
+                                return Err(format!("x={x}: {want} vs {got}"));
+                            }
+                        }
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+
+    #[test]
+    fn boundaries_handle_padded_books() {
+        let cb = runtime_codebook(Mapping::Dt, 3);
+        let b = Boundaries::new(&cb);
+        for x in [-1.0f32, -0.2, 0.0, 0.3, 0.99, 1.0, 2.0] {
+            assert!(b.nearest(x) < 8, "{x} -> {}", b.nearest(x));
+            assert_eq!(b.nearest(x), nearest(&cb, x), "{x}");
+        }
+    }
+
+    #[test]
+    fn mapping_parse() {
+        assert_eq!(Mapping::parse("DT"), Some(Mapping::Dt));
+        assert_eq!(Mapping::parse("linear-2"), Some(Mapping::Linear2));
+        assert_eq!(Mapping::parse("bogus"), None);
+    }
+}

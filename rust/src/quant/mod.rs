@@ -1,0 +1,14 @@
+//! Quantization substrate: codebooks (DT / Linear-2 / linear), bit packing
+//! at true bitwidth, and the block-wise quantizer — the exact Rust mirror
+//! of the L1 Pallas kernels, cross-checked via golden artifacts.
+
+pub mod blockwise;
+pub mod codebook;
+pub mod pack;
+
+pub use blockwise::{
+    dequantize, dequantize_matrix_cols, matrix_state_bytes, quantize,
+    quantize_matrix_cols, QuantizedVec, BLOCK,
+};
+pub use codebook::{codebook, nearest, runtime_codebook, Mapping};
+pub use pack::{pack_bits, packed_len, unpack_bits};

@@ -1,0 +1,106 @@
+//! Bit packing for quantized optimizer states.
+//!
+//! The coordinator *stores* codes packed at their true bitwidth (2 codes per
+//! byte at 4-bit, 8 codes in 3 bytes at 3-bit) — this is what makes the
+//! memory numbers in Table 2/13 real, not simulated — and unpacks to one
+//! code per byte only transiently at the artifact boundary.
+
+/// Pack `codes` (each < 2^bits) into a little-endian bitstream.
+pub fn pack_bits(codes: &[u8], bits: u32) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(
+            (c as u32) < (1u32 << bits),
+            "code {c} out of range for {bits}-bit"
+        );
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        out[byte] |= c << off;
+        if off + bits as usize > 8 {
+            out[byte + 1] |= c >> (8 - off);
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack `count` codes from a bitstream produced by `pack_bits`.
+pub fn unpack_bits(packed: &[u8], bits: u32, count: usize) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    let mask = ((1u16 << bits) - 1) as u8;
+    let mut out = Vec::with_capacity(count);
+    let mut bitpos = 0usize;
+    for _ in 0..count {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let mut v = packed[byte] >> off;
+        if off + bits as usize > 8 {
+            v |= packed[byte + 1] << (8 - off);
+        }
+        out.push(v & mask);
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Bytes needed to store `count` codes at `bits` bits each.
+pub fn packed_len(count: usize, bits: u32) -> usize {
+    (count * bits as usize).div_ceil(8)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_property_all_widths() {
+        for bits in 1..=8u32 {
+            prop::check(&format!("pack/unpack roundtrip {bits}-bit"), 20, |rng| {
+                let n = rng.below(200);
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.below(1usize << bits) as u8).collect();
+                let packed = pack_bits(&codes, bits);
+                if packed.len() != packed_len(n, bits) {
+                    return Err("length".into());
+                }
+                let back = unpack_bits(&packed, bits, n);
+                if back != codes {
+                    return Err(format!("mismatch at bits={bits} n={n}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn four_bit_nibble_layout() {
+        // two 4-bit codes per byte, low nibble first
+        let packed = pack_bits(&[0x3, 0xA, 0xF], 4);
+        assert_eq!(packed, vec![0xA3, 0x0F]);
+    }
+
+    #[test]
+    fn three_bit_density() {
+        // 8 codes * 3 bits = 24 bits = 3 bytes exactly
+        let codes = [1u8, 2, 3, 4, 5, 6, 7, 0];
+        let packed = pack_bits(&codes, 3);
+        assert_eq!(packed.len(), 3);
+        assert_eq!(unpack_bits(&packed, 3, 8), codes);
+    }
+
+    #[test]
+    fn eight_bit_is_identity() {
+        let codes = [0u8, 127, 255];
+        assert_eq!(pack_bits(&codes, 8), codes.to_vec());
+    }
+
+    #[test]
+    fn empty() {
+        assert!(pack_bits(&[], 4).is_empty());
+        assert!(unpack_bits(&[], 4, 0).is_empty());
+    }
+}

@@ -1,0 +1,146 @@
+//! Host-side tensors and conversion to/from XLA literals.
+//!
+//! The coordinator keeps all state in plain Rust buffers (`HostTensor`) and
+//! marshals them into `xla::Literal`s at the artifact boundary. f32 and i32
+//! go through `vec1().reshape()`; u8 (quantization codes) has no `NativeType`
+//! impl in the xla crate, so it uses `create_from_shape_and_untyped_data`.
+
+use anyhow::{bail, Result};
+
+/// Typed host buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            TensorData::F32(_) => "float32",
+            TensorData::I32(_) => "int32",
+            TensorData::U8(_) => "uint8",
+        }
+    }
+}
+
+/// A shaped host tensor (row-major), the unit crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn u8(shape: &[usize], data: Vec<u8>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape: shape.to_vec(), data: TensorData::U8(data) }
+    }
+
+    pub fn scalar_f32(x: f32) -> Self {
+        Self { shape: vec![], data: TensorData::F32(vec![x]) }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        Self::f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {}", other.dtype_name()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            other => bail!("expected i32 tensor, got {}", other.dtype_name()),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            TensorData::U8(v) => Ok(v),
+            other => bail!("expected u8 tensor, got {}", other.dtype_name()),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            other => bail!("expected f32 tensor, got {}", other.dtype_name()),
+        }
+    }
+
+    /// Convert into an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            TensorData::I32(v) => {
+                if self.shape.is_empty() {
+                    xla::Literal::scalar(v[0])
+                } else {
+                    xla::Literal::vec1(v).reshape(&dims)?
+                }
+            }
+            TensorData::U8(v) => {
+                let dims_us: Vec<usize> = self.shape.clone();
+                let mut lit = xla::Literal::create_from_shape(
+                    xla::PrimitiveType::U8,
+                    &dims_us,
+                );
+                lit.copy_raw_from(v)?;
+                lit
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Convert from an XLA literal (f32 / i32 / u8 / i64→i32 supported).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            xla::ElementType::U8 => TensorData::U8(lit.to_vec::<u8>()?),
+            ty => bail!("unsupported artifact output element type {ty:?}"),
+        };
+        Ok(Self { shape: dims, data })
+    }
+}

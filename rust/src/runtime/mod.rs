@@ -1,0 +1,12 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (emitted by
+//! python/compile/aot.py) and executes them on the CPU PJRT client.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. Artifacts
+//! are compiled lazily on first use and cached for the process lifetime.
+
+pub mod literal;
+pub mod registry;
+
+pub use literal::{HostTensor, TensorData};
+pub use registry::{ArtifactSpec, IoSpec, Manifest, ModelSpec, Runtime};

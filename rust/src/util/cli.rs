@@ -1,0 +1,110 @@
+//! Tiny CLI argument parser (in-tree substrate for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without the binary name).
+    /// `bool_flags` names options that never take a value — without a schema
+    /// `--verbose cfg.toml` is ambiguous.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I, bool_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse(bool_flags: &[&str]) -> Args {
+        Self::parse_from(std::env::args().skip(1), bool_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|x| x.to_string()), &["verbose", "dry-run"])
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["train", "--steps", "100", "--lr=0.1", "--verbose", "cfg.toml"]);
+        assert_eq!(a.positional, vec!["train", "cfg.toml"]);
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_f64("lr", 0.0), 0.1);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse(&["--dry-run"]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse(&["--shift", "-3.5"]);
+        // "-3.5" does not start with "--" so it is consumed as the value
+        assert_eq!(a.get_f64("shift", 0.0), -3.5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert_eq!(a.get_usize("n", 7), 7);
+    }
+}

@@ -1,0 +1,10 @@
+//! In-tree substrates: JSON, PRNG, CLI, TOML-subset config parsing,
+//! property-test helpers, and timing utilities (offline build — see
+//! Cargo.toml).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+pub mod tomlcfg;

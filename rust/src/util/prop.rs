@@ -1,0 +1,75 @@
+//! Mini property-testing harness (in-tree substrate for proptest).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently seeded
+//! RNGs; on failure it panics with the reproducing seed. No shrinking —
+//! failures report the exact seed, which is enough to replay and debug
+//! deterministically (`Rng::new(seed)`).
+
+use super::rng::Rng;
+
+/// Run a property with `cases` random cases. `f` receives a fresh seeded RNG
+/// and returns `Err(msg)` (or panics) on property violation.
+pub fn check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    // Base seed is fixed for reproducibility in CI; override via env.
+    let base: u64 = std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0001);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Helper: assert two f32 slices are close, with a useful error message.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!(
+                "element {i}: {x} vs {y} (|diff|={}, tol={tol})",
+                (x - y).abs()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        check("u64 is even or odd", 50, |rng| {
+            let x = rng.next_u64();
+            if x % 2 == 0 || x % 2 == 1 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn fails_with_seed_in_message() {
+        check("always fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_checks() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-6, 1e-6).unwrap();
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, 0.0).is_err());
+    }
+}

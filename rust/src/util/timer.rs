@@ -1,0 +1,150 @@
+//! Timing + micro-benchmark harness (in-tree substrate for criterion).
+//!
+//! Every `[[bench]]` target uses `BenchRunner`: warmup, fixed-duration
+//! timed runs, and robust summary statistics (mean / p50 / p95 / min).
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        fn fmt(ns: f64) -> String {
+            if ns < 1e3 {
+                format!("{ns:.0} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        }
+        format!(
+            "{:<40} mean {:>10}  p50 {:>10}  p95 {:>10}  min {:>10}  ({} iters)",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.p50_ns),
+            fmt(self.p95_ns),
+            fmt(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+pub struct BenchRunner {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for BenchRunner {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl BenchRunner {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(300),
+            max_iters: 2_000,
+        }
+    }
+
+    /// Run `f` repeatedly; returns robust stats. `f` should return some value
+    /// so the optimizer cannot elide the work (use `std::hint::black_box`).
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchStats {
+        let wend = Instant::now() + self.warmup;
+        while Instant::now() < wend {
+            f();
+        }
+        let mut samples = Vec::new();
+        let mend = Instant::now() + self.measure;
+        while Instant::now() < mend && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        if samples.is_empty() {
+            // f is slower than the measurement budget: take one sample.
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: samples.iter().sum::<f64>() / n as f64,
+            p50_ns: samples[n / 2],
+            p95_ns: samples[(n as f64 * 0.95) as usize % n],
+            min_ns: samples[0],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders_percentiles() {
+        let r = BenchRunner {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(20),
+            max_iters: 500,
+        };
+        let mut acc = 0u64;
+        let stats = r.run("noop", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(stats.iters > 0);
+        assert!(stats.min_ns <= stats.p50_ns);
+        assert!(stats.p50_ns <= stats.p95_ns);
+    }
+
+    #[test]
+    fn report_formats() {
+        let s = BenchStats {
+            name: "x".into(),
+            iters: 3,
+            mean_ns: 1.5e6,
+            p50_ns: 1.4e6,
+            p95_ns: 2.0e6,
+            min_ns: 9.0e5,
+        };
+        assert!(s.report().contains("ms"));
+    }
+}

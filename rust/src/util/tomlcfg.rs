@@ -1,0 +1,228 @@
+//! TOML-subset parser (in-tree substrate for the `toml` crate).
+//!
+//! Supports what run configs need: `[section]` and `[section.sub]` headers,
+//! `key = value` with strings, integers, floats, booleans, and flat arrays,
+//! plus `#` comments. Values land in a flat `section.key -> TomlValue` map.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+#[derive(Debug, Default, Clone)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(h) = line.strip_prefix('[') {
+                let h = h.strip_suffix(']').ok_or_else(|| TomlError {
+                    line: ln + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = h.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| TomlError {
+                line: ln + 1,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let val = parse_value(v.trim()).map_err(|msg| TomlError { line: ln + 1, msg })?;
+            doc.values.insert(key, val);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(TomlValue::as_str)
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(TomlValue::as_i64).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.i64_or(key, default as i64) as usize
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(TomlValue::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(TomlValue::as_bool).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // honor '#' outside of quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Ok(x) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(x));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(x));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config() {
+        let doc = TomlDoc::parse(
+            r#"
+# run config
+name = "demo"
+[model]
+kind = "tlm_tiny"   # inline comment
+[optimizer]
+lr = 1e-3
+steps = 500
+use_shampoo = true
+bits = 4
+buckets = [64, 128]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("name", ""), "demo");
+        assert_eq!(doc.str_or("model.kind", ""), "tlm_tiny");
+        assert_eq!(doc.f64_or("optimizer.lr", 0.0), 1e-3);
+        assert_eq!(doc.usize_or("optimizer.steps", 0), 500);
+        assert!(doc.bool_or("optimizer.use_shampoo", false));
+        match doc.get("optimizer.buckets").unwrap() {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string() {
+        let doc = TomlDoc::parse("tag = \"a#b\"").unwrap();
+        assert_eq!(doc.str_or("tag", ""), "a#b");
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = TomlDoc::parse("[sec\nx=1").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn defaults() {
+        let doc = TomlDoc::parse("").unwrap();
+        assert_eq!(doc.usize_or("missing", 3), 3);
+        assert_eq!(doc.str_or("missing", "d"), "d");
+    }
+}

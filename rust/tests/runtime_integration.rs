@@ -1,0 +1,85 @@
+//! Integration: load AOT artifacts in the PJRT runtime and validate
+//! numerics against the golden vectors emitted by aot.py.
+//! Requires `make artifacts` to have run (skips otherwise).
+
+use std::path::Path;
+
+use shampoo4::runtime::{HostTensor, Runtime};
+use shampoo4::util::json::Json;
+
+fn artifact_dir() -> Option<&'static Path> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(Box::leak(p.into_boxed_path()))
+    } else {
+        eprintln!("artifacts/ missing; run `make artifacts` first — skipping");
+        None
+    }
+}
+
+fn tensor_from_golden(spec: &Json) -> HostTensor {
+    let shape = spec.get("shape").unwrap().usize_vec().unwrap();
+    let dtype = spec.get("dtype").unwrap().as_str().unwrap();
+    let data = spec.get("data").unwrap();
+    match dtype {
+        "float32" => HostTensor::f32(&shape, data.f32_vec().unwrap()),
+        "int32" => HostTensor::i32(
+            &shape,
+            data.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap() as i32).collect(),
+        ),
+        "uint8" => HostTensor::u8(
+            &shape,
+            data.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap() as u8).collect(),
+        ),
+        other => panic!("dtype {other}"),
+    }
+}
+
+#[test]
+fn golden_artifacts_match() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(dir).expect("runtime");
+    let golden_dir = dir.join("golden");
+    let mut checked = 0;
+    for entry in std::fs::read_dir(&golden_dir).expect("golden dir") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("json") {
+            continue;
+        }
+        let name = path.file_stem().unwrap().to_str().unwrap().to_string();
+        if !rt.has_artifact(&name) {
+            continue;
+        }
+        let g = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let spec = rt.spec(&name).unwrap().clone();
+        let inputs: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|io| tensor_from_golden(g.get("inputs").unwrap().get(&io.name).unwrap()))
+            .collect();
+        let outputs = rt.execute(&name, &inputs).unwrap();
+        let want = g.get("outputs").unwrap().as_arr().unwrap();
+        assert_eq!(outputs.len(), want.len(), "{name}: output arity");
+        for (o, w) in outputs.iter().zip(want) {
+            let wt = tensor_from_golden(w);
+            assert_eq!(o.shape, wt.shape, "{name}: output shape");
+            match (&o.data, &wt.data) {
+                (shampoo4::runtime::TensorData::F32(a), shampoo4::runtime::TensorData::F32(b)) => {
+                    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                        let both_nan = x.is_nan() && y.is_nan();
+                        assert!(
+                            both_nan || (x - y).abs() <= 1e-4 + 1e-4 * y.abs(),
+                            "{name} out[{i}]: {x} vs {y}"
+                        );
+                    }
+                }
+                (shampoo4::runtime::TensorData::U8(a), shampoo4::runtime::TensorData::U8(b)) => {
+                    assert_eq!(a, b, "{name}: u8 codes differ");
+                }
+                _ => panic!("{name}: dtype mismatch"),
+            }
+        }
+        checked += 1;
+    }
+    assert!(checked >= 5, "expected >=5 golden artifacts, checked {checked}");
+}
