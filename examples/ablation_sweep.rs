@@ -7,11 +7,13 @@
 //!
 //! With no selector flags, runs both suites.
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
 use shampoo4::coordinator::Trainer;
 use shampoo4::quant::Mapping;
-use shampoo4::runtime::Runtime;
+use shampoo4::runtime::{backend_by_name, Backend};
 use shampoo4::util::cli::Args;
 
 fn base_cfg(model: &str, steps: usize) -> RunConfig {
@@ -31,7 +33,7 @@ fn base_cfg(model: &str, steps: usize) -> RunConfig {
     cfg
 }
 
-fn run(rt: &Runtime, cfg: RunConfig) -> Result<(f32, f32, f64, f64)> {
+fn run(rt: &dyn Backend, cfg: RunConfig) -> Result<(f32, f32, f64, f64)> {
     let mut t = Trainer::new(rt, cfg)?;
     let res = t.train(rt, None)?;
     let train_loss = res.losses.last().map(|(_, l)| *l).unwrap_or(f32::NAN);
@@ -43,7 +45,11 @@ fn main() -> Result<()> {
     let args = Args::parse_from(std::env::args().skip(1), &["table3", "extras"]);
     let steps = args.get_usize("steps", 150);
     let model = args.get_or("model", "tlm_tiny").to_string();
-    let rt = Runtime::new(std::path::Path::new(args.get_or("artifact-dir", "artifacts")))?;
+    let rt = backend_by_name(
+        args.get_or("backend", "auto"),
+        std::path::Path::new(args.get_or("artifact-dir", "artifacts")),
+    )?;
+    let rt = rt.as_ref();
     let both = !args.flag("table3") && !args.flag("extras");
 
     if args.flag("table3") || both {
@@ -76,7 +82,7 @@ fn main() -> Result<()> {
                 if eigen { "U" } else { "A" },
                 rect
             );
-            match run(&rt, cfg) {
+            match run(rt, cfg) {
                 Ok((tl, el, wall, mb)) => println!(
                     "{:<10} {:>4} {:>3} {:>4} {:>9.4} {:>9.4} {:>8.1} {:>9.2}",
                     mapping.name(),
@@ -128,8 +134,8 @@ fn main() -> Result<()> {
             } else {
                 format!("{} + 4-bit {}", f.name(), second.name())
             };
-            let mut t = Trainer::new(&rt, cfg)?;
-            let res = t.train(&rt, None)?;
+            let mut t = Trainer::new(rt, cfg)?;
+            let res = t.train(rt, None)?;
             let e = res.final_eval.as_ref().unwrap();
             println!(
                 "{:<22} {:>7.2} {:>9.4} {:>8.1} {:>9.2}",

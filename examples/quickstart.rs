@@ -1,15 +1,20 @@
-//! Quickstart: train a small MLP classifier with AdamW + 4-bit Shampoo and
-//! compare memory against the 32-bit baseline.
+//! Quickstart: train a small MLP classifier with SGDM + 4-bit Shampoo and
+//! compare memory against the 32-bit baseline. Runs hermetically on the
+//! HostBackend (uses PJRT artifacts instead when built with --features pjrt
+//! and artifacts/ exists).
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   cargo run --release --example quickstart
+
+#![allow(clippy::field_reassign_with_default)]
 
 use anyhow::Result;
 use shampoo4::config::{FirstOrderKind, RunConfig, SecondOrderKind};
 use shampoo4::coordinator::Trainer;
-use shampoo4::runtime::Runtime;
+use shampoo4::runtime::default_backend;
 
 fn main() -> Result<()> {
-    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let rt = default_backend(std::path::Path::new("artifacts"))?;
+    let rt = rt.as_ref();
 
     let mut cfg = RunConfig::default();
     cfg.name = "quickstart".into();
@@ -25,15 +30,15 @@ fn main() -> Result<()> {
     cfg.eval_every = 50;
 
     println!("== SGDM + 4-bit Shampoo (ours) ==");
-    let mut t4 = Trainer::new(&rt, cfg.clone())?;
-    let r4 = t4.train(&rt, None)?;
+    let mut t4 = Trainer::new(rt, cfg.clone())?;
+    let r4 = t4.train(rt, None)?;
     report(&r4);
 
     println!("\n== SGDM + 32-bit Shampoo (baseline) ==");
     cfg.second.quant.bits = 32;
     cfg.name = "quickstart32".into();
-    let mut t32 = Trainer::new(&rt, cfg)?;
-    let r32 = t32.train(&rt, None)?;
+    let mut t32 = Trainer::new(rt, cfg)?;
+    let r32 = t32.train(rt, None)?;
     report(&r32);
 
     let saved = 1.0

@@ -1,18 +1,21 @@
 //! End-to-end driver (deliverable (b) / EXPERIMENTS.md §E2E): train the
 //! transformer LM on the synthetic bigram corpus with AdamW + 4-bit Shampoo,
-//! logging the full loss curve and validation perplexity, proving all three
-//! layers compose: Rust coordinator → AOT HLO artifacts (Pallas quant
-//! kernels inside) → PJRT CPU.
+//! logging the full loss curve and validation perplexity. Runs on any
+//! backend — the hermetic HostBackend by default, or the full three-layer
+//! stack (Rust coordinator → AOT HLO artifacts → PJRT CPU) with
+//! --features pjrt and compiled artifacts.
 //!
 //!   cargo run --release --example train_transformer -- [--model tlm_small]
-//!       [--steps 400] [--bits 4] [--out runs/e2e]
+//!       [--steps 400] [--bits 4] [--backend host|pjrt|auto] [--out runs/e2e]
+
+#![allow(clippy::field_reassign_with_default)]
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
 use shampoo4::coordinator::Trainer;
-use shampoo4::runtime::Runtime;
+use shampoo4::runtime::backend_by_name;
 use shampoo4::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -22,7 +25,11 @@ fn main() -> Result<()> {
     let bits = args.get_usize("bits", 4) as u32;
     let out = PathBuf::from(args.get_or("out", "runs/e2e"));
 
-    let rt = Runtime::new(std::path::Path::new(args.get_or("artifact-dir", "artifacts")))?;
+    let rt = backend_by_name(
+        args.get_or("backend", "auto"),
+        std::path::Path::new(args.get_or("artifact-dir", "artifacts")),
+    )?;
+    let rt = rt.as_ref();
 
     let mut cfg = RunConfig::default();
     cfg.name = format!("e2e_{model}_{bits}bit");
@@ -41,7 +48,7 @@ fn main() -> Result<()> {
     cfg.eval_batches = 4;
     cfg.log_every = 10;
 
-    let mut trainer = Trainer::new(&rt, cfg)?;
+    let mut trainer = Trainer::new(rt, cfg)?;
     let m = trainer.memory_report();
     let nparams = trainer.model.param_count();
     println!(
@@ -57,7 +64,7 @@ fn main() -> Result<()> {
         m.total_mb()
     );
 
-    let res = trainer.train(&rt, Some(&out.join("metrics.csv")))?;
+    let res = trainer.train(rt, Some(&out.join("metrics.csv")))?;
     trainer.save_checkpoint(&out.join("checkpoint.bin"), steps)?;
 
     println!("\nloss curve (every 50 steps):");

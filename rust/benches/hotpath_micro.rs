@@ -8,11 +8,13 @@
 //! extract/scatter, native first-order update, host matmul, and the PJRT
 //! artifact executions (gram, precond4, pu, piru, model step).
 
+#![allow(clippy::field_reassign_with_default)]
+
 use shampoo4::config::RunConfig;
 use shampoo4::coordinator::Trainer;
 use shampoo4::linalg::Mat;
 use shampoo4::quant::{codebook, dequantize, pack_bits, quantize, unpack_bits, Mapping};
-use shampoo4::runtime::{HostTensor, Runtime};
+use shampoo4::runtime::{default_backend, Backend, HostTensor};
 use shampoo4::util::rng::Rng;
 use shampoo4::util::timer::BenchRunner;
 
@@ -59,13 +61,11 @@ fn main() {
         adamw.step(&mut params, &grad, 1e-3);
     }).report());
 
-    // ---- artifact executions -------------------------------------------------
-    let Ok(rt) = Runtime::new(std::path::Path::new("artifacts")) else {
-        println!("artifacts/ missing — skipping PJRT stage benches");
-        return;
-    };
+    // ---- artifact executions (HostBackend or PJRT, whichever is active) ----
+    let rt = default_backend(std::path::Path::new("artifacts")).unwrap();
+    let rt = rt.as_ref();
     let g128 = HostTensor::f32(&[128, 128], rng.normal_vec(128 * 128));
-    println!("{}", runner.run("pjrt/gram_128x128", || {
+    println!("{}", runner.run("backend/gram_128x128", || {
         std::hint::black_box(rt.execute("gram_128x128", &[g128.clone()]).unwrap());
     }).report());
 
@@ -77,7 +77,7 @@ fn main() {
     inputs.extend(side.invroot_inputs().unwrap());
     inputs.extend(side.invroot_inputs().unwrap());
     inputs.push(HostTensor::f32(&[16], cbrt.clone()));
-    println!("{}", runner.run("pjrt/precond4_128x128", || {
+    println!("{}", runner.run("backend/precond4_128x128", || {
         std::hint::black_box(rt.execute("precond4_128x128", &inputs).unwrap());
     }).report());
 
@@ -86,14 +86,14 @@ fn main() {
     pu_inputs.push(HostTensor::scalar_f32(0.95));
     pu_inputs.push(HostTensor::f32(&[16], cbrt.clone()));
     let slow = BenchRunner::quick();
-    println!("{}", slow.run("pjrt/pu_128 (T1 path)", || {
+    println!("{}", slow.run("backend/pu_128 (T1 path)", || {
         std::hint::black_box(rt.execute("pu_128", &pu_inputs).unwrap());
     }).report());
 
     let mut piru_inputs = side.pu_inputs().unwrap();
     piru_inputs.push(HostTensor::scalar_f32(1e-4));
     piru_inputs.push(HostTensor::f32(&[16], cbrt));
-    println!("{}", slow.run("pjrt/piru_128 (T2 path)", || {
+    println!("{}", slow.run("backend/piru_128 (T2 path)", || {
         std::hint::black_box(rt.execute("piru_128", &piru_inputs).unwrap());
     }).report());
 
@@ -103,10 +103,10 @@ fn main() {
     cfg.steps = 1;
     cfg.eval_every = 0;
     cfg.eval_batches = 0;
-    let trainer = Trainer::new(&rt, cfg).unwrap();
+    let trainer = Trainer::new(rt, cfg).unwrap();
     let batch = trainer.model.make_batch(&trainer.data, false, 0);
-    println!("{}", slow.run("pjrt/mlp_base_step (fwd+bwd+stats)", || {
-        std::hint::black_box(trainer.model.step(&rt, &batch).unwrap());
+    println!("{}", slow.run("backend/mlp_base_step (fwd+bwd+stats)", || {
+        std::hint::black_box(trainer.model.step(rt, &batch).unwrap());
     }).report());
 
     println!("\nper-step budget at T1=100/T2=500 (mlp_base, 6 blocks):");

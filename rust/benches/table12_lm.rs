@@ -3,15 +3,18 @@
 //! transformer LM over the synthetic bigram corpus.
 //! SHAMPOO4_BENCH_STEPS (default 200); curves land in bench_out/.
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
 use shampoo4::coordinator::Trainer;
-use shampoo4::runtime::Runtime;
+use shampoo4::runtime::default_backend;
 
 fn main() -> Result<()> {
     let steps: usize = std::env::var("SHAMPOO4_BENCH_STEPS")
         .ok().and_then(|v| v.parse().ok()).unwrap_or(200);
-    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let rt = default_backend(std::path::Path::new("artifacts"))?;
+    let rt = rt.as_ref();
     std::fs::create_dir_all("bench_out").ok();
     println!("# Table 12 @ tlm_tiny, {steps} steps (paper: GPT2-124M/LLaMA-130M)");
     println!("{:<34} {:>8} {:>9} {:>10}", "Optimizer", "VL", "WCT(s)", "opt(MB)");
@@ -39,8 +42,8 @@ fn main() -> Result<()> {
         cfg.eval_every = (cfg.steps / 5).max(1);
         cfg.eval_batches = 4;
         cfg.log_every = (cfg.steps / 20).max(1);
-        let mut t = Trainer::new(&rt, cfg.clone())?;
-        let res = t.train(&rt, Some(std::path::Path::new(&format!("bench_out/{}.csv", cfg.name))))?;
+        let mut t = Trainer::new(rt, cfg.clone())?;
+        let res = t.train(rt, Some(std::path::Path::new(&format!("bench_out/{}.csv", cfg.name))))?;
         let e = res.final_eval.as_ref().unwrap();
         println!("{:<34} {:>8.4} {:>9.1} {:>10.2}", label, e.loss, res.wall_secs, res.memory.optimizer_mb());
     }

@@ -8,10 +8,12 @@
 //! SHAMPOO4_BENCH_STEPS overrides the per-arm second-order step count
 //! (default 200).
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
 use shampoo4::coordinator::Trainer;
-use shampoo4::runtime::Runtime;
+use shampoo4::runtime::default_backend;
 
 fn steps_default() -> usize {
     std::env::var("SHAMPOO4_BENCH_STEPS")
@@ -30,7 +32,8 @@ struct Arm {
 }
 
 fn main() -> Result<()> {
-    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let rt = default_backend(std::path::Path::new("artifacts"))?;
+    let rt = rt.as_ref();
     let steps = steps_default();
     let arms = [
         Arm { label: "SGDM", model: "mlp_base", f: FirstOrderKind::Sgdm, lr: 0.05, bits: 0, steps_mult: 1.5 },
@@ -62,9 +65,9 @@ fn main() -> Result<()> {
         cfg.eval_every = (cfg.steps / 4).max(1);
         cfg.eval_batches = 8;
         cfg.log_every = (cfg.steps / 20).max(1);
-        let mut t = Trainer::new(&rt, cfg.clone())?;
+        let mut t = Trainer::new(rt, cfg.clone())?;
         let res = t.train(
-            &rt,
+            rt,
             Some(std::path::Path::new(&format!("bench_out/{}.csv", cfg.name))),
         )?;
         let e = res.final_eval.as_ref().unwrap();

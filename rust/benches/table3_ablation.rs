@@ -3,16 +3,19 @@
 //! Delegates to the same arms as examples/ablation_sweep.rs but sized for
 //! `cargo bench` (SHAMPOO4_BENCH_STEPS, default 120).
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
 use shampoo4::coordinator::Trainer;
 use shampoo4::quant::Mapping;
-use shampoo4::runtime::Runtime;
+use shampoo4::runtime::default_backend;
 
 fn main() -> Result<()> {
     let steps: usize = std::env::var("SHAMPOO4_BENCH_STEPS")
         .ok().and_then(|v| v.parse().ok()).unwrap_or(120);
-    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let rt = default_backend(std::path::Path::new("artifacts"))?;
+    let rt = rt.as_ref();
     println!("# Table 3 @ tlm_tiny, {steps} steps (paper: Swin-Tiny, 100 epochs)");
     println!("{:<10} {:>4} {:>3} {:>4} {:>9} {:>9}", "mapping", "bits", "QM", "OR", "TL", "VL");
     let arms: Vec<(Mapping, u32, bool, bool)> = vec![
@@ -44,8 +47,8 @@ fn main() -> Result<()> {
         cfg.eval_batches = 4;
         cfg.log_every = steps;
         let row = (|| -> Result<(f32, f32)> {
-            let mut t = Trainer::new(&rt, cfg.clone())?;
-            let res = t.train(&rt, None)?;
+            let mut t = Trainer::new(rt, cfg.clone())?;
+            let res = t.train(rt, None)?;
             Ok((
                 res.losses.last().map(|(_, l)| *l).unwrap_or(f32::NAN),
                 res.final_eval.map(|e| e.loss).unwrap_or(f32::NAN),

@@ -3,15 +3,18 @@
 //! classifier (the K-FAC family needs per-layer activation statistics).
 //! SHAMPOO4_BENCH_STEPS (default 150).
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
 use shampoo4::coordinator::Trainer;
-use shampoo4::runtime::Runtime;
+use shampoo4::runtime::default_backend;
 
 fn main() -> Result<()> {
     let steps: usize = std::env::var("SHAMPOO4_BENCH_STEPS")
         .ok().and_then(|v| v.parse().ok()).unwrap_or(150);
-    let rt = Runtime::new(std::path::Path::new("artifacts"))?;
+    let rt = default_backend(std::path::Path::new("artifacts"))?;
+    let rt = rt.as_ref();
     println!("# Table 4 @ mlp_base, {steps} steps (paper: Swin-Tiny/CIFAR-100)");
     println!("{:<28} {:>7} {:>9} {:>9} {:>10}", "Optimizer", "TA(%)", "VL", "WCT(s)", "opt(MB)");
     let arms: Vec<(SecondOrderKind, u32)> = vec![
@@ -43,8 +46,8 @@ fn main() -> Result<()> {
         cfg.eval_every = 0;
         cfg.eval_batches = 8;
         cfg.log_every = steps;
-        let mut t = Trainer::new(&rt, cfg)?;
-        let res = t.train(&rt, None)?;
+        let mut t = Trainer::new(rt, cfg)?;
+        let res = t.train(rt, None)?;
         let e = res.final_eval.as_ref().unwrap();
         println!(
             "{:<28} {:>7.2} {:>9.4} {:>9.1} {:>10.2}",

@@ -198,6 +198,10 @@ pub struct RunConfig {
     pub eval_batches: usize,
     pub log_every: usize,
     pub artifact_dir: String,
+    /// Execution backend: "host" (pure Rust, hermetic), "pjrt" (AOT
+    /// artifacts, requires --features pjrt), or "auto" (pjrt when compiled
+    /// artifacts exist, host otherwise).
+    pub backend: String,
     /// Record dynamic quantization error against a 32-bit shadow
     /// preconditioner (Figures 7/8).
     pub shadow_quant_error: bool,
@@ -217,6 +221,7 @@ impl Default for RunConfig {
             eval_batches: 8,
             log_every: 10,
             artifact_dir: "artifacts".into(),
+            backend: "auto".into(),
             shadow_quant_error: false,
         }
     }
@@ -234,6 +239,7 @@ impl RunConfig {
         cfg.eval_batches = doc.usize_or("run.eval_batches", cfg.eval_batches);
         cfg.log_every = doc.usize_or("run.log_every", cfg.log_every);
         cfg.artifact_dir = doc.str_or("run.artifact_dir", &cfg.artifact_dir);
+        cfg.backend = doc.str_or("run.backend", &cfg.backend);
         cfg.shadow_quant_error = doc.bool_or("run.shadow_quant_error", false);
 
         let f = &mut cfg.first;
@@ -350,6 +356,13 @@ warmup = 20
         assert_eq!(cfg.second.quant.bits, 4);
         assert_eq!(cfg.first.kind, FirstOrderKind::AdamW);
         assert!(matches!(cfg.schedule, Schedule::Cosine { warmup: 20 }));
+    }
+
+    #[test]
+    fn backend_selection_parses() {
+        let cfg = RunConfig::from_toml_str("[run]\nbackend = \"host\"").unwrap();
+        assert_eq!(cfg.backend, "host");
+        assert_eq!(RunConfig::default().backend, "auto");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::data::{corpus::BigramCorpus, vision::VisionDataset, Batch};
-use crate::runtime::{HostTensor, ModelSpec, Runtime};
+use crate::runtime::{Backend, HostTensor, ModelSpec};
 use crate::util::rng::Rng;
 
 pub struct ModelHandle {
@@ -18,9 +18,9 @@ pub struct ModelHandle {
 }
 
 impl ModelHandle {
-    pub fn new(rt: &Runtime, name: &str, seed: u64) -> Result<Self> {
+    pub fn new(rt: &dyn Backend, name: &str, seed: u64) -> Result<Self> {
         let spec = rt
-            .manifest
+            .manifest()
             .models
             .get(name)
             .with_context(|| format!("unknown model {name}"))?
@@ -69,7 +69,7 @@ impl ModelHandle {
     /// kfac_stats is empty for transformer models.
     pub fn step(
         &self,
-        rt: &Runtime,
+        rt: &dyn Backend,
         batch: &Batch,
     ) -> Result<(f32, Vec<Vec<f32>>, Vec<Vec<f32>>)> {
         let mut inputs = self.param_tensors(&self.params);
@@ -93,7 +93,7 @@ impl ModelHandle {
     /// Returns (loss, correct-or-None).
     pub fn eval(
         &self,
-        rt: &Runtime,
+        rt: &dyn Backend,
         params: &[Vec<f32>],
         batch: &Batch,
     ) -> Result<(f32, Option<usize>)> {

@@ -9,7 +9,7 @@ use crate::coordinator::model::ModelHandle;
 use crate::coordinator::partition::{extract_block, partition, scatter_block, Block};
 use crate::coordinator::state::{codebook_for, run_invroot, run_pu, SideState};
 use crate::linalg::Mat;
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{Backend, HostTensor};
 
 pub struct BlockPre {
     pub block: Block,
@@ -85,7 +85,7 @@ impl SecondOrder {
     /// model step (`stats[2i]` = XᵀX/bs, `stats[2i+1]` = δYᵀδY·bs).
     pub fn update_preconditioners(
         &mut self,
-        rt: &Runtime,
+        rt: &dyn Backend,
         model: &ModelHandle,
         grads: &[Vec<f32>],
         stats: &[Vec<f32>],
@@ -122,7 +122,7 @@ impl SecondOrder {
     }
 
     /// PIRU / inverse-root for every block (Algorithm 3 line 10).
-    pub fn update_invroots(&mut self, rt: &Runtime) -> Result<()> {
+    pub fn update_invroots(&mut self, rt: &dyn Backend) -> Result<()> {
         let eps = self.cfg.eps;
         let kind = self.cfg.kind;
         let bits = self.cfg.quant.bits;
@@ -137,7 +137,7 @@ impl SecondOrder {
     /// Precondition all gradients in place (Algorithm 3 lines 13–14).
     pub fn precondition(
         &mut self,
-        rt: &Runtime,
+        rt: &dyn Backend,
         model: &ModelHandle,
         grads: &mut [Vec<f32>],
     ) -> Result<()> {
@@ -201,7 +201,9 @@ impl SecondOrder {
     }
 }
 
-/// Host mirror of precond32/caspr32 + grafting.
+/// Host mirror of precond32/caspr32 + grafting — delegates to the single
+/// implementation in `runtime::host::ops` so the artifact path and this
+/// mixed-arm fallback can never numerically diverge.
 pub fn precondition_host(
     g: &[f32],
     m: usize,
@@ -211,15 +213,8 @@ pub fn precondition_host(
     caspr: bool,
 ) -> Vec<f32> {
     let gm = Mat::from_vec(m, n, g.to_vec());
-    let ghat = if caspr {
-        let j = lhat.matmul(&gm).add(&gm.matmul(rhat));
-        lhat.matmul(&j).add(&j.matmul(rhat))
-    } else {
-        lhat.matmul(&gm).matmul(rhat)
-    };
-    let ng = gm.frobenius();
-    let nh = ghat.frobenius().max(1e-30);
-    ghat.scale((ng / nh) as f32).data
+    let mut outs = crate::runtime::host::ops::precond_dense(&gm, lhat, rhat, caspr);
+    outs.remove(0).into_f32().expect("precond_dense emits one f32 tensor")
 }
 
 #[cfg(test)]

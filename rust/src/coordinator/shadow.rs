@@ -11,7 +11,7 @@ use crate::coordinator::second_order::SecondOrder;
 use crate::coordinator::state::SideState;
 use crate::errors::{angle_error_deg, nre};
 use crate::linalg::{invroot_eigh, Mat};
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{Backend, HostTensor};
 
 #[derive(Debug, Clone)]
 pub struct ShadowRow {
@@ -54,7 +54,7 @@ impl ShadowTracker {
     /// Mirror the PU EMA on the 32-bit shadow using the same statistics.
     pub fn update_shadow(
         &mut self,
-        rt: &Runtime,
+        rt: &dyn Backend,
         second: &SecondOrder,
         model: &ModelHandle,
         grads: &[Vec<f32>],

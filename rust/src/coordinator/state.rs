@@ -9,7 +9,7 @@ use crate::linalg::{bjorck, Mat};
 use crate::quant::{
     dequantize_matrix_cols, quantize_matrix_cols, runtime_codebook, QuantizedVec,
 };
-use crate::runtime::{HostTensor, Runtime};
+use crate::runtime::{Backend, HostTensor};
 
 /// One side (L or R) of a block's preconditioner pair.
 #[derive(Debug, Clone)]
@@ -266,7 +266,7 @@ pub fn exponent_tag(kind: SecondOrderKind) -> &'static str {
 
 /// Execute the appropriate PU artifact for one side.
 pub fn run_pu(
-    rt: &Runtime,
+    rt: &dyn Backend,
     side: &mut SideState,
     m_stat: HostTensor,
     beta: f32,
@@ -300,7 +300,7 @@ pub fn run_pu(
 
 /// Execute the appropriate PIRU / inverse-root artifact for one side.
 pub fn run_invroot(
-    rt: &Runtime,
+    rt: &dyn Backend,
     side: &mut SideState,
     eps: f32,
     cb: &[f32],

@@ -15,7 +15,7 @@ use crate::coordinator::second_order::SecondOrder;
 use crate::coordinator::shadow::ShadowTracker;
 use crate::errors;
 use crate::optim::{build_first_order, FirstOrder};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 #[derive(Debug, Clone)]
 pub struct EvalPoint {
@@ -80,7 +80,7 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    pub fn new(rt: &Runtime, cfg: RunConfig) -> Result<Self> {
+    pub fn new(rt: &dyn Backend, cfg: RunConfig) -> Result<Self> {
         let model = ModelHandle::new(rt, &cfg.model, cfg.seed)?;
         let flat_len = model.param_count();
         let warmup = match cfg.schedule {
@@ -95,7 +95,7 @@ impl Trainer {
             Some(SecondOrder::new(
                 &cfg.second,
                 &model,
-                &rt.manifest.buckets,
+                &rt.manifest().buckets,
             )?)
         };
         let shadow = if cfg.shadow_quant_error {
@@ -135,7 +135,7 @@ impl Trainer {
 
     /// Evaluate on `batches` held-out batches with the optimizer's eval
     /// parameters (schedule-free averages where applicable).
-    pub fn evaluate(&self, rt: &Runtime, step: usize, batches: usize) -> Result<EvalPoint> {
+    pub fn evaluate(&self, rt: &dyn Backend, step: usize, batches: usize) -> Result<EvalPoint> {
         let flat = Self::flatten(&self.model.params);
         let eval_flat = self.first.eval_params(&flat);
         let mut eval_params = self.model.params.clone();
@@ -162,7 +162,7 @@ impl Trainer {
     }
 
     /// Run the configured number of steps. `metrics_path`: optional CSV.
-    pub fn train(&mut self, rt: &Runtime, metrics_path: Option<&Path>) -> Result<TrainResult> {
+    pub fn train(&mut self, rt: &dyn Backend, metrics_path: Option<&Path>) -> Result<TrainResult> {
         let mut csv = match metrics_path {
             Some(p) => {
                 if let Some(dir) = p.parent() {

@@ -5,7 +5,19 @@
 //!  * L1 — Pallas quantization/matmul kernels (python/compile/kernels),
 //!  * L2 — JAX Shampoo math + model graphs, AOT-lowered to HLO text,
 //!  * L3 — this crate: the training coordinator, quantized optimizer-state
-//!    management, synthetic data pipelines, and the PJRT runtime.
+//!    management, synthetic data pipelines, and a pluggable execution
+//!    [`runtime::Backend`] — the hermetic pure-Rust [`runtime::HostBackend`]
+//!    by default, the PJRT artifact registry behind `--features pjrt`.
+
+// Style allowances for dense numeric code: index loops over several buffers
+// at once and config structs populated field-by-field from parsed documents.
+#![allow(
+    clippy::field_reassign_with_default,
+    clippy::needless_range_loop,
+    clippy::manual_memcpy,
+    clippy::too_many_arguments,
+    clippy::inherent_to_string
+)]
 
 pub mod config;
 pub mod coordinator;

@@ -10,7 +10,7 @@ pub mod roots;
 
 pub use dense::Mat;
 pub use eig::{eigh, eigh_jacobi, Eigh};
-pub use qr::{householder_qr, random_orthogonal};
+pub use qr::{householder_qr, orthogonalize_cgs2, random_orthogonal};
 pub use roots::{
     bjorck, bjorck_step, invroot_eigh, orthogonality_error, power_iteration,
     schur_newton_invroot,

@@ -63,6 +63,36 @@ pub fn householder_qr(a: &Mat) -> (Mat, Mat) {
     )
 }
 
+/// QR orthogonalization via classical Gram–Schmidt with reorthogonalization
+/// (CGS2, "twice is enough" [Björck]) — the Rust mirror of the L2
+/// `orthogonalize_cgs2` used inside subspace iteration. Columns whose
+/// residual vanishes (exact rank deficiency, e.g. padded blocks) are left
+/// near-zero rather than replaced: downstream they are always weighted by
+/// the matching ≈0 eigenvalue.
+pub fn orthogonalize_cgs2(x: &Mat) -> Mat {
+    let (n, m) = (x.rows, x.cols);
+    let mut q = Mat::zeros(n, m);
+    let mut v = vec![0.0f64; n];
+    for j in 0..m {
+        for (i, vi) in v.iter_mut().enumerate() {
+            *vi = x[(i, j)] as f64;
+        }
+        for _pass in 0..2 {
+            for k in 0..j {
+                let dot: f64 = (0..n).map(|i| q[(i, k)] as f64 * v[i]).sum();
+                for (i, vi) in v.iter_mut().enumerate() {
+                    *vi -= dot * q[(i, k)] as f64;
+                }
+            }
+        }
+        let norm = v.iter().map(|a| a * a).sum::<f64>().sqrt().max(1e-30);
+        for (i, &vi) in v.iter().enumerate() {
+            q[(i, j)] = (vi / norm) as f32;
+        }
+    }
+    q
+}
+
 /// Random orthogonal matrix: QR of a Gaussian matrix with sign-fixed R
 /// diagonal (Haar-ish; exact Haar is not needed for the error analyses).
 pub fn random_orthogonal(n: usize, rng: &mut Rng) -> Mat {

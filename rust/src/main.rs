@@ -4,24 +4,26 @@
 //!   train        [--config cfg.toml] [--model M] [--steps N] [--optimizer F]
 //!                [--shampoo-bits 4|32] [--kind shampoo|caspr|kfac|adabk]
 //!                [--mapping linear2|dt] [--quantize-eigen true|false]
-//!                [--out runs/NAME] [--shadow-quant-error]
+//!                [--backend host|pjrt|auto] [--out runs/NAME]
+//!                [--shadow-quant-error]
 //!   quant-error  [--n 1200] [--bits 4] [--block 64]
 //!                (Table 1/5/6/7, Figures 2/3/5/6 — see benches for the
 //!                full sweeps)
 //!   memory-plan  [--budget-mb 81920]  (Table 13)
-//!   artifacts    — list loaded artifacts and model specs
+//!   artifacts    — list served artifacts and model specs
 //!
-//! Python never runs here: artifacts must already exist (make artifacts).
+//! Python never runs here: the default HostBackend executes everything
+//! natively; AOT artifacts are only needed for --backend pjrt.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
 
 use shampoo4::config::{FirstOrderKind, RunConfig, SecondOrderKind};
 use shampoo4::coordinator::memory::{plan, OptimizerPlan, PlannedModel};
 use shampoo4::coordinator::Trainer;
 use shampoo4::quant::Mapping;
-use shampoo4::runtime::Runtime;
+use shampoo4::runtime::{backend_by_name, Backend};
 use shampoo4::util::cli::Args;
 
 const BOOL_FLAGS: &[&str] = &["shadow-quant-error", "help", "quiet"];
@@ -105,6 +107,9 @@ pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if args.flag("shadow-quant-error") {
         cfg.shadow_quant_error = true;
     }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = b.to_string();
+    }
     if let Some(n) = args.get("name") {
         cfg.name = n.to_string();
     }
@@ -118,7 +123,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     apply_cli_overrides(&mut cfg, args)?;
     let dir = artifact_dir(args);
-    let rt = Runtime::new(&dir)?;
+    let rt = backend_by_name(&cfg.backend, &dir)?;
+    let rt = rt.as_ref();
     println!(
         "platform={} model={} steps={} F={} second={} bits={} mapping={}",
         rt.platform(),
@@ -130,7 +136,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.second.quant.mapping.name(),
     );
     let out_dir = PathBuf::from(args.get_or("out", &format!("runs/{}", cfg.name)));
-    let mut trainer = Trainer::new(&rt, cfg.clone())?;
+    let mut trainer = Trainer::new(rt, cfg.clone())?;
     let mem0 = trainer.memory_report();
     println!(
         "params={:.2}MB first-order={:.2}MB second-order={:.2}MB total={:.2}MB",
@@ -139,7 +145,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         mem0.second_order_bytes as f64 / 1048576.0,
         mem0.total_mb()
     );
-    let res = trainer.train(&rt, Some(&out_dir.join("metrics.csv")))?;
+    let res = trainer.train(rt, Some(&out_dir.join("metrics.csv")))?;
     trainer.save_checkpoint(&out_dir.join("checkpoint.bin"), cfg.steps)?;
     for (step, loss) in res.losses.iter().rev().take(5).rev() {
         println!("step {step:>6} loss {loss:.4}");
@@ -249,25 +255,18 @@ fn cmd_memory_plan(args: &Args) -> Result<()> {
 
 fn cmd_artifacts(args: &Args) -> Result<()> {
     let dir = artifact_dir(args);
-    if !dir.join("manifest.json").exists() {
-        bail!("no manifest at {} — run `make artifacts`", dir.display());
-    }
-    let rt = Runtime::new(&dir)?;
-    let mut names: Vec<_> = rt.manifest.artifacts.keys().collect();
+    let rt = backend_by_name(args.get_or("backend", "auto"), &dir)?;
+    let manifest = rt.manifest();
+    let mut names: Vec<_> = manifest.artifacts.keys().collect();
     names.sort();
-    println!("{} artifacts:", names.len());
+    println!("platform {}: {} artifacts:", rt.platform(), names.len());
     for n in names {
-        let s = rt.spec(n)?;
+        let s = &manifest.artifacts[n];
         println!("  {n}  ({} in / {} out)", s.inputs.len(), s.outputs.len());
     }
     println!("models:");
-    for (name, m) in &rt.manifest.models {
-        println!(
-            "  {name}: kind={} params={} batch={}",
-            m.kind,
-            m.params.len(),
-            m.batch
-        );
+    for (name, m) in &manifest.models {
+        println!("  {name}: kind={} params={} batch={}", m.kind, m.params.len(), m.batch);
     }
     Ok(())
 }

@@ -224,7 +224,7 @@ mod tests {
         let mut opt = MFac::new(100, 8, 0.1, 0.9, 0.0);
         assert_eq!(opt.state_bytes(), 400); // just momentum
         for _ in 0..10 {
-            opt.push_grad(&vec![0.0; 100]);
+            opt.push_grad(&[0.0; 100]);
         }
         // 8 gradient copies * 400 B + momentum 400 B
         assert_eq!(opt.state_bytes(), 8 * 400 + 400);

@@ -1,0 +1,541 @@
+//! The pure-Rust execution backend: serves every artifact the AOT pipeline
+//! would emit — PU / PIRU / inverse roots / preconditioning / model steps /
+//! first-order updates — natively on the in-tree `linalg`, `quant`, and
+//! model substrates, against a manifest synthesized to match aot.py exactly
+//! (same names, same I/O specs, same bucket set). No Python, no XLA.
+
+pub mod model;
+pub mod ops;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::literal::HostTensor;
+use super::manifest::{ArtifactSpec, ExecStats, IoSpec, Manifest, ModelSpec, ParamSpec};
+use super::Backend;
+
+/// Bucket orders every backend serves (mirrors aot.py ALL_BUCKETS).
+pub const ALL_BUCKETS: [usize; 3] = [32, 64, 128];
+/// Orders with quantized-state artifacts (paper: ≥ 4096 elements).
+pub const QUANT_BUCKETS: [usize; 2] = [64, 128];
+/// K-FAC/AdaBK whole-layer orders add 256 to the bucket artifacts.
+const BUCKETS_WITH_KFAC: [usize; 3] = [64, 128, 256];
+const DENSE_BUCKETS: [usize; 4] = [32, 64, 128, 256];
+const CB_LEN: usize = 16;
+
+pub struct HostBackend {
+    manifest: Manifest,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+impl HostBackend {
+    pub fn new() -> Self {
+        Self { manifest: synthetic_manifest(), stats: RefCell::new(HashMap::new()) }
+    }
+
+    fn dispatch(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        for m in self.manifest.models.values() {
+            if m.step == name {
+                return match m.kind.as_str() {
+                    "mlp" => model::mlp_step(m, inputs),
+                    "tlm" => model::tlm_step(m, inputs),
+                    other => bail!("unknown model kind {other}"),
+                };
+            }
+            if m.eval == name {
+                return match m.kind.as_str() {
+                    "mlp" => model::mlp_eval(m, inputs),
+                    "tlm" => model::tlm_eval(m, inputs),
+                    other => bail!("unknown model kind {other}"),
+                };
+            }
+        }
+        if name.starts_with("gram_") {
+            return Ok(ops::gram(&ops::mat2(&inputs[0])?));
+        }
+        if name.starts_with("pu_dense_") {
+            return Ok(ops::pu_dense(
+                &ops::mat2(&inputs[0])?,
+                &ops::mat2(&inputs[1])?,
+                ops::scalar(&inputs[2])?,
+            ));
+        }
+        if name.starts_with("invroot_dense") {
+            let p = if name.contains("_e1_") {
+                1
+            } else if name.contains("_e2_") {
+                2
+            } else {
+                4
+            };
+            return Ok(ops::invroot_dense(&ops::mat2(&inputs[0])?, ops::scalar(&inputs[1])?, p));
+        }
+        if name.starts_with("pu_naive_") {
+            return ops::pu_naive(
+                inputs[0].as_f32()?,
+                &inputs[1],
+                &inputs[2],
+                &ops::mat2(&inputs[3])?,
+                ops::scalar(&inputs[4])?,
+                inputs[5].as_f32()?,
+            );
+        }
+        if name.starts_with("invroot_naive_") {
+            return ops::invroot_naive(
+                inputs[0].as_f32()?,
+                &inputs[1],
+                &inputs[2],
+                ops::scalar(&inputs[3])?,
+                inputs[4].as_f32()?,
+            );
+        }
+        if name.starts_with("pu_") {
+            // aot.py: Shampoo/CASPR use one subspace iteration, K-FAC/AdaBK
+            // (order 256 + the dedicated kfac artifact) use two.
+            let sub_iters = if name == "pu_kfac_128" || name.ends_with("_256") { 2 } else { 1 };
+            return ops::pu_quantized(
+                inputs[0].as_f32()?,
+                &inputs[1],
+                &inputs[2],
+                &ops::mat2(&inputs[3])?,
+                ops::scalar(&inputs[4])?,
+                inputs[5].as_f32()?,
+                sub_iters,
+            );
+        }
+        if name.starts_with("piru") {
+            let expo = if name.starts_with("piru_e1_") {
+                -1.0
+            } else if name.starts_with("piru_e2_") {
+                -0.5
+            } else {
+                -0.25
+            };
+            return ops::piru_quantized(
+                inputs[0].as_f32()?,
+                &inputs[1],
+                &inputs[2],
+                ops::scalar(&inputs[3])?,
+                inputs[4].as_f32()?,
+                expo,
+            );
+        }
+        if name.starts_with("precond32_") || name.starts_with("caspr32_") {
+            return Ok(ops::precond_dense(
+                &ops::mat2(&inputs[0])?,
+                &ops::mat2(&inputs[1])?,
+                &ops::mat2(&inputs[2])?,
+                name.starts_with("caspr"),
+            ));
+        }
+        if name.starts_with("precond4_") || name.starts_with("caspr4_") {
+            return ops::precond_4bit(
+                &ops::mat2(&inputs[0])?,
+                inputs[1].as_f32()?,
+                &inputs[2],
+                &inputs[3],
+                inputs[4].as_f32()?,
+                &inputs[5],
+                &inputs[6],
+                inputs[7].as_f32()?,
+                name.starts_with("caspr"),
+            );
+        }
+        if name.starts_with("quant_cols_") {
+            let (c, s) = ops::quant_cols_tensors(&ops::mat2(&inputs[0])?, inputs[1].as_f32()?);
+            return Ok(vec![c, s]);
+        }
+        if name.starts_with("dequant_cols_") {
+            let m = ops::dequant_cols(&inputs[0], &inputs[1], inputs[2].as_f32()?)?;
+            return Ok(vec![HostTensor::f32(&[m.rows, m.cols], m.data)]);
+        }
+        if name == "sgdm_update_4096" {
+            return Ok(ops::sgdm_update(
+                inputs[0].as_f32()?,
+                inputs[1].as_f32()?,
+                inputs[2].as_f32()?,
+                ops::scalar(&inputs[3])?,
+                ops::scalar(&inputs[4])?,
+                ops::scalar(&inputs[5])?,
+            ));
+        }
+        if name == "adamw_update_4096" {
+            return Ok(ops::adamw_update(
+                inputs[0].as_f32()?,
+                inputs[1].as_f32()?,
+                inputs[2].as_f32()?,
+                inputs[3].as_f32()?,
+                ops::scalar(&inputs[4])?,
+                ops::scalar(&inputs[5])?,
+                ops::scalar(&inputs[6])?,
+                ops::scalar(&inputs[7])?,
+                ops::scalar(&inputs[8])?,
+                ops::scalar(&inputs[9])?,
+            ));
+        }
+        bail!("HostBackend has no implementation for artifact {name}")
+    }
+}
+
+impl Default for HostBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for HostBackend {
+    fn platform(&self) -> String {
+        "host-cpu".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.manifest.validate_inputs(name, inputs)?;
+        let t0 = Instant::now();
+        let outs = self.dispatch(name, inputs)?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.stats.borrow_mut();
+        let ent = stats.entry(name.to_string()).or_default();
+        ent.calls += 1;
+        ent.total_secs += dt;
+        Ok(outs)
+    }
+
+    fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.borrow().clone()
+    }
+}
+
+// ---- manifest synthesis (mirrors aot.py registration) ---------------------
+
+fn f32s(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec::new(name, shape, "float32")
+}
+
+fn i32s(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec::new(name, shape, "int32")
+}
+
+fn u8s(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec::new(name, shape, "uint8")
+}
+
+/// (codes, scales) shapes for an order-n column-blocked quantized matrix.
+fn qshapes(n: usize) -> (Vec<usize>, Vec<usize>) {
+    let qb = 64.min(n);
+    let nb = n * n / qb;
+    (vec![nb, qb], vec![nb])
+}
+
+struct Reg(HashMap<String, ArtifactSpec>);
+
+impl Reg {
+    fn add(&mut self, name: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>) {
+        let prev =
+            self.0.insert(name.to_string(), ArtifactSpec { file: String::new(), inputs, outputs });
+        debug_assert!(prev.is_none(), "duplicate artifact {name}");
+    }
+}
+
+fn tlm_param_specs(vocab: usize, d: usize, layers: usize, ff: usize, seq: usize) -> Vec<ParamSpec> {
+    let mut v = vec![
+        ParamSpec { name: "embed".into(), shape: vec![vocab, d] },
+        ParamSpec { name: "pos".into(), shape: vec![seq, d] },
+    ];
+    for i in 0..layers {
+        for (suffix, shape) in [
+            ("ln1_g", vec![d]),
+            ("ln1_b", vec![d]),
+            ("wqkv", vec![d, 3 * d]),
+            ("wo", vec![d, d]),
+            ("ln2_g", vec![d]),
+            ("ln2_b", vec![d]),
+            ("w1", vec![d, ff]),
+            ("w2", vec![ff, d]),
+        ] {
+            v.push(ParamSpec { name: format!("l{i}.{suffix}"), shape });
+        }
+    }
+    v.push(ParamSpec { name: "lnf_g".into(), shape: vec![d] });
+    v.push(ParamSpec { name: "lnf_b".into(), shape: vec![d] });
+    v
+}
+
+fn register_model(reg: &mut Reg, models: &mut HashMap<String, ModelSpec>, spec: ModelSpec) {
+    let p_in: Vec<IoSpec> = spec.params.iter().map(|p| f32s(&p.name, &p.shape)).collect();
+    let grads: Vec<IoSpec> =
+        spec.params.iter().map(|p| f32s(&format!("grad_{}", p.name), &p.shape)).collect();
+    match spec.kind.as_str() {
+        "mlp" => {
+            let mut inputs = p_in;
+            inputs.push(f32s("x", &[spec.batch, spec.dims[0]]));
+            inputs.push(i32s("y", &[spec.batch]));
+            let mut step_out = vec![f32s("loss", &[])];
+            step_out.extend(grads);
+            for i in 0..spec.dims.len() - 1 {
+                step_out.push(f32s(&format!("stat_r{i}"), &[spec.dims[i], spec.dims[i]]));
+                step_out.push(f32s(&format!("stat_l{i}"), &[spec.dims[i + 1], spec.dims[i + 1]]));
+            }
+            reg.add(&spec.step, inputs.clone(), step_out);
+            reg.add(&spec.eval, inputs, vec![f32s("loss", &[]), i32s("correct", &[])]);
+        }
+        "tlm" => {
+            let mut inputs = p_in;
+            inputs.push(i32s("tokens", &[spec.batch, spec.seq + 1]));
+            let mut step_out = vec![f32s("loss", &[])];
+            step_out.extend(grads);
+            reg.add(&spec.step, inputs.clone(), step_out);
+            reg.add(&spec.eval, inputs, vec![f32s("loss", &[])]);
+        }
+        other => unreachable!("unknown model kind {other}"),
+    }
+    models.insert(spec.step.trim_end_matches("_step").to_string(), spec);
+}
+
+fn mlp_model() -> ModelSpec {
+    let dims = vec![128usize, 256, 256, 128];
+    let mut params = Vec::new();
+    for i in 0..dims.len() - 1 {
+        params.push(ParamSpec { name: format!("w{i}"), shape: vec![dims[i], dims[i + 1]] });
+        params.push(ParamSpec { name: format!("b{i}"), shape: vec![dims[i + 1]] });
+    }
+    let param_count = params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+    ModelSpec {
+        kind: "mlp".into(),
+        params,
+        step: "mlp_base_step".into(),
+        eval: "mlp_base_eval".into(),
+        batch: 128,
+        classes: *dims.last().unwrap(),
+        dims,
+        vocab: 0,
+        seq: 0,
+        heads: 0,
+        param_count,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn tlm_model(
+    name: &str,
+    vocab: usize,
+    d: usize,
+    layers: usize,
+    heads: usize,
+    ff: usize,
+    seq: usize,
+    batch: usize,
+) -> ModelSpec {
+    let params = tlm_param_specs(vocab, d, layers, ff, seq);
+    let param_count = params.iter().map(|p| p.shape.iter().product::<usize>()).sum();
+    ModelSpec {
+        kind: "tlm".into(),
+        params,
+        step: format!("{name}_step"),
+        eval: format!("{name}_eval"),
+        batch,
+        dims: Vec::new(),
+        classes: 0,
+        vocab,
+        seq,
+        heads,
+        param_count,
+    }
+}
+
+fn synthetic_manifest() -> Manifest {
+    let mut reg = Reg(HashMap::new());
+    let cb = f32s("cb", &[CB_LEN]);
+
+    // bucket artifacts (quantized + naive + dense state families)
+    for n in BUCKETS_WITH_KFAC {
+        let (cshape, sshape) = qshapes(n);
+        let lam = f32s("lam", &[n]);
+        let codes = u8s("codes", &cshape);
+        let scales = f32s("scales", &sshape);
+        let mat = f32s("m_stat", &[n, n]);
+        let quant_state = || vec![lam.clone(), codes.clone(), scales.clone()];
+        let quant_out = || {
+            vec![f32s("lam", &[n]), u8s("codes", &cshape), f32s("scales", &sshape)]
+        };
+        let diag_out = || {
+            vec![f32s("diag", &[n]), u8s("codes", &cshape), f32s("scales", &sshape)]
+        };
+
+        let mut pu_in = quant_state();
+        pu_in.extend([mat.clone(), f32s("beta", &[]), cb.clone()]);
+        reg.add(&format!("pu_{n}"), pu_in.clone(), quant_out());
+        if n == 128 {
+            reg.add("pu_kfac_128", pu_in.clone(), quant_out());
+        }
+        for tag in ["", "_e2", "_e1"] {
+            let mut piru_in = quant_state();
+            piru_in.extend([f32s("eps", &[]), cb.clone()]);
+            reg.add(&format!("piru{tag}_{n}"), piru_in, diag_out());
+        }
+        let mut naive_pu_in = vec![f32s("diag", &[n]), codes.clone(), scales.clone()];
+        naive_pu_in.extend([mat.clone(), f32s("beta", &[]), cb.clone()]);
+        reg.add(&format!("pu_naive_{n}"), naive_pu_in, diag_out());
+        let mut naive_ir_in = vec![f32s("diag", &[n]), codes.clone(), scales.clone()];
+        naive_ir_in.extend([f32s("eps", &[]), cb.clone()]);
+        reg.add(&format!("invroot_naive_{n}"), naive_ir_in, diag_out());
+
+        reg.add(
+            &format!("quant_cols_{n}"),
+            vec![f32s("u", &[n, n]), cb.clone()],
+            vec![u8s("codes", &cshape), f32s("scales", &sshape)],
+        );
+        reg.add(
+            &format!("dequant_cols_{n}"),
+            vec![codes.clone(), scales.clone(), cb.clone()],
+            vec![f32s("u", &[n, n])],
+        );
+    }
+    for n in DENSE_BUCKETS {
+        reg.add(
+            &format!("pu_dense_{n}"),
+            vec![f32s("l", &[n, n]), f32s("m_stat", &[n, n]), f32s("beta", &[])],
+            vec![f32s("l", &[n, n])],
+        );
+        for tag in ["", "_e2", "_e1"] {
+            reg.add(
+                &format!("invroot_dense{tag}_{n}"),
+                vec![f32s("l", &[n, n]), f32s("eps", &[])],
+                vec![f32s("lhat", &[n, n])],
+            );
+        }
+    }
+
+    // pair artifacts (gram + preconditioning)
+    for m in ALL_BUCKETS {
+        for n in ALL_BUCKETS {
+            reg.add(
+                &format!("gram_{m}x{n}"),
+                vec![f32s("g", &[m, n])],
+                vec![f32s("l", &[m, m]), f32s("r", &[n, n])],
+            );
+            let dense_in = vec![f32s("g", &[m, n]), f32s("lhat", &[m, m]), f32s("rhat", &[n, n])];
+            reg.add(&format!("precond32_{m}x{n}"), dense_in.clone(), vec![f32s("gt", &[m, n])]);
+            reg.add(&format!("caspr32_{m}x{n}"), dense_in, vec![f32s("gt", &[m, n])]);
+        }
+    }
+    for m in QUANT_BUCKETS {
+        for n in QUANT_BUCKETS {
+            let (lc, ls) = qshapes(m);
+            let (rc, rs) = qshapes(n);
+            let quant_in = vec![
+                f32s("g", &[m, n]),
+                f32s("l_diag", &[m]),
+                u8s("l_codes", &lc),
+                f32s("l_scales", &ls),
+                f32s("r_diag", &[n]),
+                u8s("r_codes", &rc),
+                f32s("r_scales", &rs),
+                cb.clone(),
+            ];
+            reg.add(&format!("precond4_{m}x{n}"), quant_in.clone(), vec![f32s("gt", &[m, n])]);
+            reg.add(&format!("caspr4_{m}x{n}"), quant_in, vec![f32s("gt", &[m, n])]);
+        }
+    }
+
+    // first-order updates
+    let v4096 = |name: &str| f32s(name, &[4096]);
+    reg.add(
+        "sgdm_update_4096",
+        vec![
+            v4096("p"),
+            v4096("buf"),
+            v4096("g"),
+            f32s("lr", &[]),
+            f32s("momentum", &[]),
+            f32s("wd", &[]),
+        ],
+        vec![v4096("p"), v4096("buf")],
+    );
+    reg.add(
+        "adamw_update_4096",
+        vec![
+            v4096("p"),
+            v4096("m"),
+            v4096("v"),
+            v4096("g"),
+            f32s("step", &[]),
+            f32s("lr", &[]),
+            f32s("beta1", &[]),
+            f32s("beta2", &[]),
+            f32s("eps", &[]),
+            f32s("wd", &[]),
+        ],
+        vec![v4096("p"), v4096("m"), v4096("v")],
+    );
+
+    // models (laptop-scale stand-ins; mirrors python/compile/model.py)
+    let mut models = HashMap::new();
+    register_model(&mut reg, &mut models, mlp_model());
+    register_model(&mut reg, &mut models, tlm_model("tlm_tiny", 256, 128, 2, 4, 512, 64, 8));
+    register_model(&mut reg, &mut models, tlm_model("tlm_small", 512, 256, 4, 8, 1024, 128, 8));
+
+    Manifest {
+        block_size: 64,
+        cb_len: CB_LEN,
+        buckets: ALL_BUCKETS.to_vec(),
+        quant_buckets: QUANT_BUCKETS.to_vec(),
+        artifacts: reg.0,
+        models,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_registers_expected_families() {
+        let m = synthetic_manifest();
+        for name in [
+            "pu_64",
+            "pu_128",
+            "pu_256",
+            "pu_kfac_128",
+            "piru_64",
+            "piru_e2_128",
+            "piru_e1_256",
+            "pu_naive_128",
+            "invroot_naive_64",
+            "pu_dense_32",
+            "invroot_dense_128",
+            "invroot_dense_e1_256",
+            "gram_64x128",
+            "precond32_32x32",
+            "caspr32_128x64",
+            "precond4_64x128",
+            "caspr4_128x128",
+            "quant_cols_64",
+            "dequant_cols_128",
+            "sgdm_update_4096",
+            "adamw_update_4096",
+            "mlp_base_step",
+            "mlp_base_eval",
+            "tlm_tiny_step",
+            "tlm_small_eval",
+        ] {
+            assert!(m.artifacts.contains_key(name), "missing {name}");
+        }
+        assert_eq!(m.models["mlp_base"].kind, "mlp");
+        assert_eq!(m.models["tlm_tiny"].heads, 4);
+        assert_eq!(m.models["tlm_tiny"].param_count, 256 * 128 + 64 * 128 + 2 * (4 * 128 + 128 * 384 + 128 * 128 + 128 * 512 + 512 * 128) + 2 * 128);
+        assert_eq!(m.buckets, vec![32, 64, 128]);
+    }
+
+    #[test]
+    fn unknown_artifact_is_rejected() {
+        let b = HostBackend::new();
+        assert!(b.execute("bogus_artifact", &[]).is_err());
+    }
+}

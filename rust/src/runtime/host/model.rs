@@ -1,0 +1,552 @@
+//! Native model step/eval execution — the Rust mirror of
+//! python/compile/model.py (MLP with manual backprop + K-FAC statistics;
+//! decoder-only pre-LN transformer LM with hand-written backprop, validated
+//! against finite differences).
+
+use anyhow::{bail, Result};
+
+use super::ops::mat2;
+use crate::linalg::Mat;
+use crate::runtime::literal::HostTensor;
+use crate::runtime::manifest::ModelSpec;
+
+// ---- shared pieces --------------------------------------------------------
+
+/// Mean softmax cross-entropy; returns (loss, dlogits) with the 1/batch
+/// already folded into dlogits (like python _softmax_xent).
+fn softmax_xent(logits: &Mat, labels: &[i32]) -> Result<(f32, Mat)> {
+    let (bs, c) = (logits.rows, logits.cols);
+    let mut d = Mat::zeros(bs, c);
+    let inv_bs = 1.0 / bs as f32;
+    let mut loss = 0.0f64;
+    for r in 0..bs {
+        let row = logits.row(r);
+        let yi = labels[r] as usize;
+        if yi >= c {
+            bail!("label {} out of range for {c} classes", labels[r]);
+        }
+        let zmax = row.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        let mut sum = 0.0f64;
+        for &x in row {
+            sum += ((x - zmax) as f64).exp();
+        }
+        let lse = sum.ln();
+        loss -= (row[yi] - zmax) as f64 - lse;
+        let drow = d.row_mut(r);
+        for (j, &x) in row.iter().enumerate() {
+            drow[j] = (((x - zmax) as f64 - lse).exp() as f32) * inv_bs;
+        }
+        drow[yi] -= inv_bs;
+    }
+    Ok(((loss / bs as f64) as f32, d))
+}
+
+fn col_sums(m: &Mat) -> Vec<f32> {
+    let mut out = vec![0.0f32; m.cols];
+    for r in 0..m.rows {
+        for (o, &x) in out.iter_mut().zip(m.row(r)) {
+            *o += x;
+        }
+    }
+    out
+}
+
+// ---- MLP ------------------------------------------------------------------
+
+struct MlpForward {
+    acts: Vec<Mat>,
+    pre: Vec<Mat>,
+}
+
+fn mlp_forward(spec: &ModelSpec, inputs: &[HostTensor], x: Mat) -> Result<MlpForward> {
+    let layers = spec.dims.len() - 1;
+    let mut acts = vec![x];
+    let mut pre = Vec::with_capacity(layers);
+    for i in 0..layers {
+        let w = mat2(&inputs[2 * i])?;
+        let b = inputs[2 * i + 1].as_f32()?;
+        let mut z = acts[i].matmul(&w);
+        for r in 0..z.rows {
+            for (zj, &bj) in z.row_mut(r).iter_mut().zip(b) {
+                *zj += bj;
+            }
+        }
+        pre.push(z.clone());
+        if i < layers - 1 {
+            for v in z.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+        }
+        acts.push(z);
+    }
+    Ok(MlpForward { acts, pre })
+}
+
+/// mlp_*_step: forward + manual backward + the K-FAC statistics
+/// (XᵀX/bs, δYᵀδY·bs) per layer. Output order matches aot.py:
+/// loss, grad_w0, grad_b0, ..., stat_r0, stat_l0, stat_r1, ...
+pub fn mlp_step(spec: &ModelSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let layers = spec.dims.len() - 1;
+    let np = 2 * layers;
+    let bsz = spec.batch;
+    let x = Mat::from_vec(bsz, spec.dims[0], inputs[np].as_f32()?.to_vec());
+    let y = inputs[np + 1].as_i32()?;
+    let fwd = mlp_forward(spec, inputs, x)?;
+    let (loss, mut dz) = softmax_xent(&fwd.acts[layers], y)?;
+
+    let mut grads: Vec<Option<HostTensor>> = (0..np).map(|_| None).collect();
+    let mut stats_rev: Vec<(Mat, Mat)> = Vec::with_capacity(layers);
+    for i in (0..layers).rev() {
+        let a_in = &fwd.acts[i];
+        let gw = a_in.transpose().matmul(&dz);
+        let gb = col_sums(&dz);
+        grads[2 * i] = Some(HostTensor::f32(&[gw.rows, gw.cols], gw.data));
+        grads[2 * i + 1] = Some(HostTensor::f32(&[gb.len()], gb));
+        // K-FAC statistics for layer i (Algorithm 5's R and L)
+        let r_stat = a_in.gram_t().scale(1.0 / bsz as f32);
+        let l_stat = dz.gram_t().scale(bsz as f32);
+        stats_rev.push((r_stat, l_stat));
+        if i > 0 {
+            let w = mat2(&inputs[2 * i])?;
+            let mut da = dz.matmul(&w.transpose());
+            let pre_prev = &fwd.pre[i - 1];
+            for (dv, &pv) in da.data.iter_mut().zip(&pre_prev.data) {
+                if pv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            dz = da;
+        }
+    }
+
+    let mut outs = vec![HostTensor::scalar_f32(loss)];
+    outs.extend(grads.into_iter().map(|g| g.unwrap()));
+    for (r, l) in stats_rev.into_iter().rev() {
+        outs.push(HostTensor::f32(&[r.rows, r.cols], r.data));
+        outs.push(HostTensor::f32(&[l.rows, l.cols], l.data));
+    }
+    Ok(outs)
+}
+
+/// mlp_*_eval: (mean loss, #correct).
+pub fn mlp_eval(spec: &ModelSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let layers = spec.dims.len() - 1;
+    let np = 2 * layers;
+    let bsz = spec.batch;
+    let x = Mat::from_vec(bsz, spec.dims[0], inputs[np].as_f32()?.to_vec());
+    let y = inputs[np + 1].as_i32()?;
+    let fwd = mlp_forward(spec, inputs, x)?;
+    let logits = &fwd.acts[layers];
+    let (loss, _) = softmax_xent(logits, y)?;
+    let mut correct = 0i32;
+    for (r, &yi) in y.iter().enumerate() {
+        let row = logits.row(r);
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == yi as usize {
+            correct += 1;
+        }
+    }
+    Ok(vec![HostTensor::scalar_f32(loss), HostTensor::i32(&[], vec![correct])])
+}
+
+// ---- transformer LM -------------------------------------------------------
+
+const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+const LN_EPS: f32 = 1e-5;
+
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn dgelu(x: f32) -> f32 {
+    let t = (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh();
+    let dt = (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * 0.044715 * x * x);
+    0.5 * (1.0 + t) + 0.5 * x * dt
+}
+
+/// Row-wise LayerNorm. Returns (y, xhat, 1/σ per row).
+fn layernorm_fwd(x: &Mat, g: &[f32], b: &[f32]) -> (Mat, Mat, Vec<f32>) {
+    let (n, d) = (x.rows, x.cols);
+    let mut y = Mat::zeros(n, d);
+    let mut xhat = Mat::zeros(n, d);
+    let mut istd = Vec::with_capacity(n);
+    for r in 0..n {
+        let row = x.row(r);
+        let mu = row.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+        let var = row.iter().map(|&v| (v as f64 - mu) * (v as f64 - mu)).sum::<f64>() / d as f64;
+        let is = 1.0 / (var + LN_EPS as f64).sqrt();
+        istd.push(is as f32);
+        for j in 0..d {
+            let xh = ((row[j] as f64 - mu) * is) as f32;
+            xhat[(r, j)] = xh;
+            y[(r, j)] = xh * g[j] + b[j];
+        }
+    }
+    (y, xhat, istd)
+}
+
+/// LayerNorm backward. Accumulates (dg, db), returns dx.
+fn layernorm_bwd(
+    dy: &Mat,
+    xhat: &Mat,
+    istd: &[f32],
+    g: &[f32],
+    dg: &mut [f32],
+    db: &mut [f32],
+) -> Mat {
+    let (n, d) = (dy.rows, dy.cols);
+    let mut dx = Mat::zeros(n, d);
+    for r in 0..n {
+        let dyr = dy.row(r);
+        let xhr = xhat.row(r);
+        let mut m1 = 0.0f64;
+        let mut m2 = 0.0f64;
+        for j in 0..d {
+            let dxh = (dyr[j] * g[j]) as f64;
+            m1 += dxh;
+            m2 += dxh * xhr[j] as f64;
+            dg[j] += dyr[j] * xhr[j];
+            db[j] += dyr[j];
+        }
+        m1 /= d as f64;
+        m2 /= d as f64;
+        let dxr = dx.row_mut(r);
+        for j in 0..d {
+            let dxh = (dyr[j] * g[j]) as f64;
+            dxr[j] = (istd[r] as f64 * (dxh - m1 - xhr[j] as f64 * m2)) as f32;
+        }
+    }
+    dx
+}
+
+struct TlmDims {
+    b: usize,
+    t: usize,
+    d: usize,
+    h: usize,
+    hd: usize,
+    vocab: usize,
+    layers: usize,
+}
+
+fn tlm_dims(spec: &ModelSpec) -> Result<TlmDims> {
+    let d = spec.params[0].shape[1]; // embed (V, d)
+    let layers = spec.params.iter().filter(|p| p.name.ends_with(".wqkv")).count();
+    let h = spec.heads.max(1);
+    if d % h != 0 {
+        bail!("d_model {d} not divisible by {h} heads");
+    }
+    Ok(TlmDims { b: spec.batch, t: spec.seq, d, h, hd: d / h, vocab: spec.vocab, layers })
+}
+
+struct LayerCache {
+    h1: Mat,
+    xhat1: Mat,
+    istd1: Vec<f32>,
+    qkv: Mat,
+    /// softmax attention weights, (b·h·t + t_query)·t + t_key layout
+    atts: Vec<f32>,
+    attn_out: Mat,
+    h2: Mat,
+    xhat2: Mat,
+    istd2: Vec<f32>,
+    u: Mat,
+    act: Mat,
+}
+
+/// Causal single-layer attention forward. Returns (attn_out, atts).
+fn attention_fwd(qkv: &Mat, dm: &TlmDims) -> (Mat, Vec<f32>) {
+    let (bt, d, t, h, hd) = (qkv.rows, dm.d, dm.t, dm.h, dm.hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = Mat::zeros(bt, d);
+    let mut atts = vec![0.0f32; dm.b * h * t * t];
+    let mut row = vec![0.0f32; t];
+    for b in 0..dm.b {
+        for hh in 0..h {
+            let att_base = (b * h + hh) * t * t;
+            for tq in 0..t {
+                let rq = (b * t + tq) * 3 * d + hh * hd;
+                // scores over keys 0..=tq, max-subtracted softmax
+                let mut mx = f32::NEG_INFINITY;
+                for (tk, rv) in row.iter_mut().enumerate().take(tq + 1) {
+                    let rk = (b * t + tk) * 3 * d + d + hh * hd;
+                    let mut dot = 0.0f32;
+                    for c in 0..hd {
+                        dot += qkv.data[rq + c] * qkv.data[rk + c];
+                    }
+                    let s = dot * scale;
+                    *rv = s;
+                    mx = mx.max(s);
+                }
+                let mut sum = 0.0f64;
+                for rv in row.iter_mut().take(tq + 1) {
+                    let e = ((*rv - mx) as f64).exp();
+                    *rv = e as f32;
+                    sum += e;
+                }
+                let inv = (1.0 / sum) as f32;
+                let orow = (b * t + tq) * d + hh * hd;
+                for tk in 0..=tq {
+                    let a = row[tk] * inv;
+                    atts[att_base + tq * t + tk] = a;
+                    let rv = (b * t + tk) * 3 * d + 2 * d + hh * hd;
+                    for c in 0..hd {
+                        out.data[orow + c] += a * qkv.data[rv + c];
+                    }
+                }
+            }
+        }
+    }
+    (out, atts)
+}
+
+/// Attention backward: d(attn_out) → d(qkv).
+fn attention_bwd(dout: &Mat, qkv: &Mat, atts: &[f32], dm: &TlmDims) -> Mat {
+    let (d, t, h, hd) = (dm.d, dm.t, dm.h, dm.hd);
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut dqkv = Mat::zeros(qkv.rows, 3 * d);
+    let mut datt = vec![0.0f32; t];
+    for b in 0..dm.b {
+        for hh in 0..h {
+            let att_base = (b * h + hh) * t * t;
+            for tq in 0..t {
+                let do_row = (b * t + tq) * d + hh * hd;
+                // dV[tk] += att[tq,tk]·dO[tq]  and  dAtt[tq,tk] = dO[tq]·V[tk]
+                let mut tmp = 0.0f64;
+                for tk in 0..=tq {
+                    let a = atts[att_base + tq * t + tk];
+                    let rv = (b * t + tk) * 3 * d + 2 * d + hh * hd;
+                    let mut da = 0.0f32;
+                    for c in 0..hd {
+                        let g = dout.data[do_row + c];
+                        dqkv.data[rv + c] += a * g;
+                        da += g * qkv.data[rv + c];
+                    }
+                    datt[tk] = da;
+                    tmp += (da * a) as f64;
+                }
+                // dS = att ⊙ (dAtt − Σ dAtt⊙att); dQ += dS·K·s; dK += dS·Q·s
+                let rq = (b * t + tq) * 3 * d + hh * hd;
+                for tk in 0..=tq {
+                    let a = atts[att_base + tq * t + tk];
+                    let ds = a * (datt[tk] - tmp as f32) * scale;
+                    if ds == 0.0 {
+                        continue;
+                    }
+                    let rk = (b * t + tk) * 3 * d + d + hh * hd;
+                    for c in 0..hd {
+                        dqkv.data[rq + c] += ds * qkv.data[rk + c];
+                        dqkv.data[rk + c] += ds * qkv.data[rq + c];
+                    }
+                }
+            }
+        }
+    }
+    dqkv
+}
+
+struct TlmForward {
+    caches: Vec<LayerCache>,
+    xf: Mat,
+    xhatf: Mat,
+    istdf: Vec<f32>,
+    logits: Mat,
+    inp: Vec<usize>,
+    tgt: Vec<i32>,
+}
+
+fn tlm_forward(
+    spec: &ModelSpec,
+    inputs: &[HostTensor],
+    dm: &TlmDims,
+    with_caches: bool,
+) -> Result<TlmForward> {
+    let np = spec.params.len();
+    let tokens = inputs[np].as_i32()?;
+    let (b, t, d) = (dm.b, dm.t, dm.d);
+    let bt = b * t;
+    let embed = mat2(&inputs[0])?;
+    let pos = mat2(&inputs[1])?;
+    let mut inp = Vec::with_capacity(bt);
+    let mut tgt = Vec::with_capacity(bt);
+    let mut x = Mat::zeros(bt, d);
+    for bb in 0..b {
+        for tt in 0..t {
+            let tok = tokens[bb * (t + 1) + tt];
+            if tok < 0 || tok as usize >= dm.vocab {
+                bail!("token {tok} out of vocab range {}", dm.vocab);
+            }
+            inp.push(tok as usize);
+            tgt.push(tokens[bb * (t + 1) + tt + 1]);
+            let r = bb * t + tt;
+            let xr = x.row_mut(r);
+            xr.copy_from_slice(embed.row(tok as usize));
+            for (xv, &pv) in xr.iter_mut().zip(pos.row(tt)) {
+                *xv += pv;
+            }
+        }
+    }
+
+    let mut caches = Vec::with_capacity(if with_caches { dm.layers } else { 0 });
+    for i in 0..dm.layers {
+        let base = 2 + 8 * i;
+        let ln1_g = inputs[base].as_f32()?;
+        let ln1_b = inputs[base + 1].as_f32()?;
+        let wqkv = mat2(&inputs[base + 2])?;
+        let wo = mat2(&inputs[base + 3])?;
+        let ln2_g = inputs[base + 4].as_f32()?;
+        let ln2_b = inputs[base + 5].as_f32()?;
+        let w1 = mat2(&inputs[base + 6])?;
+        let w2 = mat2(&inputs[base + 7])?;
+
+        let (h1, xhat1, istd1) = layernorm_fwd(&x, ln1_g, ln1_b);
+        let qkv = h1.matmul(&wqkv);
+        let (attn_out, atts) = attention_fwd(&qkv, dm);
+        let proj = attn_out.matmul(&wo);
+        let x_mid = x.add(&proj);
+
+        let (h2, xhat2, istd2) = layernorm_fwd(&x_mid, ln2_g, ln2_b);
+        let u = h2.matmul(&w1);
+        let mut act = u.clone();
+        for v in act.data.iter_mut() {
+            *v = gelu(*v);
+        }
+        let f_out = act.matmul(&w2);
+        x = x_mid.add(&f_out);
+
+        if with_caches {
+            caches.push(LayerCache {
+                h1,
+                xhat1,
+                istd1,
+                qkv,
+                atts,
+                attn_out,
+                h2,
+                xhat2,
+                istd2,
+                u,
+                act,
+            });
+        }
+    }
+
+    let lnf_g = inputs[np - 2].as_f32()?;
+    let lnf_b = inputs[np - 1].as_f32()?;
+    let (xf, xhatf, istdf) = layernorm_fwd(&x, lnf_g, lnf_b);
+    let logits = xf.matmul(&embed.transpose()); // tied head
+    Ok(TlmForward { caches, xf, xhatf, istdf, logits, inp, tgt })
+}
+
+/// tlm_*_step: next-token cross-entropy loss + gradients for every
+/// parameter, in manifest order.
+pub fn tlm_step(spec: &ModelSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let dm = tlm_dims(spec)?;
+    let np = spec.params.len();
+    let fwd = tlm_forward(spec, inputs, &dm, true)?;
+    let (loss, dlogits) = softmax_xent(&fwd.logits, &fwd.tgt)?;
+
+    let embed = mat2(&inputs[0])?;
+    let mut grads: Vec<Vec<f32>> =
+        spec.params.iter().map(|p| vec![0.0f32; p.shape.iter().product()]).collect();
+
+    // tied head: logits = xf·embedᵀ
+    let d_embed_head = dlogits.transpose().matmul(&fwd.xf);
+    grads[0].copy_from_slice(&d_embed_head.data);
+    let dxf = dlogits.matmul(&embed);
+    let (gf, bf) = grads.split_at_mut(np - 1);
+    let mut dx = layernorm_bwd(
+        &dxf,
+        &fwd.xhatf,
+        &fwd.istdf,
+        inputs[np - 2].as_f32()?,
+        &mut gf[np - 2],
+        &mut bf[0],
+    );
+
+    for i in (0..dm.layers).rev() {
+        let base = 2 + 8 * i;
+        let wqkv = mat2(&inputs[base + 2])?;
+        let wo = mat2(&inputs[base + 3])?;
+        let w1 = mat2(&inputs[base + 6])?;
+        let w2 = mat2(&inputs[base + 7])?;
+        let cc = &fwd.caches[i];
+
+        // MLP branch: x = x_mid + gelu(LN2(x_mid)·w1)·w2
+        let dact = dx.matmul(&w2.transpose());
+        let dw2 = cc.act.transpose().matmul(&dx);
+        grads[base + 7].copy_from_slice(&dw2.data);
+        let mut du = dact;
+        for (dv, &uv) in du.data.iter_mut().zip(&cc.u.data) {
+            *dv *= dgelu(uv);
+        }
+        let dw1 = cc.h2.transpose().matmul(&du);
+        grads[base + 6].copy_from_slice(&dw1.data);
+        let dh2 = du.matmul(&w1.transpose());
+        {
+            let (ga, gb) = grads.split_at_mut(base + 5);
+            let dx2 = layernorm_bwd(
+                &dh2,
+                &cc.xhat2,
+                &cc.istd2,
+                inputs[base + 4].as_f32()?,
+                &mut ga[base + 4],
+                &mut gb[0],
+            );
+            dx = dx.add(&dx2);
+        }
+
+        // attention branch: x_mid = x_in + (attn_out·wo)
+        let dwo = cc.attn_out.transpose().matmul(&dx);
+        grads[base + 3].copy_from_slice(&dwo.data);
+        let dattn_out = dx.matmul(&wo.transpose());
+        let dqkv = attention_bwd(&dattn_out, &cc.qkv, &cc.atts, &dm);
+        let dwqkv = cc.h1.transpose().matmul(&dqkv);
+        grads[base + 2].copy_from_slice(&dwqkv.data);
+        let dh1 = dqkv.matmul(&wqkv.transpose());
+        {
+            let (ga, gb) = grads.split_at_mut(base + 1);
+            let dx1 = layernorm_bwd(
+                &dh1,
+                &cc.xhat1,
+                &cc.istd1,
+                inputs[base].as_f32()?,
+                &mut ga[base],
+                &mut gb[0],
+            );
+            dx = dx.add(&dx1);
+        }
+    }
+
+    // embedding gather + learned positions
+    for (r, &tok) in fwd.inp.iter().enumerate() {
+        let row = dx.row(r);
+        let ebase = tok * dm.d;
+        for (c, &v) in row.iter().enumerate() {
+            grads[0][ebase + c] += v;
+        }
+        let pbase = (r % dm.t) * dm.d;
+        for (c, &v) in row.iter().enumerate() {
+            grads[1][pbase + c] += v;
+        }
+    }
+
+    let mut outs = vec![HostTensor::scalar_f32(loss)];
+    for (g, p) in grads.into_iter().zip(&spec.params) {
+        outs.push(HostTensor::f32(&p.shape, g));
+    }
+    Ok(outs)
+}
+
+/// tlm_*_eval: loss only.
+pub fn tlm_eval(spec: &ModelSpec, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    let dm = tlm_dims(spec)?;
+    let fwd = tlm_forward(spec, inputs, &dm, false)?;
+    let (loss, _) = softmax_xent(&fwd.logits, &fwd.tgt)?;
+    Ok(vec![HostTensor::scalar_f32(loss)])
+}

@@ -1,0 +1,275 @@
+//! Native execution of the Shampoo / quantizer / first-order artifact
+//! semantics (the Rust mirror of python/compile/shampoo.py and optim1.py),
+//! built on the in-tree `linalg` and `quant` substrates.
+//!
+//! Boundary format: quantized square matrices travel as
+//! (codes u8 [n²/qb, qb] column-blocked, scales f32 [n²/qb]) with
+//! qb = min(64, n), plus the 16-entry runtime codebook — identical to the
+//! AOT artifacts, so backends are interchangeable per call.
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::{bjorck, orthogonalize_cgs2, power_iteration, schur_newton_invroot, Mat};
+use crate::quant::{dequantize_matrix_cols, pack_bits, quantize_matrix_cols, QuantizedVec};
+use crate::runtime::literal::HostTensor;
+
+// ---- boundary marshaling --------------------------------------------------
+
+pub fn mat2(t: &HostTensor) -> Result<Mat> {
+    if t.shape.len() != 2 {
+        bail!("expected 2-D tensor, got shape {:?}", t.shape);
+    }
+    Ok(Mat::from_vec(t.shape[0], t.shape[1], t.as_f32()?.to_vec()))
+}
+
+pub fn scalar(t: &HostTensor) -> Result<f32> {
+    Ok(t.as_f32()?[0])
+}
+
+fn mat_tensor(m: &Mat) -> HostTensor {
+    HostTensor::f32(&[m.rows, m.cols], m.data.clone())
+}
+
+/// Rebuild a column-blocked quantized order-n matrix from boundary tensors.
+pub fn dequant_cols(codes: &HostTensor, scales: &HostTensor, cb: &[f32]) -> Result<Mat> {
+    let raw = codes.as_u8()?;
+    let qb = *codes.shape.last().context("codes must be 2-D")?;
+    let n = (raw.len() as f64).sqrt().round() as usize;
+    if n * n != raw.len() {
+        bail!("codes length {} is not a square", raw.len());
+    }
+    // value-range check: shape validation can't see this, and release-mode
+    // pack_bits would silently bleed out-of-range codes into neighbors
+    if let Some(&c) = raw.iter().find(|&&c| (c as usize) >= cb.len()) {
+        bail!("code {c} out of range for {}-entry codebook", cb.len());
+    }
+    let q = QuantizedVec {
+        packed: pack_bits(raw, 4),
+        scales: scales.as_f32()?.to_vec(),
+        len: raw.len(),
+        bits: 4,
+        block: qb,
+    };
+    Ok(Mat::from_vec(n, n, dequantize_matrix_cols(&q, n, cb)))
+}
+
+/// Quantize an order-n matrix into boundary tensors (codes, scales).
+pub fn quant_cols_tensors(a: &Mat, cb: &[f32]) -> (HostTensor, HostTensor) {
+    let n = a.rows;
+    let q = quantize_matrix_cols(&a.data, n, cb, 4);
+    let qb = q.block;
+    let nb = q.scales.len();
+    (HostTensor::u8(&[nb, qb], q.codes_u8()), HostTensor::f32(&[nb], q.scales))
+}
+
+/// Grafting trick (Algorithm 3 line 14): G̃ = Ĝ·(‖G‖_F/‖Ĝ‖_F).
+fn graft(g: &Mat, ghat: Mat) -> Mat {
+    let ng = g.frobenius();
+    let nh = ghat.frobenius().max(1e-30);
+    ghat.scale((ng / nh) as f32)
+}
+
+fn zero_diag(mut a: Mat) -> Mat {
+    for i in 0..a.rows {
+        a[(i, i)] = 0.0;
+    }
+    a
+}
+
+/// Rebuild Â = Diag(diag) + offdiag(codes) (Algorithm 3 line 13).
+fn dequant_invroot(diag: &[f32], codes: &HostTensor, scales: &HostTensor, cb: &[f32]) -> Result<Mat> {
+    let mut m = dequant_cols(codes, scales, cb)?;
+    for (i, &d) in diag.iter().enumerate() {
+        m[(i, i)] = d;
+    }
+    Ok(m)
+}
+
+/// Split a symmetric matrix into (32-bit diag, quantized off-diagonal).
+fn quant_sym(a: &Mat, cb: &[f32]) -> Vec<HostTensor> {
+    let diag = a.diagonal();
+    let off = zero_diag(a.clone());
+    let (codes, scales) = quant_cols_tensors(&off, cb);
+    vec![HostTensor::f32(&[diag.len()], diag), codes, scales]
+}
+
+// ---- Shampoo artifact families -------------------------------------------
+
+/// gram_{m}x{n}: (G·Gᵀ, Gᵀ·G) statistics (Algorithm 3 line 6).
+pub fn gram(g: &Mat) -> Vec<HostTensor> {
+    vec![mat_tensor(&g.gram()), mat_tensor(&g.gram_t())]
+}
+
+/// pu_{n} / pu_kfac_128 — Algorithm 1 (PU): rebuild A = β·VΛVᵀ + (1−β)·M
+/// from the quantized eigenbasis, re-diagonalize by warm-started subspace
+/// iteration (CGS2 orthogonalizer), requantize.
+pub fn pu_quantized(
+    lam: &[f32],
+    codes: &HostTensor,
+    scales: &HostTensor,
+    m_stat: &Mat,
+    beta: f32,
+    cb: &[f32],
+    sub_iters: usize,
+) -> Result<Vec<HostTensor>> {
+    let v = dequant_cols(codes, scales, cb)?;
+    let mut v = bjorck(&v, 1);
+    let a = Mat::sandwich(&v, lam).scale(beta).add(&m_stat.scale(1.0 - beta));
+    for _ in 0..sub_iters {
+        v = orthogonalize_cgs2(&a.matmul(&v));
+    }
+    let av = a.matmul(&v);
+    let n = lam.len();
+    let lam_new: Vec<f32> = (0..n)
+        .map(|j| (0..n).map(|i| v[(i, j)] as f64 * av[(i, j)] as f64).sum::<f64>() as f32)
+        .collect();
+    let (codes_new, scales_new) = quant_cols_tensors(&v, cb);
+    Ok(vec![HostTensor::f32(&[n], lam_new), codes_new, scales_new])
+}
+
+/// piru{,_e2,_e1}_{n} — Algorithm 2 (PIRU): Â = V(Λ + max{λ}εI)ˢVᵀ stored as
+/// (diag(Â), Q(Â − Diag(diag Â))). s = −1/4 Shampoo, −1/2 AdaBK, −1 K-FAC.
+pub fn piru_quantized(
+    lam: &[f32],
+    codes: &HostTensor,
+    scales: &HostTensor,
+    eps: f32,
+    cb: &[f32],
+    exponent: f32,
+) -> Result<Vec<HostTensor>> {
+    let v = dequant_cols(codes, scales, cb)?;
+    let v = bjorck(&v, 4);
+    let lam_max = lam.iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+    let ridge = lam_max * eps;
+    let d: Vec<f32> = lam.iter().map(|&l| (l + ridge).max(1e-30).powf(exponent)).collect();
+    let a_hat = Mat::sandwich(&v, &d);
+    Ok(quant_sym(&a_hat, cb))
+}
+
+/// pu_naive_{n}: A ← β·D(Ā) + (1−β)·M on the directly-quantized arm.
+pub fn pu_naive(
+    diag: &[f32],
+    codes: &HostTensor,
+    scales: &HostTensor,
+    m_stat: &Mat,
+    beta: f32,
+    cb: &[f32],
+) -> Result<Vec<HostTensor>> {
+    let a = dequant_invroot(diag, codes, scales, cb)?;
+    let a = a.scale(beta).add(&m_stat.scale(1.0 - beta));
+    Ok(quant_sym(&a, cb))
+}
+
+/// invroot_naive_{n}: Schur–Newton A^{-1/4} of the dequantized
+/// preconditioner, requantized (Algorithm 4 lines 8–9 on the naive arm).
+pub fn invroot_naive(
+    diag: &[f32],
+    codes: &HostTensor,
+    scales: &HostTensor,
+    eps: f32,
+    cb: &[f32],
+) -> Result<Vec<HostTensor>> {
+    let a = dequant_invroot(diag, codes, scales, cb)?;
+    let lam_max = power_iteration(&a, 10).max(1e-30);
+    let a_hat = schur_newton_invroot(&a.add_scaled_eye(lam_max * eps), 4, 15);
+    Ok(quant_sym(&a_hat, cb))
+}
+
+/// pu_dense_{n}: L ← β·L + (1−β)·M (Algorithm 4, 32-bit baseline).
+pub fn pu_dense(l: &Mat, m_stat: &Mat, beta: f32) -> Vec<HostTensor> {
+    vec![mat_tensor(&l.scale(beta).add(&m_stat.scale(1.0 - beta)))]
+}
+
+/// invroot_dense{,_e2,_e1}_{n}: (L + λmax·ε·I)^{-1/p} by Schur–Newton.
+pub fn invroot_dense(l: &Mat, eps: f32, p: u32) -> Vec<HostTensor> {
+    let lam_max = power_iteration(l, 10).max(1e-30);
+    vec![mat_tensor(&schur_newton_invroot(&l.add_scaled_eye(lam_max * eps), p, 15))]
+}
+
+/// precond32_{m}x{n} / caspr32_{m}x{n}: grafted L̂GR̂ (or the CASPR variant).
+pub fn precond_dense(g: &Mat, lhat: &Mat, rhat: &Mat, caspr: bool) -> Vec<HostTensor> {
+    let ghat = if caspr {
+        let j = lhat.matmul(g).add(&g.matmul(rhat));
+        lhat.matmul(&j).add(&j.matmul(rhat))
+    } else {
+        lhat.matmul(g).matmul(rhat)
+    };
+    vec![mat_tensor(&graft(g, ghat))]
+}
+
+/// precond4_{m}x{n} / caspr4_{m}x{n}: 4-bit states on both sides.
+#[allow(clippy::too_many_arguments)]
+pub fn precond_4bit(
+    g: &Mat,
+    l_diag: &[f32],
+    l_codes: &HostTensor,
+    l_scales: &HostTensor,
+    r_diag: &[f32],
+    r_codes: &HostTensor,
+    r_scales: &HostTensor,
+    cb: &[f32],
+    caspr: bool,
+) -> Result<Vec<HostTensor>> {
+    let lhat = dequant_invroot(l_diag, l_codes, l_scales, cb)?;
+    let rhat = dequant_invroot(r_diag, r_codes, r_scales, cb)?;
+    Ok(precond_dense(g, &lhat, &rhat, caspr))
+}
+
+// ---- first-order updates --------------------------------------------------
+
+/// sgdm_update_4096: classic (non-decoupled) weight decay, PyTorch semantics.
+pub fn sgdm_update(
+    p: &[f32],
+    buf: &[f32],
+    g: &[f32],
+    lr: f32,
+    momentum: f32,
+    wd: f32,
+) -> Vec<HostTensor> {
+    let n = p.len();
+    let mut p_new = Vec::with_capacity(n);
+    let mut b_new = Vec::with_capacity(n);
+    for i in 0..n {
+        let gi = g[i] + wd * p[i];
+        let bi = momentum * buf[i] + gi;
+        p_new.push(p[i] - lr * bi);
+        b_new.push(bi);
+    }
+    vec![HostTensor::f32(&[n], p_new), HostTensor::f32(&[n], b_new)]
+}
+
+/// adamw_update_4096: decoupled weight decay + bias correction.
+#[allow(clippy::too_many_arguments)]
+pub fn adamw_update(
+    p: &[f32],
+    m: &[f32],
+    v: &[f32],
+    g: &[f32],
+    step: f32,
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+) -> Vec<HostTensor> {
+    let n = p.len();
+    let bc1 = 1.0 - beta1.powf(step);
+    let bc2 = 1.0 - beta2.powf(step);
+    let mut p_new = Vec::with_capacity(n);
+    let mut m_new = Vec::with_capacity(n);
+    let mut v_new = Vec::with_capacity(n);
+    for i in 0..n {
+        let mi = beta1 * m[i] + (1.0 - beta1) * g[i];
+        let vi = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+        let mh = mi / bc1;
+        let vh = vi / bc2;
+        p_new.push(p[i] - lr * (mh / (vh.sqrt() + eps) + wd * p[i]));
+        m_new.push(mi);
+        v_new.push(vi);
+    }
+    vec![
+        HostTensor::f32(&[n], p_new),
+        HostTensor::f32(&[n], m_new),
+        HostTensor::f32(&[n], v_new),
+    ]
+}

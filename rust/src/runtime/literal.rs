@@ -1,9 +1,10 @@
-//! Host-side tensors and conversion to/from XLA literals.
+//! Host-side tensors, the unit crossing every backend boundary.
 //!
-//! The coordinator keeps all state in plain Rust buffers (`HostTensor`) and
-//! marshals them into `xla::Literal`s at the artifact boundary. f32 and i32
+//! The coordinator keeps all state in plain Rust buffers (`HostTensor`). The
+//! host backend consumes them directly; the PJRT backend (feature `pjrt`)
+//! marshals them into `xla::Literal`s at the artifact boundary: f32 and i32
 //! go through `vec1().reshape()`; u8 (quantization codes) has no `NativeType`
-//! impl in the xla crate, so it uses `create_from_shape_and_untyped_data`.
+//! impl in the xla crate, so it uses `create_from_shape` + `copy_raw_from`.
 
 use anyhow::{bail, Result};
 
@@ -24,6 +25,7 @@ impl TensorData {
         }
     }
 
+    #[allow(clippy::len_zero)]
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -101,6 +103,7 @@ impl HostTensor {
     }
 
     /// Convert into an XLA literal.
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
         let lit = match &self.data {
@@ -131,7 +134,8 @@ impl HostTensor {
         Ok(lit)
     }
 
-    /// Convert from an XLA literal (f32 / i32 / u8 / i64→i32 supported).
+    /// Convert from an XLA literal (f32 / i32 / u8 supported).
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();

@@ -1,0 +1,192 @@
+//! Artifact/model manifest shared by every backend: the PJRT registry parses
+//! it from artifacts/manifest.json (emitted by python/compile/aot.py), the
+//! host backend synthesizes the identical structure in memory.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::literal::HostTensor;
+use crate::util::json::Json;
+
+/// One input or output of an artifact, as recorded by aot.py.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn new(name: &str, shape: &[usize], dtype: &str) -> Self {
+        Self { name: name.to_string(), shape: shape.to_vec(), dtype: dtype.to_string() }
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name").and_then(Json::as_str).context("io.name")?.to_string(),
+            shape: j.get("shape").and_then(Json::usize_vec).context("io.shape")?,
+            dtype: j.get("dtype").and_then(Json::as_str).context("io.dtype")?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub kind: String,
+    pub params: Vec<ParamSpec>,
+    pub step: String,
+    pub eval: String,
+    pub batch: usize,
+    pub dims: Vec<usize>,
+    pub classes: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    /// attention heads (transformer models; 0 otherwise)
+    pub heads: usize,
+    pub param_count: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub block_size: usize,
+    pub cb_len: usize,
+    pub buckets: Vec<usize>,
+    pub quant_buckets: Vec<usize>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    pub models: HashMap<String, ModelSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text =
+            std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut artifacts = HashMap::new();
+        for (name, a) in j.get("artifacts").and_then(Json::as_obj).context("artifacts")? {
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("inputs")?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("outputs")?
+                .iter()
+                .map(IoSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a.get("file").and_then(Json::as_str).context("file")?.to_string(),
+                    inputs,
+                    outputs,
+                },
+            );
+        }
+        let mut models = HashMap::new();
+        for (name, m) in j.get("models").and_then(Json::as_obj).context("models")? {
+            let params = m
+                .get("params")
+                .and_then(Json::as_arr)
+                .context("params")?
+                .iter()
+                .map(|p| {
+                    Ok(ParamSpec {
+                        name: p.get("name").and_then(Json::as_str).context("p.name")?.to_string(),
+                        shape: p.get("shape").and_then(Json::usize_vec).context("p.shape")?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let us = |k: &str| m.get(k).and_then(Json::as_usize).unwrap_or(0);
+            models.insert(
+                name.clone(),
+                ModelSpec {
+                    kind: m.get("kind").and_then(Json::as_str).context("kind")?.to_string(),
+                    params,
+                    step: m.get("step").and_then(Json::as_str).context("step")?.to_string(),
+                    eval: m.get("eval").and_then(Json::as_str).context("eval")?.to_string(),
+                    batch: us("batch"),
+                    dims: m.get("dims").and_then(Json::usize_vec).unwrap_or_default(),
+                    classes: us("classes"),
+                    vocab: us("vocab"),
+                    seq: us("seq"),
+                    heads: us("n_heads"),
+                    param_count: us("param_count"),
+                },
+            );
+        }
+        Ok(Self {
+            block_size: j.get("block_size").and_then(Json::as_usize).context("block_size")?,
+            cb_len: j.get("cb_len").and_then(Json::as_usize).context("cb_len")?,
+            buckets: j.get("buckets").and_then(Json::usize_vec).context("buckets")?,
+            quant_buckets: j
+                .get("quant_buckets")
+                .and_then(Json::usize_vec)
+                .context("quant_buckets")?,
+            artifacts,
+            models,
+        })
+    }
+
+    /// Validate `inputs` against an artifact's spec (arity, shape, dtype) —
+    /// shared by every backend so shape bugs surface identically everywhere.
+    pub fn validate_inputs(&self, name: &str, inputs: &[HostTensor]) -> Result<()> {
+        let spec = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        if spec.inputs.len() != inputs.len() {
+            bail!("{name}: expected {} inputs, got {}", spec.inputs.len(), inputs.len());
+        }
+        for (io, t) in spec.inputs.iter().zip(inputs) {
+            if io.shape != t.shape {
+                bail!(
+                    "{name}.{}: shape mismatch, manifest {:?} vs input {:?}",
+                    io.name,
+                    io.shape,
+                    t.shape
+                );
+            }
+            if io.dtype != t.data.dtype_name() {
+                bail!(
+                    "{name}.{}: dtype mismatch, manifest {} vs input {}",
+                    io.name,
+                    io.dtype,
+                    t.data.dtype_name()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Cumulative per-artifact execution statistics (hot-path observability).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}

@@ -1,12 +1,100 @@
-//! PJRT runtime: loads AOT-compiled HLO-text artifacts (emitted by
-//! python/compile/aot.py) and executes them on the CPU PJRT client.
+//! Execution backends behind one seam.
 //!
-//! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
-//! → `XlaComputation::from_proto` → `client.compile` → `execute`. Artifacts
-//! are compiled lazily on first use and cached for the process lifetime.
+//! Every consumer (trainer, second-order orchestration, benches) talks to a
+//! [`Backend`]: named artifacts in, host tensors out. Two implementations:
+//!
+//!  * [`HostBackend`] — pure Rust, always available. Executes the PU / PIRU /
+//!    precondition / model-step artifact semantics natively on the in-tree
+//!    `linalg` + `quant` substrates against a synthesized manifest. This is
+//!    the hermetic default: `cargo test` trains real models with it.
+//!  * `PjrtBackend` (feature `pjrt`) — loads AOT-compiled HLO-text artifacts
+//!    emitted by python/compile/aot.py and executes them on a PJRT client
+//!    (`HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!    `client.compile` → `execute`).
+//!
+//! Both validate inputs against the same [`Manifest`] spec and expose the
+//! same per-artifact [`ExecStats`], so they are drop-in interchangeable.
 
+pub mod host;
 pub mod literal;
+pub mod manifest;
+#[cfg(feature = "pjrt")]
 pub mod registry;
 
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+pub use host::HostBackend;
 pub use literal::{HostTensor, TensorData};
-pub use registry::{ArtifactSpec, IoSpec, Manifest, ModelSpec, Runtime};
+pub use manifest::{ArtifactSpec, ExecStats, IoSpec, Manifest, ModelSpec, ParamSpec};
+#[cfg(feature = "pjrt")]
+pub use registry::PjrtBackend;
+
+/// The execution seam: everything the coordinator needs from a runtime.
+pub trait Backend {
+    /// Human-readable platform tag ("host-cpu", PJRT platform name, ...).
+    fn platform(&self) -> String;
+
+    /// The artifact/model manifest this backend serves.
+    fn manifest(&self) -> &Manifest;
+
+    /// Execute an artifact by name. Inputs must match the manifest order.
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Snapshot of per-artifact execution statistics.
+    fn stats(&self) -> HashMap<String, ExecStats>;
+
+    fn has_artifact(&self, name: &str) -> bool {
+        self.manifest().artifacts.contains_key(name)
+    }
+
+    fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest()
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name}"))
+    }
+
+    /// Total wall-clock seconds spent inside execute calls.
+    fn total_exec_secs(&self) -> f64 {
+        self.stats().values().map(|s| s.total_secs).sum()
+    }
+}
+
+/// Preferred backend for an artifact directory: PJRT when the build has the
+/// feature, compiled artifacts exist, and the client comes up; the hermetic
+/// host backend otherwise. Use `backend_by_name("pjrt", ..)` to surface PJRT
+/// construction errors instead of falling back.
+pub fn default_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    if artifact_dir.join("manifest.json").exists() {
+        match PjrtBackend::new(artifact_dir) {
+            Ok(b) => return Ok(Box::new(b)),
+            Err(e) => eprintln!("auto backend: pjrt unavailable ({e}); using host"),
+        }
+    }
+    let _ = artifact_dir;
+    Ok(Box::new(HostBackend::new()))
+}
+
+/// Backend by config/CLI name: "host", "pjrt", or "auto".
+pub fn backend_by_name(name: &str, artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    match name {
+        "host" => Ok(Box::new(HostBackend::new())),
+        "pjrt" => pjrt_backend(artifact_dir),
+        "auto" | "" => default_backend(artifact_dir),
+        other => anyhow::bail!("unknown backend {other:?} (expected host|pjrt|auto)"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend(artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(PjrtBackend::new(artifact_dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend(_artifact_dir: &Path) -> Result<Box<dyn Backend>> {
+    anyhow::bail!("this build has no `pjrt` feature; rebuild with --features pjrt")
+}

@@ -1,169 +1,32 @@
-//! Artifact registry: parses artifacts/manifest.json, lazily compiles HLO
-//! text into PJRT executables, and dispatches executions by artifact name.
+//! PJRT artifact backend (feature `pjrt`): parses artifacts/manifest.json,
+//! lazily compiles HLO text into PJRT executables, and dispatches executions
+//! by artifact name.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. Artifacts
+//! are compiled lazily on first use and cached for the process lifetime.
 
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Result};
 
 use super::literal::HostTensor;
-use crate::util::json::Json;
+use super::manifest::{ExecStats, Manifest};
+use super::Backend;
 
-/// One input or output of an artifact, as recorded by aot.py.
-#[derive(Debug, Clone)]
-pub struct IoSpec {
-    pub name: String,
-    pub shape: Vec<usize>,
-    pub dtype: String,
-}
-
-impl IoSpec {
-    fn from_json(j: &Json) -> Result<Self> {
-        Ok(Self {
-            name: j.get("name").and_then(Json::as_str).context("io.name")?.to_string(),
-            shape: j.get("shape").and_then(Json::usize_vec).context("io.shape")?,
-            dtype: j.get("dtype").and_then(Json::as_str).context("io.dtype")?.to_string(),
-        })
-    }
-}
-
-#[derive(Debug, Clone)]
-pub struct ArtifactSpec {
-    pub file: String,
-    pub inputs: Vec<IoSpec>,
-    pub outputs: Vec<IoSpec>,
-}
-
-#[derive(Debug, Clone)]
-pub struct ParamSpec {
-    pub name: String,
-    pub shape: Vec<usize>,
-}
-
-#[derive(Debug, Clone)]
-pub struct ModelSpec {
-    pub kind: String,
-    pub params: Vec<ParamSpec>,
-    pub step: String,
-    pub eval: String,
-    pub batch: usize,
-    pub dims: Vec<usize>,
-    pub classes: usize,
-    pub vocab: usize,
-    pub seq: usize,
-    pub param_count: usize,
-}
-
-#[derive(Debug, Clone)]
-pub struct Manifest {
-    pub block_size: usize,
-    pub cb_len: usize,
-    pub buckets: Vec<usize>,
-    pub quant_buckets: Vec<usize>,
-    pub artifacts: HashMap<String, ArtifactSpec>,
-    pub models: HashMap<String, ModelSpec>,
-}
-
-impl Manifest {
-    pub fn load(dir: &Path) -> Result<Self> {
-        let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
-        Self::from_json(&j)
-    }
-
-    pub fn from_json(j: &Json) -> Result<Self> {
-        let mut artifacts = HashMap::new();
-        for (name, a) in j.get("artifacts").and_then(Json::as_obj).context("artifacts")? {
-            let inputs = a
-                .get("inputs")
-                .and_then(Json::as_arr)
-                .context("inputs")?
-                .iter()
-                .map(IoSpec::from_json)
-                .collect::<Result<Vec<_>>>()?;
-            let outputs = a
-                .get("outputs")
-                .and_then(Json::as_arr)
-                .context("outputs")?
-                .iter()
-                .map(IoSpec::from_json)
-                .collect::<Result<Vec<_>>>()?;
-            artifacts.insert(
-                name.clone(),
-                ArtifactSpec {
-                    file: a.get("file").and_then(Json::as_str).context("file")?.to_string(),
-                    inputs,
-                    outputs,
-                },
-            );
-        }
-        let mut models = HashMap::new();
-        for (name, m) in j.get("models").and_then(Json::as_obj).context("models")? {
-            let params = m
-                .get("params")
-                .and_then(Json::as_arr)
-                .context("params")?
-                .iter()
-                .map(|p| {
-                    Ok(ParamSpec {
-                        name: p.get("name").and_then(Json::as_str).context("p.name")?.to_string(),
-                        shape: p.get("shape").and_then(Json::usize_vec).context("p.shape")?,
-                    })
-                })
-                .collect::<Result<Vec<_>>>()?;
-            let us = |k: &str| m.get(k).and_then(Json::as_usize).unwrap_or(0);
-            models.insert(
-                name.clone(),
-                ModelSpec {
-                    kind: m.get("kind").and_then(Json::as_str).context("kind")?.to_string(),
-                    params,
-                    step: m.get("step").and_then(Json::as_str).context("step")?.to_string(),
-                    eval: m.get("eval").and_then(Json::as_str).context("eval")?.to_string(),
-                    batch: us("batch"),
-                    dims: m.get("dims").and_then(Json::usize_vec).unwrap_or_default(),
-                    classes: us("classes"),
-                    vocab: us("vocab"),
-                    seq: us("seq"),
-                    param_count: us("param_count"),
-                },
-            );
-        }
-        Ok(Self {
-            block_size: j.get("block_size").and_then(Json::as_usize).context("block_size")?,
-            cb_len: j.get("cb_len").and_then(Json::as_usize).context("cb_len")?,
-            buckets: j.get("buckets").and_then(Json::usize_vec).context("buckets")?,
-            quant_buckets: j
-                .get("quant_buckets")
-                .and_then(Json::usize_vec)
-                .context("quant_buckets")?,
-            artifacts,
-            models,
-        })
-    }
-}
-
-/// Cumulative per-artifact execution statistics (hot-path observability).
-#[derive(Debug, Default, Clone)]
-pub struct ExecStats {
-    pub calls: u64,
-    pub total_secs: f64,
-    pub compile_secs: f64,
-}
-
-/// The PJRT runtime: one CPU client + lazily compiled executables.
-pub struct Runtime {
+/// The PJRT backend: one CPU client + lazily compiled executables.
+pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
-    pub manifest: Manifest,
+    manifest: Manifest,
     exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
     stats: RefCell<HashMap<String, ExecStats>>,
 }
 
-impl Runtime {
+impl PjrtBackend {
     pub fn new(artifact_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;
@@ -176,95 +39,54 @@ impl Runtime {
         })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn has_artifact(&self, name: &str) -> bool {
-        self.manifest.artifacts.contains_key(name)
-    }
-
-    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
-        self.manifest
-            .artifacts
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))
-    }
-
     fn ensure_compiled(&self, name: &str) -> Result<()> {
         if self.exes.borrow().contains_key(name) {
             return Ok(());
         }
-        let spec = self.spec(name)?;
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
         let path = self.dir.join(&spec.file);
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
         let dt = t0.elapsed().as_secs_f64();
         self.exes.borrow_mut().insert(name.to_string(), exe);
-        self.stats
-            .borrow_mut()
-            .entry(name.to_string())
-            .or_default()
-            .compile_secs += dt;
+        self.stats.borrow_mut().entry(name.to_string()).or_default().compile_secs += dt;
         Ok(())
     }
+}
 
-    /// Validate inputs against the manifest spec (shape + dtype).
-    fn check_inputs(&self, name: &str, inputs: &[HostTensor]) -> Result<()> {
-        let spec = self.spec(name)?;
-        if spec.inputs.len() != inputs.len() {
-            bail!(
-                "{name}: expected {} inputs, got {}",
-                spec.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (io, t) in spec.inputs.iter().zip(inputs) {
-            if io.shape != t.shape {
-                bail!(
-                    "{name}.{}: shape mismatch, manifest {:?} vs input {:?}",
-                    io.name, io.shape, t.shape
-                );
-            }
-            if io.dtype != t.data.dtype_name() {
-                bail!(
-                    "{name}.{}: dtype mismatch, manifest {} vs input {}",
-                    io.name, io.dtype, t.data.dtype_name()
-                );
-            }
-        }
-        Ok(())
+impl Backend for PjrtBackend {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
     }
 
     /// Execute an artifact by name. Inputs must match the manifest order.
-    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
-        self.check_inputs(name, inputs)?;
+    fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.manifest.validate_inputs(name, inputs)?;
         self.ensure_compiled(name)?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
+        let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
         let t0 = Instant::now();
         let exes = self.exes.borrow();
         let exe = exes.get(name).unwrap();
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let result =
+            exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("executing {name}: {e:?}"))?;
         let out_lit = result[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("fetching {name} output: {e:?}"))?;
         // aot.py lowers with return_tuple=True: always a tuple, even 1-ary.
         let parts = out_lit.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
-        let outs: Vec<HostTensor> = parts
-            .iter()
-            .map(HostTensor::from_literal)
-            .collect::<Result<_>>()?;
+        let outs: Vec<HostTensor> =
+            parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
         let dt = t0.elapsed().as_secs_f64();
         let mut stats = self.stats.borrow_mut();
         let ent = stats.entry(name.to_string()).or_default();
@@ -273,13 +95,7 @@ impl Runtime {
         Ok(outs)
     }
 
-    /// Snapshot of per-artifact execution statistics.
-    pub fn stats(&self) -> HashMap<String, ExecStats> {
+    fn stats(&self) -> HashMap<String, ExecStats> {
         self.stats.borrow().clone()
-    }
-
-    /// Total wall-clock seconds spent inside PJRT execute calls.
-    pub fn total_exec_secs(&self) -> f64 {
-        self.stats.borrow().values().map(|s| s.total_secs).sum()
     }
 }

@@ -1,0 +1,109 @@
+//! Linear-algebra substrate coverage for the paper's two load-bearing
+//! claims about the quantized-eigenbasis pipeline:
+//!  * Björck orthogonality rectification (eq. 2) restores ‖VᵀV − I‖_F of a
+//!    4-bit-quantized eigenvector matrix below tolerance (Figure 3);
+//!  * the eig-based inverse 4-th root matches the dense Schur–Newton
+//!    reference on SPD fixtures (Algorithm 4 cross-check).
+
+use shampoo4::linalg::{
+    bjorck, eigh, invroot_eigh, orthogonality_error, orthogonalize_cgs2, random_orthogonal,
+    schur_newton_invroot, Mat,
+};
+use shampoo4::quant::{
+    dequantize_matrix_cols, quantize_matrix_cols, runtime_codebook, Mapping,
+};
+use shampoo4::util::prop;
+use shampoo4::util::rng::Rng;
+
+#[test]
+fn bjorck_rectifies_quantized_eigenbasis() {
+    // calibrated on order-128 fixtures: 4-bit quantization degrades
+    // orthogonality to ~1.7; one step brings it < 0.5, two < 0.05, four ≈ 0
+    let cb = runtime_codebook(Mapping::Linear2, 4);
+    prop::check("björck after 4-bit quantization", 5, |rng| {
+        // column-blocked quantization needs n² divisible by the 64-block
+        let n = 96 + 8 * rng.below(9);
+        let q = random_orthogonal(n, rng);
+        let qv = quantize_matrix_cols(&q.data, n, &cb, 4);
+        let v = Mat::from_vec(n, n, dequantize_matrix_cols(&qv, n, &cb));
+        let e0 = orthogonality_error(&v);
+        let e1 = orthogonality_error(&bjorck(&v, 1));
+        let e2 = orthogonality_error(&bjorck(&v, 2));
+        let e4 = orthogonality_error(&bjorck(&v, 4));
+        if e0 < 0.5 {
+            return Err(format!("quantization too benign: e0={e0}"));
+        }
+        if !(e1 < 0.5 * e0 && e2 < 0.05 && e4 < 1e-3) {
+            return Err(format!("e0={e0} e1={e1} e2={e2} e4={e4}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cgs2_orthogonalizes_preserving_leading_span() {
+    prop::check("CGS2", 10, |rng| {
+        let n = 16 + rng.below(48);
+        let a = Mat::randn(n, n, rng);
+        let q = orthogonalize_cgs2(&a);
+        let e = orthogonality_error(&q);
+        if e > 1e-3 {
+            return Err(format!("orth err {e}"));
+        }
+        // first column is the normalized first column of a
+        let norm: f64 = (0..n).map(|i| (a[(i, 0)] as f64).powi(2)).sum::<f64>().sqrt();
+        for i in 0..n {
+            let want = (a[(i, 0)] as f64 / norm) as f32;
+            if (q[(i, 0)] - want).abs() > 1e-4 {
+                return Err(format!("col0[{i}]: {} vs {want}", q[(i, 0)]));
+            }
+        }
+        Ok(())
+    });
+}
+
+fn spd_fixture(n: usize, rng: &mut Rng) -> (Mat, Mat, Vec<f32>) {
+    let q = random_orthogonal(n, rng);
+    // log-spaced spectrum over ~3 decades, the regime Shampoo sees
+    let vals: Vec<f32> =
+        (0..n).map(|i| (10.0f32).powf(-1.5 + 3.0 * i as f32 / (n - 1) as f32)).collect();
+    (Mat::sandwich(&q, &vals), q, vals)
+}
+
+#[test]
+fn eig_invroot_matches_dense_reference_on_spd_fixtures() {
+    prop::check("eigh A^{-1/4} vs Schur–Newton", 4, |rng| {
+        let n = 24 + rng.below(40);
+        let (a, q, vals) = spd_fixture(n, rng);
+        let via_eig = invroot_eigh(&a, 4.0, 1e-12);
+        let via_newton = schur_newton_invroot(&a, 4, 40);
+        let rel = via_eig.sub(&via_newton).frobenius() / via_eig.frobenius();
+        if rel > 2e-2 {
+            return Err(format!("eigh vs newton rel err {rel}"));
+        }
+        // and both match the analytic construction Q·Λ^{-1/4}·Qᵀ
+        let exact_vals: Vec<f32> = vals.iter().map(|&l| l.powf(-0.25)).collect();
+        let exact = Mat::sandwich(&q, &exact_vals);
+        let rel2 = via_eig.sub(&exact).frobenius() / exact.frobenius();
+        if rel2 > 1e-2 {
+            return Err(format!("eigh vs analytic rel err {rel2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn eigh_recovers_planted_spectrum() {
+    prop::check("eigh spectrum", 5, |rng| {
+        let n = 16 + rng.below(48);
+        let (a, _, mut vals) = spd_fixture(n, rng);
+        let e = eigh(&a);
+        vals.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        for (got, want) in e.vals.iter().zip(&vals) {
+            if (got - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                return Err(format!("{got} vs {want}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,131 @@
+//! Quantization-substrate coverage (property + golden tests):
+//!  * quantize→dequantize roundtrip error bounded by ½ · max codebook gap ·
+//!    block absmax, for every mapping and bits ∈ {2, 3, 4, 8};
+//!  * pack_bits/unpack_bits identity at every supported bitwidth;
+//!  * codebooks match the paper's Appendix C tables verbatim
+//!    (mirroring python/tests/test_codebooks.py).
+
+use shampoo4::quant::{
+    codebook, dequantize, nearest, pack_bits, packed_len, quantize, runtime_codebook, unpack_bits,
+    Mapping,
+};
+use shampoo4::util::prop;
+
+#[test]
+fn roundtrip_error_bounded_all_mappings_and_bits() {
+    for mapping in [Mapping::Dt, Mapping::Linear2, Mapping::Linear] {
+        for bits in [2u32, 3, 4, 8] {
+            let cb = codebook(mapping, bits);
+            let max_gap = cb.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
+            prop::check(&format!("roundtrip {mapping:?}/{bits}"), 10, |rng| {
+                let nblocks = 1 + rng.below(6);
+                let block = 64;
+                let x: Vec<f32> =
+                    (0..nblocks * block).map(|_| rng.normal_f32() * 0.7).collect();
+                let q = quantize(&x, &cb, bits, block);
+                if q.packed.len() != packed_len(x.len(), bits) {
+                    return Err(format!("packed {} bytes", q.packed.len()));
+                }
+                let d = dequantize(&q, &cb);
+                for (b, chunk) in x.chunks(block).enumerate() {
+                    let absmax = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                    let scale = if absmax > 0.0 { absmax } else { 1.0 };
+                    let bound = 0.5 * max_gap * scale + 1e-6;
+                    for (i, (&xv, &dv)) in chunk.iter().zip(&d[b * block..]).enumerate() {
+                        if (xv - dv).abs() > bound {
+                            return Err(format!(
+                                "{mapping:?}/{bits} block {b} elem {i}: {xv} vs {dv} (bound {bound})"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            });
+        }
+    }
+}
+
+#[test]
+fn pack_unpack_identity_all_bitwidths() {
+    for bits in [2u32, 3, 4, 8] {
+        prop::check(&format!("pack/unpack {bits}-bit"), 20, |rng| {
+            let n = 1 + rng.below(500);
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(1 << bits) as u8).collect();
+            let packed = pack_bits(&codes, bits);
+            if packed.len() != packed_len(n, bits) {
+                return Err(format!("{bits}-bit: {} bytes for {n} codes", packed.len()));
+            }
+            let back = unpack_bits(&packed, bits, n);
+            if back != codes {
+                return Err(format!("{bits}-bit roundtrip mismatch at n={n}"));
+            }
+            Ok(())
+        });
+    }
+}
+
+// Appendix C tables, verbatim (same fixtures as python/tests/test_codebooks.py).
+const DT4_PAPER: [f32; 16] = [
+    -0.8875, -0.6625, -0.4375, -0.2125, -0.0775, -0.0325, -0.0055, 0.0, 0.0055, 0.0325, 0.0775,
+    0.2125, 0.4375, 0.6625, 0.8875, 1.0,
+];
+const DT3_PAPER: [f32; 8] = [-0.775, -0.325, -0.055, 0.0, 0.055, 0.325, 0.775, 1.0];
+const L24_PAPER: [f32; 16] = [
+    -1.0, -0.7511, -0.5378, -0.36, -0.2178, -0.1111, -0.04, 0.0, 0.0044, 0.04, 0.1111, 0.2178,
+    0.36, 0.5378, 0.7511, 1.0,
+];
+const L23_PAPER: [f32; 8] = [-1.0, -0.5102, -0.1837, 0.0, 0.0204, 0.1837, 0.5102, 1.0];
+
+fn assert_table(got: &[f32], want: &[f32], tol: f32, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!((a - b).abs() < tol, "{label}[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn golden_codebooks_match_appendix_c() {
+    assert_table(&codebook(Mapping::Dt, 4), &DT4_PAPER, 1e-6, "DT-4");
+    assert_table(&codebook(Mapping::Dt, 3), &DT3_PAPER, 1e-6, "DT-3");
+    assert_table(&codebook(Mapping::Linear2, 4), &L24_PAPER, 5e-5, "Linear2-4");
+    assert_table(&codebook(Mapping::Linear2, 3), &L23_PAPER, 5e-5, "Linear2-3");
+}
+
+#[test]
+fn codebook_structural_properties() {
+    for mapping in [Mapping::Dt, Mapping::Linear2, Mapping::Linear] {
+        for bits in [3u32, 4, 8] {
+            let cb = codebook(mapping, bits);
+            assert_eq!(cb.len(), 1 << bits, "{mapping:?}/{bits}: size");
+            assert!(
+                cb.windows(2).all(|w| w[0] < w[1]),
+                "{mapping:?}/{bits}: must be strictly sorted"
+            );
+            assert!(cb[0] >= -1.0 && *cb.last().unwrap() <= 1.0, "{mapping:?}/{bits}: range");
+            assert_eq!(*cb.last().unwrap(), 1.0, "{mapping:?}/{bits}: max is 1");
+            if mapping != Mapping::Linear {
+                assert!(cb.contains(&0.0), "{mapping:?}/{bits}: zero representable");
+            }
+        }
+    }
+}
+
+#[test]
+fn padded_runtime_codebooks_emit_low_codes() {
+    // 3-bit books are padded to 16 entries; argmin-first-occurrence keeps
+    // every emitted code < 8 so true-bitwidth packing stays valid.
+    for mapping in [Mapping::Dt, Mapping::Linear2] {
+        let cb = runtime_codebook(mapping, 3);
+        assert_eq!(cb.len(), 16);
+        prop::check(&format!("padded {mapping:?}"), 10, |rng| {
+            for _ in 0..100 {
+                let x = rng.normal_f32();
+                let c = nearest(&cb, x);
+                if c >= 8 {
+                    return Err(format!("x={x} -> code {c}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,183 @@
+//! Hermetic stub of the `xla` crate (LaurentMazare/xla-rs) covering exactly
+//! the API surface `shampoo4`'s PJRT registry uses.
+//!
+//! The real crate links the native XLA/PJRT C++ library, which cannot be
+//! built offline. This stub keeps `--features pjrt` compiling everywhere:
+//! every runtime entry point (`PjRtClient::cpu`,
+//! `HloModuleProto::from_text_file`) returns [`Error::Unavailable`], so the
+//! registry fails loudly at construction instead of crashing mid-run. Swap
+//! the `xla` dependency in `rust/Cargo.toml` for the real crate to execute
+//! AOT artifacts.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Error type standing in for xla-rs's. Implements `std::error::Error` so it
+/// threads through `anyhow` exactly like the real one.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The stub was invoked at runtime: no native XLA library is linked.
+    Unavailable(&'static str),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: built against the in-tree xla stub; link the real \
+                 xla-rs crate to use the PJRT backend"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Marker for element types that cross the literal boundary.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    F32,
+    F64,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(_v: T) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::Unavailable("Literal::reshape"))
+    }
+
+    pub fn create_from_shape(_ty: PrimitiveType, _dims: &[usize]) -> Literal {
+        Literal { _private: () }
+    }
+
+    pub fn copy_raw_from(&mut self, _src: &[u8]) -> Result<()> {
+        Err(Error::Unavailable("Literal::copy_raw_from"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Err(Error::Unavailable("Literal::array_shape"))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
