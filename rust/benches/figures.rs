@@ -56,7 +56,9 @@ fn main() {
             writeln!(f, "{mname},quan,{i},{}", (v.abs().max(1e-12) as f64).log10()).unwrap();
         }
         let neg = quan.vals.iter().filter(|&&v| v < 0.0).count();
-        println!("figure2: {mname}: {neg}/{nn} eigenvalues pushed negative by 4-bit quantization of A");
+        println!(
+            "figure2: {mname}: {neg}/{nn} eigenvalues pushed negative by 4-bit quantization of A"
+        );
     }
 
     // ---- Figure 3: rectification error vs s and t2 ------------------------

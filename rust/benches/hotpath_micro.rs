@@ -11,6 +11,7 @@
 #![allow(clippy::field_reassign_with_default)]
 
 use shampoo4::config::RunConfig;
+use shampoo4::coordinator::scheduler::Scheduler;
 use shampoo4::coordinator::Trainer;
 use shampoo4::linalg::Mat;
 use shampoo4::quant::{codebook, dequantize, pack_bits, quantize, unpack_bits, Mapping};
@@ -109,8 +110,34 @@ fn main() {
         std::hint::black_box(trainer.model.step(rt, &batch).unwrap());
     }).report());
 
-    println!("\nper-step budget at T1=100/T2=500 (mlp_base, 6 blocks):");
-    println!("  every step:  model_step + 6×precond4 + flat adamw");
-    println!("  every T1:    + 6×(gram + 2×pu)");
-    println!("  every T2:    + 6×(2×piru)");
+    // ---- parallel block engine ---------------------------------------------
+    // Arc-backed tensor clone: the per-step precondition re-submits the
+    // cached state tensors by clone — must be a refcount bump (ns), not a
+    // 64 KiB payload copy (µs).
+    let big = HostTensor::f32(&[128, 128], rng.normal_vec(128 * 128));
+    assert!(big.shares_buffer(&big.clone()), "HostTensor::clone must alias its buffer");
+    println!("{}", runner.run("engine/HostTensor clone 128x128 (Arc)", || {
+        std::hint::black_box(big.clone());
+    }).report());
+
+    // scheduler fan-out over block-sized matmul tasks: serial vs 4 workers
+    let base: Vec<Mat> = (0..8).map(|_| Mat::randn(128, 128, &mut rng)).collect();
+    for workers in [1usize, 4] {
+        let sched = Scheduler::new(workers);
+        let mut items = base.clone();
+        let label = format!("engine/8x matmul128 tasks, {workers} worker(s)");
+        println!("{}", slow.run(&label, || {
+            let outs = sched
+                .par_map_mut(&mut items, |_, m| Ok(std::hint::black_box(m.matmul(m))))
+                .unwrap();
+            std::hint::black_box(outs);
+        }).report());
+    }
+
+    println!("\nper-step budget at T1=100/T2=500 (mlp_base, 8 blocks):");
+    println!("  every step:  model_step + 8×precond4 + flat adamw");
+    println!("  every T1:    + 8×(gram + 2×pu)");
+    println!("  every T2:    + 8×(2×piru)  — or 1 cohort/step when staggered");
+    println!("  per-block work fans across shampoo.parallelism workers;");
+    println!("  see table2_training for end-to-end rows + BENCH_parallel.json");
 }

@@ -43,9 +43,16 @@ fn main() -> Result<()> {
         cfg.eval_batches = 4;
         cfg.log_every = (cfg.steps / 20).max(1);
         let mut t = Trainer::new(rt, cfg.clone())?;
-        let res = t.train(rt, Some(std::path::Path::new(&format!("bench_out/{}.csv", cfg.name))))?;
+        let csv = format!("bench_out/{}.csv", cfg.name);
+        let res = t.train(rt, Some(std::path::Path::new(&csv)))?;
         let e = res.final_eval.as_ref().unwrap();
-        println!("{:<34} {:>8.4} {:>9.1} {:>10.2}", label, e.loss, res.wall_secs, res.memory.optimizer_mb());
+        println!(
+            "{:<34} {:>8.4} {:>9.1} {:>10.2}",
+            label,
+            e.loss,
+            res.wall_secs,
+            res.memory.optimizer_mb()
+        );
     }
     println!("# curves (Figure 10): bench_out/t12_*.csv");
     Ok(())

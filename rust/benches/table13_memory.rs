@@ -7,7 +7,11 @@ use shampoo4::coordinator::memory::{plan, OptimizerPlan, PlannedModel};
 fn main() {
     let budget = 81920usize * 1024 * 1024;
     let m = PlannedModel::llama2_7b();
-    println!("# Table 13: {} ({:.2}B params), 80GiB A800, ctx 256", m.name, m.param_count() as f64 / 1e9);
+    println!(
+        "# Table 13: {} ({:.2}B params), 80GiB A800, ctx 256",
+        m.name,
+        m.param_count() as f64 / 1e9
+    );
     println!("{:<36} {:>7} {:>12} {:>6}", "Optimizer", "Batch", "TMC(MB)", "fits");
     let arms = [
         ("8-bit AdamW", plan(&m, OptimizerPlan::Adam { bits: 8 })),

@@ -22,8 +22,15 @@ fn main() {
     let a2 = spectrum::synthetic_two_level(n, 1000.0, 1e-3, n / 20, &mut rng);
     println!("# Table 1 @ order {n} (paper: 1200); setup {:.1}s", sw.secs());
     println!(
-        "{:<4} {:<9} {:>4} {:>3} {:>4} {:>8} {:>8}  (paper 4-bit A1: A/U/U+OR = 0.62/0.05-0.07/0.03-0.05)",
-        "mat", "mapping", "bit", "QM", "OR", "NRE", "AE"
+        "{:<4} {:<9} {:>4} {:>3} {:>4} {:>8} {:>8}  {}",
+        "mat",
+        "mapping",
+        "bit",
+        "QM",
+        "OR",
+        "NRE",
+        "AE",
+        "(paper 4-bit A1: A/U/U+OR = 0.62/0.05-0.07/0.03-0.05)"
     );
     for (mname, a) in [("A1", &a1), ("A2", &a2)] {
         for mapping in [Mapping::Dt, Mapping::Linear2] {

@@ -7,13 +7,19 @@
 //!
 //! SHAMPOO4_BENCH_STEPS overrides the per-arm second-order step count
 //! (default 200).
+//!
+//! A second section exercises the parallel block engine: the 4-bit Shampoo
+//! arm re-run serial vs `parallelism = 4`, and batch vs staggered PIRU, with
+//! wall-clock + worst-step rows printed and the machine-readable summary
+//! written to bench_out/BENCH_parallel.json.
 
 #![allow(clippy::field_reassign_with_default)]
 
 use anyhow::Result;
 use shampoo4::config::{FirstOrderKind, RunConfig, Schedule, SecondOrderKind};
-use shampoo4::coordinator::Trainer;
-use shampoo4::runtime::default_backend;
+use shampoo4::coordinator::{TrainResult, Trainer};
+use shampoo4::runtime::{default_backend, Backend};
+use shampoo4::util::json::Json;
 
 fn steps_default() -> usize {
     std::env::var("SHAMPOO4_BENCH_STEPS")
@@ -35,6 +41,7 @@ fn main() -> Result<()> {
     let rt = default_backend(std::path::Path::new("artifacts"))?;
     let rt = rt.as_ref();
     let steps = steps_default();
+    #[rustfmt::skip]
     let arms = [
         Arm { label: "SGDM", model: "mlp_base", f: FirstOrderKind::Sgdm, lr: 0.05, bits: 0, steps_mult: 1.5 },
         Arm { label: "SGDM + 32-bit Shampoo", model: "mlp_base", f: FirstOrderKind::Sgdm, lr: 0.05, bits: 32, steps_mult: 1.0 },
@@ -57,7 +64,8 @@ fn main() -> Result<()> {
         cfg.first.kind = arm.f;
         cfg.first.lr = arm.lr;
         cfg.first.weight_decay = if arm.f == FirstOrderKind::Sgdm { 5e-4 } else { 0.05 };
-        cfg.second.kind = if arm.bits == 0 { SecondOrderKind::None } else { SecondOrderKind::Shampoo };
+        cfg.second.kind =
+            if arm.bits == 0 { SecondOrderKind::None } else { SecondOrderKind::Shampoo };
         cfg.second.quant.bits = if arm.bits == 0 { 4 } else { arm.bits };
         cfg.second.update_precond_every = 10;
         cfg.second.update_invroot_every = 30;
@@ -83,5 +91,95 @@ fn main() -> Result<()> {
         );
     }
     println!("# curves (Figures 1/4): bench_out/table2_*.csv");
+
+    parallel_engine_rows(rt, steps)?;
+    Ok(())
+}
+
+/// Serial-vs-parallel and stagger-vs-batch wall-time rows for the 4-bit
+/// Shampoo MLP arm, plus bench_out/BENCH_parallel.json.
+fn parallel_engine_rows(rt: &dyn Backend, steps: usize) -> Result<()> {
+    let run_engine = |parallelism: usize, stagger: bool| -> Result<TrainResult> {
+        let mut cfg = RunConfig::default();
+        cfg.name = format!(
+            "table2_engine_p{parallelism}{}",
+            if stagger { "_stagger" } else { "" }
+        );
+        cfg.model = "mlp_base".into();
+        cfg.steps = steps;
+        cfg.first.kind = FirstOrderKind::Sgdm;
+        cfg.first.lr = 0.05;
+        cfg.first.weight_decay = 5e-4;
+        cfg.second.kind = SecondOrderKind::Shampoo;
+        cfg.second.update_precond_every = 10;
+        cfg.second.update_invroot_every = 30;
+        cfg.second.parallelism = parallelism;
+        cfg.second.stagger_invroots = stagger;
+        cfg.schedule = Schedule::Cosine { warmup: steps / 20 };
+        cfg.eval_every = 0;
+        cfg.eval_batches = 8;
+        cfg.log_every = (steps / 20).max(1);
+        Trainer::new(rt, cfg)?.train(rt, None)
+    };
+
+    println!("\n# Parallel block engine @ {steps} steps (mlp_base, 4-bit Shampoo, T2=30)");
+    println!(
+        "{:<28} {:>8} {:>12} {:>9} {:>9} {:>9}",
+        "Engine", "WCT(s)", "max step(ms)", "pu(s)", "piru(s)", "precond(s)"
+    );
+    let mut results: Vec<(&str, TrainResult)> = Vec::new();
+    for (label, parallelism, stagger) in [
+        ("serial, batch PIRU", 1, false),
+        ("parallel=4, batch PIRU", 4, false),
+        ("parallel=4, staggered PIRU", 4, true),
+    ] {
+        let res = run_engine(parallelism, stagger)?;
+        println!(
+            "{:<28} {:>8.2} {:>12.2} {:>9.3} {:>9.3} {:>9.3}",
+            label,
+            res.wall_secs,
+            res.timings.max_step_secs * 1e3,
+            res.timings.pu_secs,
+            res.timings.piru_secs,
+            res.timings.precond_secs
+        );
+        results.push((label, res));
+    }
+
+    let arm = |res: &TrainResult| {
+        Json::obj(vec![
+            ("wall_secs", Json::Num(res.wall_secs)),
+            ("max_step_secs", Json::Num(res.timings.max_step_secs)),
+            ("pu_secs", Json::Num(res.timings.pu_secs)),
+            ("piru_secs", Json::Num(res.timings.piru_secs)),
+            ("precond_secs", Json::Num(res.timings.precond_secs)),
+            (
+                "final_eval_loss",
+                Json::Num(res.final_loss().map(|l| l as f64).unwrap_or(f64::NAN)),
+            ),
+        ])
+    };
+    let (serial, par4, stag4) = (&results[0].1, &results[1].1, &results[2].1);
+    let j = Json::obj(vec![
+        ("bench", Json::Str("table2_training/parallel_engine".into())),
+        ("model", Json::Str("mlp_base".into())),
+        ("steps", Json::Num(steps as f64)),
+        ("serial_batch", arm(serial)),
+        ("parallel4_batch", arm(par4)),
+        ("parallel4_stagger", arm(stag4)),
+        ("speedup_parallel4", Json::Num(serial.wall_secs / par4.wall_secs.max(1e-12))),
+        (
+            "max_step_stagger_over_batch",
+            Json::Num(stag4.timings.max_step_secs / par4.timings.max_step_secs.max(1e-12)),
+        ),
+    ]);
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/BENCH_parallel.json", j.to_string())?;
+    println!(
+        "# speedup(parallel=4) = {:.2}x, max-step stagger/batch = {:.2} -> {}",
+        serial.wall_secs / par4.wall_secs.max(1e-12),
+        stag4.timings.max_step_secs / par4.timings.max_step_secs.max(1e-12),
+        "bench_out/BENCH_parallel.json"
+    );
     Ok(())
 }

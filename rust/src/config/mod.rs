@@ -131,6 +131,24 @@ pub struct SecondOrderConfig {
     pub max_order: usize,
     /// Start preconditioning after this step (warmup on pure F).
     pub start_step: usize,
+    /// Worker threads for the parallel block engine (per-block PU / PIRU /
+    /// precondition fan-out). 1 = serial; results are bit-identical at any
+    /// value. Defaults to `SHAMPOO4_PARALLELISM` when set, else 1.
+    pub parallelism: usize,
+    /// Spread per-block inverse-root (PIRU) work round-robin across the T2
+    /// interval instead of batching every block on the T2-boundary step —
+    /// same work per interval, no wall-clock spike.
+    pub stagger_invroots: bool,
+}
+
+/// Default worker count: the `SHAMPOO4_PARALLELISM` env var when set (CI uses
+/// it to force the threaded path through every default-config run), else 1.
+pub fn default_parallelism() -> usize {
+    std::env::var("SHAMPOO4_PARALLELISM")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&p| p >= 1)
+        .unwrap_or(1)
 }
 
 impl Default for SecondOrderConfig {
@@ -144,6 +162,8 @@ impl Default for SecondOrderConfig {
             eps: 1e-4,
             max_order: 128,
             start_step: 1,
+            parallelism: default_parallelism(),
+            stagger_invroots: false,
         }
     }
 }
@@ -263,6 +283,8 @@ impl RunConfig {
         s.eps = doc.f64_or("shampoo.eps", s.eps as f64) as f32;
         s.max_order = doc.usize_or("shampoo.max_order", s.max_order);
         s.start_step = doc.usize_or("shampoo.start_step", s.start_step);
+        s.parallelism = doc.usize_or("shampoo.parallelism", s.parallelism).max(1);
+        s.stagger_invroots = doc.bool_or("shampoo.stagger_invroots", s.stagger_invroots);
 
         let q = &mut s.quant;
         q.bits = doc.usize_or("quant.bits", q.bits as usize) as u32;
@@ -356,6 +378,20 @@ warmup = 20
         assert_eq!(cfg.second.quant.bits, 4);
         assert_eq!(cfg.first.kind, FirstOrderKind::AdamW);
         assert!(matches!(cfg.schedule, Schedule::Cosine { warmup: 20 }));
+    }
+
+    #[test]
+    fn parallel_engine_keys_parse() {
+        let cfg = RunConfig::from_toml_str(
+            "[shampoo]\nparallelism = 4\nstagger_invroots = true",
+        )
+        .unwrap();
+        assert_eq!(cfg.second.parallelism, 4);
+        assert!(cfg.second.stagger_invroots);
+        // parallelism is clamped to >= 1
+        let cfg = RunConfig::from_toml_str("[shampoo]\nparallelism = 0").unwrap();
+        assert_eq!(cfg.second.parallelism, 1);
+        assert!(!cfg.second.stagger_invroots);
     }
 
     #[test]

@@ -2,7 +2,10 @@
 //!
 //! * `partition`    — Shampoo blocking of parameters into bucket orders
 //! * `state`        — quantized / dense / naive preconditioner block states
-//! * `second_order` — Algorithm 3 orchestration over the AOT artifacts
+//! * `second_order` — Algorithm 3 orchestration over the AOT artifacts,
+//!                    fanned across the parallel block engine
+//! * `scheduler`    — the parallel block engine: scoped-thread worker pool,
+//!                    staggered inverse-root cohorts, per-stage timings
 //! * `model`        — parameter buffers + model step/eval marshaling
 //! * `trainer`      — the training loop, eval, metrics, checkpoints
 //! * `shadow`       — 32-bit shadow for dynamic quant-error (Figs 7/8)
@@ -12,11 +15,13 @@
 pub mod memory;
 pub mod model;
 pub mod partition;
+pub mod scheduler;
 pub mod second_order;
 pub mod shadow;
 pub mod state;
 pub mod trainer;
 
 pub use model::ModelHandle;
+pub use scheduler::{Scheduler, StepTimings};
 pub use second_order::SecondOrder;
 pub use trainer::{EvalPoint, MemoryReport, TrainResult, Trainer};

@@ -124,11 +124,12 @@ impl ModelHandle {
     pub fn make_batch(&self, src: &DataSource, test: bool, index: u64) -> Batch {
         match src {
             DataSource::Vision(ds) => {
-                let (x, y) = ds.batch(
-                    self.spec.batch,
-                    if test { crate::data::vision::Split::Test } else { crate::data::vision::Split::Train },
-                    index,
-                );
+                let split = if test {
+                    crate::data::vision::Split::Test
+                } else {
+                    crate::data::vision::Split::Train
+                };
+                let (x, y) = ds.batch(self.spec.batch, split, index);
                 Batch::Vision { x, y, batch: self.spec.batch, dim: self.spec.dims[0] }
             }
             DataSource::Corpus(c) => {

@@ -1,0 +1,265 @@
+//! The parallel block engine's scheduler: a std-only scoped-thread worker
+//! pool that fans independent per-block tasks (PU / PIRU / precondition —
+//! Algorithm 3's blocks are embarrassingly parallel) across
+//! `second.parallelism` workers, plus the staggered inverse-root cohort plan
+//! and the per-stage wall-time accounting (`StepTimings`).
+//!
+//! Determinism contract: tasks are pure functions of `(index, item)`, workers
+//! pull from a shared queue in arbitrary order, and results are merged into
+//! an index-ordered `Vec` — so `parallelism = N` is bit-identical to
+//! `parallelism = 1`. Errors are reported deterministically too: the
+//! lowest-index failure wins.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{bail, Result};
+
+/// Worker pool for per-block fan-out. `parallelism = 1` degenerates to a
+/// plain serial loop with zero thread overhead.
+#[derive(Debug, Clone)]
+pub struct Scheduler {
+    workers: usize,
+}
+
+impl Scheduler {
+    pub fn new(parallelism: usize) -> Self {
+        Self { workers: parallelism.max(1) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(index, &mut item)` over every item, fanning across the pool,
+    /// and merge the results in index order. `f` must be a pure function of
+    /// its arguments (plus shared read-only captures) for the determinism
+    /// contract to hold.
+    ///
+    /// Error path: the lowest-index failure is returned either way, and no
+    /// *new* tasks start after a failure is observed — but tasks already in
+    /// flight on other workers run to completion, so items past the failing
+    /// index may or may not have been visited (the serial path stops at the
+    /// failure). Callers treat any error as fatal to the run.
+    pub fn par_map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Result<Vec<R>>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> Result<R> + Sync,
+    {
+        let n = items.len();
+        if self.workers <= 1 || n <= 1 {
+            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let queue = Mutex::new(items.iter_mut().enumerate());
+        let slots: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let abort = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            for _ in 0..self.workers.min(n) {
+                s.spawn(|| {
+                    loop {
+                        if abort.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // take the queue lock only to pop, never while running f
+                        let next = queue.lock().expect("task queue lock").next();
+                        let Some((i, item)) = next else { break };
+                        let r = f(i, item);
+                        if r.is_err() {
+                            abort.store(true, Ordering::Relaxed);
+                        }
+                        *slots[i].lock().expect("result slot lock") = Some(r);
+                    }
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot.into_inner().expect("result slot lock") {
+                Some(Ok(r)) => out.push(r),
+                Some(Err(e)) => return Err(e),
+                None => {
+                    if abort.load(Ordering::Relaxed) {
+                        bail!("scheduler: task {i} skipped after an earlier task failed")
+                    }
+                    bail!("scheduler: task {i} never completed")
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Interval offset (in `[0, t2)`) at which block `block_idx` of `num_blocks`
+/// runs its inverse-root update when staggering is enabled: blocks are spread
+/// round-robin across the T2 interval so every block still refreshes once per
+/// interval, but no single step pays the whole inverse-root bill.
+pub fn stagger_phase(block_idx: usize, num_blocks: usize, t2: usize) -> usize {
+    if num_blocks == 0 || t2 == 0 {
+        return 0;
+    }
+    (block_idx % num_blocks) * t2 / num_blocks
+}
+
+/// Cumulative per-stage wall time over a training run, plus the worst single
+/// step — the number the staggered PIRU schedule exists to flatten.
+#[derive(Debug, Clone, Default)]
+pub struct StepTimings {
+    /// steps accounted (resume-aware: only steps this `train` call ran)
+    pub steps: u64,
+    /// model fwd/bwd artifact time
+    pub model_step_secs: f64,
+    /// preconditioner updates (gram + PU), every T1
+    pub pu_secs: f64,
+    /// inverse-root updates (PIRU), every T2 or staggered
+    pub piru_secs: f64,
+    /// gradient preconditioning, every step
+    pub precond_secs: f64,
+    /// native first-order update, every step
+    pub first_order_secs: f64,
+    /// wall time of the slowest step (excludes eval/metrics I/O)
+    pub max_step_secs: f64,
+    /// which step was slowest
+    pub max_step_index: usize,
+}
+
+impl StepTimings {
+    /// Record one completed optimizer step's wall time.
+    pub fn note_step(&mut self, step: usize, secs: f64) {
+        self.steps += 1;
+        if secs > self.max_step_secs {
+            self.max_step_secs = secs;
+            self.max_step_index = step;
+        }
+    }
+
+    /// Total second-order time (PU + PIRU + precondition).
+    pub fn second_order_secs(&self) -> f64 {
+        self.pu_secs + self.piru_secs + self.precond_secs
+    }
+
+    /// One-line human summary for the CLI and benches.
+    pub fn summary(&self) -> String {
+        format!(
+            "model {:.2}s | pu {:.2}s | piru {:.2}s | precond {:.2}s | F {:.2}s | \
+             max step {:.1} ms (step {})",
+            self.model_step_secs,
+            self.pu_secs,
+            self.piru_secs,
+            self.precond_secs,
+            self.first_order_secs,
+            self.max_step_secs * 1e3,
+            self.max_step_index
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn serial_and_parallel_merge_identically() {
+        let base: Vec<usize> = (0..97).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        let serial = Scheduler::new(1).par_map_mut(&mut a, |i, x| Ok(*x * 3 + i)).unwrap();
+        let parallel = Scheduler::new(8).par_map_mut(&mut b, |i, x| Ok(*x * 3 + i)).unwrap();
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[10], 40);
+    }
+
+    #[test]
+    fn results_are_index_ordered_despite_uneven_tasks() {
+        // later (cheap) tasks finish before earlier (slow) ones; the merge
+        // must still come back in index order
+        let mut items: Vec<usize> = (0..16).collect();
+        let out = Scheduler::new(4)
+            .par_map_mut(&mut items, |i, x| {
+                if i < 4 {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                Ok(*x)
+            })
+            .unwrap();
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mutations_land_in_place() {
+        let mut items = vec![1i32; 12];
+        Scheduler::new(3)
+            .par_map_mut(&mut items, |i, x| {
+                *x += i as i32;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(items[0], 1);
+        assert_eq!(items[11], 12);
+    }
+
+    #[test]
+    fn lowest_index_error_wins() {
+        for workers in [1, 4] {
+            let mut items: Vec<usize> = (0..32).collect();
+            let err = Scheduler::new(workers)
+                .par_map_mut(&mut items, |i, _| {
+                    if i == 7 || i == 21 {
+                        bail!("task {i} failed")
+                    }
+                    Ok(i)
+                })
+                .unwrap_err();
+            assert_eq!(err.to_string(), "task 7 failed");
+        }
+    }
+
+    #[test]
+    fn pool_actually_fans_out() {
+        let peak = AtomicUsize::new(0);
+        let live = AtomicUsize::new(0);
+        let mut items = vec![0u8; 8];
+        Scheduler::new(4)
+            .par_map_mut(&mut items, |_, _| {
+                let now = live.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                live.fetch_sub(1, Ordering::SeqCst);
+                Ok(())
+            })
+            .unwrap();
+        assert!(peak.load(Ordering::SeqCst) > 1, "no concurrent execution observed");
+    }
+
+    #[test]
+    fn stagger_spreads_blocks_across_interval() {
+        // 4 blocks over T2=20: phases 0, 5, 10, 15 — one cohort each
+        let phases: Vec<usize> = (0..4).map(|i| stagger_phase(i, 4, 20)).collect();
+        assert_eq!(phases, vec![0, 5, 10, 15]);
+        // more blocks than steps in the interval: phases stay in [0, t2)
+        for i in 0..50 {
+            assert!(stagger_phase(i, 50, 8) < 8);
+        }
+        // every block gets exactly one phase per interval
+        let mut counts = vec![0usize; 8];
+        for i in 0..50 {
+            counts[stagger_phase(i, 50, 8)] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 50);
+        // round-robin balance: no step hosts more than ceil(n/t2)+slack
+        assert!(*counts.iter().max().unwrap() <= 7);
+    }
+
+    #[test]
+    fn timings_track_max_step() {
+        let mut t = StepTimings::default();
+        t.note_step(1, 0.010);
+        t.note_step(2, 0.050);
+        t.note_step(3, 0.020);
+        assert_eq!(t.steps, 3);
+        assert_eq!(t.max_step_index, 2);
+        assert!((t.max_step_secs - 0.050).abs() < 1e-12);
+        assert!(t.summary().contains("max step"));
+    }
+}

@@ -1,12 +1,19 @@
 //! Second-order orchestration: owns every preconditioner block, schedules
-//! PU (every T1) and PIRU (every T2) through the AOT artifacts, and
-//! preconditions gradients (every step) — Algorithm 3 driven from Rust.
+//! PU (every T1) and PIRU (every T2, optionally staggered into per-step
+//! cohorts) through the AOT artifacts, and preconditions gradients (every
+//! step) — Algorithm 3 driven from Rust.
+//!
+//! The per-block loops are task-graph submissions to the parallel block
+//! engine (`coordinator::scheduler`): each block's left/right pair is one
+//! task, fanned across `cfg.parallelism` workers with an index-ordered merge,
+//! so any parallelism level is bit-identical to the serial run.
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{SecondOrderConfig, SecondOrderKind};
 use crate::coordinator::model::ModelHandle;
 use crate::coordinator::partition::{extract_block, partition, scatter_block, Block};
+use crate::coordinator::scheduler::{stagger_phase, Scheduler};
 use crate::coordinator::state::{codebook_for, run_invroot, run_pu, SideState};
 use crate::linalg::Mat;
 use crate::runtime::{Backend, HostTensor};
@@ -30,6 +37,8 @@ pub struct SecondOrder {
     pub kfac_mode: bool,
     /// counts of host-fallback preconditions (observability)
     pub host_fallbacks: u64,
+    /// the parallel block engine's worker pool
+    scheduler: Scheduler,
 }
 
 impl SecondOrder {
@@ -69,7 +78,19 @@ impl SecondOrder {
                 inv_cache: None,
             })
             .collect();
-        Ok(Self { cfg: cfg.clone(), cb, blocks, kfac_mode, host_fallbacks: 0 })
+        Ok(Self {
+            cfg: cfg.clone(),
+            cb,
+            blocks,
+            kfac_mode,
+            host_fallbacks: 0,
+            scheduler: Scheduler::new(cfg.parallelism),
+        })
+    }
+
+    /// Worker count of the block engine (1 = serial).
+    pub fn parallelism(&self) -> usize {
+        self.scheduler.workers()
     }
 
     pub fn state_bytes(&self) -> usize {
@@ -93,48 +114,88 @@ impl SecondOrder {
         let beta = self.cfg.beta;
         let kind = self.cfg.kind;
         let bits = self.cfg.quant.bits;
-        for (bi, bp) in self.blocks.iter_mut().enumerate() {
+        let kfac_mode = self.kfac_mode;
+        let cb = &self.cb;
+        self.scheduler.par_map_mut(&mut self.blocks, |bi, bp| {
             let (m, n) = (bp.block.bm, bp.block.bn);
-            let (l_stat, r_stat) = if self.kfac_mode {
+            let (l_stat, r_stat) = if kfac_mode {
                 // layer index = bi (one block per 2-D weight, in order)
                 let r = &stats[2 * bi]; // XᵀX/bs  (in, in)
                 let l = &stats[2 * bi + 1]; // δYᵀδY·bs (out, out)
-                (
-                    HostTensor::f32(&[m, m], r.clone()),
-                    HostTensor::f32(&[n, n], l.clone()),
-                )
+                (HostTensor::f32(&[m, m], r.clone()), HostTensor::f32(&[n, n], l.clone()))
             } else {
                 let g = extract_block(
                     &grads[bp.block.param_idx],
                     &model.shapes[bp.block.param_idx],
                     &bp.block,
                 );
-                let outs = rt.execute(
-                    &format!("gram_{m}x{n}"),
-                    &[HostTensor::f32(&[m, n], g)],
-                )?;
+                let outs = rt.execute(&format!("gram_{m}x{n}"), &[HostTensor::f32(&[m, n], g)])?;
                 (outs[0].clone(), outs[1].clone())
             };
-            run_pu(rt, &mut bp.left, l_stat, beta, &self.cb, kind, bits)?;
-            run_pu(rt, &mut bp.right, r_stat, beta, &self.cb, kind, bits)?;
-        }
+            run_pu(rt, &mut bp.left, l_stat, beta, cb, kind, bits)?;
+            run_pu(rt, &mut bp.right, r_stat, beta, cb, kind, bits)
+        })?;
         Ok(())
     }
 
     /// PIRU / inverse-root for every block (Algorithm 3 line 10).
     pub fn update_invroots(&mut self, rt: &dyn Backend) -> Result<()> {
+        let all: Vec<usize> = (0..self.blocks.len()).collect();
+        self.update_invroots_subset(rt, &all)
+    }
+
+    /// PIRU / inverse-root for a cohort of blocks (staggered scheduling runs
+    /// one cohort per step; batch mode passes every index at the T2 boundary).
+    pub fn update_invroots_subset(&mut self, rt: &dyn Backend, idxs: &[usize]) -> Result<()> {
+        if idxs.is_empty() {
+            return Ok(());
+        }
         let eps = self.cfg.eps;
         let kind = self.cfg.kind;
         let bits = self.cfg.quant.bits;
-        for bp in self.blocks.iter_mut() {
-            run_invroot(rt, &mut bp.left, eps, &self.cb, kind, bits)?;
-            run_invroot(rt, &mut bp.right, eps, &self.cb, kind, bits)?;
-            bp.inv_cache = None; // invalidate cached precondition inputs
+        let cb = &self.cb;
+        let mut selected = vec![false; self.blocks.len()];
+        for &i in idxs {
+            selected[i] = true;
         }
+        let mut cohort: Vec<&mut BlockPre> = self
+            .blocks
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| selected[*i])
+            .map(|(_, bp)| bp)
+            .collect();
+        self.scheduler.par_map_mut(&mut cohort, |_, bp| {
+            run_invroot(rt, &mut bp.left, eps, cb, kind, bits)?;
+            run_invroot(rt, &mut bp.right, eps, cb, kind, bits)?;
+            bp.inv_cache = None; // invalidate cached precondition inputs
+            Ok(())
+        })?;
         Ok(())
     }
 
+    /// Which blocks' inverse roots are due at (1-based) trainer step `step`.
+    /// Batch mode: every block at T2 boundaries. Staggered mode: round-robin
+    /// cohorts spread across the T2 interval (`scheduler::stagger_phase`), so
+    /// each block still refreshes once per interval but no step pays for all
+    /// of them at once.
+    pub fn invroot_due(&self, step: usize) -> Vec<usize> {
+        let t2 = self.cfg.update_invroot_every.max(1);
+        let n = self.blocks.len();
+        if !self.cfg.stagger_invroots {
+            return if step % t2 == 0 { (0..n).collect() } else { Vec::new() };
+        }
+        let phase = step % t2;
+        (0..n).filter(|&i| stagger_phase(i, n, t2) == phase).collect()
+    }
+
     /// Precondition all gradients in place (Algorithm 3 lines 13–14).
+    ///
+    /// Two phases: the per-block transforms run as parallel tasks over a
+    /// read-only view of the gradients (the cached artifact inputs are
+    /// `Arc`-backed, so re-submitting them each step shares the state buffers
+    /// instead of deep-copying them), then the disjoint results are scattered
+    /// back serially in block-index order.
     pub fn precondition(
         &mut self,
         rt: &dyn Backend,
@@ -142,10 +203,12 @@ impl SecondOrder {
         grads: &mut [Vec<f32>],
     ) -> Result<()> {
         let caspr = self.cfg.kind == SecondOrderKind::Caspr;
-        for bp in self.blocks.iter_mut() {
+        let cb = &self.cb;
+        let grads_ro: &[Vec<f32>] = grads;
+        let results = self.scheduler.par_map_mut(&mut self.blocks, |_, bp| {
             let (m, n) = (bp.block.bm, bp.block.bn);
             let shape = &model.shapes[bp.block.param_idx];
-            let g = extract_block(&grads[bp.block.param_idx], shape, &bp.block);
+            let g = extract_block(&grads_ro[bp.block.param_idx], shape, &bp.block);
 
             let artifact = match (&bp.left, &bp.right) {
                 (SideState::Dense { .. }, SideState::Dense { .. }) => {
@@ -167,34 +230,40 @@ impl SecondOrder {
                 }
             };
 
-            let gt = match artifact {
+            match artifact {
                 Some(name) => {
                     if bp.inv_cache.is_none() {
                         let mut state = bp.left.invroot_inputs()?;
                         state.extend(bp.right.invroot_inputs()?);
                         if !bp.left.is_dense() {
-                            state.push(HostTensor::f32(&[16], self.cb.clone()));
+                            state.push(HostTensor::f32(&[16], cb.to_vec()));
                         }
                         bp.inv_cache = Some(state);
                     }
                     let mut inputs = vec![HostTensor::f32(&[m, n], g)];
                     inputs.extend(bp.inv_cache.as_ref().unwrap().iter().cloned());
-                    let outs = rt.execute(&name, &inputs)?;
-                    outs[0].clone().into_f32()?
+                    let mut outs = rt.execute(&name, &inputs)?;
+                    Ok((outs.remove(0).into_f32()?, false))
                 }
                 None => {
                     // host mirror: mixed arms or no matching artifact pair
-                    self.host_fallbacks += 1;
-                    precondition_host(
+                    let gt = precondition_host(
                         &g,
                         m,
                         n,
-                        &bp.left.invroot_host(&self.cb, 0),
-                        &bp.right.invroot_host(&self.cb, 0),
+                        &bp.left.invroot_host(cb, 0),
+                        &bp.right.invroot_host(cb, 0),
                         caspr,
-                    )
+                    );
+                    Ok((gt, true))
                 }
-            };
+            }
+        })?;
+        for (bp, (gt, fellback)) in self.blocks.iter().zip(results) {
+            if fellback {
+                self.host_fallbacks += 1;
+            }
+            let shape = &model.shapes[bp.block.param_idx];
             scatter_block(&mut grads[bp.block.param_idx], shape, &bp.block, &gt);
         }
         Ok(())

@@ -222,7 +222,11 @@ fn quant_state_tensors(diag: &[f32], q: &QuantizedVec) -> Vec<HostTensor> {
     ]
 }
 
-fn quantized_from_tensors(codes: &HostTensor, scales: &HostTensor, bits: u32) -> Result<QuantizedVec> {
+fn quantized_from_tensors(
+    codes: &HostTensor,
+    scales: &HostTensor,
+    bits: u32,
+) -> Result<QuantizedVec> {
     let blk = *codes
         .shape
         .last()

@@ -1,8 +1,11 @@
 //! The training loop (Algorithm 3 end-to-end): data pipeline → model step
-//! artifact → second-order preconditioning → native first-order update,
-//! with eval, metrics, checkpointing, exact memory accounting, and the
-//! optional 32-bit shadow for dynamic quantization-error tracking
-//! (Figures 7/8).
+//! artifact → second-order preconditioning (parallel block engine, with
+//! batch or staggered inverse-root scheduling) → native first-order update,
+//! with per-stage wall-time accounting, eval, metrics, checkpointing (params
+//! + first-order optimizer state + step — exact resume for first-order runs;
+//! second-order preconditioner statistics are rebuilt online after resume),
+//! exact memory accounting, and the optional 32-bit shadow for dynamic
+//! quantization-error tracking (Figures 7/8).
 
 use std::path::Path;
 use std::time::Instant;
@@ -11,11 +14,13 @@ use anyhow::{Context, Result};
 
 use crate::config::{RunConfig, SecondOrderKind};
 use crate::coordinator::model::{DataSource, ModelHandle};
+use crate::coordinator::scheduler::StepTimings;
 use crate::coordinator::second_order::SecondOrder;
 use crate::coordinator::shadow::ShadowTracker;
 use crate::errors;
 use crate::optim::{build_first_order, FirstOrder};
 use crate::runtime::Backend;
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct EvalPoint {
@@ -57,6 +62,8 @@ pub struct TrainResult {
     pub memory: MemoryReport,
     pub shadow_rows: Vec<crate::coordinator::shadow::ShadowRow>,
     pub host_fallbacks: u64,
+    /// per-stage wall time + worst-step spike (parallel block engine telemetry)
+    pub timings: StepTimings,
 }
 
 impl TrainResult {
@@ -77,6 +84,8 @@ pub struct Trainer {
     pub data: DataSource,
     shadow: Option<ShadowTracker>,
     flat_len: usize,
+    /// last completed step of a loaded checkpoint; `train` resumes after it
+    resume_step: usize,
 }
 
 impl Trainer {
@@ -104,7 +113,7 @@ impl Trainer {
             None
         };
         let data = model.data_source(cfg.seed);
-        Ok(Self { cfg, model, first, second, data, shadow, flat_len })
+        Ok(Self { cfg, model, first, second, data, shadow, flat_len, resume_step: 0 })
     }
 
     fn flatten(bufs: &[Vec<f32>]) -> Vec<f32> {
@@ -180,39 +189,58 @@ impl Trainer {
         let mut losses = Vec::new();
         let mut evals = Vec::new();
         let mut shadow_rows = Vec::new();
+        let mut timings = StepTimings::default();
         let s2cfg = self.cfg.second.clone();
+        let start = self.resume_step + 1;
 
-        for step in 1..=self.cfg.steps {
+        for step in start..=self.cfg.steps {
+            let step_t = Instant::now();
             let batch = self.model.make_batch(&self.data, false, step as u64);
+            let t = Instant::now();
             let (loss, mut grads, stats) = self.model.step(rt, &batch)?;
+            timings.model_step_secs += t.elapsed().as_secs_f64();
 
             if let Some(second) = self.second.as_mut() {
                 if step >= s2cfg.start_step {
                     if step % s2cfg.update_precond_every == 0 {
+                        let t = Instant::now();
                         second.update_preconditioners(rt, &self.model, &grads, &stats)?;
+                        timings.pu_secs += t.elapsed().as_secs_f64();
                         if let Some(sh) = self.shadow.as_mut() {
                             sh.update_shadow(rt, second, &self.model, &grads, &stats)?;
                         }
                     }
-                    if step % s2cfg.update_invroot_every == 0 {
-                        second.update_invroots(rt)?;
+                    // batch mode: every block at T2 boundaries; staggered
+                    // mode: one round-robin cohort per step
+                    let due = second.invroot_due(step);
+                    if !due.is_empty() {
+                        let t = Instant::now();
+                        second.update_invroots_subset(rt, &due)?;
+                        timings.piru_secs += t.elapsed().as_secs_f64();
                         if let Some(sh) = self.shadow.as_mut() {
-                            if let Some(row) = sh.measure(step, second)? {
-                                shadow_rows.push(row);
+                            if due.contains(&sh.block_idx) {
+                                if let Some(row) = sh.measure(step, second)? {
+                                    shadow_rows.push(row);
+                                }
                             }
                         }
                     }
+                    let t = Instant::now();
                     second.precondition(rt, &self.model, &mut grads)?;
+                    timings.precond_secs += t.elapsed().as_secs_f64();
                 }
             }
 
             // native first-order update over the flat parameter vector
+            let t = Instant::now();
             let mut flat_p = Self::flatten(&self.model.params);
             let flat_g = Self::flatten(&grads);
             debug_assert_eq!(flat_p.len(), self.flat_len);
             let lr = self.cfg.first.lr * self.cfg.lr_at(step - 1);
             self.first.step(&mut flat_p, &flat_g, lr);
             Self::scatter(&flat_p, &mut self.model.params);
+            timings.first_order_secs += t.elapsed().as_secs_f64();
+            timings.note_step(step, step_t.elapsed().as_secs_f64());
 
             if step % self.cfg.log_every == 0 || step == 1 {
                 losses.push((step, loss));
@@ -254,22 +282,32 @@ impl Trainer {
             memory: self.memory_report(),
             shadow_rows,
             host_fallbacks: self.second.as_ref().map(|s| s.host_fallbacks).unwrap_or(0),
+            timings,
         })
     }
 
-    /// Save parameters + step metadata (JSON header, raw f32 LE payload).
+    /// Save parameters + full first-order optimizer state + step metadata
+    /// (JSON header line, raw f32 LE payload: params then optimizer
+    /// buffers). For first-order runs, loading restores the exact
+    /// optimization trajectory. Second-order preconditioner state is *not*
+    /// serialized: after resume it re-initializes and re-warms from the next
+    /// PU/PIRU cycles (EMA statistics recover within a few T1 intervals), so
+    /// a resumed second-order run is not bit-identical to an uninterrupted
+    /// one.
     pub fn save_checkpoint(&self, path: &Path, step: usize) -> Result<()> {
         use std::io::Write;
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let header = crate::util::json::Json::obj(vec![
-            ("model", crate::util::json::Json::Str(self.model.name.clone())),
-            ("step", crate::util::json::Json::Num(step as f64)),
-            (
-                "param_count",
-                crate::util::json::Json::Num(self.model.param_count() as f64),
-            ),
+        let (opt_bufs, opt_counters) = self.first.export_state();
+        let buf_lens: Vec<usize> = opt_bufs.iter().map(|b| b.len()).collect();
+        let header = Json::obj(vec![
+            ("model", Json::Str(self.model.name.clone())),
+            ("step", Json::Num(step as f64)),
+            ("param_count", Json::Num(self.model.param_count() as f64)),
+            ("opt", Json::Str(self.first.name().to_string())),
+            ("opt_buffers", Json::arr_usize(&buf_lens)),
+            ("opt_counters", Json::arr_f64(&opt_counters)),
         ])
         .to_string();
         let mut f = std::fs::File::create(path)?;
@@ -278,10 +316,19 @@ impl Trainer {
             let bytes: Vec<u8> = p.iter().flat_map(|x| x.to_le_bytes()).collect();
             f.write_all(&bytes)?;
         }
+        for b in &opt_bufs {
+            let bytes: Vec<u8> = b.iter().flat_map(|x| x.to_le_bytes()).collect();
+            f.write_all(&bytes)?;
+        }
         Ok(())
     }
 
-    /// Load a checkpoint written by `save_checkpoint`. Returns the step.
+    /// Load a checkpoint written by `save_checkpoint`: restores parameters,
+    /// the first-order optimizer state (when recorded), and the resume
+    /// position — a subsequent `train` continues at step + 1. Returns the
+    /// step. Exact for first-order runs; warns when a second-order
+    /// preconditioner is configured, since its statistics restart from
+    /// initialization (see `save_checkpoint`).
     pub fn load_checkpoint(&mut self, path: &Path) -> Result<usize> {
         use std::io::Read;
         let mut f = std::fs::File::open(path)?;
@@ -291,20 +338,57 @@ impl Trainer {
             .iter()
             .position(|&b| b == b'\n')
             .context("missing checkpoint header")?;
-        let header = crate::util::json::Json::parse(std::str::from_utf8(&all[..nl])?)
+        let header = Json::parse(std::str::from_utf8(&all[..nl])?)
             .map_err(|e| anyhow::anyhow!("{e}"))?;
         let model = header.get("model").and_then(|j| j.as_str()).context("model")?;
         if model != self.model.name {
             anyhow::bail!("checkpoint is for {model}, trainer has {}", self.model.name);
         }
         let mut off = nl + 1;
-        for p in self.model.params.iter_mut() {
-            for x in p.iter_mut() {
-                *x = f32::from_le_bytes(all[off..off + 4].try_into().unwrap());
-                off += 4;
+        let read_f32s = |off: &mut usize, n: usize| -> Result<Vec<f32>> {
+            if all.len() < *off + 4 * n {
+                anyhow::bail!("checkpoint truncated at byte {}", *off);
             }
+            let mut v = vec![0.0f32; n];
+            for x in v.iter_mut() {
+                *x = f32::from_le_bytes(all[*off..*off + 4].try_into().unwrap());
+                *off += 4;
+            }
+            Ok(v)
+        };
+        let mut new_params = Vec::with_capacity(self.model.params.len());
+        for p in &self.model.params {
+            new_params.push(read_f32s(&mut off, p.len())?);
         }
-        Ok(header.get("step").and_then(|j| j.as_usize()).unwrap_or(0))
+        self.model.params = new_params;
+        if let Some(lens) = header.get("opt_buffers").and_then(|j| j.usize_vec()) {
+            let opt = header.get("opt").and_then(|j| j.as_str()).unwrap_or("");
+            if opt != self.first.name() {
+                anyhow::bail!(
+                    "checkpoint optimizer state is for {opt}, trainer has {}",
+                    self.first.name()
+                );
+            }
+            let counters: Vec<f64> = header
+                .get("opt_counters")
+                .and_then(|j| j.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default();
+            let mut bufs = Vec::with_capacity(lens.len());
+            for n in lens {
+                bufs.push(read_f32s(&mut off, n)?);
+            }
+            self.first.import_state(bufs, &counters)?;
+        }
+        if self.second.is_some() {
+            eprintln!(
+                "load_checkpoint: second-order preconditioner state is not checkpointed; \
+                 statistics re-warm from initialization over the next T1/T2 cycles"
+            );
+        }
+        let step = header.get("step").and_then(|j| j.as_usize()).unwrap_or(0);
+        self.resume_step = step;
+        Ok(step)
     }
 }
 

@@ -120,7 +120,11 @@ impl Mat {
     /// Blocked matmul: C = A·B. f64 accumulation over the k-panel keeps
     /// order-1200 products accurate enough for NRE measurements.
     pub fn matmul(&self, b: &Mat) -> Mat {
-        assert_eq!(self.cols, b.rows, "matmul dims {}x{} · {}x{}", self.rows, self.cols, b.rows, b.cols);
+        assert_eq!(
+            self.cols, b.rows,
+            "matmul dims {}x{} · {}x{}",
+            self.rows, self.cols, b.rows, b.cols
+        );
         let (m, k, n) = (self.rows, self.cols, b.cols);
         let mut c = Mat::zeros(m, n);
         // i-k-j loop order: streams B rows and C rows sequentially.
@@ -254,7 +258,8 @@ mod tests {
     #[test]
     fn matmul_associativity_property() {
         prop::check("(AB)C = A(BC)", 10, |rng| {
-            let (m, k, l, n) = (1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12));
+            let (m, k, l, n) =
+                (1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12));
             let a = Mat::randn(m, k, rng);
             let b = Mat::randn(k, l, rng);
             let c = Mat::randn(l, n, rng);

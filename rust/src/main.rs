@@ -6,6 +6,10 @@
 //!                [--mapping linear2|dt] [--quantize-eigen true|false]
 //!                [--backend host|pjrt|auto] [--out runs/NAME]
 //!                [--shadow-quant-error]
+//!                [--parallelism N] [--stagger-invroots]
+//!                (parallel block engine: N worker threads for per-block
+//!                PU/PIRU/precondition, bit-identical to serial; staggered
+//!                inverse-root cohorts flatten the T2-step wall-time spike)
 //!   quant-error  [--n 1200] [--bits 4] [--block 64]
 //!                (Table 1/5/6/7, Figures 2/3/5/6 — see benches for the
 //!                full sweeps)
@@ -26,7 +30,7 @@ use shampoo4::quant::Mapping;
 use shampoo4::runtime::{backend_by_name, Backend};
 use shampoo4::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] = &["shadow-quant-error", "help", "quiet"];
+const BOOL_FLAGS: &[&str] = &["shadow-quant-error", "stagger-invroots", "help", "quiet"];
 
 fn main() -> Result<()> {
     let args = Args::parse(BOOL_FLAGS);
@@ -107,6 +111,12 @@ pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if args.flag("shadow-quant-error") {
         cfg.shadow_quant_error = true;
     }
+    if let Some(p) = args.get("parallelism") {
+        cfg.second.parallelism = p.parse::<usize>().context("--parallelism")?.max(1);
+    }
+    if args.flag("stagger-invroots") {
+        cfg.second.stagger_invroots = true;
+    }
     if let Some(b) = args.get("backend") {
         cfg.backend = b.to_string();
     }
@@ -126,7 +136,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = backend_by_name(&cfg.backend, &dir)?;
     let rt = rt.as_ref();
     println!(
-        "platform={} model={} steps={} F={} second={} bits={} mapping={}",
+        "platform={} model={} steps={} F={} second={} bits={} mapping={} parallelism={} piru={}",
         rt.platform(),
         cfg.model,
         cfg.steps,
@@ -134,6 +144,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.second.kind.name(),
         cfg.second.quant.bits,
         cfg.second.quant.mapping.name(),
+        cfg.second.parallelism,
+        if cfg.second.stagger_invroots { "staggered" } else { "batch" },
     );
     let out_dir = PathBuf::from(args.get_or("out", &format!("runs/{}", cfg.name)));
     let mut trainer = Trainer::new(rt, cfg.clone())?;
@@ -170,6 +182,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             );
         }
     }
+    println!("timings: {}", res.timings.summary());
     println!(
         "memory: total={:.2}MB optimizer={:.2}MB host_fallback_preconds={}",
         res.memory.total_mb(),
@@ -232,7 +245,10 @@ fn cmd_memory_plan(args: &Args) -> Result<()> {
         ("8-bit AdamW", plan(&m, OptimizerPlan::Adam { bits: 8 })),
         (
             "8-bit AdamW + 32-bit Shampoo",
-            plan(&m, OptimizerPlan::AdamShampoo { adam_bits: 8, shampoo_bits: 32, max_order: 2048 }),
+            plan(
+                &m,
+                OptimizerPlan::AdamShampoo { adam_bits: 8, shampoo_bits: 32, max_order: 2048 },
+            ),
         ),
         (
             "8-bit AdamW + 4-bit Shampoo (our)",

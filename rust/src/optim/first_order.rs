@@ -6,6 +6,8 @@
 //! comparison arms of Appendix H: schedule-free SGD/AdamW [Defazio et al.]
 //! and M-FAC (separate module).
 
+use anyhow::{bail, Result};
+
 /// A first-order optimizer over a flat parameter vector.
 pub trait FirstOrder {
     /// One update. `params` holds the *training* iterate (for schedule-free
@@ -22,6 +24,28 @@ pub trait FirstOrder {
     fn state_bytes(&self) -> usize;
 
     fn name(&self) -> &'static str;
+
+    /// Snapshot the full mutable state as (ordered f32 buffers, scalar
+    /// counters) — enough for `import_state` on an identically configured
+    /// optimizer to resume bit-identically. Buffer/counter order is each
+    /// optimizer's contract; checkpoints persist both.
+    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>);
+
+    /// Restore a snapshot produced by [`FirstOrder::export_state`].
+    fn import_state(&mut self, buffers: Vec<Vec<f32>>, counters: &[f64]) -> Result<()>;
+}
+
+/// Shared validation for `import_state` impls: buffer count + lengths.
+fn check_buffers(who: &str, buffers: &[Vec<f32>], lens: &[usize]) -> Result<()> {
+    if buffers.len() != lens.len() {
+        bail!("{who}: expected {} state buffers, got {}", lens.len(), buffers.len());
+    }
+    for (i, (b, &n)) in buffers.iter().zip(lens).enumerate() {
+        if b.len() != n {
+            bail!("{who}: state buffer {i} has {} elems, expected {n}", b.len());
+        }
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -53,6 +77,16 @@ impl FirstOrder for Sgdm {
 
     fn name(&self) -> &'static str {
         "SGDM"
+    }
+
+    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
+        (vec![self.buf.clone()], Vec::new())
+    }
+
+    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, _counters: &[f64]) -> Result<()> {
+        check_buffers("SGDM", &buffers, &[self.buf.len()])?;
+        self.buf = buffers.remove(0);
+        Ok(())
     }
 }
 
@@ -117,6 +151,21 @@ impl FirstOrder for AdamW {
     fn name(&self) -> &'static str {
         if self.nesterov { "NAdamW" } else { "AdamW" }
     }
+
+    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
+        (vec![self.m.clone(), self.v.clone()], vec![self.step as f64])
+    }
+
+    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, counters: &[f64]) -> Result<()> {
+        check_buffers(self.name(), &buffers, &[self.m.len(), self.v.len()])?;
+        let Some(&step) = counters.first() else {
+            bail!("{}: missing step counter", self.name())
+        };
+        self.v = buffers.pop().unwrap();
+        self.m = buffers.pop().unwrap();
+        self.step = step as u64;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -148,6 +197,16 @@ impl FirstOrder for Adagrad {
 
     fn name(&self) -> &'static str {
         "Adagrad"
+    }
+
+    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
+        (vec![self.acc.clone()], Vec::new())
+    }
+
+    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, _counters: &[f64]) -> Result<()> {
+        check_buffers("Adagrad", &buffers, &[self.acc.len()])?;
+        self.acc = buffers.remove(0);
+        Ok(())
     }
 }
 
@@ -246,6 +305,35 @@ impl FirstOrder for ScheduleFree {
     fn name(&self) -> &'static str {
         if self.adam.is_some() { "AdamWScheduleFree" } else { "SGDScheduleFree" }
     }
+
+    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
+        let mut bufs = vec![self.z.clone(), self.x.clone()];
+        if let Some((_, _, v)) = &self.adam {
+            bufs.push(v.clone());
+        }
+        let init = if self.initialized { 1.0 } else { 0.0 };
+        (bufs, vec![self.t as f64, self.lr_sum_sq, init])
+    }
+
+    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, counters: &[f64]) -> Result<()> {
+        let mut lens = vec![self.z.len(), self.x.len()];
+        if let Some((_, _, v)) = &self.adam {
+            lens.push(v.len());
+        }
+        check_buffers(self.name(), &buffers, &lens)?;
+        if counters.len() < 3 {
+            bail!("{}: expected 3 counters, got {}", self.name(), counters.len());
+        }
+        if let Some((_, _, v)) = &mut self.adam {
+            *v = buffers.pop().unwrap();
+        }
+        self.x = buffers.pop().unwrap();
+        self.z = buffers.pop().unwrap();
+        self.t = counters[0] as u64;
+        self.lr_sum_sq = counters[1];
+        self.initialized = counters[2] != 0.0;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -321,6 +409,62 @@ mod tests {
         let mut p = vec![1.0f32];
         o.step(&mut p, &[0.0], 0.5);
         assert!(p[0] < 1.0);
+    }
+
+    /// Drive `a` some steps, snapshot into `b`, then both must evolve
+    /// bit-identically.
+    fn check_state_roundtrip(a: &mut dyn FirstOrder, b: &mut dyn FirstOrder, lr: f32) {
+        let target = [1.0f32, -2.0, 3.0, 0.5];
+        let mut p = vec![0.0f32; 4];
+        for _ in 0..7 {
+            let g: Vec<f32> = p.iter().zip(&target).map(|(x, t)| x - t).collect();
+            a.step(&mut p, &g, lr);
+        }
+        let (bufs, counters) = a.export_state();
+        b.import_state(bufs, &counters).unwrap();
+        let mut pa = p.clone();
+        let mut pb = p;
+        for _ in 0..5 {
+            let ga: Vec<f32> = pa.iter().zip(&target).map(|(x, t)| x - t).collect();
+            a.step(&mut pa, &ga, lr);
+            let gb: Vec<f32> = pb.iter().zip(&target).map(|(x, t)| x - t).collect();
+            b.step(&mut pb, &gb, lr);
+        }
+        assert_eq!(pa, pb, "resumed optimizer diverged");
+        assert_eq!(a.eval_params(&pa), b.eval_params(&pb));
+    }
+
+    #[test]
+    fn state_roundtrips_bit_identically() {
+        check_state_roundtrip(
+            &mut Sgdm::new(4, 0.9, 0.01),
+            &mut Sgdm::new(4, 0.9, 0.01),
+            0.05,
+        );
+        check_state_roundtrip(
+            &mut AdamW::new(4, 0.9, 0.999, 1e-8, 0.01),
+            &mut AdamW::new(4, 0.9, 0.999, 1e-8, 0.01),
+            0.05,
+        );
+        check_state_roundtrip(
+            &mut Adagrad::new(4, 1e-10, 0.0),
+            &mut Adagrad::new(4, 1e-10, 0.0),
+            0.1,
+        );
+        check_state_roundtrip(
+            &mut ScheduleFree::adamw(4, 0.9, 0.999, 1e-8, 0.0, 5),
+            &mut ScheduleFree::adamw(4, 0.9, 0.999, 1e-8, 0.0, 5),
+            0.05,
+        );
+    }
+
+    #[test]
+    fn import_rejects_mismatched_buffers() {
+        let mut o = AdamW::new(4, 0.9, 0.999, 1e-8, 0.0);
+        assert!(o.import_state(vec![vec![0.0; 4]], &[1.0]).is_err()); // one buffer short
+        assert!(o.import_state(vec![vec![0.0; 3], vec![0.0; 4]], &[1.0]).is_err()); // bad len
+        assert!(o.import_state(vec![vec![0.0; 4], vec![0.0; 4]], &[]).is_err()); // no counter
+        assert!(o.import_state(vec![vec![0.0; 4], vec![0.0; 4]], &[3.0]).is_ok());
     }
 
     #[test]

@@ -9,6 +9,8 @@
 //!   H⁻¹v = (1/λ)·[ v − Gᵀ·(mλ·I_m + G·Gᵀ)⁻¹·G·v ].
 //! The m×m solve is exact Gaussian elimination (m ≤ 64).
 
+use anyhow::{bail, Result};
+
 use super::first_order::FirstOrder;
 
 pub struct MFac {
@@ -157,6 +159,34 @@ impl FirstOrder for MFac {
     fn name(&self) -> &'static str {
         "M-FAC"
     }
+
+    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
+        // momentum buffer first, then the gradient window in ring order
+        let mut bufs = vec![self.buf.clone()];
+        bufs.extend(self.grads.iter().cloned());
+        (bufs, vec![self.head as f64])
+    }
+
+    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, counters: &[f64]) -> Result<()> {
+        if buffers.is_empty() {
+            bail!("M-FAC: missing momentum buffer");
+        }
+        let buf = buffers.remove(0);
+        if buf.len() != self.buf.len() {
+            bail!("M-FAC: momentum buffer has {} elems, expected {}", buf.len(), self.buf.len());
+        }
+        if buffers.len() > self.m {
+            bail!("M-FAC: {} window gradients exceed window size {}", buffers.len(), self.m);
+        }
+        if let Some(g) = buffers.iter().find(|g| g.len() != buf.len()) {
+            bail!("M-FAC: window gradient has {} elems, expected {}", g.len(), buf.len());
+        }
+        self.buf = buf;
+        self.filled = buffers.len();
+        self.grads = buffers;
+        self.head = (counters.first().copied().unwrap_or(0.0) as usize) % self.m.max(1);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -217,6 +247,28 @@ mod tests {
         }
         let err: f32 = p.iter().zip(&target).map(|(a, b)| (a - b).abs()).sum();
         assert!(err < 0.05, "{err}");
+    }
+
+    #[test]
+    fn state_roundtrips_through_export_import() {
+        let mut rng = Rng::new(9);
+        let grads: Vec<Vec<f32>> = (0..9).map(|_| rng.normal_vec(6)).collect();
+        let mut a = MFac::new(6, 3, 0.1, 0.9, 0.01);
+        let mut p = vec![0.0f32; 6];
+        for g in &grads[..5] {
+            a.step(&mut p, g, 0.01);
+        }
+        let (bufs, counters) = a.export_state();
+        assert_eq!(bufs.len(), 1 + 3); // momentum + full window
+        let mut b = MFac::new(6, 3, 0.1, 0.9, 0.01);
+        b.import_state(bufs, &counters).unwrap();
+        let mut pa = p.clone();
+        let mut pb = p;
+        for g in &grads[5..] {
+            a.step(&mut pa, g, 0.01);
+            b.step(&mut pb, g, 0.01);
+        }
+        assert_eq!(pa, pb, "resumed M-FAC diverged");
     }
 
     #[test]

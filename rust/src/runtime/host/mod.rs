@@ -7,8 +7,8 @@
 pub mod model;
 pub mod ops;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -28,12 +28,15 @@ const CB_LEN: usize = 16;
 
 pub struct HostBackend {
     manifest: Manifest,
-    stats: RefCell<HashMap<String, ExecStats>>,
+    // Mutex (not RefCell): `execute` is called concurrently by the parallel
+    // block engine's workers; dispatch itself is pure, only the stats tally
+    // needs the lock.
+    stats: Mutex<HashMap<String, ExecStats>>,
 }
 
 impl HostBackend {
     pub fn new() -> Self {
-        Self { manifest: synthetic_manifest(), stats: RefCell::new(HashMap::new()) }
+        Self { manifest: synthetic_manifest(), stats: Mutex::new(HashMap::new()) }
     }
 
     fn dispatch(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
@@ -200,7 +203,7 @@ impl Backend for HostBackend {
         let t0 = Instant::now();
         let outs = self.dispatch(name, inputs)?;
         let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().expect("stats lock");
         let ent = stats.entry(name.to_string()).or_default();
         ent.calls += 1;
         ent.total_secs += dt;
@@ -208,7 +211,7 @@ impl Backend for HostBackend {
     }
 
     fn stats(&self) -> HashMap<String, ExecStats> {
-        self.stats.borrow().clone()
+        self.stats.lock().expect("stats lock").clone()
     }
 }
 
@@ -529,7 +532,9 @@ mod tests {
         }
         assert_eq!(m.models["mlp_base"].kind, "mlp");
         assert_eq!(m.models["tlm_tiny"].heads, 4);
-        assert_eq!(m.models["tlm_tiny"].param_count, 256 * 128 + 64 * 128 + 2 * (4 * 128 + 128 * 384 + 128 * 128 + 128 * 512 + 512 * 128) + 2 * 128);
+        let per_layer = 4 * 128 + 128 * 384 + 128 * 128 + 128 * 512 + 512 * 128;
+        let tlm_tiny_params = 256 * 128 + 64 * 128 + 2 * per_layer + 2 * 128;
+        assert_eq!(m.models["tlm_tiny"].param_count, tlm_tiny_params);
         assert_eq!(m.buckets, vec![32, 64, 128]);
     }
 

@@ -77,7 +77,12 @@ fn zero_diag(mut a: Mat) -> Mat {
 }
 
 /// Rebuild Â = Diag(diag) + offdiag(codes) (Algorithm 3 line 13).
-fn dequant_invroot(diag: &[f32], codes: &HostTensor, scales: &HostTensor, cb: &[f32]) -> Result<Mat> {
+fn dequant_invroot(
+    diag: &[f32],
+    codes: &HostTensor,
+    scales: &HostTensor,
+    cb: &[f32],
+) -> Result<Mat> {
     let mut m = dequant_cols(codes, scales, cb)?;
     for (i, &d) in diag.iter().enumerate() {
         m[(i, i)] = d;

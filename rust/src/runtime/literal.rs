@@ -5,15 +5,23 @@
 //! marshals them into `xla::Literal`s at the artifact boundary: f32 and i32
 //! go through `vec1().reshape()`; u8 (quantization codes) has no `NativeType`
 //! impl in the xla crate, so it uses `create_from_shape` + `copy_raw_from`.
+//!
+//! Buffers are `Arc`-backed so tensors are cheap to share across the parallel
+//! block engine's worker threads: `clone()` bumps a refcount instead of
+//! copying the payload, and the cached precondition inputs in
+//! `SecondOrder::precondition` alias the optimizer state rather than deep-
+//! copying it every step.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-/// Typed host buffer.
+/// Typed host buffer (shared, immutable once constructed).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-    U8(Vec<u8>),
+    F32(Arc<Vec<f32>>),
+    I32(Arc<Vec<i32>>),
+    U8(Arc<Vec<u8>>),
 }
 
 impl TensorData {
@@ -49,21 +57,21 @@ pub struct HostTensor {
 impl HostTensor {
     pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
-        Self { shape: shape.to_vec(), data: TensorData::F32(data) }
+        Self { shape: shape.to_vec(), data: TensorData::F32(Arc::new(data)) }
     }
 
     pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
-        Self { shape: shape.to_vec(), data: TensorData::I32(data) }
+        Self { shape: shape.to_vec(), data: TensorData::I32(Arc::new(data)) }
     }
 
     pub fn u8(shape: &[usize], data: Vec<u8>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
-        Self { shape: shape.to_vec(), data: TensorData::U8(data) }
+        Self { shape: shape.to_vec(), data: TensorData::U8(Arc::new(data)) }
     }
 
     pub fn scalar_f32(x: f32) -> Self {
-        Self { shape: vec![], data: TensorData::F32(vec![x]) }
+        Self { shape: vec![], data: TensorData::F32(Arc::new(vec![x])) }
     }
 
     pub fn zeros_f32(shape: &[usize]) -> Self {
@@ -95,10 +103,23 @@ impl HostTensor {
         }
     }
 
+    /// Take the f32 buffer out. Zero-copy when this tensor is the sole owner;
+    /// clones the payload when the buffer is still shared.
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self.data {
-            TensorData::F32(v) => Ok(v),
+            TensorData::F32(v) => Ok(Arc::try_unwrap(v).unwrap_or_else(|a| (*a).clone())),
             other => bail!("expected f32 tensor, got {}", other.dtype_name()),
+        }
+    }
+
+    /// True when two tensors alias the same underlying buffer (diagnostics:
+    /// asserts that clones share state instead of deep-copying it).
+    pub fn shares_buffer(&self, other: &HostTensor) -> bool {
+        match (&self.data, &other.data) {
+            (TensorData::F32(a), TensorData::F32(b)) => Arc::ptr_eq(a, b),
+            (TensorData::I32(a), TensorData::I32(b)) => Arc::ptr_eq(a, b),
+            (TensorData::U8(a), TensorData::U8(b)) => Arc::ptr_eq(a, b),
+            _ => false,
         }
     }
 
@@ -111,23 +132,20 @@ impl HostTensor {
                 if self.shape.is_empty() {
                     xla::Literal::scalar(v[0])
                 } else {
-                    xla::Literal::vec1(v).reshape(&dims)?
+                    xla::Literal::vec1(v.as_slice()).reshape(&dims)?
                 }
             }
             TensorData::I32(v) => {
                 if self.shape.is_empty() {
                     xla::Literal::scalar(v[0])
                 } else {
-                    xla::Literal::vec1(v).reshape(&dims)?
+                    xla::Literal::vec1(v.as_slice()).reshape(&dims)?
                 }
             }
             TensorData::U8(v) => {
                 let dims_us: Vec<usize> = self.shape.clone();
-                let mut lit = xla::Literal::create_from_shape(
-                    xla::PrimitiveType::U8,
-                    &dims_us,
-                );
-                lit.copy_raw_from(v)?;
+                let mut lit = xla::Literal::create_from_shape(xla::PrimitiveType::U8, &dims_us);
+                lit.copy_raw_from(v.as_slice())?;
                 lit
             }
         };
@@ -140,11 +158,55 @@ impl HostTensor {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         let data = match shape.ty() {
-            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
-            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
-            xla::ElementType::U8 => TensorData::U8(lit.to_vec::<u8>()?),
+            xla::ElementType::F32 => TensorData::F32(Arc::new(lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => TensorData::I32(Arc::new(lit.to_vec::<i32>()?)),
+            xla::ElementType::U8 => TensorData::U8(Arc::new(lit.to_vec::<u8>()?)),
             ty => bail!("unsupported artifact output element type {ty:?}"),
         };
         Ok(Self { shape: dims, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clone_shares_buffer_not_payload() {
+        // §Perf: `inv_cache` tensors are cloned into every precondition call;
+        // with Arc-backed buffers that clone must alias, not copy.
+        let t = HostTensor::f32(&[128, 128], vec![1.0; 128 * 128]);
+        let c = t.clone();
+        assert!(t.shares_buffer(&c));
+        assert_eq!(t.as_f32().unwrap().as_ptr(), c.as_f32().unwrap().as_ptr());
+        let u = HostTensor::u8(&[4], vec![1, 2, 3, 4]);
+        assert!(u.shares_buffer(&u.clone()));
+        assert!(!t.shares_buffer(&u));
+    }
+
+    #[test]
+    fn into_f32_is_zero_copy_for_sole_owner() {
+        let t = HostTensor::f32(&[3], vec![1.0, 2.0, 3.0]);
+        let ptr = t.as_f32().unwrap().as_ptr();
+        let v = t.into_f32().unwrap();
+        assert_eq!(v.as_ptr(), ptr); // sole owner: buffer moved, not copied
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn into_f32_falls_back_to_copy_when_shared() {
+        let t = HostTensor::f32(&[2], vec![4.0, 5.0]);
+        let keep = t.clone();
+        let v = t.into_f32().unwrap();
+        assert_eq!(v, vec![4.0, 5.0]);
+        assert_eq!(keep.as_f32().unwrap(), &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = HostTensor::i32(&[1], vec![7]);
+        assert!(t.as_f32().is_err());
+        assert!(t.clone().into_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[7]);
     }
 }

@@ -33,7 +33,13 @@ pub use manifest::{ArtifactSpec, ExecStats, IoSpec, Manifest, ModelSpec, ParamSp
 pub use registry::PjrtBackend;
 
 /// The execution seam: everything the coordinator needs from a runtime.
-pub trait Backend {
+///
+/// `Send + Sync` is part of the contract: the coordinator's parallel block
+/// engine (`coordinator::scheduler`) fans per-block PU / PIRU / precondition
+/// tasks across worker threads that all execute against one shared backend,
+/// so implementations must keep their bookkeeping behind interior-mutability
+/// primitives that are thread-safe (`Mutex` / atomics, not `RefCell`).
+pub trait Backend: Send + Sync {
     /// Human-readable platform tag ("host-cpu", PJRT platform name, ...).
     fn platform(&self) -> String;
 

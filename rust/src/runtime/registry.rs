@@ -6,9 +6,9 @@
 //! → `XlaComputation::from_proto` → `client.compile` → `execute`. Artifacts
 //! are compiled lazily on first use and cached for the process lifetime.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -18,12 +18,18 @@ use super::manifest::{ExecStats, Manifest};
 use super::Backend;
 
 /// The PJRT backend: one CPU client + lazily compiled executables.
+///
+/// `Backend: Send + Sync` note: the compile cache and stats sit behind
+/// `Mutex`es, and executions serialize on the executable cache lock — PJRT
+/// device submission is one-at-a-time here, which is what a single-device
+/// client wants anyway. (When swapping the stub for the real xla-rs crate,
+/// its client/executable handles must be wrapped if they are not `Send`.)
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
-    stats: RefCell<HashMap<String, ExecStats>>,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
 }
 
 impl PjrtBackend {
@@ -34,13 +40,13 @@ impl PjrtBackend {
             client,
             dir: artifact_dir.to_path_buf(),
             manifest,
-            exes: RefCell::new(HashMap::new()),
-            stats: RefCell::new(HashMap::new()),
+            exes: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
         })
     }
 
     fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.exes.borrow().contains_key(name) {
+        if self.exes.lock().expect("exes lock").contains_key(name) {
             return Ok(());
         }
         let spec = self
@@ -55,8 +61,9 @@ impl PjrtBackend {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
         let dt = t0.elapsed().as_secs_f64();
-        self.exes.borrow_mut().insert(name.to_string(), exe);
-        self.stats.borrow_mut().entry(name.to_string()).or_default().compile_secs += dt;
+        self.exes.lock().expect("exes lock").insert(name.to_string(), exe);
+        self.stats.lock().expect("stats lock").entry(name.to_string()).or_default().compile_secs +=
+            dt;
         Ok(())
     }
 }
@@ -76,7 +83,7 @@ impl Backend for PjrtBackend {
         self.ensure_compiled(name)?;
         let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
         let t0 = Instant::now();
-        let exes = self.exes.borrow();
+        let exes = self.exes.lock().expect("exes lock");
         let exe = exes.get(name).unwrap();
         let result =
             exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("executing {name}: {e:?}"))?;
@@ -88,7 +95,7 @@ impl Backend for PjrtBackend {
         let outs: Vec<HostTensor> =
             parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
         let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.stats.borrow_mut();
+        let mut stats = self.stats.lock().expect("stats lock");
         let ent = stats.entry(name.to_string()).or_default();
         ent.calls += 1;
         ent.total_secs += dt;
@@ -96,6 +103,6 @@ impl Backend for PjrtBackend {
     }
 
     fn stats(&self) -> HashMap<String, ExecStats> {
-        self.stats.borrow().clone()
+        self.stats.lock().expect("stats lock").clone()
     }
 }

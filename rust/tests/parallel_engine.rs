@@ -1,0 +1,150 @@
+//! Parallel block engine: determinism and scheduling guarantees.
+//!
+//! * `parallelism = N` must produce bit-identical parameters and losses to
+//!   `parallelism = 1` for every second-order arm (Shampoo, CASPR, K-FAC) —
+//!   the scheduler's index-ordered merge makes thread count a pure
+//!   performance knob.
+//! * Staggered inverse-root cohorts do the same work per T2 interval at
+//!   different steps, so they are *not* bit-identical to batch PIRU, but
+//!   must converge to the same quality.
+//! * Cached precondition inputs must alias the optimizer state (Arc-backed
+//!   tensors), not deep-copy it per step.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use shampoo4::config::{FirstOrderKind, RunConfig, SecondOrderKind};
+use shampoo4::coordinator::{TrainResult, Trainer};
+use shampoo4::runtime::{HostBackend, HostTensor};
+
+fn engine_cfg(kind: SecondOrderKind, parallelism: usize, stagger: bool, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = format!(
+        "pe_{}_{parallelism}{}",
+        kind.name(),
+        if stagger { "_stagger" } else { "" }
+    );
+    cfg.model = "mlp_base".into();
+    cfg.steps = steps;
+    cfg.first.kind = FirstOrderKind::Sgdm;
+    cfg.first.lr = 0.05;
+    cfg.first.weight_decay = 5e-4;
+    cfg.second.kind = kind;
+    cfg.second.update_precond_every = 5;
+    cfg.second.update_invroot_every = 10;
+    cfg.second.parallelism = parallelism;
+    cfg.second.stagger_invroots = stagger;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 4;
+    cfg.log_every = 1;
+    cfg
+}
+
+fn run(cfg: RunConfig) -> (Vec<Vec<f32>>, TrainResult) {
+    let rt = HostBackend::new();
+    let mut t = Trainer::new(&rt, cfg).unwrap();
+    let res = t.train(&rt, None).unwrap();
+    (t.model.params.clone(), res)
+}
+
+/// Exact f32 bit patterns (NaN-proof equality).
+fn param_bits(params: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    params.iter().map(|p| p.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn loss_bits(losses: &[(usize, f32)]) -> Vec<(usize, u32)> {
+    losses.iter().map(|&(s, l)| (s, l.to_bits())).collect()
+}
+
+fn assert_bit_identical(kind: SecondOrderKind, steps: usize) {
+    let (p1, r1) = run(engine_cfg(kind, 1, false, steps));
+    let (p4, r4) = run(engine_cfg(kind, 4, false, steps));
+    assert_eq!(
+        loss_bits(&r1.losses),
+        loss_bits(&r4.losses),
+        "{}: losses diverge between parallelism 1 and 4",
+        kind.name()
+    );
+    assert_eq!(
+        param_bits(&p1),
+        param_bits(&p4),
+        "{}: parameters diverge between parallelism 1 and 4",
+        kind.name()
+    );
+    // the run must actually have learned something for the comparison to
+    // mean anything (guards against a silently dead second-order path)
+    assert!(
+        r1.losses.last().unwrap().1.is_finite(),
+        "{}: training produced non-finite loss",
+        kind.name()
+    );
+}
+
+#[test]
+fn shampoo_parallelism_is_bit_identical() {
+    assert_bit_identical(SecondOrderKind::Shampoo, 22);
+}
+
+#[test]
+fn caspr_parallelism_is_bit_identical() {
+    assert_bit_identical(SecondOrderKind::Caspr, 22);
+}
+
+#[test]
+fn kfac_parallelism_is_bit_identical() {
+    assert_bit_identical(SecondOrderKind::KFac, 12);
+}
+
+#[test]
+fn staggered_parallelism_is_bit_identical_too() {
+    // determinism must hold under the staggered schedule as well
+    let (p1, r1) = run(engine_cfg(SecondOrderKind::Shampoo, 1, true, 22));
+    let (p4, r4) = run(engine_cfg(SecondOrderKind::Shampoo, 4, true, 22));
+    assert_eq!(loss_bits(&r1.losses), loss_bits(&r4.losses));
+    assert_eq!(param_bits(&p1), param_bits(&p4));
+}
+
+#[test]
+fn staggered_piru_matches_batch_quality() {
+    let steps = 60;
+    let (_, batch) = run(engine_cfg(SecondOrderKind::Shampoo, 2, false, steps));
+    let (_, stag) = run(engine_cfg(SecondOrderKind::Shampoo, 2, true, steps));
+    // staggered PIRU must do real inverse-root work...
+    assert!(stag.timings.piru_secs > 0.0, "staggered run never ran PIRU");
+    // ...and land at the same quality as the batch schedule
+    let eb = batch.final_eval.as_ref().unwrap();
+    let es = stag.final_eval.as_ref().unwrap();
+    assert!(eb.accuracy.unwrap() > 0.3, "batch arm did not learn");
+    assert!(es.accuracy.unwrap() > 0.3, "staggered arm did not learn");
+    assert!(
+        (eb.loss - es.loss).abs() < 0.5,
+        "staggered eval loss {} vs batch {} drifted apart",
+        es.loss,
+        eb.loss
+    );
+}
+
+#[test]
+fn timings_account_every_stage() {
+    let (_, res) = run(engine_cfg(SecondOrderKind::Shampoo, 2, false, 20));
+    let tm = &res.timings;
+    assert_eq!(tm.steps, 20);
+    assert!(tm.model_step_secs > 0.0);
+    assert!(tm.pu_secs > 0.0, "T1=5 over 20 steps must hit PU");
+    assert!(tm.piru_secs > 0.0, "T2=10 over 20 steps must hit PIRU");
+    assert!(tm.precond_secs > 0.0);
+    assert!(tm.first_order_secs > 0.0);
+    assert!(tm.max_step_secs > 0.0 && tm.max_step_index >= 1);
+    assert!(tm.second_order_secs() <= res.wall_secs);
+}
+
+#[test]
+fn precondition_inputs_share_state_buffers() {
+    // the §Perf satellite: per-step precondition must alias cached state via
+    // Arc, not clone it — O(1) tensor clones are the contract the parallel
+    // engine's task submissions rely on
+    let t = HostTensor::f32(&[64, 64], vec![0.5; 64 * 64]);
+    let submitted: Vec<HostTensor> = (0..8).map(|_| t.clone()).collect();
+    for s in &submitted {
+        assert!(t.shares_buffer(s), "HostTensor::clone must share, not copy");
+    }
+}

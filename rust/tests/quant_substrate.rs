@@ -34,7 +34,7 @@ fn roundtrip_error_bounded_all_mappings_and_bits() {
                     for (i, (&xv, &dv)) in chunk.iter().zip(&d[b * block..]).enumerate() {
                         if (xv - dv).abs() > bound {
                             return Err(format!(
-                                "{mapping:?}/{bits} block {b} elem {i}: {xv} vs {dv} (bound {bound})"
+                                "{mapping:?}/{bits} block {b} elem {i}: {xv} vs {dv}, bound {bound}"
                             ));
                         }
                     }

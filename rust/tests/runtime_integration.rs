@@ -33,9 +33,10 @@ fn synth_input(io: &IoSpec, rng: &mut Rng) -> HostTensor {
                 let b = Mat::randn(d, d + 8, rng);
                 HostTensor::f32(&io.shape, b.gram().scale(1.0 / d as f32).data)
             }
-            "lam" | "diag" => {
-                HostTensor::f32(&io.shape, (0..numel).map(|_| rng.normal_f32().abs() + 0.1).collect())
-            }
+            "lam" | "diag" => HostTensor::f32(
+                &io.shape,
+                (0..numel).map(|_| rng.normal_f32().abs() + 0.1).collect(),
+            ),
             "scales" | "l_scales" | "r_scales" => HostTensor::f32(
                 &io.shape,
                 (0..numel).map(|_| rng.normal_f32().abs() * 0.1 + 0.01).collect(),
@@ -44,9 +45,10 @@ fn synth_input(io: &IoSpec, rng: &mut Rng) -> HostTensor {
                 &io.shape,
                 (0..numel).map(|_| rng.normal_f32().powi(2) * 0.01).collect(),
             ),
-            "l_diag" | "r_diag" => {
-                HostTensor::f32(&io.shape, (0..numel).map(|_| rng.normal_f32().abs() + 0.5).collect())
-            }
+            "l_diag" | "r_diag" => HostTensor::f32(
+                &io.shape,
+                (0..numel).map(|_| rng.normal_f32().abs() + 0.5).collect(),
+            ),
             "lhat" | "rhat" => {
                 let d = io.shape[0];
                 let mut b = Mat::randn(d, d, rng).scale(0.05);
@@ -176,7 +178,9 @@ fn pu_piru_pipeline_tracks_eigendecomposition() {
     }
 
     // reconstruct VΛVᵀ from the quantized state
-    let v_out = rt.execute("dequant_cols_64", &[codes.clone(), scales.clone(), cb_t.clone()]).unwrap();
+    let v_out = rt
+        .execute("dequant_cols_64", &[codes.clone(), scales.clone(), cb_t.clone()])
+        .unwrap();
     let v = Mat::from_vec(n, n, v_out[0].as_f32().unwrap().to_vec());
     let recon = Mat::sandwich(&v, lam.as_f32().unwrap());
     let nre_pu = recon.sub(&a).frobenius() / a.frobenius();
@@ -382,7 +386,7 @@ mod pjrt_golden {
                         shampoo4::runtime::TensorData::F32(a),
                         shampoo4::runtime::TensorData::F32(b),
                     ) => {
-                        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
                             let both_nan = x.is_nan() && y.is_nan();
                             assert!(
                                 both_nan || (x - y).abs() <= 1e-4 + 1e-4 * y.abs(),

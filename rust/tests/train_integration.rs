@@ -101,6 +101,61 @@ fn checkpoint_roundtrip_resumes_identically() {
 }
 
 #[test]
+fn checkpoint_resume_is_equivalent_to_straight_run() {
+    // optimizer state (AdamW moments + step counter) rides along in the
+    // checkpoint, so 10 steps + save/load + 10 steps must be bit-identical
+    // to 20 straight steps
+    let rt = backend();
+    let dir = std::env::temp_dir().join("shampoo4_resume_test");
+    let ckpt = dir.join("ck.bin");
+    let mut cfg = base_cfg(20);
+    cfg.name = "it_resume".into();
+    cfg.first.kind = FirstOrderKind::AdamW;
+    cfg.first.lr = 1e-3;
+    cfg.first.weight_decay = 0.05;
+    cfg.second.kind = SecondOrderKind::None;
+    cfg.schedule = shampoo4::config::Schedule::Constant;
+
+    let mut straight = Trainer::new(&rt, cfg.clone()).unwrap();
+    straight.train(&rt, None).unwrap();
+
+    let mut first_half_cfg = cfg.clone();
+    first_half_cfg.steps = 10;
+    let mut first_half = Trainer::new(&rt, first_half_cfg).unwrap();
+    first_half.train(&rt, None).unwrap();
+    first_half.save_checkpoint(&ckpt, 10).unwrap();
+
+    let mut resumed = Trainer::new(&rt, cfg).unwrap();
+    assert_eq!(resumed.load_checkpoint(&ckpt).unwrap(), 10);
+    assert_eq!(resumed.model.params, first_half.model.params);
+    let res = resumed.train(&rt, None).unwrap(); // continues at step 11
+    assert_eq!(res.timings.steps, 10, "resume must run only the back half");
+    assert_eq!(
+        resumed.model.params, straight.model.params,
+        "resumed run diverged from the straight run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_rejects_mismatched_optimizer() {
+    let rt = backend();
+    let dir = std::env::temp_dir().join("shampoo4_ckpt_opt_test");
+    let ckpt = dir.join("ck.bin");
+    let mut cfg = base_cfg(1);
+    cfg.name = "it_ckpt_opt".into();
+    cfg.second.kind = SecondOrderKind::None;
+    let t = Trainer::new(&rt, cfg.clone()).unwrap();
+    t.save_checkpoint(&ckpt, 1).unwrap(); // SGDM state
+    let mut cfg2 = cfg;
+    cfg2.first.kind = FirstOrderKind::AdamW;
+    let mut t2 = Trainer::new(&rt, cfg2).unwrap();
+    let err = t2.load_checkpoint(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("SGDM"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn checkpoint_rejects_wrong_model() {
     let rt = backend();
     let dir = std::env::temp_dir().join("shampoo4_ckpt_test2");
