@@ -70,10 +70,12 @@ fn main() {
         std::hint::black_box(rt.execute("gram_128x128", &[g128.clone()]).unwrap());
     }).report());
 
-    // precond4 with identity-ish states
+    // precond4 with identity-ish states (SideState stores through the
+    // StateCodec layer; the 16-entry runtime codebook comes from the codec)
     let cfg2 = shampoo4::config::SecondOrderConfig::default();
-    let cbrt = shampoo4::coordinator::state::codebook_for(&cfg2.quant);
-    let side = shampoo4::coordinator::state::SideState::new(128, &cfg2, &cbrt);
+    let codec = shampoo4::quant::codec_for(cfg2.quant.bits, cfg2.quant.mapping);
+    let side = shampoo4::coordinator::state::SideState::new(128, &cfg2, &codec);
+    let cbrt: Vec<f32> = side.runtime_codebook().unwrap().to_vec();
     let mut inputs = vec![g128.clone()];
     inputs.extend(side.invroot_inputs().unwrap());
     inputs.extend(side.invroot_inputs().unwrap());
@@ -97,6 +99,26 @@ fn main() {
     println!("{}", slow.run("backend/piru_128 (T2 path)", || {
         std::hint::black_box(rt.execute("piru_128", &piru_inputs).unwrap());
     }).report());
+
+    // ---- state codecs -------------------------------------------------------
+    // the per-step first-order overhead of codec storage: decode + encode of
+    // a 1M-element moment buffer at each bitwidth
+    {
+        use shampoo4::quant::{codec_for, StateCodec};
+        let xs = rng.normal_vec(1 << 20);
+        for (label, codec) in [
+            ("codec/fp32 1M roundtrip", codec_for(32, Mapping::Dt)),
+            ("codec/bf16 1M roundtrip", codec_for(16, Mapping::Dt)),
+            ("codec/q8-dt 1M roundtrip", codec_for(8, Mapping::Dt)),
+            ("codec/q4-dt 1M roundtrip", codec_for(4, Mapping::Dt)),
+        ] {
+            let enc = codec.encode(&xs);
+            println!("{}", slow.run(label, || {
+                let d = codec.decode(std::hint::black_box(&enc));
+                std::hint::black_box(codec.encode(&d));
+            }).report());
+        }
+    }
 
     // ---- full training step ----------------------------------------------
     let mut cfg = RunConfig::default();

@@ -179,6 +179,12 @@ pub struct FirstOrderConfig {
     pub eps: f32,
     /// M-FAC gradient history length.
     pub mfac_m: usize,
+    /// Storage bitwidth for first-order moment buffers (`first_order.bits`):
+    /// 32 = fp32 (default), 16 = bf16, 2–8 = block-wise quantized states
+    /// (Dettmers et al. 2021 / Li et al. 2023 — the Table 13 baselines).
+    pub bits: u32,
+    /// Codebook mapping for quantized moment storage (`first_order.mapping`).
+    pub mapping: Mapping,
 }
 
 impl Default for FirstOrderConfig {
@@ -192,6 +198,8 @@ impl Default for FirstOrderConfig {
             beta2: 0.999,
             eps: 1e-8,
             mfac_m: 8,
+            bits: 32,
+            mapping: Mapping::Dt,
         }
     }
 }
@@ -271,6 +279,9 @@ impl RunConfig {
         f.beta2 = doc.f64_or("optimizer.beta2", f.beta2 as f64) as f32;
         f.eps = doc.f64_or("optimizer.eps", f.eps as f64) as f32;
         f.mfac_m = doc.usize_or("optimizer.mfac_m", f.mfac_m);
+        f.bits = doc.usize_or("first_order.bits", f.bits as usize) as u32;
+        f.mapping = Mapping::parse(&doc.str_or("first_order.mapping", f.mapping.name()))
+            .context("first_order.mapping")?;
 
         let s = &mut cfg.second;
         s.kind = SecondOrderKind::parse(&doc.str_or("shampoo.kind", "shampoo"))?;
@@ -304,7 +315,29 @@ impl RunConfig {
             },
             other => bail!("unknown schedule {other:?}"),
         };
+        cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Reject storage policies no codec implements (checked again by
+    /// `Trainer::new` so CLI overrides are validated too).
+    pub fn validate(&self) -> Result<()> {
+        if !matches!(self.first.bits, 2..=8 | 16 | 32) {
+            bail!(
+                "first_order.bits must be 2–8 (quantized), 16 (bf16), or 32 (fp32); got {}",
+                self.first.bits
+            );
+        }
+        if self.second.kind != SecondOrderKind::None
+            && !matches!(self.second.quant.bits, 3 | 4 | 16 | 32)
+        {
+            bail!(
+                "quant.bits must be 3 or 4 (quantized kernels) or 16/32 (dense) for \
+                 second-order runs; got {}",
+                self.second.quant.bits
+            );
+        }
+        Ok(())
     }
 
     pub fn from_file(path: &Path) -> Result<Self> {
@@ -392,6 +425,23 @@ warmup = 20
         let cfg = RunConfig::from_toml_str("[shampoo]\nparallelism = 0").unwrap();
         assert_eq!(cfg.second.parallelism, 1);
         assert!(!cfg.second.stagger_invroots);
+    }
+
+    #[test]
+    fn first_order_codec_policy_parses() {
+        let cfg =
+            RunConfig::from_toml_str("[first_order]\nbits = 4\nmapping = \"dt\"").unwrap();
+        assert_eq!(cfg.first.bits, 4);
+        assert_eq!(cfg.first.mapping, Mapping::Dt);
+        assert_eq!(RunConfig::default().first.bits, 32);
+        assert!(RunConfig::from_toml_str("[first_order]\nbits = 12").is_err());
+        assert!(RunConfig::from_toml_str("[first_order]\nmapping = \"bogus\"").is_err());
+        // second-order 8-bit has no 16-entry kernel codebook...
+        assert!(RunConfig::from_toml_str("[quant]\nbits = 8").is_err());
+        // ...but is fine when the second-order arm is disabled
+        assert!(
+            RunConfig::from_toml_str("[shampoo]\nenabled = false\n[quant]\nbits = 8").is_ok()
+        );
     }
 
     #[test]

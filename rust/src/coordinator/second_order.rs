@@ -14,8 +14,9 @@ use crate::config::{SecondOrderConfig, SecondOrderKind};
 use crate::coordinator::model::ModelHandle;
 use crate::coordinator::partition::{extract_block, partition, scatter_block, Block};
 use crate::coordinator::scheduler::{stagger_phase, Scheduler};
-use crate::coordinator::state::{codebook_for, run_invroot, run_pu, SideState};
+use crate::coordinator::state::{run_invroot, run_pu, SideState};
 use crate::linalg::Mat;
+use crate::quant::codec_for;
 use crate::runtime::{Backend, HostTensor};
 
 pub struct BlockPre {
@@ -30,7 +31,6 @@ pub struct BlockPre {
 
 pub struct SecondOrder {
     pub cfg: SecondOrderConfig,
-    pub cb: Vec<f32>,
     pub blocks: Vec<BlockPre>,
     /// K-FAC/AdaBK mode: whole-layer preconditioners fed by activation /
     /// gradient statistics instead of GGᵀ (Algorithm 5).
@@ -43,7 +43,14 @@ pub struct SecondOrder {
 
 impl SecondOrder {
     pub fn new(cfg: &SecondOrderConfig, model: &ModelHandle, buckets: &[usize]) -> Result<Self> {
-        let cb = codebook_for(&cfg.quant);
+        if !matches!(cfg.quant.bits, 3 | 4 | 16 | 32) {
+            return Err(anyhow!(
+                "second-order quant.bits must be 3 or 4 (quantized kernels) or 16/32 \
+                 (dense), got {}",
+                cfg.quant.bits
+            ));
+        }
+        let codec = codec_for(cfg.quant.bits, cfg.quant.mapping);
         let kfac_mode = matches!(cfg.kind, SecondOrderKind::KFac | SecondOrderKind::AdaBk);
         let blocks = if kfac_mode {
             if model.spec.kind != "mlp" {
@@ -72,20 +79,75 @@ impl SecondOrder {
         let blocks = blocks
             .into_iter()
             .map(|b| BlockPre {
-                left: SideState::new(b.bm, cfg, &cb),
-                right: SideState::new(b.bn, cfg, &cb),
+                left: SideState::new(b.bm, cfg, &codec),
+                right: SideState::new(b.bn, cfg, &codec),
                 block: b,
                 inv_cache: None,
             })
             .collect();
         Ok(Self {
             cfg: cfg.clone(),
-            cb,
             blocks,
             kfac_mode,
             host_fallbacks: 0,
             scheduler: Scheduler::new(cfg.parallelism),
         })
+    }
+
+    /// Serialize every block's (left, right) state for checkpoints —
+    /// raw codec bytes, so restore is bit-exact.
+    pub fn serialize_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for bp in &self.blocks {
+            out.extend(bp.left.serialize());
+            out.extend(bp.right.serialize());
+        }
+        out
+    }
+
+    /// Restore a blob written by [`SecondOrder::serialize_state`] into this
+    /// (identically configured) instance. The whole blob is parsed and
+    /// validated before any block is touched (atomic restore); cached
+    /// precondition inputs are invalidated, and the next step rebuilds them
+    /// from the restored state.
+    pub fn restore_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut off = 0usize;
+        let mut restored = Vec::with_capacity(self.blocks.len() * 2);
+        for (bi, bp) in self.blocks.iter().enumerate() {
+            for side in [&bp.left, &bp.right] {
+                let (s, used) = SideState::deserialize(&bytes[off..])?;
+                if s.order() != side.order()
+                    || s.arm_name() != side.arm_name()
+                    || s.codec_name() != side.codec_name()
+                {
+                    return Err(anyhow!(
+                        "checkpoint second-order block {bi} is {}@{} ({}), run expects \
+                         {}@{} ({})",
+                        s.arm_name(),
+                        s.order(),
+                        s.codec_name(),
+                        side.arm_name(),
+                        side.order(),
+                        side.codec_name()
+                    ));
+                }
+                restored.push(s);
+                off += used;
+            }
+        }
+        if off != bytes.len() {
+            return Err(anyhow!(
+                "second-order checkpoint blob has {} trailing bytes",
+                bytes.len() - off
+            ));
+        }
+        let mut it = restored.into_iter();
+        for bp in self.blocks.iter_mut() {
+            bp.left = it.next().expect("one side per parsed entry");
+            bp.right = it.next().expect("one side per parsed entry");
+            bp.inv_cache = None;
+        }
+        Ok(())
     }
 
     /// Worker count of the block engine (1 = serial).
@@ -113,9 +175,7 @@ impl SecondOrder {
     ) -> Result<()> {
         let beta = self.cfg.beta;
         let kind = self.cfg.kind;
-        let bits = self.cfg.quant.bits;
         let kfac_mode = self.kfac_mode;
-        let cb = &self.cb;
         self.scheduler.par_map_mut(&mut self.blocks, |bi, bp| {
             let (m, n) = (bp.block.bm, bp.block.bn);
             let (l_stat, r_stat) = if kfac_mode {
@@ -132,8 +192,8 @@ impl SecondOrder {
                 let outs = rt.execute(&format!("gram_{m}x{n}"), &[HostTensor::f32(&[m, n], g)])?;
                 (outs[0].clone(), outs[1].clone())
             };
-            run_pu(rt, &mut bp.left, l_stat, beta, cb, kind, bits)?;
-            run_pu(rt, &mut bp.right, r_stat, beta, cb, kind, bits)
+            run_pu(rt, &mut bp.left, l_stat, beta, kind)?;
+            run_pu(rt, &mut bp.right, r_stat, beta, kind)
         })?;
         Ok(())
     }
@@ -152,8 +212,6 @@ impl SecondOrder {
         }
         let eps = self.cfg.eps;
         let kind = self.cfg.kind;
-        let bits = self.cfg.quant.bits;
-        let cb = &self.cb;
         let mut selected = vec![false; self.blocks.len()];
         for &i in idxs {
             selected[i] = true;
@@ -166,8 +224,8 @@ impl SecondOrder {
             .map(|(_, bp)| bp)
             .collect();
         self.scheduler.par_map_mut(&mut cohort, |_, bp| {
-            run_invroot(rt, &mut bp.left, eps, cb, kind, bits)?;
-            run_invroot(rt, &mut bp.right, eps, cb, kind, bits)?;
+            run_invroot(rt, &mut bp.left, eps, kind)?;
+            run_invroot(rt, &mut bp.right, eps, kind)?;
             bp.inv_cache = None; // invalidate cached precondition inputs
             Ok(())
         })?;
@@ -203,15 +261,14 @@ impl SecondOrder {
         grads: &mut [Vec<f32>],
     ) -> Result<()> {
         let caspr = self.cfg.kind == SecondOrderKind::Caspr;
-        let cb = &self.cb;
         let grads_ro: &[Vec<f32>] = grads;
         let results = self.scheduler.par_map_mut(&mut self.blocks, |_, bp| {
             let (m, n) = (bp.block.bm, bp.block.bn);
             let shape = &model.shapes[bp.block.param_idx];
             let g = extract_block(&grads_ro[bp.block.param_idx], shape, &bp.block);
 
-            let artifact = match (&bp.left, &bp.right) {
-                (SideState::Dense { .. }, SideState::Dense { .. }) => {
+            let artifact = match (bp.left.is_dense(), bp.right.is_dense()) {
+                (true, true) => {
                     let name = if caspr {
                         format!("caspr32_{m}x{n}")
                     } else {
@@ -219,8 +276,8 @@ impl SecondOrder {
                     };
                     rt.has_artifact(&name).then_some(name)
                 }
-                (SideState::Dense { .. }, _) | (_, SideState::Dense { .. }) => None,
-                _ => {
+                (true, false) | (false, true) => None,
+                (false, false) => {
                     let name = if caspr {
                         format!("caspr4_{m}x{n}")
                     } else {
@@ -235,8 +292,8 @@ impl SecondOrder {
                     if bp.inv_cache.is_none() {
                         let mut state = bp.left.invroot_inputs()?;
                         state.extend(bp.right.invroot_inputs()?);
-                        if !bp.left.is_dense() {
-                            state.push(HostTensor::f32(&[16], cb.to_vec()));
+                        if let Some(rcb) = bp.left.runtime_codebook() {
+                            state.push(HostTensor::f32(&[16], rcb.to_vec()));
                         }
                         bp.inv_cache = Some(state);
                     }
@@ -251,8 +308,8 @@ impl SecondOrder {
                         &g,
                         m,
                         n,
-                        &bp.left.invroot_host(cb, 0),
-                        &bp.right.invroot_host(cb, 0),
+                        &bp.left.invroot_host(0),
+                        &bp.right.invroot_host(0),
                         caspr,
                     );
                     Ok((gt, true))

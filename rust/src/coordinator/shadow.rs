@@ -8,7 +8,6 @@ use crate::config::SecondOrderConfig;
 use crate::coordinator::model::ModelHandle;
 use crate::coordinator::partition::extract_block;
 use crate::coordinator::second_order::SecondOrder;
-use crate::coordinator::state::SideState;
 use crate::errors::{angle_error_deg, nre};
 use crate::linalg::{invroot_eigh, Mat};
 use crate::runtime::{Backend, HostTensor};
@@ -37,10 +36,7 @@ impl ShadowTracker {
     /// preconditioner of a Swin-Tiny parameter; we track the first
     /// max-bucket block).
     pub fn new(second: &SecondOrder, cfg: &SecondOrderConfig) -> Option<Self> {
-        let idx = second
-            .blocks
-            .iter()
-            .position(|b| !matches!(b.left, SideState::Dense { .. }))?;
+        let idx = second.blocks.iter().position(|b| !b.left.is_dense())?;
         let n = second.blocks[idx].block.bm;
         Some(Self {
             block_idx: idx,
@@ -82,7 +78,7 @@ impl ShadowTracker {
     /// 32-bit shadow (host-exact eigendecomposition for the reference).
     pub fn measure(&self, step: usize, second: &SecondOrder) -> Result<Option<ShadowRow>> {
         let bp = &second.blocks[self.block_idx];
-        let l4 = bp.left.precond_host(&second.cb, self.rectify);
+        let l4 = bp.left.precond_host(self.rectify);
         let nre_p = nre(&l4, &self.l32);
         let ae_p = angle_error_deg(&l4, &self.l32);
 
@@ -93,7 +89,7 @@ impl ShadowTracker {
             4.0,
             1e-30,
         );
-        let inv4 = bp.left.invroot_host(&second.cb, 0);
+        let inv4 = bp.left.invroot_host(0);
         Ok(Some(ShadowRow {
             step,
             nre_precond: nre_p,

@@ -1,110 +1,157 @@
-//! Per-block preconditioner state: the quantized (ours), dense (32-bit
-//! baseline), and naive (quantize-A) arms of the paper, with exact byte
+//! Per-block preconditioner state: the quantized (ours), dense (32-bit /
+//! bf16 baseline), and naive (quantize-A) arms of the paper, with exact byte
 //! accounting and the host-side mirror used when no artifact pair matches.
+//!
+//! A [`SideState`] is a thin wrapper over `StateCodec`-encoded buffers: the
+//! codec owns the codebook, block layout, byte accounting, and checkpoint
+//! serialization, so no codebook plumbing leaks into the orchestration
+//! layer and saved second-order state round-trips bit-exactly.
 
-use anyhow::{anyhow, Result};
+use std::sync::Arc;
 
-use crate::config::{QuantConfig, SecondOrderConfig, SecondOrderKind};
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{SecondOrderConfig, SecondOrderKind};
 use crate::linalg::{bjorck, Mat};
-use crate::quant::{
-    dequantize_matrix_cols, quantize_matrix_cols, runtime_codebook, QuantizedVec,
-};
+use crate::quant::{codec_by_name, fp32, EncodedVec, StateCodec};
 use crate::runtime::{Backend, HostTensor};
 
 /// One side (L or R) of a block's preconditioner pair.
-#[derive(Debug, Clone)]
-pub enum SideState {
-    /// Ours: eigenvalues + quantized eigenbasis; inverse root as 32-bit
-    /// diagonal + quantized off-diagonal (Algorithms 1–3).
+pub struct SideState {
+    codec: Arc<dyn StateCodec>,
+    arm: SideArm,
+}
+
+enum SideArm {
+    /// Ours: eigenvalues + codec-encoded eigenbasis; inverse root as 32-bit
+    /// diagonal + codec-encoded off-diagonal (Algorithms 1–3).
     Quantized {
         lam: Vec<f32>,
-        codes: QuantizedVec,
+        codes: EncodedVec,
         inv_diag: Vec<f32>,
-        inv_codes: QuantizedVec,
+        inv_codes: EncodedVec,
     },
-    /// 32-bit baseline (Algorithm 4): dense L and L̂.
-    Dense { l: Mat, lhat: Mat },
+    /// Dense baseline (Algorithm 4): full L and L̂ stored through the codec
+    /// (`Fp32` for the 32-bit arm, `Bf16` for the 16-bit arm).
+    Dense { n: usize, l: EncodedVec, lhat: EncodedVec },
     /// Naive arm (§3.1): A quantized directly (diag in 32-bit), inverse
     /// root also quantized; Schur–Newton recomputes it.
     Naive {
         diag: Vec<f32>,
-        codes: QuantizedVec,
+        codes: EncodedVec,
         inv_diag: Vec<f32>,
-        inv_codes: QuantizedVec,
+        inv_codes: EncodedVec,
     },
 }
 
 impl SideState {
-    pub fn new(n: usize, cfg: &SecondOrderConfig, cb: &[f32]) -> SideState {
+    /// Build the initial state for an order-n side under `cfg`'s policy,
+    /// storing through `codec`. Small matrices (below `min_quant_elems`)
+    /// stay 32-bit dense regardless of the policy.
+    pub fn new(n: usize, cfg: &SecondOrderConfig, codec: &Arc<dyn StateCodec>) -> SideState {
         let q = &cfg.quant;
-        let quantizable = q.bits < 32 && n * n >= q.min_quant_elems;
+        let quantizable =
+            codec.runtime_codebook().is_some() && q.bits < 16 && n * n >= q.min_quant_elems;
         if !quantizable {
-            return SideState::Dense {
-                l: Mat::eye(n).scale(cfg.eps),
-                lhat: Mat::eye(n),
-            };
+            // dense arm: the 16-bit policy stores bf16 (when the matrix is
+            // big enough to be policy-governed), small matrices stay fp32
+            let big = n * n >= q.min_quant_elems;
+            let side_codec: Arc<dyn StateCodec> =
+                if q.bits == 16 && big { codec.clone() } else { fp32() };
+            let l = side_codec.encode_matrix(&Mat::eye(n).scale(cfg.eps).data, n);
+            let lhat = side_codec.encode_matrix(&Mat::eye(n).data, n);
+            return SideState { codec: side_codec, arm: SideArm::Dense { n, l, lhat } };
         }
+        let zeros = vec![0.0f32; n * n];
         if q.quantize_eigen {
-            let eye = Mat::eye(n);
-            let codes = quantize_matrix_cols(&eye.data, n, cb, q.bits);
-            let zeros = vec![0.0f32; n * n];
-            let inv_codes = quantize_matrix_cols(&zeros, n, cb, q.bits);
-            SideState::Quantized {
-                lam: vec![cfg.eps; n],
-                codes,
-                inv_diag: vec![1.0; n],
-                inv_codes,
+            let codes = codec.encode_matrix(&Mat::eye(n).data, n);
+            let inv_codes = codec.encode_matrix(&zeros, n);
+            SideState {
+                codec: codec.clone(),
+                arm: SideArm::Quantized {
+                    lam: vec![cfg.eps; n],
+                    codes,
+                    inv_diag: vec![1.0; n],
+                    inv_codes,
+                },
             }
         } else {
             // naive: A₀ = ε·I stored as (diag, quantized zeros)
-            let zeros = vec![0.0f32; n * n];
-            let codes = quantize_matrix_cols(&zeros, n, cb, q.bits);
-            let inv_codes = quantize_matrix_cols(&zeros, n, cb, q.bits);
-            SideState::Naive {
-                diag: vec![cfg.eps; n],
-                codes,
-                inv_diag: vec![1.0; n],
-                inv_codes,
+            let codes = codec.encode_matrix(&zeros, n);
+            let inv_codes = codec.encode_matrix(&zeros, n);
+            SideState {
+                codec: codec.clone(),
+                arm: SideArm::Naive {
+                    diag: vec![cfg.eps; n],
+                    codes,
+                    inv_diag: vec![1.0; n],
+                    inv_codes,
+                },
             }
         }
     }
 
     pub fn order(&self) -> usize {
-        match self {
-            SideState::Quantized { lam, .. } => lam.len(),
-            SideState::Dense { l, .. } => l.rows,
-            SideState::Naive { diag, .. } => diag.len(),
+        match &self.arm {
+            SideArm::Quantized { lam, .. } => lam.len(),
+            SideArm::Dense { n, .. } => *n,
+            SideArm::Naive { diag, .. } => diag.len(),
         }
     }
 
     /// Exact state bytes (preconditioner + inverse root).
     pub fn state_bytes(&self) -> usize {
-        match self {
-            SideState::Quantized { lam, codes, inv_diag, inv_codes } => {
+        match &self.arm {
+            SideArm::Quantized { lam, codes, inv_diag, inv_codes } => {
                 lam.len() * 4
-                    + codes.state_bytes()
+                    + codes.bytes.len()
                     + inv_diag.len() * 4
-                    + inv_codes.state_bytes()
+                    + inv_codes.bytes.len()
             }
-            SideState::Dense { l, lhat } => (l.data.len() + lhat.data.len()) * 4,
-            SideState::Naive { diag, codes, inv_diag, inv_codes } => {
+            SideArm::Dense { l, lhat, .. } => l.bytes.len() + lhat.bytes.len(),
+            SideArm::Naive { diag, codes, inv_diag, inv_codes } => {
                 diag.len() * 4
-                    + codes.state_bytes()
+                    + codes.bytes.len()
                     + inv_diag.len() * 4
-                    + inv_codes.state_bytes()
+                    + inv_codes.bytes.len()
             }
+        }
+    }
+
+    /// Which artifact family this side uses ("quant" / "dense" / "naive").
+    pub fn arm_name(&self) -> &'static str {
+        match &self.arm {
+            SideArm::Quantized { .. } => "quant",
+            SideArm::Dense { .. } => "dense",
+            SideArm::Naive { .. } => "naive",
+        }
+    }
+
+    /// The storage codec's checkpoint identifier.
+    pub fn codec_name(&self) -> String {
+        self.codec.name()
+    }
+
+    /// The 16-entry runtime codebook quantized artifacts take as input;
+    /// `None` on dense arms.
+    pub fn runtime_codebook(&self) -> Option<&[f32]> {
+        match &self.arm {
+            SideArm::Dense { .. } => None,
+            _ => self.codec.runtime_codebook(),
         }
     }
 
     /// Host-side reconstruction of Â (the inverse root) — used by the
     /// fallback preconditioner and the shadow/error analyses.
-    pub fn invroot_host(&self, cb: &[f32], rectify: usize) -> Mat {
-        match self {
-            SideState::Dense { lhat, .. } => lhat.clone(),
-            SideState::Quantized { inv_diag, inv_codes, .. }
-            | SideState::Naive { inv_diag, inv_codes, .. } => {
-                let n = inv_diag.len();
-                let off = dequantize_matrix_cols(inv_codes, n, cb);
+    pub fn invroot_host(&self, rectify: usize) -> Mat {
+        let n = self.order();
+        match &self.arm {
+            SideArm::Dense { lhat, .. } => {
+                Mat::from_vec(n, n, self.codec.decode_matrix(lhat, n))
+            }
+            SideArm::Quantized { inv_diag, inv_codes, .. }
+            | SideArm::Naive { inv_diag, inv_codes, .. } => {
+                let off = self.codec.decode_matrix(inv_codes, n);
                 let mut m = Mat::from_vec(n, n, off);
                 for i in 0..n {
                     m[(i, i)] = inv_diag[i];
@@ -117,22 +164,19 @@ impl SideState {
 
     /// Host-side reconstruction of the preconditioner A itself
     /// (shadow-mode NRE/AE, Figures 7/8).
-    pub fn precond_host(&self, cb: &[f32], rectify: usize) -> Mat {
-        match self {
-            SideState::Dense { l, .. } => l.clone(),
-            SideState::Quantized { lam, codes, .. } => {
-                let n = lam.len();
-                let v0 = dequantize_matrix_cols(codes, n, cb);
-                let mut v = Mat::from_vec(n, n, v0);
+    pub fn precond_host(&self, rectify: usize) -> Mat {
+        let n = self.order();
+        match &self.arm {
+            SideArm::Dense { l, .. } => Mat::from_vec(n, n, self.codec.decode_matrix(l, n)),
+            SideArm::Quantized { lam, codes, .. } => {
+                let mut v = Mat::from_vec(n, n, self.codec.decode_matrix(codes, n));
                 if rectify > 0 {
                     v = bjorck(&v, rectify);
                 }
                 Mat::sandwich(&v, lam)
             }
-            SideState::Naive { diag, codes, .. } => {
-                let n = diag.len();
-                let off = dequantize_matrix_cols(codes, n, cb);
-                let mut m = Mat::from_vec(n, n, off);
+            SideArm::Naive { diag, codes, .. } => {
+                let mut m = Mat::from_vec(n, n, self.codec.decode_matrix(codes, n));
                 m.symmetrize();
                 for i in 0..n {
                     m[(i, i)] = diag[i];
@@ -146,117 +190,252 @@ impl SideState {
 
     /// Inputs encoding this side's *preconditioner* state for pu artifacts.
     pub fn pu_inputs(&self) -> Result<Vec<HostTensor>> {
-        match self {
-            SideState::Quantized { lam, codes, .. } => Ok(quant_state_tensors(lam, codes)),
-            SideState::Naive { diag, codes, .. } => Ok(quant_state_tensors(diag, codes)),
-            SideState::Dense { l, .. } => Ok(vec![HostTensor::f32(
-                &[l.rows, l.cols],
-                l.data.clone(),
+        match &self.arm {
+            SideArm::Quantized { lam, codes, .. } => {
+                quant_state_tensors(lam, codes, self.codec.as_ref())
+            }
+            SideArm::Naive { diag, codes, .. } => {
+                quant_state_tensors(diag, codes, self.codec.as_ref())
+            }
+            SideArm::Dense { n, l, .. } => Ok(vec![HostTensor::f32(
+                &[*n, *n],
+                self.codec.decode_matrix(l, *n),
             )]),
         }
     }
 
     /// Inputs encoding this side's *inverse root* for precond artifacts.
     pub fn invroot_inputs(&self) -> Result<Vec<HostTensor>> {
-        match self {
-            SideState::Quantized { inv_diag, inv_codes, .. }
-            | SideState::Naive { inv_diag, inv_codes, .. } => {
-                Ok(quant_state_tensors(inv_diag, inv_codes))
+        match &self.arm {
+            SideArm::Quantized { inv_diag, inv_codes, .. }
+            | SideArm::Naive { inv_diag, inv_codes, .. } => {
+                quant_state_tensors(inv_diag, inv_codes, self.codec.as_ref())
             }
-            SideState::Dense { lhat, .. } => Ok(vec![HostTensor::f32(
-                &[lhat.rows, lhat.cols],
-                lhat.data.clone(),
+            SideArm::Dense { n, lhat, .. } => Ok(vec![HostTensor::f32(
+                &[*n, *n],
+                self.codec.decode_matrix(lhat, *n),
             )]),
         }
     }
 
     /// Update the preconditioner state from pu artifact outputs.
-    pub fn absorb_pu(&mut self, outs: &[HostTensor], bits: u32) -> Result<()> {
-        match self {
-            SideState::Quantized { lam, codes, .. } => {
+    pub fn absorb_pu(&mut self, outs: &[HostTensor]) -> Result<()> {
+        match &mut self.arm {
+            SideArm::Quantized { lam, codes, .. } => {
                 *lam = outs[0].clone().into_f32()?;
-                *codes = quantized_from_tensors(&outs[1], &outs[2], bits)?;
+                *codes = self.codec.from_artifact(outs[1].as_u8()?, outs[2].as_f32()?)?;
             }
-            SideState::Naive { diag, codes, .. } => {
+            SideArm::Naive { diag, codes, .. } => {
                 *diag = outs[0].clone().into_f32()?;
-                *codes = quantized_from_tensors(&outs[1], &outs[2], bits)?;
+                *codes = self.codec.from_artifact(outs[1].as_u8()?, outs[2].as_f32()?)?;
             }
-            SideState::Dense { l, .. } => {
-                let n = l.rows;
-                l.data = outs[0].clone().into_f32()?;
-                assert_eq!(l.data.len(), n * n);
+            SideArm::Dense { n, l, .. } => {
+                let data = outs[0].clone().into_f32()?;
+                if data.len() != *n * *n {
+                    bail!("dense pu output has {} elems, expected {}", data.len(), *n * *n);
+                }
+                *l = self.codec.encode_matrix(&data, *n);
             }
         }
         Ok(())
     }
 
     /// Update the inverse-root state from piru / invroot artifact outputs.
-    pub fn absorb_invroot(&mut self, outs: &[HostTensor], bits: u32) -> Result<()> {
-        match self {
-            SideState::Quantized { inv_diag, inv_codes, .. }
-            | SideState::Naive { inv_diag, inv_codes, .. } => {
+    pub fn absorb_invroot(&mut self, outs: &[HostTensor]) -> Result<()> {
+        match &mut self.arm {
+            SideArm::Quantized { inv_diag, inv_codes, .. }
+            | SideArm::Naive { inv_diag, inv_codes, .. } => {
                 *inv_diag = outs[0].clone().into_f32()?;
-                *inv_codes = quantized_from_tensors(&outs[1], &outs[2], bits)?;
+                *inv_codes =
+                    self.codec.from_artifact(outs[1].as_u8()?, outs[2].as_f32()?)?;
             }
-            SideState::Dense { lhat, .. } => {
-                let n = lhat.rows;
-                lhat.data = outs[0].clone().into_f32()?;
-                assert_eq!(lhat.data.len(), n * n);
+            SideArm::Dense { n, lhat, .. } => {
+                let data = outs[0].clone().into_f32()?;
+                if data.len() != *n * *n {
+                    bail!(
+                        "dense invroot output has {} elems, expected {}",
+                        data.len(),
+                        *n * *n
+                    );
+                }
+                *lhat = self.codec.encode_matrix(&data, *n);
             }
         }
         Ok(())
     }
 
     pub fn is_dense(&self) -> bool {
-        matches!(self, SideState::Dense { .. })
+        matches!(self.arm, SideArm::Dense { .. })
+    }
+
+    // ---- checkpoint serialization --------------------------------------
+
+    /// Serialize for checkpoints: arm tag + codec name + order + the raw
+    /// codec payloads (no requantization — byte-exact round-trip).
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.push(match &self.arm {
+            SideArm::Quantized { .. } => 0u8,
+            SideArm::Dense { .. } => 1,
+            SideArm::Naive { .. } => 2,
+        });
+        let name = self.codec.name();
+        out.push(name.len() as u8);
+        out.extend_from_slice(name.as_bytes());
+        put_u32(&mut out, self.order());
+        match &self.arm {
+            SideArm::Quantized { lam, codes, inv_diag, inv_codes }
+            | SideArm::Naive { diag: lam, codes, inv_diag, inv_codes } => {
+                put_f32s(&mut out, lam);
+                put_enc(&mut out, codes);
+                put_f32s(&mut out, inv_diag);
+                put_enc(&mut out, inv_codes);
+            }
+            SideArm::Dense { l, lhat, .. } => {
+                put_enc(&mut out, l);
+                put_enc(&mut out, lhat);
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`SideState::serialize`]. Returns the state and the bytes
+    /// consumed (sides are concatenated in checkpoint blobs).
+    pub fn deserialize(bytes: &[u8]) -> Result<(SideState, usize)> {
+        let mut r = Reader { b: bytes, i: 0 };
+        let tag = r.u8()?;
+        let name_len = r.u8()? as usize;
+        let name = String::from_utf8(r.bytes(name_len)?.to_vec())
+            .map_err(|_| anyhow!("checkpoint side-state codec name is not UTF-8"))?;
+        let codec = codec_by_name(&name)?;
+        let n = r.u32()?;
+        let arm = match tag {
+            0 | 2 => {
+                let diag = r.f32s()?;
+                let codes = r.enc()?;
+                let inv_diag = r.f32s()?;
+                let inv_codes = r.enc()?;
+                if diag.len() != n || inv_diag.len() != n {
+                    bail!("side-state diagonal length mismatch for order {n}");
+                }
+                if codes.len != n * n || inv_codes.len != n * n {
+                    bail!("side-state code length mismatch for order {n}");
+                }
+                if tag == 0 {
+                    SideArm::Quantized { lam: diag, codes, inv_diag, inv_codes }
+                } else {
+                    SideArm::Naive { diag, codes, inv_diag, inv_codes }
+                }
+            }
+            1 => {
+                let l = r.enc()?;
+                let lhat = r.enc()?;
+                if l.len != n * n || lhat.len != n * n {
+                    bail!("dense side-state length mismatch for order {n}");
+                }
+                SideArm::Dense { n, l, lhat }
+            }
+            other => bail!("unknown side-state arm tag {other}"),
+        };
+        // payload lengths must match what the named codec would produce for
+        // an order-n matrix (column-blocked codecs clamp the block to n)
+        let side = SideState { codec, arm };
+        let check = |e: &EncodedVec| -> Result<()> {
+            if e.bytes.len() != side.codec.matrix_state_bytes(n) {
+                bail!(
+                    "side-state payload is {} bytes, codec {} expects {}",
+                    e.bytes.len(),
+                    side.codec.name(),
+                    side.codec.matrix_state_bytes(n)
+                );
+            }
+            Ok(())
+        };
+        match &side.arm {
+            SideArm::Quantized { codes, inv_codes, .. }
+            | SideArm::Naive { codes, inv_codes, .. } => {
+                check(codes)?;
+                check(inv_codes)?;
+            }
+            SideArm::Dense { l, lhat, .. } => {
+                check(l)?;
+                check(lhat)?;
+            }
+        }
+        Ok((side, r.i))
     }
 }
 
-fn quant_state_tensors(diag: &[f32], q: &QuantizedVec) -> Vec<HostTensor> {
-    let nb = q.scales.len();
-    let blk = q.block;
-    vec![
+// ---- serialization helpers ------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, v: usize) {
+    out.extend_from_slice(&(v as u32).to_le_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len());
+    for &x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn put_enc(out: &mut Vec<u8>, e: &EncodedVec) {
+    put_u32(out, e.len);
+    put_u32(out, e.bytes.len());
+    out.extend_from_slice(&e.bytes);
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("side-state blob truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<usize> {
+        let s = self.bytes(4)?;
+        Ok(u32::from_le_bytes(s.try_into().unwrap()) as usize)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()?;
+        let s = self.bytes(n * 4)?;
+        Ok(s.chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn enc(&mut self) -> Result<EncodedVec> {
+        let len = self.u32()?;
+        let nbytes = self.u32()?;
+        Ok(EncodedVec { bytes: self.bytes(nbytes)?.to_vec(), len })
+    }
+}
+
+fn quant_state_tensors(
+    diag: &[f32],
+    enc: &EncodedVec,
+    codec: &dyn StateCodec,
+) -> Result<Vec<HostTensor>> {
+    let (codes, scales, block) = codec.to_artifact(enc)?;
+    let nb = scales.len();
+    Ok(vec![
         HostTensor::f32(&[diag.len()], diag.to_vec()),
-        HostTensor::u8(&[nb, blk], q.codes_u8()),
-        HostTensor::f32(&[nb], q.scales.clone()),
-    ]
-}
-
-fn quantized_from_tensors(
-    codes: &HostTensor,
-    scales: &HostTensor,
-    bits: u32,
-) -> Result<QuantizedVec> {
-    let blk = *codes
-        .shape
-        .last()
-        .ok_or_else(|| anyhow!("codes tensor must be 2-D"))?;
-    let raw = codes.as_u8()?;
-    Ok(QuantizedVec {
-        packed: crate::quant::pack_bits(raw, bits),
-        scales: scales.as_f32()?.to_vec(),
-        len: raw.len(),
-        bits,
-        block: blk,
-    })
-}
-
-/// Which artifact family a side uses at a given order.
-pub fn artifact_arm(side: &SideState) -> &'static str {
-    match side {
-        SideState::Quantized { .. } => "quant",
-        SideState::Dense { .. } => "dense",
-        SideState::Naive { .. } => "naive",
-    }
-}
-
-/// Build the runtime codebook for a quant config.
-pub fn codebook_for(q: &QuantConfig) -> Vec<f32> {
-    if q.bits >= 32 {
-        // unused; return a dummy 16-entry book
-        return vec![0.0; 16];
-    }
-    runtime_codebook(q.mapping, q.bits)
+        HostTensor::u8(&[nb, block], codes),
+        HostTensor::f32(&[nb], scales),
+    ])
 }
 
 /// The exponent tag piru/invroot artifacts use for a second-order kind.
@@ -268,38 +447,43 @@ pub fn exponent_tag(kind: SecondOrderKind) -> &'static str {
     }
 }
 
+fn codebook_tensor(side: &SideState) -> Result<HostTensor> {
+    let rcb = side.runtime_codebook().ok_or_else(|| {
+        anyhow!("codec {} has no runtime codebook for artifacts", side.codec_name())
+    })?;
+    Ok(HostTensor::f32(&[16], rcb.to_vec()))
+}
+
 /// Execute the appropriate PU artifact for one side.
 pub fn run_pu(
     rt: &dyn Backend,
     side: &mut SideState,
     m_stat: HostTensor,
     beta: f32,
-    cb: &[f32],
     kind: SecondOrderKind,
-    bits: u32,
 ) -> Result<()> {
     let n = side.order();
     let kfac_like = matches!(kind, SecondOrderKind::KFac | SecondOrderKind::AdaBk);
     let mut inputs = side.pu_inputs()?;
     inputs.push(m_stat);
     inputs.push(HostTensor::scalar_f32(beta));
-    let name = match side {
-        SideState::Quantized { .. } => {
-            inputs.push(HostTensor::f32(&[16], cb.to_vec()));
+    let name = match side.arm_name() {
+        "quant" => {
+            inputs.push(codebook_tensor(side)?);
             if kfac_like && n == 128 {
                 "pu_kfac_128".to_string()
             } else {
                 format!("pu_{n}")
             }
         }
-        SideState::Naive { .. } => {
-            inputs.push(HostTensor::f32(&[16], cb.to_vec()));
+        "naive" => {
+            inputs.push(codebook_tensor(side)?);
             format!("pu_naive_{n}")
         }
-        SideState::Dense { .. } => format!("pu_dense_{n}"),
+        _ => format!("pu_dense_{n}"),
     };
     let outs = rt.execute(&name, &inputs)?;
-    side.absorb_pu(&outs, bits)
+    side.absorb_pu(&outs)
 }
 
 /// Execute the appropriate PIRU / inverse-root artifact for one side.
@@ -307,40 +491,35 @@ pub fn run_invroot(
     rt: &dyn Backend,
     side: &mut SideState,
     eps: f32,
-    cb: &[f32],
     kind: SecondOrderKind,
-    bits: u32,
 ) -> Result<()> {
     let n = side.order();
     let tag = exponent_tag(kind);
-    let mut inputs = match side {
-        SideState::Dense { .. } => side.pu_inputs()?, // dense: (l,)
-        _ => side.pu_inputs()?,                       // quant/naive: (diag, codes, scales)
-    };
+    let mut inputs = side.pu_inputs()?; // dense: (l,) ; quant/naive: (diag, codes, scales)
     inputs.push(HostTensor::scalar_f32(eps));
-    let name = match side {
-        SideState::Quantized { .. } => {
-            inputs.push(HostTensor::f32(&[16], cb.to_vec()));
+    let name = match side.arm_name() {
+        "quant" => {
+            inputs.push(codebook_tensor(side)?);
             format!("piru{tag}_{n}")
         }
-        SideState::Naive { .. } => {
-            inputs.push(HostTensor::f32(&[16], cb.to_vec()));
+        "naive" => {
+            inputs.push(codebook_tensor(side)?);
             // naive inverse root is Schur–Newton at s = -1/4 only (the
             // naive arm is a Shampoo ablation; K-FAC naive is not a paper
             // configuration)
             format!("invroot_naive_{n}")
         }
-        SideState::Dense { .. } => format!("invroot_dense{tag}_{n}"),
+        _ => format!("invroot_dense{tag}_{n}"),
     };
     let outs = rt.execute(&name, &inputs)?;
-    side.absorb_invroot(&outs, bits)
+    side.absorb_invroot(&outs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::SecondOrderConfig;
-    use crate::quant::Mapping;
+    use crate::quant::{codec_for, Mapping};
 
     fn cfg(bits: u32, eigen: bool) -> SecondOrderConfig {
         let mut c = SecondOrderConfig::default();
@@ -350,60 +529,100 @@ mod tests {
         c
     }
 
+    fn side(n: usize, c: &SecondOrderConfig) -> SideState {
+        let codec = codec_for(c.quant.bits, c.quant.mapping);
+        SideState::new(n, c, &codec)
+    }
+
     #[test]
     fn small_matrices_stay_dense() {
         let c = cfg(4, true);
-        let cb = codebook_for(&c.quant);
-        let s = SideState::new(32, &c, &cb); // 32² = 1024 < 4096
+        let s = side(32, &c); // 32² = 1024 < 4096
         assert!(s.is_dense());
-        let s = SideState::new(64, &c, &cb); // 64² = 4096: quantized
+        assert_eq!(s.codec_name(), "fp32");
+        let s = side(64, &c); // 64² = 4096: quantized
         assert!(!s.is_dense());
+        assert_eq!(s.codec_name(), "q4-linear2");
     }
 
     #[test]
     fn init_states_reconstruct_identity_scaled() {
         let c = cfg(4, true);
-        let cb = codebook_for(&c.quant);
-        let s = SideState::new(64, &c, &cb);
+        let s = side(64, &c);
         // A₀ ≈ ε·I ; Â₀ = I
-        let a = s.precond_host(&cb, 0);
+        let a = s.precond_host(0);
         let eye_eps = Mat::eye(64).scale(c.eps);
         assert!(a.sub(&eye_eps).frobenius() < 1e-4);
-        let ah = s.invroot_host(&cb, 0);
+        let ah = s.invroot_host(0);
         assert!(ah.sub(&Mat::eye(64)).frobenius() < 1e-6);
     }
 
     #[test]
     fn naive_init_reconstructs_identity_scaled() {
         let c = cfg(4, false);
-        let cb = codebook_for(&c.quant);
-        let s = SideState::new(64, &c, &cb);
-        assert!(matches!(s, SideState::Naive { .. }));
-        let a = s.precond_host(&cb, 0);
+        let s = side(64, &c);
+        assert_eq!(s.arm_name(), "naive");
+        let a = s.precond_host(0);
         assert!(a.sub(&Mat::eye(64).scale(c.eps)).frobenius() < 1e-4);
     }
 
     #[test]
     fn state_bytes_scale_with_bits() {
-        let cb4 = codebook_for(&cfg(4, true).quant);
-        let s4 = SideState::new(128, &cfg(4, true), &cb4);
-        let s32 = SideState::new(128, &cfg(32, true), &cb4);
+        let s4 = side(128, &cfg(4, true));
+        let s32 = side(128, &cfg(32, true));
         // 4-bit: 2 quantized matrices + 2 f32 vectors ≈ (2·(8192+1024) + 1024)
         // 32-bit: 2 dense matrices = 2·65536 B
         let b4 = s4.state_bytes();
         let b32 = s32.state_bytes();
         assert!(b32 as f64 / b4 as f64 > 6.0, "{b32} / {b4}");
+        // bf16 dense arm: exactly half the fp32 dense bytes
+        let s16 = side(128, &cfg(16, true));
+        assert!(s16.is_dense());
+        assert_eq!(s16.codec_name(), "bf16");
+        assert_eq!(s16.state_bytes() * 2, s32.state_bytes());
     }
 
     #[test]
     fn pu_inputs_shapes() {
         let c = cfg(4, true);
-        let cb = codebook_for(&c.quant);
-        let s = SideState::new(64, &c, &cb);
+        let s = side(64, &c);
         let ins = s.pu_inputs().unwrap();
         assert_eq!(ins.len(), 3);
         assert_eq!(ins[0].shape, vec![64]);
         assert_eq!(ins[1].shape, vec![64, 64]); // 4096/64 blocks × 64
         assert_eq!(ins[2].shape, vec![64]);
+    }
+
+    #[test]
+    fn serialize_round_trips_every_arm() {
+        for c in [cfg(4, true), cfg(4, false), cfg(32, true), cfg(16, true)] {
+            let s = side(64, &c);
+            let blob = s.serialize();
+            let (back, used) = SideState::deserialize(&blob).unwrap();
+            assert_eq!(used, blob.len());
+            assert_eq!(back.arm_name(), s.arm_name());
+            assert_eq!(back.codec_name(), s.codec_name());
+            assert_eq!(back.order(), 64);
+            assert_eq!(back.state_bytes(), s.state_bytes());
+            // byte-exact: re-serialization is identical
+            assert_eq!(back.serialize(), blob);
+        }
+        assert!(SideState::deserialize(&[9, 0]).is_err());
+    }
+
+    #[test]
+    fn sub_block_orders_serialize_round_trip() {
+        // min_quant_elems below 32² quantizes an order-32 side; its column
+        // blocks are 32-long, so the payload check must use the clamped
+        // matrix block accounting
+        let mut c = cfg(4, true);
+        c.quant.min_quant_elems = 512;
+        let s = side(32, &c);
+        assert!(!s.is_dense());
+        let blob = s.serialize();
+        let (back, used) = SideState::deserialize(&blob).unwrap();
+        assert_eq!(used, blob.len());
+        assert_eq!(back.order(), 32);
+        assert_eq!(back.state_bytes(), s.state_bytes());
     }
 }

@@ -1,9 +1,10 @@
 //! The training loop (Algorithm 3 end-to-end): data pipeline → model step
 //! artifact → second-order preconditioning (parallel block engine, with
 //! batch or staggered inverse-root scheduling) → native first-order update,
-//! with per-stage wall-time accounting, eval, metrics, checkpointing (params
-//! + first-order optimizer state + step — exact resume for first-order runs;
-//! second-order preconditioner statistics are rebuilt online after resume),
+//! with per-stage wall-time accounting, eval, metrics, checkpointing
+//! (params + codec-encoded first- AND second-order optimizer state + step —
+//! raw codec bytes round-trip bit-exactly, so a resumed run continues the
+//! exact trajectory of an uninterrupted one for every optimizer family),
 //! exact memory accounting, and the optional 32-bit shadow for dynamic
 //! quantization-error tracking (Figures 7/8).
 
@@ -18,7 +19,8 @@ use crate::coordinator::scheduler::StepTimings;
 use crate::coordinator::second_order::SecondOrder;
 use crate::coordinator::shadow::ShadowTracker;
 use crate::errors;
-use crate::optim::{build_first_order, FirstOrder};
+use crate::optim::{build_first_order, FirstOrder, StateSnapshot};
+use crate::quant::EncodedVec;
 use crate::runtime::Backend;
 use crate::util::json::Json;
 
@@ -90,6 +92,7 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(rt: &dyn Backend, cfg: RunConfig) -> Result<Self> {
+        cfg.validate()?;
         let model = ModelHandle::new(rt, &cfg.model, cfg.seed)?;
         let flat_len = model.param_count();
         let warmup = match cfg.schedule {
@@ -286,28 +289,40 @@ impl Trainer {
         })
     }
 
-    /// Save parameters + full first-order optimizer state + step metadata
-    /// (JSON header line, raw f32 LE payload: params then optimizer
-    /// buffers). For first-order runs, loading restores the exact
-    /// optimization trajectory. Second-order preconditioner state is *not*
-    /// serialized: after resume it re-initializes and re-warms from the next
-    /// PU/PIRU cycles (EMA statistics recover within a few T1 intervals), so
-    /// a resumed second-order run is not bit-identical to an uninterrupted
-    /// one.
+    /// Save parameters + full optimizer state + step metadata (JSON header
+    /// line, then a binary payload: params as f32 LE, the first-order
+    /// buffers as raw codec bytes, and the second-order blocks as raw codec
+    /// bytes). Codec payloads are persisted verbatim — no requantization —
+    /// so loading restores the exact optimization trajectory for both
+    /// optimizer families at any state bitwidth.
     pub fn save_checkpoint(&self, path: &Path, step: usize) -> Result<()> {
         use std::io::Write;
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        let (opt_bufs, opt_counters) = self.first.export_state();
-        let buf_lens: Vec<usize> = opt_bufs.iter().map(|b| b.len()).collect();
+        let snap = self.first.export_state();
+        let buf_lens: Vec<usize> = snap.buffers.iter().map(|(_, e)| e.len).collect();
+        let buf_bytes: Vec<usize> = snap.buffers.iter().map(|(_, e)| e.bytes.len()).collect();
+        let buf_codecs: Vec<Json> = snap
+            .buffers
+            .iter()
+            .map(|(name, _)| Json::Str(name.clone()))
+            .collect();
+        let second_blob = self
+            .second
+            .as_ref()
+            .map(|s| s.serialize_state())
+            .unwrap_or_default();
         let header = Json::obj(vec![
             ("model", Json::Str(self.model.name.clone())),
             ("step", Json::Num(step as f64)),
             ("param_count", Json::Num(self.model.param_count() as f64)),
             ("opt", Json::Str(self.first.name().to_string())),
             ("opt_buffers", Json::arr_usize(&buf_lens)),
-            ("opt_counters", Json::arr_f64(&opt_counters)),
+            ("opt_bytes", Json::arr_usize(&buf_bytes)),
+            ("opt_codecs", Json::Arr(buf_codecs)),
+            ("opt_counters", Json::arr_f64(&snap.counters)),
+            ("second_order_bytes", Json::Num(second_blob.len() as f64)),
         ])
         .to_string();
         let mut f = std::fs::File::create(path)?;
@@ -316,19 +331,20 @@ impl Trainer {
             let bytes: Vec<u8> = p.iter().flat_map(|x| x.to_le_bytes()).collect();
             f.write_all(&bytes)?;
         }
-        for b in &opt_bufs {
-            let bytes: Vec<u8> = b.iter().flat_map(|x| x.to_le_bytes()).collect();
-            f.write_all(&bytes)?;
+        for (_, e) in &snap.buffers {
+            f.write_all(&e.bytes)?;
         }
+        f.write_all(&second_blob)?;
         Ok(())
     }
 
     /// Load a checkpoint written by `save_checkpoint`: restores parameters,
-    /// the first-order optimizer state (when recorded), and the resume
-    /// position — a subsequent `train` continues at step + 1. Returns the
-    /// step. Exact for first-order runs; warns when a second-order
-    /// preconditioner is configured, since its statistics restart from
-    /// initialization (see `save_checkpoint`).
+    /// the first-order optimizer state, the second-order preconditioner
+    /// state (when both the checkpoint and this run have one), and the
+    /// resume position — a subsequent `train` continues at step + 1.
+    /// Returns the step. The restore is bit-exact: codec payloads are
+    /// adopted verbatim, so the resumed loss trajectory is identical to an
+    /// uninterrupted run.
     pub fn load_checkpoint(&mut self, path: &Path) -> Result<usize> {
         use std::io::Read;
         let mut f = std::fs::File::open(path)?;
@@ -345,45 +361,79 @@ impl Trainer {
             anyhow::bail!("checkpoint is for {model}, trainer has {}", self.model.name);
         }
         let mut off = nl + 1;
-        let read_f32s = |off: &mut usize, n: usize| -> Result<Vec<f32>> {
-            if all.len() < *off + 4 * n {
+        fn take<'a>(all: &'a [u8], off: &mut usize, n: usize) -> Result<&'a [u8]> {
+            if all.len() < *off + n {
                 anyhow::bail!("checkpoint truncated at byte {}", *off);
             }
-            let mut v = vec![0.0f32; n];
-            for x in v.iter_mut() {
-                *x = f32::from_le_bytes(all[*off..*off + 4].try_into().unwrap());
-                *off += 4;
-            }
-            Ok(v)
-        };
+            let s = &all[*off..*off + n];
+            *off += n;
+            Ok(s)
+        }
         let mut new_params = Vec::with_capacity(self.model.params.len());
         for p in &self.model.params {
-            new_params.push(read_f32s(&mut off, p.len())?);
+            let raw = take(&all, &mut off, p.len() * 4)?;
+            new_params.push(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect::<Vec<f32>>(),
+            );
         }
         self.model.params = new_params;
-        if let Some(lens) = header.get("opt_buffers").and_then(|j| j.usize_vec()) {
-            let opt = header.get("opt").and_then(|j| j.as_str()).unwrap_or("");
-            if opt != self.first.name() {
-                anyhow::bail!(
-                    "checkpoint optimizer state is for {opt}, trainer has {}",
-                    self.first.name()
-                );
-            }
-            let counters: Vec<f64> = header
-                .get("opt_counters")
-                .and_then(|j| j.as_arr())
-                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
-                .unwrap_or_default();
-            let mut bufs = Vec::with_capacity(lens.len());
-            for n in lens {
-                bufs.push(read_f32s(&mut off, n)?);
-            }
-            self.first.import_state(bufs, &counters)?;
+
+        let opt = header.get("opt").and_then(|j| j.as_str()).unwrap_or("");
+        if opt != self.first.name() {
+            anyhow::bail!(
+                "checkpoint optimizer state is for {opt}, trainer has {}",
+                self.first.name()
+            );
         }
-        if self.second.is_some() {
+        let lens = header
+            .get("opt_buffers")
+            .and_then(|j| j.usize_vec())
+            .context("opt_buffers")?;
+        let byte_lens = header
+            .get("opt_bytes")
+            .and_then(|j| j.usize_vec())
+            .context("opt_bytes")?;
+        let codecs: Vec<String> = header
+            .get("opt_codecs")
+            .and_then(|j| j.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(str::to_string)).collect())
+            .context("opt_codecs")?;
+        if lens.len() != byte_lens.len() || lens.len() != codecs.len() {
+            anyhow::bail!("checkpoint optimizer buffer metadata is inconsistent");
+        }
+        let counters: Vec<f64> = header
+            .get("opt_counters")
+            .and_then(|j| j.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default();
+        let mut buffers = Vec::with_capacity(lens.len());
+        for ((len, nbytes), codec) in lens.into_iter().zip(byte_lens).zip(codecs) {
+            let bytes = take(&all, &mut off, nbytes)?.to_vec();
+            buffers.push((codec, EncodedVec { bytes, len }));
+        }
+        self.first.import_state(StateSnapshot { buffers, counters })?;
+
+        let so_bytes = header
+            .get("second_order_bytes")
+            .and_then(|j| j.as_usize())
+            .unwrap_or(0);
+        if so_bytes > 0 {
+            let blob = take(&all, &mut off, so_bytes)?;
+            match self.second.as_mut() {
+                Some(second) => second
+                    .restore_state(blob)
+                    .context("restoring second-order state")?,
+                None => eprintln!(
+                    "load_checkpoint: checkpoint carries second-order state but this run \
+                     has no second-order optimizer; ignoring it"
+                ),
+            }
+        } else if self.second.is_some() {
             eprintln!(
-                "load_checkpoint: second-order preconditioner state is not checkpointed; \
-                 statistics re-warm from initialization over the next T1/T2 cycles"
+                "load_checkpoint: checkpoint has no second-order state; statistics \
+                 re-warm from initialization over the next T1/T2 cycles"
             );
         }
         let step = header.get("step").and_then(|j| j.as_usize()).unwrap_or(0);

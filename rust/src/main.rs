@@ -4,6 +4,9 @@
 //!   train        [--config cfg.toml] [--model M] [--steps N] [--optimizer F]
 //!                [--shampoo-bits 4|32] [--kind shampoo|caspr|kfac|adabk]
 //!                [--mapping linear2|dt] [--quantize-eigen true|false]
+//!                [--first-order-bits 4|8|16|32] [--first-order-mapping dt|linear2]
+//!                (StateCodec policy for first-order moment buffers — 4-bit
+//!                AdamW/SGDM states, the Table 13 memory baseline regime)
 //!                [--backend host|pjrt|auto] [--out runs/NAME]
 //!                [--shadow-quant-error]
 //!                [--parallelism N] [--stagger-invroots]
@@ -93,6 +96,13 @@ pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if let Some(v) = args.get("quantize-eigen") {
         cfg.second.quant.quantize_eigen = v == "true";
     }
+    if let Some(b) = args.get("first-order-bits") {
+        cfg.first.bits = b.parse().context("--first-order-bits")?;
+    }
+    if let Some(m) = args.get("first-order-mapping") {
+        cfg.first.mapping =
+            Mapping::parse(m).with_context(|| format!("bad --first-order-mapping {m}"))?;
+    }
     if let Some(v) = args.get("rectify") {
         cfg.second.quant.rectify = v == "true";
     }
@@ -132,15 +142,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => RunConfig::default(),
     };
     apply_cli_overrides(&mut cfg, args)?;
+    cfg.validate()?;
     let dir = artifact_dir(args);
     let rt = backend_by_name(&cfg.backend, &dir)?;
     let rt = rt.as_ref();
     println!(
-        "platform={} model={} steps={} F={} second={} bits={} mapping={} parallelism={} piru={}",
+        "platform={} model={} steps={} F={}@{}bit second={} bits={} mapping={} \
+         parallelism={} piru={}",
         rt.platform(),
         cfg.model,
         cfg.steps,
         cfg.first.kind.name(),
+        cfg.first.bits,
         cfg.second.kind.name(),
         cfg.second.quant.bits,
         cfg.second.quant.mapping.name(),

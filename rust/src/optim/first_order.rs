@@ -5,8 +5,30 @@
 //! Implemented: SGDM, AdamW, NAdamW, Adagrad (the paper's Fs), plus the
 //! comparison arms of Appendix H: schedule-free SGD/AdamW [Defazio et al.]
 //! and M-FAC (separate module).
+//!
+//! Every moment buffer lives in a [`StateBuf`] — codec-encoded storage
+//! behind the `first_order.bits` / `first_order.mapping` policy — so the
+//! same optimizers run with fp32, bf16, 8-bit, or 4-bit states (the
+//! Table 13 memory baselines of Dettmers et al. 2021 / Li et al. 2023).
+//! With the default `Fp32` codec every trajectory is bit-identical to
+//! direct f32 storage; quantized codecs decode → update → re-encode each
+//! step, which *is* the low-bit optimizer algorithm.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
+
+use crate::quant::{fp32, EncodedVec, StateBuf, StateCodec};
+
+/// Serialized optimizer state: codec-encoded buffers (codec name + payload)
+/// plus scalar counters. Checkpoints persist the payload bytes verbatim, so
+/// export → import round-trips are bit-exact even for quantized states —
+/// a resumed run continues the exact trajectory.
+#[derive(Debug, Clone)]
+pub struct StateSnapshot {
+    pub buffers: Vec<(String, EncodedVec)>,
+    pub counters: Vec<f64>,
+}
 
 /// A first-order optimizer over a flat parameter vector.
 pub trait FirstOrder {
@@ -25,67 +47,113 @@ pub trait FirstOrder {
 
     fn name(&self) -> &'static str;
 
-    /// Snapshot the full mutable state as (ordered f32 buffers, scalar
-    /// counters) — enough for `import_state` on an identically configured
+    /// Snapshot the full mutable state as codec-encoded buffers + scalar
+    /// counters — enough for `import_state` on an identically configured
     /// optimizer to resume bit-identically. Buffer/counter order is each
     /// optimizer's contract; checkpoints persist both.
-    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>);
+    fn export_state(&self) -> StateSnapshot;
 
     /// Restore a snapshot produced by [`FirstOrder::export_state`].
-    fn import_state(&mut self, buffers: Vec<Vec<f32>>, counters: &[f64]) -> Result<()>;
+    fn import_state(&mut self, snap: StateSnapshot) -> Result<()>;
 }
 
-/// Shared validation for `import_state` impls: buffer count + lengths.
-fn check_buffers(who: &str, buffers: &[Vec<f32>], lens: &[usize]) -> Result<()> {
-    if buffers.len() != lens.len() {
-        bail!("{who}: expected {} state buffers, got {}", lens.len(), buffers.len());
+/// Shared export helper: encoded buffers in declaration order + counters.
+fn snapshot(bufs: &[&StateBuf], counters: Vec<f64>) -> StateSnapshot {
+    StateSnapshot {
+        buffers: bufs
+            .iter()
+            .map(|b| (b.codec().name(), b.encoded().clone()))
+            .collect(),
+        counters,
     }
-    for (i, (b, &n)) in buffers.iter().zip(lens).enumerate() {
-        if b.len() != n {
-            bail!("{who}: state buffer {i} has {} elems, expected {n}", b.len());
+}
+
+/// Shared validation + restore for `import_state` impls: buffer count,
+/// codec identity, and payload lengths. Validates EVERY buffer before
+/// mutating any, so a failed import leaves the optimizer untouched.
+/// Returns the snapshot's counters.
+fn restore_buffers(
+    who: &str,
+    bufs: &mut [&mut StateBuf],
+    snap: StateSnapshot,
+) -> Result<Vec<f64>> {
+    if snap.buffers.len() != bufs.len() {
+        bail!(
+            "{who}: expected {} state buffers, got {}",
+            bufs.len(),
+            snap.buffers.len()
+        );
+    }
+    for (i, ((name, enc), buf)) in snap.buffers.iter().zip(bufs.iter()).enumerate() {
+        if *name != buf.codec().name() {
+            bail!(
+                "{who}: state buffer {i} was saved with codec {name}, optimizer uses {}",
+                buf.codec().name()
+            );
+        }
+        if enc.len != buf.len() || enc.bytes.len() != buf.codec().state_bytes(enc.len) {
+            bail!(
+                "{who}: state buffer {i} payload is ({} elems, {} bytes), expected \
+                 ({} elems, {} bytes)",
+                enc.len,
+                enc.bytes.len(),
+                buf.len(),
+                buf.codec().state_bytes(buf.len())
+            );
         }
     }
-    Ok(())
+    for ((_, enc), buf) in snap.buffers.into_iter().zip(bufs.iter_mut()) {
+        buf.restore(enc).expect("validated above");
+    }
+    Ok(snap.counters)
 }
 
 // ---------------------------------------------------------------------------
 
 pub struct Sgdm {
-    buf: Vec<f32>,
+    buf: StateBuf,
     pub momentum: f32,
     pub weight_decay: f32,
 }
 
 impl Sgdm {
     pub fn new(n: usize, momentum: f32, weight_decay: f32) -> Self {
-        Self { buf: vec![0.0; n], momentum, weight_decay }
+        Self { buf: StateBuf::zeros(n, fp32()), momentum, weight_decay }
+    }
+
+    /// Store the momentum buffer through `codec` (the `first_order.bits`
+    /// policy). States are zero at construction, so this is lossless.
+    pub fn with_codec(mut self, codec: Arc<dyn StateCodec>) -> Self {
+        self.buf = StateBuf::zeros(self.buf.len(), codec);
+        self
     }
 }
 
 impl FirstOrder for Sgdm {
     fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        let mut buf = self.buf.load();
         for i in 0..params.len() {
             let g = grad[i] + self.weight_decay * params[i];
-            self.buf[i] = self.momentum * self.buf[i] + g;
-            params[i] -= lr * self.buf[i];
+            buf[i] = self.momentum * buf[i] + g;
+            params[i] -= lr * buf[i];
         }
+        self.buf.store(&buf);
     }
 
     fn state_bytes(&self) -> usize {
-        self.buf.len() * 4
+        self.buf.state_bytes()
     }
 
     fn name(&self) -> &'static str {
         "SGDM"
     }
 
-    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
-        (vec![self.buf.clone()], Vec::new())
+    fn export_state(&self) -> StateSnapshot {
+        snapshot(&[&self.buf], Vec::new())
     }
 
-    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, _counters: &[f64]) -> Result<()> {
-        check_buffers("SGDM", &buffers, &[self.buf.len()])?;
-        self.buf = buffers.remove(0);
+    fn import_state(&mut self, snap: StateSnapshot) -> Result<()> {
+        restore_buffers("SGDM", &mut [&mut self.buf], snap)?;
         Ok(())
     }
 }
@@ -93,8 +161,8 @@ impl FirstOrder for Sgdm {
 // ---------------------------------------------------------------------------
 
 pub struct AdamW {
-    m: Vec<f32>,
-    v: Vec<f32>,
+    m: StateBuf,
+    v: StateBuf,
     step: u64,
     pub beta1: f32,
     pub beta2: f32,
@@ -106,8 +174,8 @@ pub struct AdamW {
 impl AdamW {
     pub fn new(n: usize, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
         Self {
-            m: vec![0.0; n],
-            v: vec![0.0; n],
+            m: StateBuf::zeros(n, fp32()),
+            v: StateBuf::zeros(n, fp32()),
             step: 0,
             beta1,
             beta2,
@@ -121,6 +189,14 @@ impl AdamW {
     pub fn nadamw(n: usize, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
         Self { nesterov: true, ..Self::new(n, beta1, beta2, eps, weight_decay) }
     }
+
+    /// Store both moments through `codec` (the `first_order.bits` policy).
+    pub fn with_codec(mut self, codec: Arc<dyn StateCodec>) -> Self {
+        let n = self.m.len();
+        self.m = StateBuf::zeros(n, codec.clone());
+        self.v = StateBuf::zeros(n, codec);
+        self
+    }
 }
 
 impl FirstOrder for AdamW {
@@ -130,39 +206,42 @@ impl FirstOrder for AdamW {
         let bc1 = 1.0 - self.beta1.powf(t);
         let bc2 = 1.0 - self.beta2.powf(t);
         let bc1_next = 1.0 - self.beta1.powf(t + 1.0);
+        let mut m = self.m.load();
+        let mut v = self.v.load();
         for i in 0..params.len() {
             let g = grad[i];
-            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
-            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g;
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
             let mh = if self.nesterov {
-                (self.beta1 * self.m[i] + (1.0 - self.beta1) * g) / bc1_next
+                (self.beta1 * m[i] + (1.0 - self.beta1) * g) / bc1_next
             } else {
-                self.m[i] / bc1
+                m[i] / bc1
             };
-            let vh = self.v[i] / bc2;
+            let vh = v[i] / bc2;
             params[i] -= lr * (mh / (vh.sqrt() + self.eps) + self.weight_decay * params[i]);
         }
+        self.m.store(&m);
+        self.v.store(&v);
     }
 
     fn state_bytes(&self) -> usize {
-        (self.m.len() + self.v.len()) * 4
+        self.m.state_bytes() + self.v.state_bytes()
     }
 
     fn name(&self) -> &'static str {
         if self.nesterov { "NAdamW" } else { "AdamW" }
     }
 
-    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
-        (vec![self.m.clone(), self.v.clone()], vec![self.step as f64])
+    fn export_state(&self) -> StateSnapshot {
+        snapshot(&[&self.m, &self.v], vec![self.step as f64])
     }
 
-    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, counters: &[f64]) -> Result<()> {
-        check_buffers(self.name(), &buffers, &[self.m.len(), self.v.len()])?;
-        let Some(&step) = counters.first() else {
-            bail!("{}: missing step counter", self.name())
+    fn import_state(&mut self, snap: StateSnapshot) -> Result<()> {
+        let who = self.name();
+        let Some(&step) = snap.counters.first() else {
+            bail!("{who}: missing step counter")
         };
-        self.v = buffers.pop().unwrap();
-        self.m = buffers.pop().unwrap();
+        restore_buffers(who, &mut [&mut self.m, &mut self.v], snap)?;
         self.step = step as u64;
         Ok(())
     }
@@ -171,41 +250,48 @@ impl FirstOrder for AdamW {
 // ---------------------------------------------------------------------------
 
 pub struct Adagrad {
-    acc: Vec<f32>,
+    acc: StateBuf,
     pub eps: f32,
     pub weight_decay: f32,
 }
 
 impl Adagrad {
     pub fn new(n: usize, eps: f32, weight_decay: f32) -> Self {
-        Self { acc: vec![0.0; n], eps, weight_decay }
+        Self { acc: StateBuf::zeros(n, fp32()), eps, weight_decay }
+    }
+
+    /// Store the accumulator through `codec` (the `first_order.bits` policy).
+    pub fn with_codec(mut self, codec: Arc<dyn StateCodec>) -> Self {
+        self.acc = StateBuf::zeros(self.acc.len(), codec);
+        self
     }
 }
 
 impl FirstOrder for Adagrad {
     fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        let mut acc = self.acc.load();
         for i in 0..params.len() {
             let g = grad[i] + self.weight_decay * params[i];
-            self.acc[i] += g * g;
-            params[i] -= lr * g / (self.acc[i].sqrt() + self.eps);
+            acc[i] += g * g;
+            params[i] -= lr * g / (acc[i].sqrt() + self.eps);
         }
+        self.acc.store(&acc);
     }
 
     fn state_bytes(&self) -> usize {
-        self.acc.len() * 4
+        self.acc.state_bytes()
     }
 
     fn name(&self) -> &'static str {
         "Adagrad"
     }
 
-    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
-        (vec![self.acc.clone()], Vec::new())
+    fn export_state(&self) -> StateSnapshot {
+        snapshot(&[&self.acc], Vec::new())
     }
 
-    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, _counters: &[f64]) -> Result<()> {
-        check_buffers("Adagrad", &buffers, &[self.acc.len()])?;
-        self.acc = buffers.remove(0);
+    fn import_state(&mut self, snap: StateSnapshot) -> Result<()> {
+        restore_buffers("Adagrad", &mut [&mut self.acc], snap)?;
         Ok(())
     }
 }
@@ -216,14 +302,18 @@ impl FirstOrder for Adagrad {
 /// — the Appendix H.1 comparison arm (Table 9). The caller's parameter
 /// buffer holds y_t = (1−β)·z_t + β·x_t (the gradient point); `eval_params`
 /// returns the Polyak-style average x_t.
+///
+/// The z/x iterate copies are pinned to the `Fp32` codec — quantizing the
+/// averaged iterate corrupts the Polyak average itself, not just a moment —
+/// so the `first_order.bits` policy applies to the AdamW v moment only.
 pub struct ScheduleFree {
-    z: Vec<f32>,
-    x: Vec<f32>,
+    z: StateBuf,
+    x: StateBuf,
     t: u64,
     pub beta: f32,
     pub weight_decay: f32,
     /// Some => AdamW-normalized base step (beta2, eps); None => SGD.
-    adam: Option<(f32, f32, Vec<f32>)>,
+    adam: Option<(f32, f32, StateBuf)>,
     warmup: u64,
     lr_sum_sq: f64,
     initialized: bool,
@@ -232,8 +322,8 @@ pub struct ScheduleFree {
 impl ScheduleFree {
     pub fn sgd(n: usize, beta: f32, weight_decay: f32, warmup: usize) -> Self {
         Self {
-            z: vec![0.0; n],
-            x: vec![0.0; n],
+            z: StateBuf::zeros(n, fp32()),
+            x: StateBuf::zeros(n, fp32()),
             t: 0,
             beta,
             weight_decay,
@@ -247,17 +337,25 @@ impl ScheduleFree {
     pub fn adamw(n: usize, beta: f32, beta2: f32, eps: f32, weight_decay: f32,
                  warmup: usize) -> Self {
         Self {
-            adam: Some((beta2, eps, vec![0.0; n])),
+            adam: Some((beta2, eps, StateBuf::zeros(n, fp32()))),
             ..Self::sgd(n, beta, weight_decay, warmup)
         }
+    }
+
+    /// Store the v moment (AdamW variant) through `codec`; z/x stay fp32.
+    pub fn with_codec(mut self, codec: Arc<dyn StateCodec>) -> Self {
+        if let Some((_, _, v)) = &mut self.adam {
+            *v = StateBuf::zeros(v.len(), codec);
+        }
+        self
     }
 }
 
 impl FirstOrder for ScheduleFree {
     fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
         if !self.initialized {
-            self.z.copy_from_slice(params);
-            self.x.copy_from_slice(params);
+            self.z.store(params);
+            self.x.store(params);
             self.initialized = true;
         }
         self.t += 1;
@@ -272,9 +370,15 @@ impl FirstOrder for ScheduleFree {
             1.0
         };
         let bc2 = self.adam.as_ref().map(|(b2, _, _)| 1.0 - b2.powf(self.t as f32));
+        let mut z = self.z.load();
+        let mut x = self.x.load();
+        let mut adam = self
+            .adam
+            .as_ref()
+            .map(|(b2, eps, vb)| (*b2, *eps, vb.load()));
         for i in 0..params.len() {
             let g = grad[i] + self.weight_decay * params[i];
-            let step_dir = match &mut self.adam {
+            let step_dir = match &mut adam {
                 None => g,
                 Some((b2, eps, v)) => {
                     v[i] = *b2 * v[i] + (1.0 - *b2) * g * g;
@@ -282,56 +386,58 @@ impl FirstOrder for ScheduleFree {
                     g / (vh.sqrt() + *eps)
                 }
             };
-            self.z[i] -= gamma * step_dir;
-            self.x[i] = (1.0 - c) * self.x[i] + c * self.z[i];
+            z[i] -= gamma * step_dir;
+            x[i] = (1.0 - c) * x[i] + c * z[i];
             // next gradient point y = (1−β)z + βx
-            params[i] = (1.0 - self.beta) * self.z[i] + self.beta * self.x[i];
+            params[i] = (1.0 - self.beta) * z[i] + self.beta * x[i];
+        }
+        self.z.store(&z);
+        self.x.store(&x);
+        if let (Some((_, _, vb)), Some((_, _, v))) = (&mut self.adam, &adam) {
+            vb.store(v);
         }
     }
 
     fn eval_params(&self, current: &[f32]) -> Vec<f32> {
         if self.initialized {
-            self.x.clone()
+            self.x.load()
         } else {
             current.to_vec()
         }
     }
 
     fn state_bytes(&self) -> usize {
-        let base = (self.z.len() + self.x.len()) * 4;
-        base + self.adam.as_ref().map(|(_, _, v)| v.len() * 4).unwrap_or(0)
+        let base = self.z.state_bytes() + self.x.state_bytes();
+        base + self.adam.as_ref().map(|(_, _, v)| v.state_bytes()).unwrap_or(0)
     }
 
     fn name(&self) -> &'static str {
         if self.adam.is_some() { "AdamWScheduleFree" } else { "SGDScheduleFree" }
     }
 
-    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
-        let mut bufs = vec![self.z.clone(), self.x.clone()];
+    fn export_state(&self) -> StateSnapshot {
+        let mut bufs = vec![&self.z, &self.x];
         if let Some((_, _, v)) = &self.adam {
-            bufs.push(v.clone());
+            bufs.push(v);
         }
         let init = if self.initialized { 1.0 } else { 0.0 };
-        (bufs, vec![self.t as f64, self.lr_sum_sq, init])
+        snapshot(&bufs, vec![self.t as f64, self.lr_sum_sq, init])
     }
 
-    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, counters: &[f64]) -> Result<()> {
-        let mut lens = vec![self.z.len(), self.x.len()];
-        if let Some((_, _, v)) = &self.adam {
-            lens.push(v.len());
+    fn import_state(&mut self, snap: StateSnapshot) -> Result<()> {
+        let who = self.name();
+        if snap.counters.len() < 3 {
+            bail!("{who}: expected 3 counters, got {}", snap.counters.len());
         }
-        check_buffers(self.name(), &buffers, &lens)?;
-        if counters.len() < 3 {
-            bail!("{}: expected 3 counters, got {}", self.name(), counters.len());
-        }
+        let (t, lr_sum_sq, init) = (snap.counters[0], snap.counters[1], snap.counters[2]);
+        let mut bufs: Vec<&mut StateBuf> = vec![&mut self.z, &mut self.x];
         if let Some((_, _, v)) = &mut self.adam {
-            *v = buffers.pop().unwrap();
+            bufs.push(v);
         }
-        self.x = buffers.pop().unwrap();
-        self.z = buffers.pop().unwrap();
-        self.t = counters[0] as u64;
-        self.lr_sum_sq = counters[1];
-        self.initialized = counters[2] != 0.0;
+        restore_buffers(who, &mut bufs, snap)?;
+        self.t = t as u64;
+        self.lr_sum_sq = lr_sum_sq;
+        self.initialized = init != 0.0;
         Ok(())
     }
 }
@@ -339,6 +445,7 @@ impl FirstOrder for ScheduleFree {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{codec_for, Mapping};
 
     /// Quadratic f(x) = ½‖x − x*‖²: every optimizer must converge.
     fn run_quadratic(opt: &mut dyn FirstOrder, lr: f32, steps: usize) -> f32 {
@@ -393,6 +500,22 @@ mod tests {
     }
 
     #[test]
+    fn quantized_moments_still_converge() {
+        // 8-bit moments track fp32 closely; 4-bit moments are noisier but
+        // must still drive the quadratic loss down hard (the paper's point:
+        // low-bit states trade a little accuracy for a lot of memory)
+        let mut q8 = AdamW::new(4, 0.9, 0.999, 1e-8, 0.0)
+            .with_codec(codec_for(8, Mapping::Dt));
+        assert!(run_quadratic(&mut q8, 0.05, 800) < 0.1);
+        let mut q4 = AdamW::new(4, 0.9, 0.999, 1e-8, 0.0)
+            .with_codec(codec_for(4, Mapping::Dt));
+        let dist = run_quadratic(&mut q4, 0.05, 800);
+        assert!(dist < 1.0, "4-bit AdamW stalled at distance {dist}");
+        let mut s8 = Sgdm::new(4, 0.9, 0.0).with_codec(codec_for(8, Mapping::Dt));
+        assert!(run_quadratic(&mut s8, 0.05, 400) < 0.1);
+    }
+
+    #[test]
     fn adamw_matches_reference_formula() {
         // hand-computed single AdamW step
         let mut o = AdamW::new(1, 0.9, 0.999, 1e-8, 0.01);
@@ -420,8 +543,7 @@ mod tests {
             let g: Vec<f32> = p.iter().zip(&target).map(|(x, t)| x - t).collect();
             a.step(&mut p, &g, lr);
         }
-        let (bufs, counters) = a.export_state();
-        b.import_state(bufs, &counters).unwrap();
+        b.import_state(a.export_state()).unwrap();
         let mut pa = p.clone();
         let mut pb = p;
         for _ in 0..5 {
@@ -459,12 +581,55 @@ mod tests {
     }
 
     #[test]
+    fn quantized_state_roundtrips_bit_identically() {
+        // encoded bytes are the checkpoint payload, so resume is exact at
+        // ANY bitwidth — no requantization error
+        let q4 = || codec_for(4, Mapping::Dt);
+        check_state_roundtrip(
+            &mut AdamW::new(4, 0.9, 0.999, 1e-8, 0.01).with_codec(q4()),
+            &mut AdamW::new(4, 0.9, 0.999, 1e-8, 0.01).with_codec(q4()),
+            0.05,
+        );
+        let q8 = || codec_for(8, Mapping::Linear2);
+        check_state_roundtrip(
+            &mut Sgdm::new(4, 0.9, 0.01).with_codec(q8()),
+            &mut Sgdm::new(4, 0.9, 0.01).with_codec(q8()),
+            0.05,
+        );
+    }
+
+    #[test]
     fn import_rejects_mismatched_buffers() {
+        use crate::quant::Fp32;
+        let snap = |bufs: Vec<Vec<f32>>, counters: Vec<f64>| StateSnapshot {
+            buffers: bufs
+                .iter()
+                .map(|b| ("fp32".to_string(), Fp32.encode(b)))
+                .collect(),
+            counters,
+        };
         let mut o = AdamW::new(4, 0.9, 0.999, 1e-8, 0.0);
-        assert!(o.import_state(vec![vec![0.0; 4]], &[1.0]).is_err()); // one buffer short
-        assert!(o.import_state(vec![vec![0.0; 3], vec![0.0; 4]], &[1.0]).is_err()); // bad len
-        assert!(o.import_state(vec![vec![0.0; 4], vec![0.0; 4]], &[]).is_err()); // no counter
-        assert!(o.import_state(vec![vec![0.0; 4], vec![0.0; 4]], &[3.0]).is_ok());
+        // one buffer short
+        assert!(o.import_state(snap(vec![vec![0.0; 4]], vec![1.0])).is_err());
+        // bad length
+        assert!(o
+            .import_state(snap(vec![vec![0.0; 3], vec![0.0; 4]], vec![1.0]))
+            .is_err());
+        // no counter
+        assert!(o
+            .import_state(snap(vec![vec![0.0; 4], vec![0.0; 4]], Vec::new()))
+            .is_err());
+        assert!(o
+            .import_state(snap(vec![vec![0.0; 4], vec![0.0; 4]], vec![3.0]))
+            .is_ok());
+        // codec mismatch: fp32 snapshot into a q4-configured optimizer
+        let mut q = AdamW::new(4, 0.9, 0.999, 1e-8, 0.0)
+            .with_codec(codec_for(4, Mapping::Dt));
+        let err = q
+            .import_state(snap(vec![vec![0.0; 4], vec![0.0; 4]], vec![3.0]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("codec"), "{err}");
     }
 
     #[test]
@@ -476,5 +641,9 @@ mod tests {
             ScheduleFree::adamw(10, 0.9, 0.999, 1e-8, 0.0, 1).state_bytes(),
             120
         );
+        // 4-bit moments: 2 × (64 packed + 8 scale) bytes for n=128 vs 1024
+        let q4 = AdamW::new(128, 0.9, 0.999, 1e-8, 0.0)
+            .with_codec(codec_for(4, Mapping::Dt));
+        assert_eq!(q4.state_bytes(), 2 * (64 + 8));
     }
 }

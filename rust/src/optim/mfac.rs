@@ -11,17 +11,20 @@
 
 use anyhow::{bail, Result};
 
-use super::first_order::FirstOrder;
+use crate::quant::{fp32, StateBuf, StateCodec};
+
+use super::first_order::{FirstOrder, StateSnapshot};
 
 pub struct MFac {
-    /// ring buffer of the last m gradients (each d long)
-    grads: Vec<Vec<f32>>,
+    /// ring buffer of the last m gradients (each d long). Pinned to the
+    /// `Fp32` codec: the window feeds an exact Woodbury solve, and its
+    /// dense size IS the Table 11 memory point being reproduced.
+    grads: Vec<StateBuf>,
     head: usize,
-    filled: usize,
     m: usize,
     pub damp: f32,
     pub momentum: f32,
-    buf: Vec<f32>,
+    buf: StateBuf,
     pub weight_decay: f32,
 }
 
@@ -30,29 +33,28 @@ impl MFac {
         Self {
             grads: Vec::new(),
             head: 0,
-            filled: 0,
             m,
             damp,
             momentum,
-            buf: vec![0.0; dim],
+            buf: StateBuf::zeros(dim, fp32()),
             weight_decay,
         }
     }
 
     fn push_grad(&mut self, g: &[f32]) {
         if self.grads.len() < self.m {
-            self.grads.push(g.to_vec());
-            self.filled = self.grads.len();
+            let mut b = StateBuf::zeros(g.len(), fp32());
+            b.store(g);
+            self.grads.push(b);
         } else {
-            self.grads[self.head].copy_from_slice(g);
+            self.grads[self.head].store(g);
             self.head = (self.head + 1) % self.m;
-            self.filled = self.m;
         }
     }
 
-    /// H⁻¹·v via Woodbury with the current window.
-    fn ihvp(&self, v: &[f32]) -> Vec<f32> {
-        let k = self.filled;
+    /// H⁻¹·v via Woodbury with the decoded window.
+    fn ihvp(&self, window: &[Vec<f32>], v: &[f32]) -> Vec<f32> {
+        let k = window.len();
         if k == 0 {
             return v.iter().map(|x| x / self.damp).collect();
         }
@@ -60,10 +62,10 @@ impl MFac {
         let mut gv = vec![0.0f64; k];
         let mut ggt = vec![0.0f64; k * k];
         for i in 0..k {
-            let gi = &self.grads[i];
+            let gi = &window[i];
             gv[i] = gi.iter().zip(v).map(|(&a, &b)| a as f64 * b as f64).sum();
             for j in i..k {
-                let gj = &self.grads[j];
+                let gj = &window[j];
                 let dot: f64 = gi.iter().zip(gj).map(|(&a, &b)| a as f64 * b as f64).sum();
                 ggt[i * k + j] = dot;
                 ggt[j * k + i] = dot;
@@ -80,7 +82,7 @@ impl MFac {
         for i in 0..k {
             let xi = x[i] as f32;
             if xi != 0.0 {
-                for (o, &gi) in out.iter_mut().zip(&self.grads[i]) {
+                for (o, &gi) in out.iter_mut().zip(&window[i]) {
                     *o -= xi * gi;
                 }
             }
@@ -90,6 +92,11 @@ impl MFac {
             *o *= inv;
         }
         out
+    }
+
+    /// Decode the whole ring (fp32 → exact) for one Woodbury solve.
+    fn window(&self) -> Vec<Vec<f32>> {
+        self.grads.iter().map(|b| b.load()).collect()
     }
 }
 
@@ -144,47 +151,68 @@ impl FirstOrder for MFac {
             .map(|(&g, &p)| g + self.weight_decay * p)
             .collect();
         self.push_grad(&g);
-        let update = self.ihvp(&g);
+        let window = self.window();
+        let update = self.ihvp(&window, &g);
+        let mut buf = self.buf.load();
         for i in 0..params.len() {
-            self.buf[i] = self.momentum * self.buf[i] + update[i];
-            params[i] -= lr * self.buf[i];
+            buf[i] = self.momentum * buf[i] + update[i];
+            params[i] -= lr * buf[i];
         }
+        self.buf.store(&buf);
     }
 
     fn state_bytes(&self) -> usize {
         // the m dense gradient copies dominate — the paper's Table 11 point
-        self.grads.iter().map(|g| g.len() * 4).sum::<usize>() + self.buf.len() * 4
+        self.grads.iter().map(|g| g.state_bytes()).sum::<usize>() + self.buf.state_bytes()
     }
 
     fn name(&self) -> &'static str {
         "M-FAC"
     }
 
-    fn export_state(&self) -> (Vec<Vec<f32>>, Vec<f64>) {
+    fn export_state(&self) -> StateSnapshot {
         // momentum buffer first, then the gradient window in ring order
-        let mut bufs = vec![self.buf.clone()];
-        bufs.extend(self.grads.iter().cloned());
-        (bufs, vec![self.head as f64])
+        let mut buffers = vec![(self.buf.codec().name(), self.buf.encoded().clone())];
+        for g in &self.grads {
+            buffers.push((g.codec().name(), g.encoded().clone()));
+        }
+        StateSnapshot { buffers, counters: vec![self.head as f64] }
     }
 
-    fn import_state(&mut self, mut buffers: Vec<Vec<f32>>, counters: &[f64]) -> Result<()> {
-        if buffers.is_empty() {
-            bail!("M-FAC: missing momentum buffer");
+    fn import_state(&mut self, snap: StateSnapshot) -> Result<()> {
+        // validate everything before mutating anything (atomic restore)
+        let mut it = snap.buffers.into_iter();
+        let Some((name, enc)) = it.next() else {
+            bail!("M-FAC: missing momentum buffer")
+        };
+        if name != self.buf.codec().name() {
+            bail!("M-FAC: momentum buffer saved with codec {name}, optimizer uses {}",
+                  self.buf.codec().name());
         }
-        let buf = buffers.remove(0);
-        if buf.len() != self.buf.len() {
-            bail!("M-FAC: momentum buffer has {} elems, expected {}", buf.len(), self.buf.len());
+        let dim = self.buf.len();
+        if enc.len != dim || enc.bytes.len() != self.buf.codec().state_bytes(dim) {
+            bail!("M-FAC: momentum buffer has {} elems, expected {dim}", enc.len);
         }
-        if buffers.len() > self.m {
-            bail!("M-FAC: {} window gradients exceed window size {}", buffers.len(), self.m);
+        let rest: Vec<_> = it.collect();
+        if rest.len() > self.m {
+            bail!("M-FAC: {} window gradients exceed window size {}", rest.len(), self.m);
         }
-        if let Some(g) = buffers.iter().find(|g| g.len() != buf.len()) {
-            bail!("M-FAC: window gradient has {} elems, expected {}", g.len(), buf.len());
+        let mut grads = Vec::with_capacity(rest.len());
+        for (i, (name, genc)) in rest.into_iter().enumerate() {
+            if name != "fp32" {
+                bail!("M-FAC: window gradient {i} saved with codec {name}, expected fp32");
+            }
+            if genc.len != dim {
+                bail!("M-FAC: window gradient {i} has {} elems, expected {dim}", genc.len);
+            }
+            let mut b = StateBuf::zeros(dim, fp32());
+            b.restore(genc)
+                .map_err(|e| anyhow::anyhow!("M-FAC: window gradient {i}: {e}"))?;
+            grads.push(b);
         }
-        self.buf = buf;
-        self.filled = buffers.len();
-        self.grads = buffers;
-        self.head = (counters.first().copied().unwrap_or(0.0) as usize) % self.m.max(1);
+        self.buf.restore(enc).expect("validated above");
+        self.grads = grads;
+        self.head = (snap.counters.first().copied().unwrap_or(0.0) as usize) % self.m.max(1);
         Ok(())
     }
 }
@@ -216,7 +244,7 @@ mod tests {
             opt.push_grad(g);
         }
         let v = rng.normal_vec(d);
-        let got = opt.ihvp(&v);
+        let got = opt.ihvp(&opt.window(), &v);
         // dense H = λI + (1/m)ΣggT
         let mut h = vec![0.0f64; d * d];
         for i in 0..d {
@@ -258,10 +286,10 @@ mod tests {
         for g in &grads[..5] {
             a.step(&mut p, g, 0.01);
         }
-        let (bufs, counters) = a.export_state();
-        assert_eq!(bufs.len(), 1 + 3); // momentum + full window
+        let snap = a.export_state();
+        assert_eq!(snap.buffers.len(), 1 + 3); // momentum + full window
         let mut b = MFac::new(6, 3, 0.1, 0.9, 0.01);
-        b.import_state(bufs, &counters).unwrap();
+        b.import_state(snap).unwrap();
         let mut pa = p.clone();
         let mut pb = p;
         for g in &grads[5..] {

@@ -5,33 +5,39 @@
 pub mod first_order;
 pub mod mfac;
 
-pub use first_order::{Adagrad, AdamW, FirstOrder, ScheduleFree, Sgdm};
+pub use first_order::{Adagrad, AdamW, FirstOrder, ScheduleFree, Sgdm, StateSnapshot};
 pub use mfac::MFac;
 
 use crate::config::{FirstOrderConfig, FirstOrderKind};
+use crate::quant::codec_for;
 
-/// Build a first-order optimizer for an n-parameter model.
+/// Build a first-order optimizer for an n-parameter model. Moment buffers
+/// are stored through the `first_order.bits` / `first_order.mapping` codec
+/// policy (M-FAC's dense gradient window is exempt by design — its memory
+/// footprint is the Table 11 comparison point).
 pub fn build_first_order(cfg: &FirstOrderConfig, n: usize, warmup: usize) -> Box<dyn FirstOrder> {
+    let codec = codec_for(cfg.bits, cfg.mapping);
     match cfg.kind {
-        FirstOrderKind::Sgdm => Box::new(Sgdm::new(n, cfg.momentum, cfg.weight_decay)),
-        FirstOrderKind::AdamW => {
-            Box::new(AdamW::new(n, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay))
+        FirstOrderKind::Sgdm => {
+            Box::new(Sgdm::new(n, cfg.momentum, cfg.weight_decay).with_codec(codec))
         }
-        FirstOrderKind::NAdamW => {
-            Box::new(AdamW::nadamw(n, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay))
+        FirstOrderKind::AdamW => Box::new(
+            AdamW::new(n, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay).with_codec(codec),
+        ),
+        FirstOrderKind::NAdamW => Box::new(
+            AdamW::nadamw(n, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+                .with_codec(codec),
+        ),
+        FirstOrderKind::Adagrad => {
+            Box::new(Adagrad::new(n, 1e-10, cfg.weight_decay).with_codec(codec))
         }
-        FirstOrderKind::Adagrad => Box::new(Adagrad::new(n, 1e-10, cfg.weight_decay)),
         FirstOrderKind::SgdScheduleFree => {
-            Box::new(ScheduleFree::sgd(n, 0.9, cfg.weight_decay, warmup))
+            Box::new(ScheduleFree::sgd(n, 0.9, cfg.weight_decay, warmup).with_codec(codec))
         }
-        FirstOrderKind::AdamWScheduleFree => Box::new(ScheduleFree::adamw(
-            n,
-            0.9,
-            cfg.beta2,
-            cfg.eps,
-            cfg.weight_decay,
-            warmup,
-        )),
+        FirstOrderKind::AdamWScheduleFree => Box::new(
+            ScheduleFree::adamw(n, 0.9, cfg.beta2, cfg.eps, cfg.weight_decay, warmup)
+                .with_codec(codec),
+        ),
         FirstOrderKind::MFac => Box::new(MFac::new(
             n,
             cfg.mfac_m,

@@ -33,20 +33,20 @@ impl QuantizedVec {
     }
 }
 
-/// Quantize with blocks of `block` consecutive elements. `x.len()` must be a
-/// multiple of `block` (callers arrange column-major layout so blocks stay
-/// within one column of an eigenvector matrix, paper §3.3).
+/// Quantize with blocks of `block` consecutive elements. Matrix callers
+/// arrange column-major layout so blocks stay within one column of an
+/// eigenvector matrix (paper §3.3); a trailing partial block (flat
+/// first-order moments whose length is not a block multiple) carries its
+/// own scale.
 pub fn quantize(x: &[f32], cb: &[f32], bits: u32, block: usize) -> QuantizedVec {
-    assert_eq!(x.len() % block, 0, "len {} % block {block}", x.len());
+    assert!(block >= 1, "block must be >= 1");
     assert!(cb.len() >= (1usize << bits));
-    let nblocks = x.len() / block;
     let mut codes = Vec::with_capacity(x.len());
-    let mut scales = Vec::with_capacity(nblocks);
+    let mut scales = Vec::with_capacity(x.len().div_ceil(block));
     // §Perf L3-1: binary search over precomputed decision boundaries
     // instead of a 2^b-way argmin per element (see codebook::Boundaries).
     let bounds = Boundaries::new(cb);
-    for b in 0..nblocks {
-        let blk = &x[b * block..(b + 1) * block];
+    for blk in x.chunks(block) {
         let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let scale = if absmax > 0.0 { absmax } else { 1.0 };
         let inv = 1.0 / scale;
@@ -79,6 +79,9 @@ pub fn dequantize(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
 pub fn quantize_matrix_cols(a: &[f32], n: usize, cb: &[f32], bits: u32) -> QuantizedVec {
     assert_eq!(a.len(), n * n);
     let block = BLOCK.min(n);
+    // matrices must fill whole blocks (flat vectors may end with a partial
+    // block, but the (nblocks, block) artifact grid cannot)
+    assert_eq!(a.len() % block, 0, "len {} % block {block}", a.len());
     // transpose to column-major so each block of 64 is within a column
     let mut t = vec![0.0f32; n * n];
     for i in 0..n {
@@ -105,7 +108,7 @@ pub fn dequantize_matrix_cols(q: &QuantizedVec, n: usize, cb: &[f32]) -> Vec<f32
 /// f32 scales — the "32/(4+0.5) ≈ 7x" arithmetic of Appendix G.
 pub fn matrix_state_bytes(n: usize, bits: u32, block: usize) -> usize {
     let elems = n * n;
-    packed_len(elems, bits) + (elems / block.min(n).max(1)) * 4
+    packed_len(elems, bits) + elems.div_ceil(block.min(n).max(1)) * 4
 }
 
 #[cfg(test)]
@@ -143,6 +146,21 @@ mod tests {
         let q = quantize(&x, &cb, 4, 64);
         assert_eq!(q.scales, vec![1.0, 1.0]);
         assert_eq!(dequantize(&q, &cb), x);
+    }
+
+    #[test]
+    fn trailing_partial_block_gets_own_scale() {
+        let cb = codebook(Mapping::Linear2, 4);
+        let mut x = vec![0.01f32; 100]; // one full block + a 36-element tail
+        x[99] = 50.0; // huge tail entry must not pollute the first block
+        let q = quantize(&x, &cb, 4, 64);
+        assert_eq!(q.scales.len(), 2);
+        assert_eq!(q.state_bytes(), 50 + 2 * 4);
+        let d = dequantize(&q, &cb);
+        for i in 0..64 {
+            assert!((d[i] - 0.01).abs() < 0.005, "elem {i}: {}", d[i]);
+        }
+        assert!((d[99] - 50.0).abs() < 1.0, "{}", d[99]);
     }
 
     #[test]

@@ -102,22 +102,6 @@ pub fn runtime_codebook(mapping: Mapping, bits: u32) -> Vec<f32> {
     cb
 }
 
-/// Nearest codebook index (ties resolve to the lowest index, matching the
-/// jnp.argmin semantics of the L1 kernel). Linear scan — the exact
-/// reference; `Boundaries::nearest` below is the hot-path version.
-pub fn nearest(cb: &[f32], x: f32) -> u8 {
-    let mut best = 0usize;
-    let mut best_d = (x - cb[0]).abs();
-    for (i, &c) in cb.iter().enumerate().skip(1) {
-        let d = (x - c).abs();
-        if d < best_d {
-            best_d = d;
-            best = i;
-        }
-    }
-    best as u8
-}
-
 /// Precomputed decision boundaries for a *sorted* codebook: entry i wins on
 /// (mid[i-1], mid[i]] where mid[i] = (cb[i]+cb[i+1])/2. Nearest-neighbour
 /// lookup becomes a binary search over 2^b − 1 midpoints (§Perf
@@ -156,6 +140,22 @@ impl Boundaries {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Reference O(K) linear scan with jnp.argmin tie semantics — kept
+    /// test-local: every production call site goes through
+    /// `Boundaries::nearest`.
+    fn nearest_ref(cb: &[f32], x: f32) -> u8 {
+        let mut best = 0usize;
+        let mut best_d = (x - cb[0]).abs();
+        for (i, &c) in cb.iter().enumerate().skip(1) {
+            let d = (x - c).abs();
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best as u8
+    }
 
     // Appendix C tables, verbatim.
     const DT4: [f32; 16] = [
@@ -207,16 +207,20 @@ mod tests {
         assert_eq!(cb[7], 1.0);
         assert_eq!(cb[15], 1.0);
         // codes emitted against the padded book stay below 8
+        let b = Boundaries::new(&cb);
         for x in [-1.0f32, -0.2, 0.0, 0.3, 0.99, 1.0] {
-            assert!(nearest(&cb, x) < 8, "{x}");
+            assert!(b.nearest(x) < 8, "{x}");
         }
     }
 
     #[test]
     fn nearest_ties_take_lowest_index() {
         let cb = vec![-1.0, 0.0, 0.0, 1.0];
-        assert_eq!(nearest(&cb, 0.0), 1);
-        assert_eq!(nearest(&cb, -0.5), 0); // exact tie -1.0 vs 0.0 -> lowest
+        let b = Boundaries::new(&cb);
+        assert_eq!(b.nearest(0.0), 1);
+        assert_eq!(b.nearest(-0.5), 0); // exact tie -1.0 vs 0.0 -> lowest
+        assert_eq!(nearest_ref(&cb, 0.0), 1);
+        assert_eq!(nearest_ref(&cb, -0.5), 0);
     }
 
     #[test]
@@ -236,7 +240,7 @@ mod tests {
                 |rng| {
                     for _ in 0..200 {
                         let x = (rng.normal() * 0.7) as f32;
-                        let want = nearest(&cb, x);
+                        let want = nearest_ref(&cb, x);
                         let got = b.nearest(x);
                         if want != got {
                             // allow only exact-tie flips (equal distances)
@@ -259,7 +263,7 @@ mod tests {
         let b = Boundaries::new(&cb);
         for x in [-1.0f32, -0.2, 0.0, 0.3, 0.99, 1.0, 2.0] {
             assert!(b.nearest(x) < 8, "{x} -> {}", b.nearest(x));
-            assert_eq!(b.nearest(x), nearest(&cb, x), "{x}");
+            assert_eq!(b.nearest(x), nearest_ref(&cb, x), "{x}");
         }
     }
 

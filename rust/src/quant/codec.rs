@@ -1,0 +1,582 @@
+//! `StateCodec` — the one quantized-state substrate both optimizer families
+//! store through (paper §2.2/§3.3 + Li et al. 2023 "Memory Efficient
+//! Optimizers with 4-bit States").
+//!
+//! A codec owns its codebook, block-wise encode/decode (reusing
+//! `quant::blockwise` + `codebook::Boundaries`), exact `state_bytes`
+//! accounting, and byte-level serialization: an [`EncodedVec`]'s `bytes` ARE
+//! the checkpoint payload, so save → load round-trips are bit-exact by
+//! construction (no requantization error on resume).
+//!
+//! Shipped codecs:
+//!  * [`Fp32`] — identity storage (the 32-bit baseline arms);
+//!  * [`Bf16`] — round-to-nearest-even truncation (16-bit dense states);
+//!  * [`BlockQuant`] — block-64 absmax quantization against a DT / Linear-2 /
+//!    linear codebook at 2–8 bits (`q4-linear2`, `q4-dt`, `q8-dt`, ...).
+//!
+//! Second-order `SideState` and every `FirstOrder` moment buffer hold
+//! codec-encoded buffers; `codec_for` maps a (bits, mapping) policy to a
+//! codec and `codec_by_name` resolves the names persisted in checkpoints.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::blockwise::{dequantize, quantize, QuantizedVec, BLOCK};
+use super::codebook::{codebook, Mapping};
+use super::pack::{pack_bits, packed_len, unpack_bits};
+
+/// A codec-encoded state buffer: opaque payload + element count. The byte
+/// layout is the owning codec's contract; checkpoints persist `bytes`
+/// verbatim.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EncodedVec {
+    pub bytes: Vec<u8>,
+    pub len: usize,
+}
+
+/// Pluggable storage codec for optimizer state vectors.
+pub trait StateCodec: Send + Sync {
+    /// Stable identifier persisted in checkpoints ("fp32", "bf16",
+    /// "q4-linear2", ...). `codec_by_name` must round-trip it.
+    fn name(&self) -> String;
+
+    /// Storage bits per element (excluding per-block scale overhead).
+    fn bits(&self) -> u32;
+
+    /// Exact serialized bytes for a `len`-element buffer — must equal
+    /// `encode(x).bytes.len()` for any `x` of that length.
+    fn state_bytes(&self, len: usize) -> usize;
+
+    fn encode(&self, x: &[f32]) -> EncodedVec;
+
+    fn decode(&self, e: &EncodedVec) -> Vec<f32>;
+
+    /// Upper bound on |decode(encode(x)) − x| for an element living in a
+    /// block whose absmax is `absmax` (the codebook-resolution bound; exact
+    /// codecs return 0).
+    fn resolution(&self, absmax: f32) -> f32;
+
+    /// The 16-entry runtime codebook fed to quantized artifacts; `None` for
+    /// codecs with no artifact-side codebook (dense, or bits outside the
+    /// 3/4-bit kernel family).
+    fn runtime_codebook(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Encode an order-n matrix (row-major) with blocks running down columns
+    /// (paper §3.3). Layout-agnostic codecs use plain `encode`.
+    fn encode_matrix(&self, a: &[f32], n: usize) -> EncodedVec {
+        debug_assert_eq!(a.len(), n * n);
+        self.encode(a)
+    }
+
+    /// Exact serialized bytes for an `encode_matrix` payload of order n —
+    /// column-blocked codecs clamp the block to the order, so this can
+    /// differ from `state_bytes(n * n)` when n is smaller than the block.
+    fn matrix_state_bytes(&self, n: usize) -> usize {
+        self.state_bytes(n * n)
+    }
+
+    /// Inverse of `encode_matrix`: row-major order-n matrix.
+    fn decode_matrix(&self, e: &EncodedVec, n: usize) -> Vec<f32> {
+        debug_assert_eq!(e.len, n * n);
+        self.decode(e)
+    }
+
+    /// Split an encoded buffer into the artifact boundary format: codes
+    /// one-per-byte, per-block scales, and the block size. Only meaningful
+    /// for codebook codecs.
+    fn to_artifact(&self, _e: &EncodedVec) -> Result<(Vec<u8>, Vec<f32>, usize)> {
+        bail!("codec {} has no artifact code representation", self.name())
+    }
+
+    /// Rebuild an encoded buffer from artifact outputs (codes one-per-byte,
+    /// per-block scales).
+    fn from_artifact(&self, _codes: &[u8], _scales: &[f32]) -> Result<EncodedVec> {
+        bail!("codec {} has no artifact code representation", self.name())
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Identity storage: 4 bytes per element, exact round-trip.
+pub struct Fp32;
+
+impl StateCodec for Fp32 {
+    fn name(&self) -> String {
+        "fp32".into()
+    }
+
+    fn bits(&self) -> u32 {
+        32
+    }
+
+    fn state_bytes(&self, len: usize) -> usize {
+        len * 4
+    }
+
+    fn encode(&self, x: &[f32]) -> EncodedVec {
+        let mut bytes = Vec::with_capacity(x.len() * 4);
+        for &v in x {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        EncodedVec { bytes, len: x.len() }
+    }
+
+    fn decode(&self, e: &EncodedVec) -> Vec<f32> {
+        e.bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect()
+    }
+
+    fn resolution(&self, _absmax: f32) -> f32 {
+        0.0
+    }
+}
+
+/// Shared fp32 codec instance (the default first-order policy).
+pub fn fp32() -> Arc<dyn StateCodec> {
+    Arc::new(Fp32)
+}
+
+// ---------------------------------------------------------------------------
+
+/// bfloat16 storage: round-to-nearest-even truncation of the high 16 bits.
+pub struct Bf16;
+
+#[inline]
+fn f32_to_bf16(x: f32) -> u16 {
+    let b = x.to_bits();
+    if x.is_nan() {
+        return ((b >> 16) as u16) | 0x40; // quiet, preserve sign
+    }
+    let rounded = b.wrapping_add(0x7FFF + ((b >> 16) & 1));
+    (rounded >> 16) as u16
+}
+
+#[inline]
+fn bf16_to_f32(v: u16) -> f32 {
+    f32::from_bits((v as u32) << 16)
+}
+
+impl StateCodec for Bf16 {
+    fn name(&self) -> String {
+        "bf16".into()
+    }
+
+    fn bits(&self) -> u32 {
+        16
+    }
+
+    fn state_bytes(&self, len: usize) -> usize {
+        len * 2
+    }
+
+    fn encode(&self, x: &[f32]) -> EncodedVec {
+        let mut bytes = Vec::with_capacity(x.len() * 2);
+        for &v in x {
+            bytes.extend_from_slice(&f32_to_bf16(v).to_le_bytes());
+        }
+        EncodedVec { bytes, len: x.len() }
+    }
+
+    fn decode(&self, e: &EncodedVec) -> Vec<f32> {
+        e.bytes
+            .chunks_exact(2)
+            .map(|c| bf16_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect()
+    }
+
+    fn resolution(&self, absmax: f32) -> f32 {
+        // 7 mantissa bits: relative error ≤ 2^-8 after round-to-nearest
+        absmax * (1.0 / 256.0) + f32::MIN_POSITIVE
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Block-wise absmax quantization against a sorted codebook — the paper's
+/// storage scheme for both second-order sides and low-bit first-order
+/// moments. Byte layout: packed codes at true bitwidth, then per-block f32
+/// scales (LE). Trailing partial blocks carry their own scale.
+pub struct BlockQuant {
+    mapping: Mapping,
+    bits: u32,
+    block: usize,
+    cb: Vec<f32>,
+    /// 16-entry padded runtime codebook for the 3/4-bit artifact kernels.
+    rcb: Option<Vec<f32>>,
+}
+
+impl BlockQuant {
+    pub fn new(mapping: Mapping, bits: u32) -> Self {
+        Self::with_block(mapping, bits, BLOCK)
+    }
+
+    pub fn with_block(mapping: Mapping, bits: u32, block: usize) -> Self {
+        assert!((2..=8).contains(&bits), "block-quant supports 2..=8 bits, got {bits}");
+        assert!(block >= 1);
+        let cb = codebook(mapping, bits);
+        let rcb = (bits == 3 || bits == 4)
+            .then(|| super::codebook::runtime_codebook(mapping, bits));
+        Self { mapping, bits, block, cb, rcb }
+    }
+
+    pub fn q8(mapping: Mapping) -> Self {
+        Self::new(mapping, 8)
+    }
+
+    pub fn q4_linear2() -> Self {
+        Self::new(Mapping::Linear2, 4)
+    }
+
+    pub fn q4_dt() -> Self {
+        Self::new(Mapping::Dt, 4)
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    pub fn codebook(&self) -> &[f32] {
+        &self.cb
+    }
+
+    fn nblocks(&self, len: usize) -> usize {
+        len.div_ceil(self.block)
+    }
+
+    fn to_quantized(&self, e: &EncodedVec) -> QuantizedVec {
+        let split = packed_len(e.len, self.bits);
+        QuantizedVec {
+            packed: e.bytes[..split].to_vec(),
+            scales: e.bytes[split..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            len: e.len,
+            bits: self.bits,
+            block: self.block,
+        }
+    }
+
+    fn from_quantized(&self, q: &QuantizedVec) -> EncodedVec {
+        let mut bytes = Vec::with_capacity(q.packed.len() + q.scales.len() * 4);
+        bytes.extend_from_slice(&q.packed);
+        for &s in &q.scales {
+            bytes.extend_from_slice(&s.to_le_bytes());
+        }
+        EncodedVec { bytes, len: q.len }
+    }
+}
+
+impl StateCodec for BlockQuant {
+    fn name(&self) -> String {
+        format!("q{}-{}", self.bits, self.mapping.name())
+    }
+
+    fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    fn state_bytes(&self, len: usize) -> usize {
+        packed_len(len, self.bits) + self.nblocks(len) * 4
+    }
+
+    fn encode(&self, x: &[f32]) -> EncodedVec {
+        self.from_quantized(&quantize(x, &self.cb, self.bits, self.block))
+    }
+
+    fn decode(&self, e: &EncodedVec) -> Vec<f32> {
+        dequantize(&self.to_quantized(e), &self.cb)
+    }
+
+    fn resolution(&self, absmax: f32) -> f32 {
+        let max_gap = self.cb.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
+        let scale = if absmax > 0.0 { absmax } else { 1.0 };
+        0.5 * max_gap * scale + 1e-6
+    }
+
+    fn runtime_codebook(&self) -> Option<&[f32]> {
+        self.rcb.as_deref()
+    }
+
+    fn matrix_state_bytes(&self, n: usize) -> usize {
+        super::blockwise::matrix_state_bytes(n, self.bits, self.block)
+    }
+
+    /// §3.3: blocks run down columns, so encode the transpose's rows.
+    fn encode_matrix(&self, a: &[f32], n: usize) -> EncodedVec {
+        debug_assert_eq!(a.len(), n * n);
+        let block = self.block.min(n);
+        // matrices must fill whole blocks — the artifact boundary is a
+        // rectangular (nblocks, block) grid (matches quantize_matrix_cols)
+        assert_eq!((n * n) % block, 0, "order {n}: {} % block {block}", n * n);
+        let mut t = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                t[j * n + i] = a[i * n + j];
+            }
+        }
+        self.from_quantized(&quantize(&t, &self.cb, self.bits, block))
+    }
+
+    fn decode_matrix(&self, e: &EncodedVec, n: usize) -> Vec<f32> {
+        debug_assert_eq!(e.len, n * n);
+        let mut q = self.to_quantized(e);
+        q.block = self.block.min(n);
+        let t = dequantize(&q, &self.cb);
+        let mut a = vec![0.0f32; n * n];
+        for j in 0..n {
+            for i in 0..n {
+                a[i * n + j] = t[j * n + i];
+            }
+        }
+        a
+    }
+
+    fn to_artifact(&self, e: &EncodedVec) -> Result<(Vec<u8>, Vec<f32>, usize)> {
+        let q = self.to_quantized(e);
+        // the artifact boundary is a rectangular (nblocks, block) code grid,
+        // so the buffer must have no partial trailing block
+        let nb = q.scales.len();
+        if nb == 0 || e.len % nb != 0 {
+            bail!("encoded length {} has no uniform block layout", e.len);
+        }
+        let block = e.len / nb;
+        Ok((unpack_bits(&q.packed, self.bits, e.len), q.scales, block))
+    }
+
+    fn from_artifact(&self, codes: &[u8], scales: &[f32]) -> Result<EncodedVec> {
+        if let Some(&c) = codes.iter().find(|&&c| (c as usize) >= (1usize << self.bits)) {
+            bail!("code {c} out of range for {}-bit codec", self.bits);
+        }
+        let mut bytes = pack_bits(codes, self.bits);
+        bytes.reserve(scales.len() * 4);
+        for &s in scales {
+            bytes.extend_from_slice(&s.to_le_bytes());
+        }
+        Ok(EncodedVec { bytes, len: codes.len() })
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Codec for a (bits, mapping) storage policy: 32 → `Fp32`, 16 → `Bf16`,
+/// else block-wise quantization at that bitwidth.
+pub fn codec_for(bits: u32, mapping: Mapping) -> Arc<dyn StateCodec> {
+    match bits {
+        32 => Arc::new(Fp32),
+        16 => Arc::new(Bf16),
+        b => Arc::new(BlockQuant::new(mapping, b)),
+    }
+}
+
+/// Resolve a codec name persisted in a checkpoint ("fp32", "bf16",
+/// "q4-linear2", "q8-dt", ...).
+pub fn codec_by_name(name: &str) -> Result<Arc<dyn StateCodec>> {
+    match name {
+        "fp32" => Ok(Arc::new(Fp32)),
+        "bf16" => Ok(Arc::new(Bf16)),
+        other => {
+            let Some(rest) = other.strip_prefix('q') else {
+                bail!("unknown state codec {other:?}");
+            };
+            let Some((bits_s, map_s)) = rest.split_once('-') else {
+                bail!("unknown state codec {other:?}");
+            };
+            let bits: u32 = bits_s.parse().map_err(|_| {
+                anyhow::anyhow!("unknown state codec {other:?}")
+            })?;
+            let Some(mapping) = Mapping::parse(map_s) else {
+                bail!("unknown state codec {other:?}");
+            };
+            if !(2..=8).contains(&bits) {
+                bail!("state codec {other:?}: bits out of range");
+            }
+            Ok(Arc::new(BlockQuant::new(mapping, bits)))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// A mutable f32 state vector that lives codec-encoded between uses — the
+/// storage cell every `FirstOrder` moment buffer is built on.
+pub struct StateBuf {
+    codec: Arc<dyn StateCodec>,
+    enc: EncodedVec,
+}
+
+impl StateBuf {
+    /// Zero-initialized buffer of `n` elements.
+    pub fn zeros(n: usize, codec: Arc<dyn StateCodec>) -> Self {
+        let enc = codec.encode(&vec![0.0f32; n]);
+        Self { codec, enc }
+    }
+
+    pub fn len(&self) -> usize {
+        self.enc.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.enc.len == 0
+    }
+
+    pub fn codec(&self) -> &Arc<dyn StateCodec> {
+        &self.codec
+    }
+
+    pub fn encoded(&self) -> &EncodedVec {
+        &self.enc
+    }
+
+    /// Decode to a working f32 vector.
+    pub fn load(&self) -> Vec<f32> {
+        self.codec.decode(&self.enc)
+    }
+
+    /// Re-encode a working vector back into storage.
+    pub fn store(&mut self, x: &[f32]) {
+        debug_assert_eq!(x.len(), self.enc.len);
+        self.enc = self.codec.encode(x);
+    }
+
+    /// Exact storage bytes (the Table 2/13 memory accounting).
+    pub fn state_bytes(&self) -> usize {
+        self.enc.bytes.len()
+    }
+
+    /// Adopt a serialized payload (checkpoint restore). The caller vouches
+    /// that `codec_name` matched; lengths are validated here.
+    pub fn restore(&mut self, enc: EncodedVec) -> Result<()> {
+        if enc.len != self.enc.len {
+            bail!("state buffer has {} elems, expected {}", enc.len, self.enc.len);
+        }
+        if enc.bytes.len() != self.codec.state_bytes(enc.len) {
+            bail!(
+                "state buffer payload is {} bytes, codec {} expects {}",
+                enc.bytes.len(),
+                self.codec.name(),
+                self.codec.state_bytes(enc.len)
+            );
+        }
+        self.enc = enc;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn codecs() -> Vec<Arc<dyn StateCodec>> {
+        vec![
+            Arc::new(Fp32) as Arc<dyn StateCodec>,
+            Arc::new(Bf16),
+            Arc::new(BlockQuant::q8(Mapping::Dt)),
+            Arc::new(BlockQuant::q4_linear2()),
+            Arc::new(BlockQuant::q4_dt()),
+            Arc::new(BlockQuant::new(Mapping::Linear2, 3)),
+        ]
+    }
+
+    #[test]
+    fn names_round_trip_through_registry() {
+        for c in codecs() {
+            let back = codec_by_name(&c.name()).unwrap();
+            assert_eq!(back.name(), c.name());
+            assert_eq!(back.bits(), c.bits());
+        }
+        assert!(codec_by_name("q9-dt").is_err());
+        assert!(codec_by_name("q4-bogus").is_err());
+        assert!(codec_by_name("int8").is_err());
+    }
+
+    #[test]
+    fn fp32_is_exact_and_bit_stable() {
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..97).map(|_| rng.normal_f32()).collect();
+        let e = Fp32.encode(&x);
+        assert_eq!(e.bytes.len(), Fp32.state_bytes(x.len()));
+        let d = Fp32.decode(&e);
+        assert_eq!(
+            x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            d.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn bf16_error_within_relative_bound() {
+        let mut rng = Rng::new(2);
+        for _ in 0..200 {
+            let x = rng.normal_f32() * 10.0;
+            let e = Bf16.encode(&[x]);
+            let d = Bf16.decode(&e)[0];
+            assert!((x - d).abs() <= Bf16.resolution(x.abs()), "{x} vs {d}");
+        }
+        // bf16 representables round-trip exactly
+        for x in [0.0f32, 1.0, -2.5, 0.15625] {
+            assert_eq!(Bf16.decode(&Bf16.encode(&[x]))[0], x);
+        }
+    }
+
+    #[test]
+    fn matrix_roundtrip_keeps_column_blocking() {
+        // a huge entry in column 0 must not pollute other columns
+        let c = BlockQuant::q4_linear2();
+        let n = 64;
+        let mut a = vec![0.01f32; n * n];
+        a[0] = 100.0;
+        let e = c.encode_matrix(&a, n);
+        let d = c.decode_matrix(&e, n);
+        for i in 0..n {
+            for j in 1..n {
+                assert!((d[i * n + j] - 0.01).abs() < 0.005, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn artifact_boundary_round_trips() {
+        let mut rng = Rng::new(3);
+        let c = BlockQuant::q4_dt();
+        let x: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+        let e = c.encode(&x);
+        let (codes, scales, block) = c.to_artifact(&e).unwrap();
+        assert_eq!(codes.len(), 256);
+        assert_eq!(scales.len(), 4);
+        assert_eq!(block, 64);
+        let back = c.from_artifact(&codes, &scales).unwrap();
+        assert_eq!(back, e);
+        assert!(c.from_artifact(&[16u8], &[1.0]).is_err(), "out-of-range code");
+    }
+
+    #[test]
+    fn runtime_codebooks_only_for_kernel_bitwidths() {
+        assert!(BlockQuant::q4_dt().runtime_codebook().is_some());
+        assert!(BlockQuant::new(Mapping::Dt, 3).runtime_codebook().is_some());
+        assert!(BlockQuant::q8(Mapping::Dt).runtime_codebook().is_none());
+        assert!(Fp32.runtime_codebook().is_none());
+        assert!(Bf16.runtime_codebook().is_none());
+    }
+
+    #[test]
+    fn statebuf_store_load_and_restore() {
+        let mut rng = Rng::new(4);
+        let mut b = StateBuf::zeros(130, codec_for(4, Mapping::Dt));
+        assert!(b.load().iter().all(|&v| v == 0.0), "zeros must decode to zeros");
+        let x: Vec<f32> = (0..130).map(|_| rng.normal_f32()).collect();
+        b.store(&x);
+        assert_eq!(b.state_bytes(), b.codec().state_bytes(130));
+        let snap = b.encoded().clone();
+        let mut b2 = StateBuf::zeros(130, codec_for(4, Mapping::Dt));
+        b2.restore(snap).unwrap();
+        assert_eq!(b.load(), b2.load());
+        assert!(b2.restore(EncodedVec { bytes: vec![0; 3], len: 130 }).is_err());
+        assert!(b2.restore(EncodedVec { bytes: vec![], len: 0 }).is_err());
+    }
+}

@@ -1,14 +1,20 @@
 //! Quantization substrate: codebooks (DT / Linear-2 / linear), bit packing
-//! at true bitwidth, and the block-wise quantizer — the exact Rust mirror
-//! of the L1 Pallas kernels, cross-checked via golden artifacts.
+//! at true bitwidth, the block-wise quantizer — the exact Rust mirror of
+//! the L1 Pallas kernels, cross-checked via golden artifacts — and the
+//! [`codec::StateCodec`] layer both optimizer families store state through.
 
 pub mod blockwise;
 pub mod codebook;
+pub mod codec;
 pub mod pack;
 
 pub use blockwise::{
     dequantize, dequantize_matrix_cols, matrix_state_bytes, quantize,
     quantize_matrix_cols, QuantizedVec, BLOCK,
 };
-pub use codebook::{codebook, nearest, runtime_codebook, Mapping};
+pub use codebook::{codebook, runtime_codebook, Boundaries, Mapping};
+pub use codec::{
+    codec_by_name, codec_for, fp32, Bf16, BlockQuant, EncodedVec, Fp32, StateBuf,
+    StateCodec,
+};
 pub use pack::{pack_bits, packed_len, unpack_bits};

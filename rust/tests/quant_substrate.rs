@@ -6,8 +6,8 @@
 //!    (mirroring python/tests/test_codebooks.py).
 
 use shampoo4::quant::{
-    codebook, dequantize, nearest, pack_bits, packed_len, quantize, runtime_codebook, unpack_bits,
-    Mapping,
+    codebook, dequantize, pack_bits, packed_len, quantize, runtime_codebook, unpack_bits,
+    Boundaries, Mapping,
 };
 use shampoo4::util::prop;
 
@@ -112,15 +112,16 @@ fn codebook_structural_properties() {
 
 #[test]
 fn padded_runtime_codebooks_emit_low_codes() {
-    // 3-bit books are padded to 16 entries; argmin-first-occurrence keeps
+    // 3-bit books are padded to 16 entries; canonical-index boundaries keep
     // every emitted code < 8 so true-bitwidth packing stays valid.
     for mapping in [Mapping::Dt, Mapping::Linear2] {
         let cb = runtime_codebook(mapping, 3);
         assert_eq!(cb.len(), 16);
+        let bounds = Boundaries::new(&cb);
         prop::check(&format!("padded {mapping:?}"), 10, |rng| {
             for _ in 0..100 {
                 let x = rng.normal_f32();
-                let c = nearest(&cb, x);
+                let c = bounds.nearest(x);
                 if c >= 8 {
                     return Err(format!("x={x} -> code {c}"));
                 }

@@ -137,6 +137,147 @@ fn checkpoint_resume_is_equivalent_to_straight_run() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Save at step k mid-run, resume, and demand a bit-identical trajectory
+/// vs the uninterrupted run — second-order preconditioner state rides in
+/// the checkpoint as raw codec bytes, so there is no requantization error
+/// and no re-warm.
+fn check_second_order_resume(kind: SecondOrderKind) {
+    let rt = backend();
+    let dir = std::env::temp_dir().join(format!("shampoo4_so_resume_{}", kind.name()));
+    let ckpt = dir.join("ck.bin");
+    let mut cfg = base_cfg(20);
+    cfg.name = format!("it_so_resume_{}", kind.name());
+    cfg.second.kind = kind;
+    cfg.second.update_precond_every = 4;
+    cfg.second.update_invroot_every = 8;
+    cfg.schedule = shampoo4::config::Schedule::Constant;
+    cfg.log_every = 1;
+
+    let mut straight = Trainer::new(&rt, cfg.clone()).unwrap();
+    let r_straight = straight.train(&rt, None).unwrap();
+
+    let mut half_cfg = cfg.clone();
+    half_cfg.steps = 10;
+    let mut first_half = Trainer::new(&rt, half_cfg).unwrap();
+    first_half.train(&rt, None).unwrap();
+    first_half.save_checkpoint(&ckpt, 10).unwrap();
+
+    let mut resumed = Trainer::new(&rt, cfg).unwrap();
+    assert_eq!(resumed.load_checkpoint(&ckpt).unwrap(), 10);
+    let r_resumed = resumed.train(&rt, None).unwrap();
+    assert_eq!(r_resumed.timings.steps, 10, "resume must run only the back half");
+
+    let bits = |v: &[Vec<f32>]| -> Vec<Vec<u32>> {
+        v.iter().map(|p| p.iter().map(|x| x.to_bits()).collect()).collect()
+    };
+    assert_eq!(
+        bits(&resumed.model.params),
+        bits(&straight.model.params),
+        "{}: resumed parameters diverged from the straight run",
+        kind.name()
+    );
+    let tail: Vec<(usize, u32)> = r_straight
+        .losses
+        .iter()
+        .filter(|(s, _)| *s > 10)
+        .map(|&(s, l)| (s, l.to_bits()))
+        .collect();
+    let resumed_losses: Vec<(usize, u32)> =
+        r_resumed.losses.iter().map(|&(s, l)| (s, l.to_bits())).collect();
+    assert_eq!(resumed_losses, tail, "{}: resumed losses diverged", kind.name());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shampoo_checkpoint_resume_is_bit_identical() {
+    check_second_order_resume(SecondOrderKind::Shampoo);
+}
+
+#[test]
+fn kfac_checkpoint_resume_is_bit_identical() {
+    check_second_order_resume(SecondOrderKind::KFac);
+}
+
+#[test]
+fn quantized_first_order_states_learn_and_shrink_memory() {
+    // --first-order-bits 4: AdamW with 4-bit DT moments (Table 13 baseline
+    // regime) must still learn, and its state bytes must reflect true
+    // bit-packed storage
+    let rt = backend();
+    let mut cfg = base_cfg(40);
+    cfg.name = "it_fo4".into();
+    cfg.first.kind = FirstOrderKind::AdamW;
+    cfg.first.lr = 1e-3;
+    cfg.first.bits = 4;
+    cfg.first.mapping = shampoo4::quant::Mapping::Dt;
+    cfg.second.kind = SecondOrderKind::None;
+    let mut t = Trainer::new(&rt, cfg).unwrap();
+    let res = t.train(&rt, None).unwrap();
+    let first = res.losses.first().unwrap().1;
+    let last = res.losses.last().unwrap().1;
+    assert!(last.is_finite() && last < first, "loss {first} -> {last}");
+    // fp32 AdamW states would be 2 × params_bytes; 4-bit ≈ 0.28 ×
+    let fp32_states = 2 * res.memory.params_bytes;
+    assert!(
+        res.memory.first_order_bytes * 6 < fp32_states,
+        "4-bit states {} vs fp32 {}",
+        res.memory.first_order_bytes,
+        fp32_states
+    );
+}
+
+#[test]
+fn quantized_first_order_resume_is_exact() {
+    // 10 + save/load + 10 must equal 20 straight steps bitwise even with
+    // 4-bit moments: the checkpoint persists the encoded bytes verbatim
+    let rt = backend();
+    let dir = std::env::temp_dir().join("shampoo4_fo4_resume");
+    let ckpt = dir.join("ck.bin");
+    let mut cfg = base_cfg(20);
+    cfg.name = "it_fo4_resume".into();
+    cfg.first.kind = FirstOrderKind::AdamW;
+    cfg.first.lr = 1e-3;
+    cfg.first.bits = 4;
+    cfg.second.kind = SecondOrderKind::None;
+    cfg.schedule = shampoo4::config::Schedule::Constant;
+
+    let mut straight = Trainer::new(&rt, cfg.clone()).unwrap();
+    straight.train(&rt, None).unwrap();
+
+    let mut half_cfg = cfg.clone();
+    half_cfg.steps = 10;
+    let mut first_half = Trainer::new(&rt, half_cfg).unwrap();
+    first_half.train(&rt, None).unwrap();
+    first_half.save_checkpoint(&ckpt, 10).unwrap();
+
+    let mut resumed = Trainer::new(&rt, cfg).unwrap();
+    assert_eq!(resumed.load_checkpoint(&ckpt).unwrap(), 10);
+    resumed.train(&rt, None).unwrap();
+    assert_eq!(resumed.model.params, straight.model.params);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_rejects_mismatched_first_order_codec() {
+    // a 4-bit-states checkpoint must not silently load into an fp32 run
+    let rt = backend();
+    let dir = std::env::temp_dir().join("shampoo4_fo_codec_mismatch");
+    let ckpt = dir.join("ck.bin");
+    let mut cfg = base_cfg(1);
+    cfg.name = "it_fo_codec".into();
+    cfg.first.kind = FirstOrderKind::AdamW;
+    cfg.first.bits = 4;
+    cfg.second.kind = SecondOrderKind::None;
+    let t = Trainer::new(&rt, cfg.clone()).unwrap();
+    t.save_checkpoint(&ckpt, 1).unwrap();
+    let mut cfg2 = cfg;
+    cfg2.first.bits = 32;
+    let mut t2 = Trainer::new(&rt, cfg2).unwrap();
+    let err = t2.load_checkpoint(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("codec"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn checkpoint_rejects_mismatched_optimizer() {
     let rt = backend();
