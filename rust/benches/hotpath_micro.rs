@@ -61,6 +61,11 @@ fn main() {
     println!("{}", runner.run("optim/adamw native 1M params", || {
         adamw.step(&mut params, &grad, 1e-3);
     }).report());
+    // the same update par-chunked over the persistent pool (bit-identical)
+    let sched4 = Scheduler::new(4);
+    println!("{}", runner.run("optim/adamw chunked 1M params, 4 workers", || {
+        adamw.step_par(&mut params, &grad, 1e-3, &sched4);
+    }).report());
 
     // ---- artifact executions (HostBackend or PJRT, whichever is active) ----
     let rt = default_backend(std::path::Path::new("artifacts")).unwrap();
@@ -143,6 +148,7 @@ fn main() {
     }).report());
 
     // scheduler fan-out over block-sized matmul tasks: serial vs 4 workers
+    // (the pool is persistent — these rows include zero thread spawns)
     let base: Vec<Mat> = (0..8).map(|_| Mat::randn(128, 128, &mut rng)).collect();
     for workers in [1usize, 4] {
         let sched = Scheduler::new(workers);
@@ -156,10 +162,25 @@ fn main() {
         }).report());
     }
 
+    // pipelined background path: submit + completion-barrier round trip for
+    // an empty job — the fixed overhead a cross-step refresh pays on top of
+    // its actual PU/PIRU work
+    let pipe_sched = Scheduler::pipelined(4);
+    println!("{}", runner.run("engine/background spawn+barrier round trip", || {
+        let (tx, rx) = std::sync::mpsc::channel();
+        assert!(pipe_sched.spawn(Box::new(move || {
+            let _ = tx.send(());
+        })));
+        rx.recv().unwrap();
+    }).report());
+
     println!("\nper-step budget at T1=100/T2=500 (mlp_base, 8 blocks):");
     println!("  every step:  model_step + 8×precond4 + flat adamw");
     println!("  every T1:    + 8×(gram + 2×pu)");
     println!("  every T2:    + 8×(2×piru)  — or 1 cohort/step when staggered");
-    println!("  per-block work fans across shampoo.parallelism workers;");
-    println!("  see table2_training for end-to-end rows + BENCH_parallel.json");
+    println!("  per-block work fans across shampoo.parallelism workers; with");
+    println!("  --pipeline the T1/T2 lines run on the persistent pool and");
+    println!("  overlap the next steps' model work (roots swap in <= max_lag");
+    println!("  steps later); see table2_training for end-to-end rows +");
+    println!("  BENCH_parallel.json");
 }

@@ -9,7 +9,8 @@
 //! (default 200).
 //!
 //! A second section exercises the parallel block engine: the 4-bit Shampoo
-//! arm re-run serial vs `parallelism = 4`, and batch vs staggered PIRU, with
+//! arm re-run serial vs `parallelism = 4`, batch vs staggered PIRU, and
+//! synchronous vs cross-step pipelined (`shampoo.pipeline`) refreshes, with
 //! wall-clock + worst-step rows printed and the machine-readable summary
 //! written to bench_out/BENCH_parallel.json.
 
@@ -96,14 +97,15 @@ fn main() -> Result<()> {
     Ok(())
 }
 
-/// Serial-vs-parallel and stagger-vs-batch wall-time rows for the 4-bit
-/// Shampoo MLP arm, plus bench_out/BENCH_parallel.json.
+/// Serial-vs-parallel, stagger-vs-batch, and sync-vs-pipelined wall-time
+/// rows for the 4-bit Shampoo MLP arm, plus bench_out/BENCH_parallel.json.
 fn parallel_engine_rows(rt: &dyn Backend, steps: usize) -> Result<()> {
-    let run_engine = |parallelism: usize, stagger: bool| -> Result<TrainResult> {
+    let run_engine = |parallelism: usize, stagger: bool, pipeline: bool| -> Result<TrainResult> {
         let mut cfg = RunConfig::default();
         cfg.name = format!(
-            "table2_engine_p{parallelism}{}",
-            if stagger { "_stagger" } else { "" }
+            "table2_engine_p{parallelism}{}{}",
+            if stagger { "_stagger" } else { "" },
+            if pipeline { "_pipeline" } else { "" }
         );
         cfg.model = "mlp_base".into();
         cfg.steps = steps;
@@ -115,6 +117,7 @@ fn parallel_engine_rows(rt: &dyn Backend, steps: usize) -> Result<()> {
         cfg.second.update_invroot_every = 30;
         cfg.second.parallelism = parallelism;
         cfg.second.stagger_invroots = stagger;
+        cfg.second.pipeline = pipeline;
         cfg.schedule = Schedule::Cosine { warmup: steps / 20 };
         cfg.eval_every = 0;
         cfg.eval_batches = 8;
@@ -124,24 +127,32 @@ fn parallel_engine_rows(rt: &dyn Backend, steps: usize) -> Result<()> {
 
     println!("\n# Parallel block engine @ {steps} steps (mlp_base, 4-bit Shampoo, T2=30)");
     println!(
-        "{:<28} {:>8} {:>12} {:>9} {:>9} {:>9}",
-        "Engine", "WCT(s)", "max step(ms)", "pu(s)", "piru(s)", "precond(s)"
+        "# NOTE: for pipelined arms, pu(s)/piru(s) are summed background\n\
+         # thread-seconds (work moved off the step), not coordinator wall time\n\
+         # — compare arms on WCT and max step, not on those columns."
+    );
+    println!(
+        "{:<28} {:>8} {:>12} {:>9} {:>9} {:>9} {:>9}",
+        "Engine", "WCT(s)", "max step(ms)", "pu(s)", "piru(s)", "precond(s)", "stall(s)"
     );
     let mut results: Vec<(&str, TrainResult)> = Vec::new();
-    for (label, parallelism, stagger) in [
-        ("serial, batch PIRU", 1, false),
-        ("parallel=4, batch PIRU", 4, false),
-        ("parallel=4, staggered PIRU", 4, true),
+    for (label, parallelism, stagger, pipeline) in [
+        ("serial, batch PIRU", 1, false, false),
+        ("parallel=4, batch PIRU", 4, false, false),
+        ("parallel=4, staggered PIRU", 4, true, false),
+        ("parallel=4, pipelined", 4, false, true),
+        ("parallel=4, pipe+stagger", 4, true, true),
     ] {
-        let res = run_engine(parallelism, stagger)?;
+        let res = run_engine(parallelism, stagger, pipeline)?;
         println!(
-            "{:<28} {:>8.2} {:>12.2} {:>9.3} {:>9.3} {:>9.3}",
+            "{:<28} {:>8.2} {:>12.2} {:>9.3} {:>9.3} {:>9.3} {:>9.3}",
             label,
             res.wall_secs,
             res.timings.max_step_secs * 1e3,
             res.timings.pu_secs,
             res.timings.piru_secs,
-            res.timings.precond_secs
+            res.timings.precond_secs,
+            res.timings.pipeline_stall_secs
         );
         results.push((label, res));
     }
@@ -153,32 +164,55 @@ fn parallel_engine_rows(rt: &dyn Backend, steps: usize) -> Result<()> {
             ("pu_secs", Json::Num(res.timings.pu_secs)),
             ("piru_secs", Json::Num(res.timings.piru_secs)),
             ("precond_secs", Json::Num(res.timings.precond_secs)),
+            ("pipeline_stall_secs", Json::Num(res.timings.pipeline_stall_secs)),
+            ("pipeline_refreshes", Json::Num(res.timings.pipeline_refreshes as f64)),
             (
                 "final_eval_loss",
                 Json::Num(res.final_loss().map(|l| l as f64).unwrap_or(f64::NAN)),
             ),
         ])
     };
-    let (serial, par4, stag4) = (&results[0].1, &results[1].1, &results[2].1);
+    let (serial, par4, stag4, pipe4, pipestag4) =
+        (&results[0].1, &results[1].1, &results[2].1, &results[3].1, &results[4].1);
     let j = Json::obj(vec![
         ("bench", Json::Str("table2_training/parallel_engine".into())),
         ("model", Json::Str("mlp_base".into())),
         ("steps", Json::Num(steps as f64)),
+        (
+            "note",
+            Json::Str(
+                "pipelined arms report pu_secs/piru_secs as summed background \
+                 thread-seconds, not wall time; compare on wall_secs/max_step_secs"
+                    .into(),
+            ),
+        ),
         ("serial_batch", arm(serial)),
         ("parallel4_batch", arm(par4)),
         ("parallel4_stagger", arm(stag4)),
+        ("parallel4_pipeline", arm(pipe4)),
+        ("parallel4_pipeline_stagger", arm(pipestag4)),
         ("speedup_parallel4", Json::Num(serial.wall_secs / par4.wall_secs.max(1e-12))),
         (
             "max_step_stagger_over_batch",
             Json::Num(stag4.timings.max_step_secs / par4.timings.max_step_secs.max(1e-12)),
         ),
+        (
+            "max_step_pipeline_over_batch",
+            Json::Num(pipe4.timings.max_step_secs / par4.timings.max_step_secs.max(1e-12)),
+        ),
+        (
+            "wall_pipeline_over_batch",
+            Json::Num(pipe4.wall_secs / par4.wall_secs.max(1e-12)),
+        ),
     ]);
     std::fs::create_dir_all("bench_out")?;
     std::fs::write("bench_out/BENCH_parallel.json", j.to_string())?;
     println!(
-        "# speedup(parallel=4) = {:.2}x, max-step stagger/batch = {:.2} -> {}",
+        "# speedup(parallel=4) = {:.2}x, max-step stagger/batch = {:.2}, \
+         max-step pipeline/batch = {:.2} -> {}",
         serial.wall_secs / par4.wall_secs.max(1e-12),
         stag4.timings.max_step_secs / par4.timings.max_step_secs.max(1e-12),
+        pipe4.timings.max_step_secs / par4.timings.max_step_secs.max(1e-12),
         "bench_out/BENCH_parallel.json"
     );
     Ok(())

@@ -9,18 +9,27 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::quant::Mapping;
 use crate::util::tomlcfg::TomlDoc;
 
+/// First-order optimizer family F (eq. 1 + the Appendix H comparison arms).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FirstOrderKind {
+    /// SGD with momentum.
     Sgdm,
+    /// AdamW (decoupled weight decay).
     AdamW,
+    /// NAdamW (Nesterov momentum inside AdamW).
     NAdamW,
+    /// Adagrad.
     Adagrad,
+    /// Schedule-free SGD (Defazio et al. 2024).
     SgdScheduleFree,
+    /// Schedule-free AdamW (Defazio et al. 2024).
     AdamWScheduleFree,
+    /// M-FAC (Frantar et al. 2021), the Table 11 memory comparison arm.
     MFac,
 }
 
 impl FirstOrderKind {
+    /// Parse a config/CLI optimizer name (case-insensitive).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "sgdm" | "sgd" => Self::Sgdm,
@@ -34,6 +43,7 @@ impl FirstOrderKind {
         })
     }
 
+    /// Canonical display name (Table 2/4 row labels).
     pub fn name(&self) -> &'static str {
         match self {
             Self::Sgdm => "SGDM",
@@ -50,14 +60,20 @@ impl FirstOrderKind {
 /// Second-order preconditioner family (Algorithm 3/5 + Appendix A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SecondOrderKind {
+    /// No second-order preconditioning (pure F).
     None,
+    /// Shampoo (GGᵀ/GᵀG statistics, −1/4 roots).
     Shampoo,
+    /// CASPR (combined axis-sum preconditioning).
     Caspr,
+    /// K-FAC (layer statistics, −1 exponent).
     KFac,
+    /// AdaBK (layer statistics, −1/2 exponent).
     AdaBk,
 }
 
 impl SecondOrderKind {
+    /// Parse a config/CLI preconditioner name (case-insensitive).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "none" | "" => Self::None,
@@ -69,6 +85,7 @@ impl SecondOrderKind {
         })
     }
 
+    /// Canonical display name.
     pub fn name(&self) -> &'static str {
         match self {
             Self::None => "none",
@@ -94,6 +111,7 @@ impl SecondOrderKind {
 pub struct QuantConfig {
     /// 32 = dense baseline (no quantization).
     pub bits: u32,
+    /// Codebook mapping for quantized second-order states.
     pub mapping: Mapping,
     /// Quantize the eigenvector matrix (ours) vs the preconditioner (naive).
     pub quantize_eigen: bool,
@@ -115,9 +133,12 @@ impl Default for QuantConfig {
     }
 }
 
+/// Second-order (`[shampoo]` / `[quant]`) section of a run config.
 #[derive(Debug, Clone)]
 pub struct SecondOrderConfig {
+    /// Preconditioner family (Shampoo/CASPR/K-FAC/AdaBK, or `None`).
     pub kind: SecondOrderKind,
+    /// Storage policy for the preconditioner states.
     pub quant: QuantConfig,
     /// Preconditioner update interval (T1).
     pub update_precond_every: usize,
@@ -139,6 +160,18 @@ pub struct SecondOrderConfig {
     /// interval instead of batching every block on the T2-boundary step —
     /// same work per interval, no wall-clock spike.
     pub stagger_invroots: bool,
+    /// Cross-step pipelining: PU/PIRU refreshes run asynchronously on the
+    /// persistent worker pool and overlap subsequent model steps; the
+    /// refreshed inverse roots are swapped in at a deterministic completion
+    /// barrier (double-buffered per block, so `precondition` never reads a
+    /// half-updated root). Preconditioning sees roots up to
+    /// `pipeline_max_lag` steps stale — the same tolerance regime as
+    /// `stagger_invroots`. Off by default (bit-identical to the serial
+    /// engine).
+    pub pipeline: bool,
+    /// Bounded staleness for the pipelined engine: an in-flight refresh is
+    /// force-completed after this many steps even if no new refresh is due.
+    pub pipeline_max_lag: usize,
 }
 
 /// Default worker count: the `SHAMPOO4_PARALLELISM` env var when set (CI uses
@@ -164,18 +197,28 @@ impl Default for SecondOrderConfig {
             start_step: 1,
             parallelism: default_parallelism(),
             stagger_invroots: false,
+            pipeline: false,
+            pipeline_max_lag: 4,
         }
     }
 }
 
+/// First-order (`[optimizer]` / `[first_order]`) section of a run config.
 #[derive(Debug, Clone)]
 pub struct FirstOrderConfig {
+    /// Optimizer family F.
     pub kind: FirstOrderKind,
+    /// Base learning rate (scaled by the schedule).
     pub lr: f32,
+    /// Weight-decay coefficient.
     pub weight_decay: f32,
+    /// Momentum (SGDM / M-FAC).
     pub momentum: f32,
+    /// Adam β₁.
     pub beta1: f32,
+    /// Adam β₂.
     pub beta2: f32,
+    /// Adam ε.
     pub eps: f32,
     /// M-FAC gradient history length.
     pub mfac_m: usize,
@@ -208,23 +251,48 @@ impl Default for FirstOrderConfig {
 /// transformers, plus the schedule-free arm).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Schedule {
+    /// Flat learning rate.
     Constant,
-    Cosine { warmup: usize },
-    MultiStep { warmup: usize, decay_every_frac: f32, gamma: f32 },
+    /// Linear warmup, then a cosine decay to ~0.
+    Cosine {
+        /// Warmup steps.
+        warmup: usize,
+    },
+    /// Linear warmup, then step decays by `gamma`.
+    MultiStep {
+        /// Warmup steps.
+        warmup: usize,
+        /// Fraction of total steps between decays.
+        decay_every_frac: f32,
+        /// Multiplicative decay per phase.
+        gamma: f32,
+    },
 }
 
+/// One full training-run configuration (a TOML file / CLI overrides).
 #[derive(Debug, Clone)]
 pub struct RunConfig {
+    /// Run name (output directory, bench row label).
     pub name: String,
+    /// Model key in the backend manifest (`mlp_base`, `tlm_tiny`, ...).
     pub model: String,
+    /// Total optimizer steps.
     pub steps: usize,
+    /// RNG seed for init + data.
     pub seed: u64,
+    /// First-order optimizer section.
     pub first: FirstOrderConfig,
+    /// Second-order preconditioner section.
     pub second: SecondOrderConfig,
+    /// Learning-rate schedule.
     pub schedule: Schedule,
+    /// Evaluate every N steps (0 = only at the end).
     pub eval_every: usize,
+    /// Held-out batches per evaluation (0 = skip final eval).
     pub eval_batches: usize,
+    /// Record the training loss every N steps.
     pub log_every: usize,
+    /// Directory with AOT artifacts (PJRT backend).
     pub artifact_dir: String,
     /// Execution backend: "host" (pure Rust, hermetic), "pjrt" (AOT
     /// artifacts, requires --features pjrt), or "auto" (pjrt when compiled
@@ -256,6 +324,8 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// Parse a TOML document (unknown keys are ignored; missing keys take
+    /// the defaults) and validate the result.
     pub fn from_toml_str(text: &str) -> Result<Self> {
         let doc = TomlDoc::parse(text).map_err(|e| anyhow!("{e}"))?;
         let mut cfg = RunConfig::default();
@@ -296,6 +366,9 @@ impl RunConfig {
         s.start_step = doc.usize_or("shampoo.start_step", s.start_step);
         s.parallelism = doc.usize_or("shampoo.parallelism", s.parallelism).max(1);
         s.stagger_invroots = doc.bool_or("shampoo.stagger_invroots", s.stagger_invroots);
+        s.pipeline = doc.bool_or("shampoo.pipeline", s.pipeline);
+        s.pipeline_max_lag =
+            doc.usize_or("shampoo.pipeline_max_lag", s.pipeline_max_lag).max(1);
 
         let q = &mut s.quant;
         q.bits = doc.usize_or("quant.bits", q.bits as usize) as u32;
@@ -337,9 +410,20 @@ impl RunConfig {
                 self.second.quant.bits
             );
         }
+        if self.second.pipeline
+            && self.second.kind != SecondOrderKind::None
+            && self.shadow_quant_error
+        {
+            bail!(
+                "shampoo.pipeline and run.shadow_quant_error are mutually exclusive: the \
+                 shadow tracker mirrors PU synchronously, which the asynchronous pipeline \
+                 cannot provide"
+            );
+        }
         Ok(())
     }
 
+    /// [`RunConfig::from_toml_str`] on a file.
     pub fn from_file(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
@@ -425,6 +509,32 @@ warmup = 20
         let cfg = RunConfig::from_toml_str("[shampoo]\nparallelism = 0").unwrap();
         assert_eq!(cfg.second.parallelism, 1);
         assert!(!cfg.second.stagger_invroots);
+    }
+
+    #[test]
+    fn pipeline_keys_parse() {
+        let cfg = RunConfig::from_toml_str(
+            "[shampoo]\npipeline = true\npipeline_max_lag = 7\nparallelism = 2",
+        )
+        .unwrap();
+        assert!(cfg.second.pipeline);
+        assert_eq!(cfg.second.pipeline_max_lag, 7);
+        // defaults: off, lag 4; lag clamped to >= 1
+        let d = RunConfig::default();
+        assert!(!d.second.pipeline);
+        assert_eq!(d.second.pipeline_max_lag, 4);
+        let cfg = RunConfig::from_toml_str("[shampoo]\npipeline_max_lag = 0").unwrap();
+        assert_eq!(cfg.second.pipeline_max_lag, 1);
+        // pipeline + shadow tracker is rejected (shadow mirrors PU synchronously)
+        assert!(RunConfig::from_toml_str(
+            "[run]\nshadow_quant_error = true\n[shampoo]\npipeline = true"
+        )
+        .is_err());
+        // ...but fine when no second-order optimizer runs
+        assert!(RunConfig::from_toml_str(
+            "[run]\nshadow_quant_error = true\n[shampoo]\nenabled = false\npipeline = true"
+        )
+        .is_ok());
     }
 
     #[test]

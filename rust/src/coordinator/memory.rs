@@ -8,8 +8,11 @@ use crate::quant::packed_len;
 /// A parameter matrix in the planned model.
 #[derive(Debug, Clone)]
 pub struct PlannedParam {
+    /// Parameter name.
     pub name: String,
+    /// Matrix rows.
     pub rows: usize,
+    /// Matrix columns.
     pub cols: usize,
     /// participates in Shampoo preconditioning (2-D weights)
     pub preconditioned: bool,
@@ -18,15 +21,22 @@ pub struct PlannedParam {
 /// Transformer-family model shape for planning (LLaMA-style).
 #[derive(Debug, Clone)]
 pub struct PlannedModel {
+    /// Display name.
     pub name: String,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Hidden width.
     pub d_model: usize,
+    /// Transformer layers.
     pub n_layers: usize,
+    /// MLP width.
     pub d_ff: usize,
+    /// Planned context length.
     pub seq: usize,
 }
 
 impl PlannedModel {
+    /// The paper's Table 13 subject.
     pub fn llama2_7b() -> Self {
         Self {
             name: "LLaMA2-7B".into(),
@@ -38,6 +48,7 @@ impl PlannedModel {
         }
     }
 
+    /// Enumerate every parameter matrix of the planned model.
     pub fn params(&self) -> Vec<PlannedParam> {
         let d = self.d_model;
         let f = self.d_ff;
@@ -82,6 +93,7 @@ impl PlannedModel {
         out
     }
 
+    /// Total scalar parameters.
     pub fn param_count(&self) -> usize {
         self.params().iter().map(|p| p.rows * p.cols).sum()
     }
@@ -91,10 +103,20 @@ impl PlannedModel {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum OptimizerPlan {
     /// AdamW at `bits` per state element (8-bit AdamW per the paper).
-    Adam { bits: u32 },
+    Adam {
+        /// Bits per Adam state element.
+        bits: u32,
+    },
     /// AdamW + Shampoo: Adam states at `adam_bits`, Shampoo states at
     /// `shampoo_bits` (32 = dense; 4 = ours), block size 64 scales.
-    AdamShampoo { adam_bits: u32, shampoo_bits: u32, max_order: usize },
+    AdamShampoo {
+        /// Bits per Adam state element.
+        adam_bits: u32,
+        /// Bits per Shampoo state element (32 = dense, 4 = ours).
+        shampoo_bits: u32,
+        /// Largest preconditioner block order.
+        max_order: usize,
+    },
 }
 
 /// Bytes for Shampoo preconditioner states of a (rows × cols) matrix
@@ -124,16 +146,23 @@ pub fn shampoo_block_bytes(rows: usize, cols: usize, bits: u32, max_order: usize
     total
 }
 
+/// Planned byte totals for one optimizer configuration.
 #[derive(Debug, Clone)]
 pub struct MemoryPlan {
+    /// Model parameter bytes (fp32).
     pub params_bytes: usize,
+    /// Gradient bytes (fp32).
     pub grads_bytes: usize,
+    /// Adam state bytes at the planned bitwidth.
     pub adam_bytes: usize,
+    /// Shampoo state bytes at the planned bitwidth.
     pub shampoo_bytes: usize,
+    /// Activation bytes per batch sample.
     pub activation_bytes_per_sample: usize,
 }
 
 impl MemoryPlan {
+    /// Total bytes at a batch size.
     pub fn total_at_batch(&self, batch: usize) -> usize {
         self.params_bytes
             + self.grads_bytes

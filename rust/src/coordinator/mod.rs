@@ -4,21 +4,30 @@
 //! * `state`        — quantized / dense / naive preconditioner block states
 //! * `second_order` — Algorithm 3 orchestration over the AOT artifacts,
 //!                    fanned across the parallel block engine
-//! * `scheduler`    — the parallel block engine: scoped-thread worker pool,
-//!                    staggered inverse-root cohorts, per-stage timings
+//! * `scheduler`    — the parallel block engine: persistent worker pool,
+//!                    cross-step pipelining, staggered inverse-root
+//!                    cohorts, per-stage timings
 //! * `model`        — parameter buffers + model step/eval marshaling
 //! * `trainer`      — the training loop, eval, metrics, checkpoints
 //! * `shadow`       — 32-bit shadow for dynamic quant-error (Figs 7/8)
 //! * `memory`       — analytic planner (Table 13) sharing the live
 //!                    byte-accounting model
 
+/// Analytic memory planner (Table 13).
 pub mod memory;
+/// Parameter buffers + model step/eval marshaling.
 pub mod model;
+/// Shampoo blocking of parameters into bucket orders.
 pub mod partition;
+/// The parallel block engine: persistent pool, pipeline, timings.
 pub mod scheduler;
+/// Algorithm-3 orchestration over the artifacts.
 pub mod second_order;
+/// 32-bit shadow preconditioner for dynamic quant-error (Figs 7/8).
 pub mod shadow;
+/// Per-block preconditioner states + the pipeline's double buffer.
 pub mod state;
+/// The training loop, eval, metrics, checkpoints.
 pub mod trainer;
 
 pub use model::ModelHandle;

@@ -9,15 +9,22 @@ use crate::data::{corpus::BigramCorpus, vision::VisionDataset, Batch};
 use crate::runtime::{Backend, HostTensor, ModelSpec};
 use crate::util::rng::Rng;
 
+/// Host-side parameters of one model + its step/eval marshaling.
 pub struct ModelHandle {
+    /// Manifest key of the model.
     pub name: String,
+    /// The backend's spec for it.
     pub spec: ModelSpec,
+    /// Parameter buffers, one flat vec per tensor.
     pub params: Vec<Vec<f32>>,
+    /// Shapes matching `params`.
     pub shapes: Vec<Vec<usize>>,
+    /// Names matching `params`.
     pub names: Vec<String>,
 }
 
 impl ModelHandle {
+    /// Initialize the named model's parameters from `seed`.
     pub fn new(rt: &dyn Backend, name: &str, seed: u64) -> Result<Self> {
         let spec = rt
             .manifest()
@@ -36,10 +43,12 @@ impl ModelHandle {
         Ok(Self { name: name.to_string(), spec, params, shapes, names })
     }
 
+    /// Total scalar parameters.
     pub fn param_count(&self) -> usize {
         self.params.iter().map(|p| p.len()).sum()
     }
 
+    /// Parameter bytes (fp32).
     pub fn params_bytes(&self) -> usize {
         self.param_count() * 4
     }
@@ -121,6 +130,7 @@ impl ModelHandle {
         }
     }
 
+    /// Draw the model's batch shape from `src` (train or held-out split).
     pub fn make_batch(&self, src: &DataSource, test: bool, index: u64) -> Batch {
         match src {
             DataSource::Vision(ds) => {
@@ -144,8 +154,11 @@ impl ModelHandle {
     }
 }
 
+/// The synthetic dataset matching a model family.
 pub enum DataSource {
+    /// Classification features (MLP models).
     Vision(VisionDataset),
+    /// Token stream (transformer LMs).
     Corpus(BigramCorpus),
 }
 

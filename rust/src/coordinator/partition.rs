@@ -9,19 +9,24 @@
 /// One preconditioned block of a parameter matrix.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Block {
+    /// Which parameter tensor the block belongs to.
     pub param_idx: usize,
-    /// offsets within the parameter matrix
+    /// Row offset within the parameter matrix.
     pub row0: usize,
+    /// Column offset within the parameter matrix.
     pub col0: usize,
-    /// actual content size
+    /// Actual content rows.
     pub rows: usize,
+    /// Actual content columns.
     pub cols: usize,
-    /// padded bucket orders fed to the artifacts (rows ≤ bm, cols ≤ bn)
+    /// Padded bucket order for the row side (rows ≤ bm).
     pub bm: usize,
+    /// Padded bucket order for the column side (cols ≤ bn).
     pub bn: usize,
 }
 
 impl Block {
+    /// True when the block carries zero padding up to its bucket orders.
     pub fn padded(&self) -> bool {
         self.rows != self.bm || self.cols != self.bn
     }

@@ -1,34 +1,276 @@
-//! The parallel block engine's scheduler: a std-only scoped-thread worker
-//! pool that fans independent per-block tasks (PU / PIRU / precondition —
-//! Algorithm 3's blocks are embarrassingly parallel) across
-//! `second.parallelism` workers, plus the staggered inverse-root cohort plan
-//! and the per-stage wall-time accounting (`StepTimings`).
+//! The parallel block engine's scheduler: a **persistent** worker pool
+//! (long-lived threads fed by a channel-style job queue) that fans
+//! independent per-block tasks (PU / PIRU / precondition — Algorithm 3's
+//! blocks are embarrassingly parallel) across `second.parallelism` workers,
+//! plus the staggered inverse-root cohort plan and the per-stage wall-time
+//! accounting ([`StepTimings`]).
+//!
+//! Two execution modes share the pool:
+//!
+//!  * **Fan-out** ([`Scheduler::par_map_mut`]): the caller blocks while the
+//!    pool (plus the calling thread itself) drains an indexed task queue and
+//!    merges results in index order. Threads are *reused* across calls —
+//!    nothing is spawned per phase, unlike the scoped-thread engine this
+//!    replaced.
+//!  * **Background** ([`Scheduler::spawn`]): detached jobs (the cross-step
+//!    PU/PIRU pipeline) run on the pool while the trainer keeps stepping;
+//!    the submitter owns the completion barrier.
 //!
 //! Determinism contract: tasks are pure functions of `(index, item)`, workers
 //! pull from a shared queue in arbitrary order, and results are merged into
 //! an index-ordered `Vec` — so `parallelism = N` is bit-identical to
 //! `parallelism = 1`. Errors are reported deterministically too: the
 //! lowest-index failure wins.
+//!
+//! Lifecycle (see `docs/ARCHITECTURE.md` for the full diagram):
+//!
+//! ```text
+//! Scheduler::new(N) ──► WorkerPool spawns N−1 threads ──► threads park on
+//!   the queue condvar ──► par_map_mut/spawn push jobs + notify ──► threads
+//!   run jobs (panics contained per job) ──► Drop: shutdown flag + notify_all
+//!   ──► threads finish the queue, exit ──► Drop joins every handle.
+//! ```
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Mutex;
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 use anyhow::{bail, Result};
 
-/// Worker pool for per-block fan-out. `parallelism = 1` degenerates to a
-/// plain serial loop with zero thread overhead.
+/// A queued unit of work for the persistent pool.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// State shared between the pool handle and its worker threads.
+struct PoolShared {
+    /// FIFO job queue; workers block on `cv` while it is empty.
+    queue: Mutex<VecDeque<Job>>,
+    /// Wakes parked workers when a job lands or shutdown begins.
+    cv: Condvar,
+    /// Set (under the queue lock) by `Drop`; workers exit once the queue
+    /// drains.
+    shutdown: AtomicBool,
+    /// Jobs queued or currently running — lets fan-out callers recruit only
+    /// *idle* threads as helpers instead of queuing behind long background
+    /// pipeline jobs.
+    pending: AtomicUsize,
+}
+
+/// A pool of long-lived worker threads fed by a shared job queue.
+///
+/// Threads are spawned once at construction and live until the pool is
+/// dropped; submitting work is a queue push + condvar notify, never a thread
+/// spawn. On drop the pool performs a *graceful* shutdown: the queue is
+/// drained (already-submitted jobs still run), then every thread exits and
+/// is joined. A panicking job is contained to that job — the worker thread
+/// survives and keeps serving the queue.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` persistent workers (0 is allowed: a queue-less pool
+    /// that callers treat as "run everything inline").
+    pub fn new(threads: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            pending: AtomicUsize::new(0),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("shampoo4-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker thread")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Number of persistent worker threads.
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Jobs queued or currently running (approximate — racy by nature).
+    pub fn pending(&self) -> usize {
+        self.shared.pending.load(Ordering::Relaxed)
+    }
+
+    /// Queue a job. Panics if called on a zero-thread pool (the job would
+    /// never run); callers gate on [`WorkerPool::threads`].
+    fn submit(&self, job: Job) {
+        assert!(!self.handles.is_empty(), "submit on a zero-thread pool");
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        let mut q = self.shared.queue.lock().expect("pool queue lock");
+        q.push_back(job);
+        drop(q);
+        self.shared.cv.notify_one();
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.handles.len()).finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // set the flag under the queue lock: a worker between its shutdown
+        // check and `cv.wait` holds that lock, so the store (and the notify
+        // that follows) cannot slip into that window and be missed
+        {
+            let _q = self.shared.queue.lock().expect("pool queue lock");
+            self.shared.shutdown.store(true, Ordering::SeqCst);
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker body: pop-run until shutdown *and* the queue is empty.
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().expect("pool queue lock");
+            loop {
+                if let Some(job) = q.pop_front() {
+                    break job;
+                }
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = shared.cv.wait(q).expect("pool queue lock");
+            }
+        };
+        // contain panics to the job: fan-out tasks re-raise them on the
+        // submitting thread; background jobs surface them as a dropped
+        // result channel at the pipeline barrier
+        let _ = catch_unwind(AssertUnwindSafe(job));
+        shared.pending.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Count-down latch: fan-out callers wait until every helper job has left
+/// the shared task state (decrement happens in a drop guard, so panicking
+/// helpers still count down).
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+}
+
+impl Latch {
+    fn new(n: usize) -> Self {
+        Self { remaining: Mutex::new(n), cv: Condvar::new() }
+    }
+
+    fn arrive(&self) {
+        let mut r = self.remaining.lock().expect("latch lock");
+        *r -= 1;
+        if *r == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut r = self.remaining.lock().expect("latch lock");
+        while *r > 0 {
+            r = self.cv.wait(r).expect("latch lock");
+        }
+    }
+}
+
+/// Decrements its latch when dropped — even during a panic unwind.
+struct ArriveOnDrop(Arc<Latch>);
+
+impl Drop for ArriveOnDrop {
+    fn drop(&mut self) {
+        self.0.arrive();
+    }
+}
+
+/// `&dyn Fn` with the lifetime erased so helper jobs can live on the
+/// 'static pool queue. Soundness: `par_map_mut` blocks on the latch until
+/// every helper has finished with the pointee before returning.
+struct ErasedTask(*const (dyn Fn() + Sync));
+
+// SAFETY: the pointee is `Sync` and outlives every use (latch-guarded).
+unsafe impl Send for ErasedTask {}
+
+/// Handle to the parallel block engine for one run: a worker count plus a
+/// shared [`WorkerPool`]. `Clone` shares the pool (Arc), so the trainer, the
+/// second-order orchestrator, and the first-order chunked update all feed
+/// the *same* persistent threads.
+///
+/// `parallelism = 1` degenerates to a plain serial loop with zero threads
+/// and zero queue traffic.
 #[derive(Debug, Clone)]
 pub struct Scheduler {
     workers: usize,
+    pool: Option<Arc<WorkerPool>>,
 }
 
 impl Scheduler {
+    /// Engine with `parallelism` concurrent lanes: the calling thread plus
+    /// `parallelism − 1` persistent pool threads. `parallelism = 1` creates
+    /// no pool at all (the inline fast path).
     pub fn new(parallelism: usize) -> Self {
-        Self { workers: parallelism.max(1) }
+        let workers = parallelism.max(1);
+        let pool = (workers > 1).then(|| Arc::new(WorkerPool::new(workers - 1)));
+        Self { workers, pool }
     }
 
+    /// Engine for pipelined runs: like [`Scheduler::new`] but guarantees at
+    /// least one pool thread so background PU/PIRU jobs can overlap the
+    /// model step even at `parallelism = 1`.
+    pub fn pipelined(parallelism: usize) -> Self {
+        let workers = parallelism.max(1);
+        let pool = Arc::new(WorkerPool::new(workers.saturating_sub(1).max(1)));
+        Self { workers, pool: Some(pool) }
+    }
+
+    /// A poolless serial scheduler (the default for contexts without an
+    /// engine, e.g. `FirstOrder::step` called outside the trainer).
+    pub fn inline() -> Self {
+        Self { workers: 1, pool: None }
+    }
+
+    /// Configured concurrent lanes (1 = serial).
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Persistent pool threads backing this scheduler (0 = everything runs
+    /// inline on the caller).
+    pub fn pool_threads(&self) -> usize {
+        self.pool.as_ref().map(|p| p.threads()).unwrap_or(0)
+    }
+
+    /// Submit a detached background job to the persistent pool. Returns
+    /// `false` (job not queued, closure dropped) when the pool has no
+    /// threads — the caller must then run the work inline.
+    ///
+    /// The job must be `'static`: background submitters own their data
+    /// (cloned block states) and are responsible for a completion barrier
+    /// before any borrowed resource they erased goes away (see
+    /// `SecondOrder`'s pipeline for the one such use).
+    pub fn spawn(&self, job: Box<dyn FnOnce() + Send + 'static>) -> bool {
+        match &self.pool {
+            Some(pool) if pool.threads() > 0 => {
+                pool.submit(job);
+                true
+            }
+            _ => false,
+        }
     }
 
     /// Run `f(index, &mut item)` over every item, fanning across the pool,
@@ -36,11 +278,21 @@ impl Scheduler {
     /// its arguments (plus shared read-only captures) for the determinism
     /// contract to hold.
     ///
+    /// The calling thread participates in the drain, and only *idle* pool
+    /// threads are recruited as helpers — when background pipeline jobs
+    /// occupy the pool, the fan-out shrinks (down to the plain caller-side
+    /// loop) instead of queuing behind them, so this call never stalls on
+    /// unrelated work. With `parallelism = 1` (or a single item, or zero
+    /// idle threads) this is exactly the serial loop — no pool interaction,
+    /// no allocation beyond the result `Vec`. Helper count never changes
+    /// the merged result, so all of this stays bit-deterministic.
+    ///
     /// Error path: the lowest-index failure is returned either way, and no
     /// *new* tasks start after a failure is observed — but tasks already in
     /// flight on other workers run to completion, so items past the failing
     /// index may or may not have been visited (the serial path stops at the
-    /// failure). Callers treat any error as fatal to the run.
+    /// failure). Callers treat any error as fatal to the run. A panicking
+    /// task aborts the queue and the panic resumes on the calling thread.
     pub fn par_map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Result<Vec<R>>
     where
         T: Send,
@@ -48,31 +300,70 @@ impl Scheduler {
         F: Fn(usize, &mut T) -> Result<R> + Sync,
     {
         let n = items.len();
-        if self.workers <= 1 || n <= 1 {
+        let idle = self
+            .pool
+            .as_ref()
+            .map(|p| p.threads().saturating_sub(p.pending()))
+            .unwrap_or(0);
+        let helpers = self.workers.saturating_sub(1).min(idle).min(n.saturating_sub(1));
+        if self.workers <= 1 || n <= 1 || helpers == 0 {
             return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
         }
         let queue = Mutex::new(items.iter_mut().enumerate());
         let slots: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
         let abort = AtomicBool::new(false);
-        std::thread::scope(|s| {
-            for _ in 0..self.workers.min(n) {
-                s.spawn(|| {
-                    loop {
-                        if abort.load(Ordering::Relaxed) {
-                            break;
-                        }
-                        // take the queue lock only to pop, never while running f
-                        let next = queue.lock().expect("task queue lock").next();
-                        let Some((i, item)) = next else { break };
-                        let r = f(i, item);
+        let panic_slot: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
+        let drain = || {
+            loop {
+                if abort.load(Ordering::Relaxed) {
+                    break;
+                }
+                // take the queue lock only to pop, never while running f
+                let next = queue.lock().expect("task queue lock").next();
+                let Some((i, item)) = next else { break };
+                match catch_unwind(AssertUnwindSafe(|| f(i, item))) {
+                    Ok(r) => {
                         if r.is_err() {
                             abort.store(true, Ordering::Relaxed);
                         }
                         *slots[i].lock().expect("result slot lock") = Some(r);
                     }
-                });
+                    Err(payload) => {
+                        abort.store(true, Ordering::Relaxed);
+                        let mut p = panic_slot.lock().expect("panic slot lock");
+                        p.get_or_insert(payload);
+                    }
+                }
             }
-        });
+        };
+
+        let latch = Arc::new(Latch::new(helpers));
+        {
+            let task: &(dyn Fn() + Sync) = &drain;
+            // SAFETY: every helper job holds an `ArriveOnDrop` guard that it
+            // drops only after its last use of `task`; we block on the latch
+            // below before `drain`/`queue`/`slots` leave scope, so the
+            // erased reference never outlives its pointee.
+            let task = ErasedTask(unsafe {
+                std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(task)
+            });
+            let pool = self.pool.as_ref().expect("pool_threads > 0 implies a pool");
+            for _ in 0..helpers {
+                let guard = ArriveOnDrop(Arc::clone(&latch));
+                let task = ErasedTask(task.0);
+                pool.submit(Box::new(move || {
+                    let _done = guard;
+                    // SAFETY: see above — the latch keeps the pointee alive.
+                    let run: &(dyn Fn() + Sync) = unsafe { &*task.0 };
+                    run();
+                }));
+            }
+        }
+        drain(); // the caller is a full worker too
+        latch.wait();
+        if let Some(payload) = panic_slot.into_inner().expect("panic slot lock") {
+            std::panic::resume_unwind(payload);
+        }
         let mut out = Vec::with_capacity(n);
         for (i, slot) in slots.into_iter().enumerate() {
             match slot.into_inner().expect("result slot lock") {
@@ -102,21 +393,29 @@ pub fn stagger_phase(block_idx: usize, num_blocks: usize, t2: usize) -> usize {
 }
 
 /// Cumulative per-stage wall time over a training run, plus the worst single
-/// step — the number the staggered PIRU schedule exists to flatten.
+/// step — the number the staggered PIRU schedule and the cross-step pipeline
+/// exist to flatten.
 #[derive(Debug, Clone, Default)]
 pub struct StepTimings {
     /// steps accounted (resume-aware: only steps this `train` call ran)
     pub steps: u64,
     /// model fwd/bwd artifact time
     pub model_step_secs: f64,
-    /// preconditioner updates (gram + PU), every T1
+    /// preconditioner updates (gram + PU), every T1; for pipelined runs this
+    /// is background-thread time, accounted when the refresh lands
     pub pu_secs: f64,
-    /// inverse-root updates (PIRU), every T2 or staggered
+    /// inverse-root updates (PIRU), every T2 or staggered; background-thread
+    /// time for pipelined runs
     pub piru_secs: f64,
     /// gradient preconditioning, every step
     pub precond_secs: f64,
     /// native first-order update, every step
     pub first_order_secs: f64,
+    /// main-thread time blocked at pipeline completion barriers (0 when the
+    /// pipeline is off or refreshes land before they are needed)
+    pub pipeline_stall_secs: f64,
+    /// asynchronous refreshes submitted to the persistent pool
+    pub pipeline_refreshes: u64,
     /// wall time of the slowest step (excludes eval/metrics I/O)
     pub max_step_secs: f64,
     /// which step was slowest
@@ -140,9 +439,17 @@ impl StepTimings {
 
     /// One-line human summary for the CLI and benches.
     pub fn summary(&self) -> String {
+        let pipeline = if self.pipeline_refreshes > 0 {
+            format!(
+                " | pipe {} refreshes, {:.2}s stalled",
+                self.pipeline_refreshes, self.pipeline_stall_secs
+            )
+        } else {
+            String::new()
+        };
         format!(
             "model {:.2}s | pu {:.2}s | piru {:.2}s | precond {:.2}s | F {:.2}s | \
-             max step {:.1} ms (step {})",
+             max step {:.1} ms (step {}){pipeline}",
             self.model_step_secs,
             self.pu_secs,
             self.piru_secs,
@@ -157,6 +464,7 @@ impl StepTimings {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
@@ -233,6 +541,88 @@ mod tests {
     }
 
     #[test]
+    fn parallelism_one_is_inline_with_zero_threads() {
+        // the default config must pay zero pool overhead: no threads exist
+        // and every task runs on the calling thread itself
+        let sched = Scheduler::new(1);
+        assert_eq!(sched.pool_threads(), 0);
+        let caller = std::thread::current().id();
+        let mut items = vec![0u8; 16];
+        let ids = sched
+            .par_map_mut(&mut items, |_, _| Ok(std::thread::current().id()))
+            .unwrap();
+        assert!(ids.iter().all(|&id| id == caller), "task escaped the calling thread");
+        // a detached spawn is refused rather than silently dropped on a
+        // zero-thread pool
+        assert!(!sched.spawn(Box::new(|| {})));
+        assert!(!Scheduler::inline().spawn(Box::new(|| {})));
+    }
+
+    #[test]
+    fn pool_threads_persist_across_calls() {
+        // the tentpole: the same long-lived threads serve every phase — two
+        // fan-outs must observe overlapping pool-thread identities
+        let sched = Scheduler::new(4);
+        assert_eq!(sched.pool_threads(), 3);
+        let caller = std::thread::current().id();
+        let observe = |sched: &Scheduler| -> HashSet<std::thread::ThreadId> {
+            let mut items = vec![0u8; 64];
+            sched
+                .par_map_mut(&mut items, |_, _| {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    Ok(std::thread::current().id())
+                })
+                .unwrap()
+                .into_iter()
+                .filter(|&id| id != caller)
+                .collect()
+        };
+        let first = observe(&sched);
+        let second = observe(&sched);
+        assert!(!first.is_empty(), "no pool thread ever ran a task");
+        assert!(
+            first.intersection(&second).next().is_some(),
+            "pool threads were not reused across calls: {first:?} vs {second:?}"
+        );
+    }
+
+    #[test]
+    fn background_spawn_runs_and_pool_drains_on_drop() {
+        let sched = Scheduler::pipelined(1);
+        assert_eq!(sched.pool_threads(), 1, "pipelined(1) still needs a background lane");
+        let (tx, rx) = std::sync::mpsc::channel();
+        assert!(sched.spawn(Box::new(move || {
+            tx.send(42u32).unwrap();
+        })));
+        assert_eq!(rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap(), 42);
+        // graceful shutdown: jobs already queued still run before the drop
+        // returns and every thread is joined
+        let flag = Arc::new(AtomicBool::new(false));
+        let f2 = Arc::clone(&flag);
+        assert!(sched.spawn(Box::new(move || f2.store(true, Ordering::SeqCst))));
+        drop(sched);
+        assert!(flag.load(Ordering::SeqCst), "queued job was lost at shutdown");
+    }
+
+    #[test]
+    fn task_panic_resumes_on_caller() {
+        let sched = Scheduler::new(4);
+        let mut items: Vec<usize> = (0..32).collect();
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let _ = sched.par_map_mut(&mut items, |i, _| {
+                if i == 5 {
+                    panic!("task 5 exploded");
+                }
+                Ok(i)
+            });
+        }));
+        assert!(caught.is_err(), "panic must propagate to the submitting thread");
+        // ...and the pool must still be usable afterwards
+        let out = sched.par_map_mut(&mut items, |i, x| Ok(*x + i)).unwrap();
+        assert_eq!(out.len(), 32);
+    }
+
+    #[test]
     fn stagger_spreads_blocks_across_interval() {
         // 4 blocks over T2=20: phases 0, 5, 10, 15 — one cohort each
         let phases: Vec<usize> = (0..4).map(|i| stagger_phase(i, 4, 20)).collect();
@@ -261,5 +651,8 @@ mod tests {
         assert_eq!(t.max_step_index, 2);
         assert!((t.max_step_secs - 0.050).abs() < 1e-12);
         assert!(t.summary().contains("max step"));
+        assert!(!t.summary().contains("pipe"), "no pipeline section when unused");
+        t.pipeline_refreshes = 3;
+        assert!(t.summary().contains("pipe 3 refreshes"));
     }
 }

@@ -7,21 +7,39 @@
 //! engine (`coordinator::scheduler`): each block's left/right pair is one
 //! task, fanned across `cfg.parallelism` workers with an index-ordered merge,
 //! so any parallelism level is bit-identical to the serial run.
+//!
+//! With `shampoo.pipeline` on, PU/PIRU refreshes additionally run
+//! *asynchronously*: [`SecondOrder::submit_refresh`] clones each due block's
+//! side pair (the double-buffer back copies, [`RefreshedBlock`]) and queues
+//! one background job per block on the persistent pool; subsequent model
+//! steps overlap the refresh, preconditioning with the unchanged front
+//! copies, until [`SecondOrder::complete_pipeline`] swaps the results in at
+//! a deterministic barrier (next refresh due, `pipeline_max_lag` reached, or
+//! end of training). Barrier steps are pure functions of the step index, so
+//! pipelined runs are bit-reproducible at any parallelism.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::{SecondOrderConfig, SecondOrderKind};
 use crate::coordinator::model::ModelHandle;
 use crate::coordinator::partition::{extract_block, partition, scatter_block, Block};
-use crate::coordinator::scheduler::{stagger_phase, Scheduler};
-use crate::coordinator::state::{run_invroot, run_pu, SideState};
+use crate::coordinator::scheduler::{stagger_phase, Scheduler, StepTimings};
+use crate::coordinator::state::{run_invroot, run_pu, RefreshedBlock, SideState};
 use crate::linalg::Mat;
 use crate::quant::codec_for;
 use crate::runtime::{Backend, HostTensor};
 
+/// One partitioned parameter block and its left/right preconditioner pair.
 pub struct BlockPre {
+    /// The block's coordinates inside its parameter tensor.
     pub block: Block,
+    /// Left (row-side) preconditioner state.
     pub left: SideState,
+    /// Right (column-side) preconditioner state.
     pub right: SideState,
     /// cached artifact-input tensors for the inverse roots (§Perf L3-2):
     /// rebuilt only when PIRU runs (every T2), not on every step's
@@ -29,8 +47,109 @@ pub struct BlockPre {
     inv_cache: Option<Vec<HostTensor>>,
 }
 
+/// Statistics payload for one block's PU — captured on the coordinator
+/// thread, consumed by [`refresh_pu`] (synchronously, or on a pool thread
+/// for pipelined refreshes).
+enum StatInput {
+    /// Shampoo/CASPR: the block's raw gradient; the gram artifact runs
+    /// where the PU runs (so for pipelined refreshes the GGᵀ cost overlaps
+    /// the model step too).
+    Grad(Vec<f32>),
+    /// K-FAC/AdaBK: layer statistics from the model step
+    /// (`lx` = XᵀX/bs of order m, `ry` = δYᵀδY·bs of order n).
+    Layer { lx: Vec<f32>, ry: Vec<f32> },
+}
+
+/// Capture the PU statistics payload for block `bi` (`bp`) — the ONE place
+/// the stats-to-side mapping is written, shared by the synchronous engine
+/// and the pipeline's submission path.
+fn capture_stat(
+    kfac_mode: bool,
+    bi: usize,
+    bp: &BlockPre,
+    model: &ModelHandle,
+    grads: &[Vec<f32>],
+    stats: &[Vec<f32>],
+) -> StatInput {
+    if kfac_mode {
+        // layer index = bi (one block per 2-D weight, in order)
+        StatInput::Layer {
+            lx: stats[2 * bi].clone(),     // XᵀX/bs  (m, m)
+            ry: stats[2 * bi + 1].clone(), // δYᵀδY·bs (n, n)
+        }
+    } else {
+        StatInput::Grad(extract_block(
+            &grads[bp.block.param_idx],
+            &model.shapes[bp.block.param_idx],
+            &bp.block,
+        ))
+    }
+}
+
+/// Apply one block's PU (Algorithm 3 line 6) to its side pair — the ONE
+/// implementation both the synchronous engine and the pipelined background
+/// jobs execute, so the two paths cannot numerically diverge.
+fn refresh_pu(
+    rt: &dyn Backend,
+    left: &mut SideState,
+    right: &mut SideState,
+    stat: StatInput,
+    beta: f32,
+    kind: SecondOrderKind,
+) -> Result<()> {
+    let (m, n) = (left.order(), right.order());
+    let (l_stat, r_stat) = match stat {
+        StatInput::Layer { lx, ry } => {
+            (HostTensor::f32(&[m, m], lx), HostTensor::f32(&[n, n], ry))
+        }
+        StatInput::Grad(g) => {
+            let outs = rt.execute(&format!("gram_{m}x{n}"), &[HostTensor::f32(&[m, n], g)])?;
+            (outs[0].clone(), outs[1].clone())
+        }
+    };
+    run_pu(rt, left, l_stat, beta, kind)?;
+    run_pu(rt, right, r_stat, beta, kind)
+}
+
+/// Drop guard carried by every background refresh job: if the job unwinds
+/// before reporting, the guard raises the shared abort flag (so the other
+/// per-block jobs stop early) and sends a block-identified error in its
+/// place — the completion barrier then surfaces "block N panicked" instead
+/// of a generic dropped-channel failure.
+struct ReportOnPanic {
+    tx: Option<mpsc::Sender<(usize, Result<RefreshedBlock>)>>,
+    bi: usize,
+    abort: Arc<AtomicBool>,
+}
+
+impl Drop for ReportOnPanic {
+    fn drop(&mut self) {
+        if let Some(tx) = self.tx.take() {
+            self.abort.store(true, Ordering::Relaxed);
+            let _ = tx.send((
+                self.bi,
+                Err(anyhow!("background refresh job for block {} panicked", self.bi)),
+            ));
+        }
+    }
+}
+
+/// Bookkeeping for one asynchronous refresh: the result channel, how many
+/// per-block jobs are still out, and the shared abort flag background jobs
+/// check before starting expensive work.
+struct InFlightRefresh {
+    /// Trainer step at which the refresh was submitted (staleness clock).
+    submit_step: usize,
+    rx: mpsc::Receiver<(usize, Result<RefreshedBlock>)>,
+    outstanding: usize,
+    abort: Arc<AtomicBool>,
+}
+
+/// Orchestrates every preconditioner block (Algorithm 3/5 from Rust).
 pub struct SecondOrder {
+    /// The run's second-order configuration.
     pub cfg: SecondOrderConfig,
+    /// All partitioned blocks with their preconditioner pairs.
     pub blocks: Vec<BlockPre>,
     /// K-FAC/AdaBK mode: whole-layer preconditioners fed by activation /
     /// gradient statistics instead of GGᵀ (Algorithm 5).
@@ -39,9 +158,15 @@ pub struct SecondOrder {
     pub host_fallbacks: u64,
     /// the parallel block engine's worker pool
     scheduler: Scheduler,
+    /// the pipelined engine's current in-flight refresh, if any
+    inflight: Option<InFlightRefresh>,
 }
 
 impl SecondOrder {
+    /// Build the preconditioner blocks for `model` under `cfg`'s policy and
+    /// stand up the parallel block engine (a persistent pool; with
+    /// `cfg.pipeline` it keeps at least one background lane even at
+    /// `parallelism = 1`).
     pub fn new(cfg: &SecondOrderConfig, model: &ModelHandle, buckets: &[usize]) -> Result<Self> {
         if !matches!(cfg.quant.bits, 3 | 4 | 16 | 32) {
             return Err(anyhow!(
@@ -85,13 +210,25 @@ impl SecondOrder {
                 inv_cache: None,
             })
             .collect();
+        let scheduler = if cfg.pipeline {
+            Scheduler::pipelined(cfg.parallelism)
+        } else {
+            Scheduler::new(cfg.parallelism)
+        };
         Ok(Self {
             cfg: cfg.clone(),
             blocks,
             kfac_mode,
             host_fallbacks: 0,
-            scheduler: Scheduler::new(cfg.parallelism),
+            scheduler,
+            inflight: None,
         })
+    }
+
+    /// The engine handle — `Clone`s share the same persistent pool, so the
+    /// trainer reuses these threads for the chunked first-order update.
+    pub fn scheduler(&self) -> &Scheduler {
+        &self.scheduler
     }
 
     /// Serialize every block's (left, right) state for checkpoints —
@@ -155,6 +292,7 @@ impl SecondOrder {
         self.scheduler.workers()
     }
 
+    /// Exact bytes of all second-order state (Table 2/13 accounting).
     pub fn state_bytes(&self) -> usize {
         self.blocks
             .iter()
@@ -177,23 +315,8 @@ impl SecondOrder {
         let kind = self.cfg.kind;
         let kfac_mode = self.kfac_mode;
         self.scheduler.par_map_mut(&mut self.blocks, |bi, bp| {
-            let (m, n) = (bp.block.bm, bp.block.bn);
-            let (l_stat, r_stat) = if kfac_mode {
-                // layer index = bi (one block per 2-D weight, in order)
-                let r = &stats[2 * bi]; // XᵀX/bs  (in, in)
-                let l = &stats[2 * bi + 1]; // δYᵀδY·bs (out, out)
-                (HostTensor::f32(&[m, m], r.clone()), HostTensor::f32(&[n, n], l.clone()))
-            } else {
-                let g = extract_block(
-                    &grads[bp.block.param_idx],
-                    &model.shapes[bp.block.param_idx],
-                    &bp.block,
-                );
-                let outs = rt.execute(&format!("gram_{m}x{n}"), &[HostTensor::f32(&[m, n], g)])?;
-                (outs[0].clone(), outs[1].clone())
-            };
-            run_pu(rt, &mut bp.left, l_stat, beta, kind)?;
-            run_pu(rt, &mut bp.right, r_stat, beta, kind)
+            let stat = capture_stat(kfac_mode, bi, bp, model, grads, stats);
+            refresh_pu(rt, &mut bp.left, &mut bp.right, stat, beta, kind)
         })?;
         Ok(())
     }
@@ -245,6 +368,225 @@ impl SecondOrder {
         }
         let phase = step % t2;
         (0..n).filter(|&i| stagger_phase(i, n, t2) == phase).collect()
+    }
+
+    // ---- cross-step pipeline -------------------------------------------
+
+    /// Whether the asynchronous PU/PIRU pipeline is active for this run.
+    pub fn pipelined(&self) -> bool {
+        self.cfg.pipeline && self.scheduler.pool_threads() > 0
+    }
+
+    /// Whether the in-flight refresh (if any) has hit the bounded-staleness
+    /// limit at trainer step `step` and must be completed this step.
+    pub fn inflight_lag_reached(&self, step: usize) -> bool {
+        self.inflight
+            .as_ref()
+            .is_some_and(|fl| step >= fl.submit_step + self.cfg.pipeline_max_lag)
+    }
+
+    /// Submit this refresh step's PU (`do_pu`, all blocks) and/or PIRU
+    /// (`piru_due` cohort) work as one background job per block on the
+    /// persistent pool, then return immediately — the trainer keeps
+    /// stepping while the pool computes. Each job owns a cloned back copy
+    /// of its block's side pair ([`RefreshedBlock`]); the front copies stay
+    /// untouched and keep serving `precondition` until
+    /// [`SecondOrder::complete_pipeline`] swaps the results in.
+    ///
+    /// The caller must have completed any previous refresh first (the
+    /// barrier keeps at most one refresh in flight, which also serializes
+    /// the PU EMA chain exactly like the synchronous engine).
+    ///
+    /// `pub(crate)`: this function erases `rt`'s lifetime for the detached
+    /// jobs, so it is only sound under the trainer's drain-before-return
+    /// discipline ([`Trainer::train`](crate::coordinator::Trainer::train)
+    /// aborts + drains on every exit path, and [`SecondOrder`]'s `Drop`
+    /// backstops the rest). Exposing it publicly would let safe code
+    /// outlive the borrow.
+    pub(crate) fn submit_refresh(
+        &mut self,
+        rt: &dyn Backend,
+        model: &ModelHandle,
+        grads: &[Vec<f32>],
+        stats: &[Vec<f32>],
+        do_pu: bool,
+        piru_due: &[usize],
+        step: usize,
+    ) -> Result<()> {
+        assert!(
+            self.inflight.is_none(),
+            "submit_refresh while a refresh is still in flight (missing barrier)"
+        );
+        let involved: Vec<usize> = if do_pu {
+            (0..self.blocks.len()).collect()
+        } else {
+            piru_due.to_vec()
+        };
+        if involved.is_empty() {
+            return Ok(());
+        }
+        let mut piru = vec![false; self.blocks.len()];
+        for &i in piru_due {
+            piru[i] = true;
+        }
+        // SAFETY: background jobs borrow the backend for the duration of the
+        // refresh only. The trainer guarantees every job has completed (or
+        // been drained via `abort_inflight`) before `train` returns — i.e.
+        // strictly within the lifetime of `rt` — so the erased reference
+        // never outlives its pointee.
+        let rt_static: &'static dyn Backend =
+            unsafe { std::mem::transmute::<&dyn Backend, &'static dyn Backend>(rt) };
+        let abort = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel();
+        let (beta, eps, kind) = (self.cfg.beta, self.cfg.eps, self.cfg.kind);
+        let kfac_mode = self.kfac_mode;
+        let mut submitted = 0usize;
+        for &bi in &involved {
+            let bp = &self.blocks[bi];
+            let stat = do_pu.then(|| capture_stat(kfac_mode, bi, bp, model, grads, stats));
+            let mut left = bp.left.clone();
+            let mut right = bp.right.clone();
+            let do_piru = piru[bi];
+            let job_tx = tx.clone();
+            let job_abort = Arc::clone(&abort);
+            let queued = self.scheduler.spawn(Box::new(move || {
+                // (body runs on a pool thread)
+                let rt = rt_static;
+                let mut report = ReportOnPanic {
+                    tx: Some(job_tx),
+                    bi,
+                    abort: Arc::clone(&job_abort),
+                };
+                let work = (|| -> Result<RefreshedBlock> {
+                    if job_abort.load(Ordering::Relaxed) {
+                        return Err(anyhow!("refresh aborted before block {bi} started"));
+                    }
+                    let mut pu_secs = 0.0;
+                    let mut piru_secs = 0.0;
+                    if let Some(stat) = stat {
+                        let t = Instant::now();
+                        refresh_pu(rt, &mut left, &mut right, stat, beta, kind)?;
+                        pu_secs = t.elapsed().as_secs_f64();
+                    }
+                    if do_piru {
+                        let t = Instant::now();
+                        run_invroot(rt, &mut left, eps, kind)?;
+                        run_invroot(rt, &mut right, eps, kind)?;
+                        piru_secs = t.elapsed().as_secs_f64();
+                    }
+                    Ok(RefreshedBlock {
+                        block_idx: bi,
+                        left,
+                        right,
+                        refreshed_invroot: do_piru,
+                        pu_secs,
+                        piru_secs,
+                    })
+                })();
+                // normal completion: defuse the panic guard and report.
+                // (the receiver may already be gone on the abort path)
+                if let Some(tx) = report.tx.take() {
+                    let _ = tx.send((bi, work));
+                }
+            }));
+            if !queued {
+                // unreachable in practice: `pipelined()` gates submission on
+                // pool_threads > 0 and the pool never shrinks. Still, drain
+                // the jobs already queued before erroring out, so none can
+                // outlive the borrowed backend.
+                self.inflight = Some(InFlightRefresh {
+                    submit_step: step,
+                    rx,
+                    outstanding: submitted,
+                    abort,
+                });
+                self.abort_inflight();
+                return Err(anyhow!("pipeline: persistent pool refused a background job"));
+            }
+            submitted += 1;
+        }
+        drop(tx); // jobs hold the only remaining senders
+        self.inflight = Some(InFlightRefresh {
+            submit_step: step,
+            rx,
+            outstanding: submitted,
+            abort,
+        });
+        Ok(())
+    }
+
+    /// Completion barrier: block until every job of the in-flight refresh
+    /// (if any) has reported, then swap the refreshed back copies over the
+    /// front copies in block-index order. Main-thread wait time lands in
+    /// `timings.pipeline_stall_secs`; the jobs' own PU/PIRU seconds land in
+    /// `timings.pu_secs` / `timings.piru_secs`.
+    ///
+    /// On a job failure the lowest-index error is returned and *no* result
+    /// is swapped in; the abort flag stops still-queued jobs early and the
+    /// barrier still drains every outstanding job before returning, so no
+    /// background work outlives the error.
+    pub fn complete_pipeline(&mut self, timings: &mut StepTimings) -> Result<()> {
+        let Some(fl) = self.inflight.take() else {
+            return Ok(());
+        };
+        let t = Instant::now();
+        let mut updates: Vec<RefreshedBlock> = Vec::with_capacity(fl.outstanding);
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        let mut outstanding = fl.outstanding;
+        while outstanding > 0 {
+            match fl.rx.recv() {
+                Ok((_, Ok(rb))) => updates.push(rb),
+                Ok((bi, Err(e))) => {
+                    fl.abort.store(true, Ordering::Relaxed);
+                    if first_err.as_ref().is_none_or(|(b, _)| bi < *b) {
+                        first_err = Some((bi, e));
+                    }
+                }
+                // a sender dropped without reporting — should be impossible
+                // (panicking jobs report through their ReportOnPanic guard);
+                // kept as a backstop so the barrier can never hang blame-less
+                Err(_) => {
+                    timings.pipeline_stall_secs += t.elapsed().as_secs_f64();
+                    return Err(anyhow!(
+                        "pipeline: a background refresh job died before reporting"
+                    ));
+                }
+            }
+            outstanding -= 1;
+        }
+        timings.pipeline_stall_secs += t.elapsed().as_secs_f64();
+        if let Some((bi, e)) = first_err {
+            return Err(e.context(format!("pipelined refresh of block {bi}")));
+        }
+        updates.sort_by_key(|rb| rb.block_idx);
+        for rb in updates {
+            timings.pu_secs += rb.pu_secs;
+            timings.piru_secs += rb.piru_secs;
+            let bp = &mut self.blocks[rb.block_idx];
+            bp.left = rb.left;
+            bp.right = rb.right;
+            if rb.refreshed_invroot {
+                bp.inv_cache = None; // the front root was just replaced
+            }
+        }
+        Ok(())
+    }
+
+    /// Error-path shutdown: raise the abort flag, wait for every in-flight
+    /// job to exit, and discard their results. Called by the trainer when a
+    /// step fails (or panics) so no background job outlives the borrowed
+    /// backend; a no-op when nothing is in flight.
+    pub fn abort_inflight(&mut self) {
+        if let Some(fl) = self.inflight.take() {
+            fl.abort.store(true, Ordering::Relaxed);
+            let mut outstanding = fl.outstanding;
+            while outstanding > 0 {
+                if fl.rx.recv().is_err() {
+                    break; // every sender gone: nothing left running
+                }
+                outstanding -= 1;
+            }
+        }
     }
 
     /// Precondition all gradients in place (Algorithm 3 lines 13–14).
@@ -324,6 +666,17 @@ impl SecondOrder {
             scatter_block(&mut grads[bp.block.param_idx], shape, &bp.block, &gt);
         }
         Ok(())
+    }
+}
+
+impl Drop for SecondOrder {
+    /// Backstop for the pipeline's safety contract: if a `SecondOrder` is
+    /// ever dropped with a refresh still in flight, wait the jobs out (they
+    /// check the abort flag, so this is short) before the backend they
+    /// borrow can go away. Normal runs never hit this — `Trainer::train`
+    /// drains on every exit path.
+    fn drop(&mut self) {
+        self.abort_inflight();
     }
 }
 

@@ -12,15 +12,22 @@ use crate::errors::{angle_error_deg, nre};
 use crate::linalg::{invroot_eigh, Mat};
 use crate::runtime::{Backend, HostTensor};
 
+/// One measurement of the quantized-vs-32-bit preconditioner errors.
 #[derive(Debug, Clone)]
 pub struct ShadowRow {
+    /// Trainer step of the measurement.
     pub step: usize,
+    /// NRE of L₄ vs L₃₂.
     pub nre_precond: f64,
+    /// Angle error (degrees) of L₄ vs L₃₂.
     pub ae_precond_deg: f64,
+    /// NRE of the inverse roots.
     pub nre_invroot: f64,
+    /// Angle error (degrees) of the inverse roots.
     pub ae_invroot_deg: f64,
 }
 
+/// Maintains the 32-bit shadow preconditioner for one tracked block.
 pub struct ShadowTracker {
     /// index of the tracked block in SecondOrder::blocks
     pub block_idx: usize,

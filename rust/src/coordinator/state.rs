@@ -17,11 +17,19 @@ use crate::quant::{codec_by_name, fp32, EncodedVec, StateCodec};
 use crate::runtime::{Backend, HostTensor};
 
 /// One side (L or R) of a block's preconditioner pair.
+///
+/// `Clone` exists for the pipelined engine's double-buffer protocol: an
+/// asynchronous refresh snapshots the *front* copy (the one that keeps
+/// serving `precondition`), updates the clone on a pool thread, and hands
+/// it back as a [`RefreshedBlock`] to be swapped in at the completion
+/// barrier.
+#[derive(Clone)]
 pub struct SideState {
     codec: Arc<dyn StateCodec>,
     arm: SideArm,
 }
 
+#[derive(Clone)]
 enum SideArm {
     /// Ours: eigenvalues + codec-encoded eigenbasis; inverse root as 32-bit
     /// diagonal + codec-encoded off-diagonal (Algorithms 1–3).
@@ -91,6 +99,7 @@ impl SideState {
         }
     }
 
+    /// Matrix order n of this side.
     pub fn order(&self) -> usize {
         match &self.arm {
             SideArm::Quantized { lam, .. } => lam.len(),
@@ -264,6 +273,7 @@ impl SideState {
         Ok(())
     }
 
+    /// True for the dense (fp32/bf16) arm.
     pub fn is_dense(&self) -> bool {
         matches!(self.arm, SideArm::Dense { .. })
     }
@@ -364,6 +374,41 @@ impl SideState {
         }
         Ok((side, r.i))
     }
+}
+
+/// The back buffer of the pipelined engine's per-block double-buffer: a
+/// freshly refreshed (PU and/or PIRU) copy of one block's side pair,
+/// produced by a background job on the persistent pool.
+///
+/// Swap protocol (`docs/ARCHITECTURE.md` has the diagram):
+///
+/// 1. At a refresh step the coordinator clones each due block's `SideState`
+///    pair (the front copies stay in place and keep serving `precondition`)
+///    and submits one background job per block.
+/// 2. Each job updates its private back copy — EMA preconditioner update
+///    and, when due, the inverse root — and sends the result home over a
+///    channel as a `RefreshedBlock`.
+/// 3. At the completion barrier (next refresh due, `pipeline_max_lag`
+///    reached, or end of training) the coordinator thread receives every
+///    pending `RefreshedBlock` and *moves* it over the front copy.
+///
+/// Because the swap is a plain move on the coordinator thread between two
+/// `precondition` calls, a reader can never observe a half-updated inverse
+/// root — the root is either the old one or the new one, never a mix.
+pub struct RefreshedBlock {
+    /// Index of the block in `SecondOrder::blocks`.
+    pub block_idx: usize,
+    /// Refreshed left side (back buffer, ready to swap in).
+    pub left: SideState,
+    /// Refreshed right side (back buffer, ready to swap in).
+    pub right: SideState,
+    /// Whether the inverse roots were recomputed (invalidates the cached
+    /// precondition inputs on swap).
+    pub refreshed_invroot: bool,
+    /// Background-thread seconds spent in the preconditioner update.
+    pub pu_secs: f64,
+    /// Background-thread seconds spent in the inverse-root update.
+    pub piru_secs: f64,
 }
 
 // ---- serialization helpers ------------------------------------------------

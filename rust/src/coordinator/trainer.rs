@@ -1,6 +1,8 @@
 //! The training loop (Algorithm 3 end-to-end): data pipeline → model step
 //! artifact → second-order preconditioning (parallel block engine, with
-//! batch or staggered inverse-root scheduling) → native first-order update,
+//! batch or staggered inverse-root scheduling, and optional cross-step
+//! pipelining of PU/PIRU against subsequent model steps) → native
+//! first-order update (chunked across the same persistent pool),
 //! with per-stage wall-time accounting, eval, metrics, checkpointing
 //! (params + codec-encoded first- AND second-order optimizer state + step —
 //! raw codec bytes round-trip bit-exactly, so a resumed run continues the
@@ -15,7 +17,7 @@ use anyhow::{Context, Result};
 
 use crate::config::{RunConfig, SecondOrderKind};
 use crate::coordinator::model::{DataSource, ModelHandle};
-use crate::coordinator::scheduler::StepTimings;
+use crate::coordinator::scheduler::{Scheduler, StepTimings};
 use crate::coordinator::second_order::SecondOrder;
 use crate::coordinator::shadow::ShadowTracker;
 use crate::errors;
@@ -24,73 +26,106 @@ use crate::quant::EncodedVec;
 use crate::runtime::Backend;
 use crate::util::json::Json;
 
+/// One held-out evaluation.
 #[derive(Debug, Clone)]
 pub struct EvalPoint {
+    /// Trainer step at which the eval ran.
     pub step: usize,
+    /// Mean held-out loss.
     pub loss: f32,
     /// classification accuracy in [0,1] when the model reports it
     pub accuracy: Option<f64>,
 }
 
+/// Exact live-state byte accounting (the Table 2/13 columns).
 #[derive(Debug, Clone, Default)]
 pub struct MemoryReport {
+    /// Model parameter bytes.
     pub params_bytes: usize,
+    /// Gradient buffer bytes.
     pub grads_bytes: usize,
+    /// First-order optimizer state bytes (codec-exact).
     pub first_order_bytes: usize,
+    /// Second-order optimizer state bytes (codec-exact).
     pub second_order_bytes: usize,
 }
 
 impl MemoryReport {
+    /// Total bytes across all four classes.
     pub fn total(&self) -> usize {
         self.params_bytes + self.grads_bytes + self.first_order_bytes + self.second_order_bytes
     }
 
+    /// Total in MiB.
     pub fn total_mb(&self) -> f64 {
         self.total() as f64 / (1024.0 * 1024.0)
     }
 
+    /// Optimizer-state (first + second order) MiB.
     pub fn optimizer_mb(&self) -> f64 {
         (self.first_order_bytes + self.second_order_bytes) as f64 / (1024.0 * 1024.0)
     }
 }
 
+/// Everything a finished `train` call reports.
 #[derive(Debug, Clone)]
 pub struct TrainResult {
+    /// The run's configured name.
     pub name: String,
+    /// (step, training loss) samples every `log_every`.
     pub losses: Vec<(usize, f32)>,
+    /// Periodic held-out evaluations.
     pub evals: Vec<EvalPoint>,
+    /// The final held-out evaluation (when `eval_batches > 0`).
     pub final_eval: Option<EvalPoint>,
+    /// Wall seconds for the whole call.
     pub wall_secs: f64,
+    /// Live-state byte accounting.
     pub memory: MemoryReport,
+    /// Dynamic quant-error rows (shadow mode only).
     pub shadow_rows: Vec<crate::coordinator::shadow::ShadowRow>,
+    /// Preconditions served by the host mirror instead of an artifact.
     pub host_fallbacks: u64,
     /// per-stage wall time + worst-step spike (parallel block engine telemetry)
     pub timings: StepTimings,
 }
 
 impl TrainResult {
+    /// Final held-out accuracy in percent, when measured.
     pub fn final_accuracy_pct(&self) -> Option<f64> {
         self.final_eval.as_ref().and_then(|e| e.accuracy).map(|a| a * 100.0)
     }
 
+    /// Final held-out loss, when measured.
     pub fn final_loss(&self) -> Option<f32> {
         self.final_eval.as_ref().map(|e| e.loss)
     }
 }
 
+/// One training run: model, optimizers, data, and the engine that drives
+/// them (see the module docs for the step anatomy).
 pub struct Trainer {
+    /// The run's full configuration.
     pub cfg: RunConfig,
+    /// Model parameters + step/eval marshaling.
     pub model: ModelHandle,
+    /// The native first-order optimizer F.
     pub first: Box<dyn FirstOrder>,
+    /// The second-order preconditioner orchestration, when configured.
     pub second: Option<SecondOrder>,
+    /// The run's data pipeline.
     pub data: DataSource,
     shadow: Option<ShadowTracker>,
     flat_len: usize,
+    /// engine handle shared with `second` (same persistent pool): chunks the
+    /// flat first-order update across the pool workers
+    sched: Scheduler,
     /// last completed step of a loaded checkpoint; `train` resumes after it
     resume_step: usize,
 }
 
 impl Trainer {
+    /// Build a trainer: model init, optimizers, data, and the engine.
     pub fn new(rt: &dyn Backend, cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
         let model = ModelHandle::new(rt, &cfg.model, cfg.seed)?;
@@ -116,7 +151,13 @@ impl Trainer {
             None
         };
         let data = model.data_source(cfg.seed);
-        Ok(Self { cfg, model, first, second, data, shadow, flat_len, resume_step: 0 })
+        // share the second-order engine's persistent pool; first-order-only
+        // runs get their own (poolless at parallelism = 1)
+        let sched = second
+            .as_ref()
+            .map(|s| s.scheduler().clone())
+            .unwrap_or_else(|| Scheduler::new(cfg.second.parallelism));
+        Ok(Self { cfg, model, first, second, data, shadow, flat_len, sched, resume_step: 0 })
     }
 
     fn flatten(bufs: &[Vec<f32>]) -> Vec<f32> {
@@ -136,6 +177,7 @@ impl Trainer {
         }
     }
 
+    /// Exact live-state byte accounting at this moment.
     pub fn memory_report(&self) -> MemoryReport {
         MemoryReport {
             params_bytes: self.model.params_bytes(),
@@ -174,7 +216,31 @@ impl Trainer {
     }
 
     /// Run the configured number of steps. `metrics_path`: optional CSV.
+    ///
+    /// This wrapper exists for the pipelined engine's safety contract: any
+    /// asynchronous PU/PIRU refresh still in flight when the loop exits —
+    /// normally none, since the loop barriers at the end, but an error or
+    /// panic can leave one — is aborted and drained *before* this function
+    /// returns, so no background job outlives the borrowed backend and no
+    /// pool thread is left wedged on abandoned work.
     pub fn train(&mut self, rt: &dyn Backend, metrics_path: Option<&Path>) -> Result<TrainResult> {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.train_inner(rt, metrics_path)
+        }));
+        if let Some(second) = self.second.as_mut() {
+            second.abort_inflight();
+        }
+        match res {
+            Ok(r) => r,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+
+    fn train_inner(
+        &mut self,
+        rt: &dyn Backend,
+        metrics_path: Option<&Path>,
+    ) -> Result<TrainResult> {
         let mut csv = match metrics_path {
             Some(p) => {
                 if let Some(dir) = p.parent() {
@@ -205,25 +271,47 @@ impl Trainer {
 
             if let Some(second) = self.second.as_mut() {
                 if step >= s2cfg.start_step {
-                    if step % s2cfg.update_precond_every == 0 {
-                        let t = Instant::now();
-                        second.update_preconditioners(rt, &self.model, &grads, &stats)?;
-                        timings.pu_secs += t.elapsed().as_secs_f64();
-                        if let Some(sh) = self.shadow.as_mut() {
-                            sh.update_shadow(rt, second, &self.model, &grads, &stats)?;
-                        }
-                    }
+                    let pu_due = step % s2cfg.update_precond_every == 0;
                     // batch mode: every block at T2 boundaries; staggered
                     // mode: one round-robin cohort per step
                     let due = second.invroot_due(step);
-                    if !due.is_empty() {
-                        let t = Instant::now();
-                        second.update_invroots_subset(rt, &due)?;
-                        timings.piru_secs += t.elapsed().as_secs_f64();
-                        if let Some(sh) = self.shadow.as_mut() {
-                            if due.contains(&sh.block_idx) {
-                                if let Some(row) = sh.measure(step, second)? {
-                                    shadow_rows.push(row);
+                    if second.pipelined() {
+                        // deterministic completion barrier: a new refresh is
+                        // due (the EMA chain needs the previous result), or
+                        // the in-flight one hit the staleness bound
+                        if pu_due || !due.is_empty() || second.inflight_lag_reached(step) {
+                            second.complete_pipeline(&mut timings)?;
+                        }
+                        if pu_due || !due.is_empty() {
+                            second.submit_refresh(
+                                rt,
+                                &self.model,
+                                &grads,
+                                &stats,
+                                pu_due,
+                                &due,
+                                step,
+                            )?;
+                            timings.pipeline_refreshes += 1;
+                        }
+                    } else {
+                        if pu_due {
+                            let t = Instant::now();
+                            second.update_preconditioners(rt, &self.model, &grads, &stats)?;
+                            timings.pu_secs += t.elapsed().as_secs_f64();
+                            if let Some(sh) = self.shadow.as_mut() {
+                                sh.update_shadow(rt, second, &self.model, &grads, &stats)?;
+                            }
+                        }
+                        if !due.is_empty() {
+                            let t = Instant::now();
+                            second.update_invroots_subset(rt, &due)?;
+                            timings.piru_secs += t.elapsed().as_secs_f64();
+                            if let Some(sh) = self.shadow.as_mut() {
+                                if due.contains(&sh.block_idx) {
+                                    if let Some(row) = sh.measure(step, second)? {
+                                        shadow_rows.push(row);
+                                    }
                                 }
                             }
                         }
@@ -234,13 +322,15 @@ impl Trainer {
                 }
             }
 
-            // native first-order update over the flat parameter vector
+            // native first-order update over the flat parameter vector,
+            // chunked across the persistent pool (bit-identical at any
+            // worker count — the update is elementwise)
             let t = Instant::now();
             let mut flat_p = Self::flatten(&self.model.params);
             let flat_g = Self::flatten(&grads);
             debug_assert_eq!(flat_p.len(), self.flat_len);
             let lr = self.cfg.first.lr * self.cfg.lr_at(step - 1);
-            self.first.step(&mut flat_p, &flat_g, lr);
+            self.first.step_par(&mut flat_p, &flat_g, lr, &self.sched);
             Self::scatter(&flat_p, &mut self.model.params);
             timings.first_order_secs += t.elapsed().as_secs_f64();
             timings.note_step(step, step_t.elapsed().as_secs_f64());
@@ -269,6 +359,12 @@ impl Trainer {
                     t0.elapsed().as_secs_f64()
                 )?;
             }
+        }
+
+        // drain the pipeline so the final state (eval, checkpoints, a
+        // subsequent `train` call) reflects every submitted refresh
+        if let Some(second) = self.second.as_mut() {
+            second.complete_pipeline(&mut timings)?;
         }
 
         let final_eval = if self.cfg.eval_batches > 0 {

@@ -8,7 +8,10 @@
 
 use crate::util::rng::Rng;
 
+/// Fixed random bigram Markov chain with Zipfian marginals (see the
+/// module docs).
 pub struct BigramCorpus {
+    /// Vocabulary size.
     pub vocab: usize,
     /// per-token successor CDFs, row-major vocab × vocab
     cdf: Vec<f64>,
@@ -18,6 +21,7 @@ pub struct BigramCorpus {
 }
 
 impl BigramCorpus {
+    /// Build the chain's successor CDFs (and its entropy floor) from `seed`.
     pub fn new(vocab: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed ^ 0xC0_4055);
         // Zipf unigram prior

@@ -8,7 +8,9 @@
 //! background thread (`Prefetcher`), and carry a held-out split so test
 //! accuracy / validation loss are measured on unseen data.
 
+/// Bigram-Markov token stream (LM corpus stand-in).
 pub mod corpus;
+/// Gaussian-mixture classification features (vision stand-in).
 pub mod vision;
 
 use std::sync::mpsc;
@@ -17,10 +19,26 @@ use std::thread;
 /// A training batch crossing into the model step artifact.
 #[derive(Debug, Clone)]
 pub enum Batch {
-    /// (features [batch*dim], labels [batch])
-    Vision { x: Vec<f32>, y: Vec<i32>, batch: usize, dim: usize },
-    /// tokens [batch * (seq+1)]
-    Tokens { tokens: Vec<i32>, batch: usize, seq_plus1: usize },
+    /// Classification batch: features + integer labels.
+    Vision {
+        /// Row-major features, `batch × dim`.
+        x: Vec<f32>,
+        /// Class labels, `batch` long.
+        y: Vec<i32>,
+        /// Samples in the batch.
+        batch: usize,
+        /// Feature dimension.
+        dim: usize,
+    },
+    /// LM batch: token windows (inputs + next-token targets).
+    Tokens {
+        /// Flat tokens, `batch × (seq+1)`.
+        tokens: Vec<i32>,
+        /// Sequences in the batch.
+        batch: usize,
+        /// Window length including the shifted target position.
+        seq_plus1: usize,
+    },
 }
 
 /// Background-thread batch prefetcher: the data pipeline never stalls the
@@ -32,6 +50,8 @@ pub struct Prefetcher {
 }
 
 impl Prefetcher {
+    /// Start a generator thread producing batches into a bounded channel of
+    /// `depth` (backpressure: the generator blocks when the queue is full).
     pub fn spawn<F>(depth: usize, mut gen: F) -> Self
     where
         F: FnMut() -> Batch + Send + 'static,
@@ -48,6 +68,7 @@ impl Prefetcher {
         Prefetcher { rx, _handle: handle }
     }
 
+    /// Take the next batch (blocks if the generator is behind).
     pub fn next(&self) -> Batch {
         self.rx.recv().expect("prefetcher thread died")
     }

@@ -9,8 +9,12 @@
 
 use crate::util::rng::Rng;
 
+/// Class-conditional Gaussian-mixture features behind a fixed random
+/// nonlinear map (see the module docs).
 pub struct VisionDataset {
+    /// Feature dimension of a sample.
     pub dim: usize,
+    /// Number of classes.
     pub classes: usize,
     means: Vec<f32>,     // classes × latent
     proj: Vec<f32>,      // latent × dim (fixed random map)
@@ -20,6 +24,7 @@ pub struct VisionDataset {
 }
 
 impl VisionDataset {
+    /// Build the dataset's fixed class means + projection from `seed`.
     pub fn new(dim: usize, classes: usize, seed: u64) -> Self {
         let latent = 32;
         let mut rng = Rng::new(seed ^ 0xDA7A_0001);
@@ -63,9 +68,12 @@ impl VisionDataset {
     }
 }
 
+/// Which disjoint noise stream a batch is drawn from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Split {
+    /// Endless training stream.
     Train,
+    /// Held-out stream (reproducible per index).
     Test,
 }
 

@@ -5,6 +5,7 @@
 //! via `linalg::eigh`), independent of the artifacts — it validates the
 //! *numeric format*, while the runtime path validates the *system*.
 
+/// Synthetic spectra matching the paper's test matrices (A1/A2).
 pub mod spectrum;
 
 use crate::linalg::{bjorck, eigh, Mat};
@@ -31,21 +32,29 @@ pub enum QuantTarget {
     Eigen,
 }
 
+/// One quantization configuration under analysis (a Table-1 row).
 #[derive(Debug, Clone, Copy)]
 pub struct QuantScheme {
+    /// Codebook mapping.
     pub mapping: Mapping,
+    /// Storage bits per element.
     pub bits: u32,
+    /// Which matrix is quantized.
     pub target: QuantTarget,
     /// Björck rectification iterations (0 = no OR).
     pub rectify: usize,
+    /// Quantization block length.
     pub block: usize,
 }
 
 /// Result row of the Table-1 experiment.
 #[derive(Debug, Clone)]
 pub struct ErrorRow {
+    /// The scheme measured.
     pub scheme: QuantScheme,
+    /// Normwise relative error in f(A).
     pub nre: f64,
+    /// Angle error in degrees in f(A).
     pub ae_deg: f64,
 }
 

@@ -18,13 +18,28 @@
     clippy::too_many_arguments,
     clippy::inherent_to_string
 )]
+// Docs are part of the build contract: CI runs `cargo doc --no-deps` with
+// `RUSTDOCFLAGS="-D warnings"`, so an undocumented public item fails the
+// build instead of silently drifting (see docs/ARCHITECTURE.md).
+#![warn(missing_docs)]
 
+/// Run configuration: TOML/CLI parsing into one [`config::RunConfig`].
 pub mod config;
+/// L3 training coordinator: partitioner, block states, Algorithm-3
+/// orchestration, the parallel block engine, and the trainer.
 pub mod coordinator;
+/// Synthetic data pipelines (vision classification + bigram LM corpora).
 pub mod data;
+/// Quantization-error analyses (NRE / angle error, Tables 1/5/6/7).
 pub mod errors;
+/// Dense f32 linear algebra: eigh, QR/CGS2, Björck, Schur–Newton roots.
 pub mod linalg;
+/// Native first-order optimizers F (eq. 1) and comparison arms.
 pub mod optim;
+/// Quantization substrate: codebooks, block-wise quantizer, bit packing,
+/// and the [`quant::StateCodec`] storage layer.
 pub mod quant;
+/// Execution backends behind one [`runtime::Backend`] seam.
 pub mod runtime;
+/// In-tree utility substrates (CLI args, JSON, TOML, RNG, timers).
 pub mod util;

@@ -5,23 +5,30 @@
 
 use crate::util::rng::Rng;
 
+/// Dense row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
+    /// Row count.
     pub rows: usize,
+    /// Column count.
     pub cols: usize,
-    pub data: Vec<f32>, // row-major
+    /// Row-major payload, `rows × cols` long.
+    pub data: Vec<f32>,
 }
 
 impl Mat {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Mat {
         Mat { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Matrix over an existing row-major buffer.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
         assert_eq!(rows * cols, data.len());
         Mat { rows, cols, data }
     }
 
+    /// Identity of order n.
     pub fn eye(n: usize) -> Mat {
         let mut m = Mat::zeros(n, n);
         for i in 0..n {
@@ -30,6 +37,7 @@ impl Mat {
         m
     }
 
+    /// Diagonal matrix from a vector.
     pub fn diag(d: &[f32]) -> Mat {
         let mut m = Mat::zeros(d.len(), d.len());
         for (i, &x) in d.iter().enumerate() {
@@ -38,26 +46,32 @@ impl Mat {
         m
     }
 
+    /// Standard-normal entries.
     pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
         Mat::from_vec(rows, cols, rng.normal_vec(rows * cols))
     }
 
+    /// rows == cols.
     pub fn is_square(&self) -> bool {
         self.rows == self.cols
     }
 
+    /// Copy of the main diagonal.
     pub fn diagonal(&self) -> Vec<f32> {
         (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
     }
 
+    /// Borrow row i.
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Mutably borrow row i.
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Aᵀ.
     pub fn transpose(&self) -> Mat {
         let mut t = Mat::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -68,10 +82,12 @@ impl Mat {
         t
     }
 
+    /// s·A.
     pub fn scale(&self, s: f32) -> Mat {
         Mat::from_vec(self.rows, self.cols, self.data.iter().map(|x| x * s).collect())
     }
 
+    /// A + B.
     pub fn add(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat::from_vec(
@@ -81,6 +97,7 @@ impl Mat {
         )
     }
 
+    /// A − B.
     pub fn sub(&self, other: &Mat) -> Mat {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         Mat::from_vec(
@@ -100,10 +117,12 @@ impl Mat {
         m
     }
 
+    /// ‖A‖_F.
     pub fn frobenius(&self) -> f64 {
         self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }
 
+    /// Frobenius inner product ⟨A,B⟩.
     pub fn inner(&self, other: &Mat) -> f64 {
         assert_eq!((self.rows, self.cols), (other.rows, other.cols));
         self.data
@@ -113,6 +132,7 @@ impl Mat {
             .sum()
     }
 
+    /// Largest |entry|.
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
     }
@@ -191,6 +211,7 @@ impl Mat {
         vd.matmul(&v.transpose())
     }
 
+    /// A·x.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, x.len());
         (0..self.rows)

@@ -12,8 +12,10 @@ use super::dense::Mat;
 
 /// Eigendecomposition result: A = V · diag(vals) · Vᵀ.
 pub struct Eigh {
-    pub vals: Vec<f32>,   // ascending
-    pub vecs: Mat,        // columns are eigenvectors
+    /// Eigenvalues, ascending.
+    pub vals: Vec<f32>,
+    /// Matching eigenvectors as columns.
+    pub vecs: Mat,
 }
 
 impl Eigh {

@@ -3,9 +3,13 @@
 //! Exact references for the paper's error analyses at order 1200
 //! (Tables 1/5/6/7, Figures 2/3/6) and host-side math for the coordinator.
 
+/// Dense row-major f32 matrices.
 pub mod dense;
+/// Symmetric eigendecomposition (Jacobi + tred2/tqli).
 pub mod eig;
+/// QR / CGS2 orthogonalization.
 pub mod qr;
+/// Matrix roots: Schur–Newton inverse p-th roots, Björck, power iteration.
 pub mod roots;
 
 pub use dense::Mat;

@@ -82,6 +82,7 @@ pub fn bjorck_step(v: &Mat) -> Mat {
     v.scale(1.5).sub(&v.matmul(&g).scale(0.5))
 }
 
+/// `iters` Björck orthogonality-rectification steps (paper Algorithm 2).
 pub fn bjorck(v: &Mat, iters: usize) -> Mat {
     let mut out = v.clone();
     for _ in 0..iters {

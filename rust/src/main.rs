@@ -13,6 +13,11 @@
 //!                (parallel block engine: N worker threads for per-block
 //!                PU/PIRU/precondition, bit-identical to serial; staggered
 //!                inverse-root cohorts flatten the T2-step wall-time spike)
+//!                [--pipeline] [--pipeline-max-lag K]
+//!                (cross-step pipelining: PU/PIRU refreshes run on the
+//!                persistent pool and overlap subsequent model steps;
+//!                preconditioning tolerates roots up to K steps stale —
+//!                double-buffered swap, deterministic barriers)
 //!   quant-error  [--n 1200] [--bits 4] [--block 64]
 //!                (Table 1/5/6/7, Figures 2/3/5/6 — see benches for the
 //!                full sweeps)
@@ -33,7 +38,8 @@ use shampoo4::quant::Mapping;
 use shampoo4::runtime::{backend_by_name, Backend};
 use shampoo4::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] = &["shadow-quant-error", "stagger-invroots", "help", "quiet"];
+const BOOL_FLAGS: &[&str] =
+    &["shadow-quant-error", "stagger-invroots", "pipeline", "help", "quiet"];
 
 fn main() -> Result<()> {
     let args = Args::parse(BOOL_FLAGS);
@@ -67,6 +73,7 @@ fn artifact_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifact-dir", "artifacts"))
 }
 
+/// Apply `--flag` overrides on top of a parsed (or default) run config.
 pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if let Some(m) = args.get("model") {
         cfg.model = m.to_string();
@@ -127,6 +134,13 @@ pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if args.flag("stagger-invroots") {
         cfg.second.stagger_invroots = true;
     }
+    if args.flag("pipeline") {
+        cfg.second.pipeline = true;
+    }
+    if let Some(k) = args.get("pipeline-max-lag") {
+        cfg.second.pipeline_max_lag =
+            k.parse::<usize>().context("--pipeline-max-lag")?.max(1);
+    }
     if let Some(b) = args.get("backend") {
         cfg.backend = b.to_string();
     }
@@ -148,7 +162,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = rt.as_ref();
     println!(
         "platform={} model={} steps={} F={}@{}bit second={} bits={} mapping={} \
-         parallelism={} piru={}",
+         parallelism={} piru={} engine={}",
         rt.platform(),
         cfg.model,
         cfg.steps,
@@ -159,6 +173,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.second.quant.mapping.name(),
         cfg.second.parallelism,
         if cfg.second.stagger_invroots { "staggered" } else { "batch" },
+        if cfg.second.pipeline {
+            format!("pipelined(lag<={})", cfg.second.pipeline_max_lag)
+        } else {
+            "sync".to_string()
+        },
     );
     let out_dir = PathBuf::from(args.get_or("out", &format!("runs/{}", cfg.name)));
     let mut trainer = Trainer::new(rt, cfg.clone())?;

@@ -13,11 +13,18 @@
 //! With the default `Fp32` codec every trajectory is bit-identical to
 //! direct f32 storage; quantized codecs decode → update → re-encode each
 //! step, which *is* the low-bit optimizer algorithm.
+//!
+//! The elementwise hot loop is index-independent, so
+//! [`FirstOrder::step_par`] chunks it across the parallel block engine's
+//! persistent pool (`par_elementwise`) — bit-identical to the serial loop
+//! at any worker count, and overlappable with the engine's background
+//! PU/PIRU jobs.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::scheduler::Scheduler;
 use crate::quant::{fp32, EncodedVec, StateBuf, StateCodec};
 
 /// Serialized optimizer state: codec-encoded buffers (codec name + payload)
@@ -26,16 +33,31 @@ use crate::quant::{fp32, EncodedVec, StateBuf, StateCodec};
 /// a resumed run continues the exact trajectory.
 #[derive(Debug, Clone)]
 pub struct StateSnapshot {
+    /// (codec name, encoded payload) per state buffer, in each optimizer's
+    /// declaration order.
     pub buffers: Vec<(String, EncodedVec)>,
+    /// Scalar counters (step counts, accumulated sums, init flags).
     pub counters: Vec<f64>,
 }
 
 /// A first-order optimizer over a flat parameter vector.
 pub trait FirstOrder {
-    /// One update. `params` holds the *training* iterate (for schedule-free
-    /// methods this is the gradient point y); `grad` its gradient; `lr` the
+    /// One update, with the elementwise hot loop chunked across `sched`'s
+    /// persistent pool (the trainer passes the same engine that drives the
+    /// per-block second-order work). The update is index-independent, so
+    /// any worker count is bit-identical to the serial loop; with an inline
+    /// scheduler (or a small model) this *is* the serial loop.
+    ///
+    /// `params` holds the *training* iterate (for schedule-free methods
+    /// this is the gradient point y); `grad` its gradient; `lr` the
     /// scheduled learning rate.
-    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32);
+    fn step_par(&mut self, params: &mut [f32], grad: &[f32], lr: f32, sched: &Scheduler);
+
+    /// One update on the calling thread only — [`FirstOrder::step_par`]
+    /// with an inline scheduler.
+    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+        self.step_par(params, grad, lr, &Scheduler::inline());
+    }
 
     /// Parameters to use for evaluation (schedule-free returns the average).
     fn eval_params(&self, current: &[f32]) -> Vec<f32> {
@@ -45,6 +67,7 @@ pub trait FirstOrder {
     /// Exact optimizer-state bytes (for the Table 2/13 memory accounting).
     fn state_bytes(&self) -> usize;
 
+    /// Canonical display name (Table 2/4 row labels, checkpoint identity).
     fn name(&self) -> &'static str;
 
     /// Snapshot the full mutable state as codec-encoded buffers + scalar
@@ -108,15 +131,81 @@ fn restore_buffers(
     Ok(snap.counters)
 }
 
+/// Below this many parameters the chunked path is pure overhead — the whole
+/// update runs inline on the caller.
+const MIN_PAR_CHUNK: usize = 16 * 1024;
+
+/// Run the elementwise update `f(params, grad, state_chunks)` over equal
+/// index ranges, fanned across `sched`'s persistent pool. Every moment
+/// buffer in `state` is split at the same offsets as `params`/`grad`, so
+/// `f` sees aligned chunks. The update must be index-independent (every
+/// optimizer here is), which makes any worker count bit-identical to the
+/// serial loop — chunking changes *where* an element is updated, never the
+/// arithmetic.
+fn par_elementwise<F>(
+    sched: &Scheduler,
+    params: &mut [f32],
+    grad: &[f32],
+    state: Vec<&mut [f32]>,
+    f: F,
+) where
+    F: Fn(&mut [f32], &[f32], &mut [&mut [f32]]) + Sync,
+{
+    let n = params.len();
+    let lanes = sched.workers();
+    if sched.pool_threads() == 0 || lanes <= 1 || n < 2 * MIN_PAR_CHUNK {
+        let mut state = state;
+        f(params, grad, &mut state);
+        return;
+    }
+    struct Chunk<'a> {
+        p: &'a mut [f32],
+        g: &'a [f32],
+        s: Vec<&'a mut [f32]>,
+    }
+    let chunk_len = n.div_ceil(lanes).max(MIN_PAR_CHUNK);
+    let mut chunks: Vec<Chunk> = Vec::with_capacity(lanes);
+    let mut rest_p = params;
+    let mut rest_g = grad;
+    let mut rest_s = state;
+    while !rest_p.is_empty() {
+        let k = chunk_len.min(rest_p.len());
+        let taken = std::mem::take(&mut rest_p);
+        let (p, tail_p) = taken.split_at_mut(k);
+        rest_p = tail_p;
+        let (g, tail_g) = rest_g.split_at(k);
+        rest_g = tail_g;
+        let mut s = Vec::with_capacity(rest_s.len());
+        let mut tail_s = Vec::with_capacity(rest_s.len());
+        for buf in rest_s {
+            let (head, tail) = buf.split_at_mut(k);
+            s.push(head);
+            tail_s.push(tail);
+        }
+        rest_s = tail_s;
+        chunks.push(Chunk { p, g, s });
+    }
+    sched
+        .par_map_mut(&mut chunks, |_, c| {
+            f(c.p, c.g, &mut c.s);
+            Ok(())
+        })
+        .expect("elementwise chunk tasks are infallible");
+}
+
 // ---------------------------------------------------------------------------
 
+/// SGD with momentum and (coupled) weight decay.
 pub struct Sgdm {
     buf: StateBuf,
+    /// Momentum coefficient.
     pub momentum: f32,
+    /// Weight-decay coefficient (added to the gradient).
     pub weight_decay: f32,
 }
 
 impl Sgdm {
+    /// SGDM over `n` parameters with fp32 moment storage.
     pub fn new(n: usize, momentum: f32, weight_decay: f32) -> Self {
         Self { buf: StateBuf::zeros(n, fp32()), momentum, weight_decay }
     }
@@ -130,13 +219,23 @@ impl Sgdm {
 }
 
 impl FirstOrder for Sgdm {
-    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+    fn step_par(&mut self, params: &mut [f32], grad: &[f32], lr: f32, sched: &Scheduler) {
         let mut buf = self.buf.load();
-        for i in 0..params.len() {
-            let g = grad[i] + self.weight_decay * params[i];
-            buf[i] = self.momentum * buf[i] + g;
-            params[i] -= lr * buf[i];
-        }
+        let (momentum, wd) = (self.momentum, self.weight_decay);
+        par_elementwise(
+            sched,
+            params,
+            grad,
+            vec![&mut buf],
+            |p: &mut [f32], g: &[f32], s: &mut [&mut [f32]]| {
+                let b = &mut *s[0];
+                for i in 0..p.len() {
+                    let gi = g[i] + wd * p[i];
+                    b[i] = momentum * b[i] + gi;
+                    p[i] -= lr * b[i];
+                }
+            },
+        );
         self.buf.store(&buf);
     }
 
@@ -160,18 +259,26 @@ impl FirstOrder for Sgdm {
 
 // ---------------------------------------------------------------------------
 
+/// AdamW (decoupled weight decay), with optional Nesterov momentum
+/// (NAdamW).
 pub struct AdamW {
     m: StateBuf,
     v: StateBuf,
     step: u64,
+    /// First-moment EMA decay β₁.
     pub beta1: f32,
+    /// Second-moment EMA decay β₂.
     pub beta2: f32,
+    /// Denominator dampening ε.
     pub eps: f32,
+    /// Decoupled weight-decay coefficient.
     pub weight_decay: f32,
+    /// Nesterov momentum (the NAdamW variant).
     pub nesterov: bool,
 }
 
 impl AdamW {
+    /// AdamW over `n` parameters with fp32 moment storage.
     pub fn new(n: usize, beta1: f32, beta2: f32, eps: f32, weight_decay: f32) -> Self {
         Self {
             m: StateBuf::zeros(n, fp32()),
@@ -200,26 +307,38 @@ impl AdamW {
 }
 
 impl FirstOrder for AdamW {
-    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+    fn step_par(&mut self, params: &mut [f32], grad: &[f32], lr: f32, sched: &Scheduler) {
         self.step += 1;
         let t = self.step as f32;
         let bc1 = 1.0 - self.beta1.powf(t);
         let bc2 = 1.0 - self.beta2.powf(t);
         let bc1_next = 1.0 - self.beta1.powf(t + 1.0);
+        let (beta1, beta2, eps, wd, nesterov) =
+            (self.beta1, self.beta2, self.eps, self.weight_decay, self.nesterov);
         let mut m = self.m.load();
         let mut v = self.v.load();
-        for i in 0..params.len() {
-            let g = grad[i];
-            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * g;
-            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * g * g;
-            let mh = if self.nesterov {
-                (self.beta1 * m[i] + (1.0 - self.beta1) * g) / bc1_next
-            } else {
-                m[i] / bc1
-            };
-            let vh = v[i] / bc2;
-            params[i] -= lr * (mh / (vh.sqrt() + self.eps) + self.weight_decay * params[i]);
-        }
+        par_elementwise(
+            sched,
+            params,
+            grad,
+            vec![&mut m, &mut v],
+            |p: &mut [f32], g: &[f32], s: &mut [&mut [f32]]| {
+                let (sm, sv) = s.split_at_mut(1);
+                let (m, v) = (&mut *sm[0], &mut *sv[0]);
+                for i in 0..p.len() {
+                    let gi = g[i];
+                    m[i] = beta1 * m[i] + (1.0 - beta1) * gi;
+                    v[i] = beta2 * v[i] + (1.0 - beta2) * gi * gi;
+                    let mh = if nesterov {
+                        (beta1 * m[i] + (1.0 - beta1) * gi) / bc1_next
+                    } else {
+                        m[i] / bc1
+                    };
+                    let vh = v[i] / bc2;
+                    p[i] -= lr * (mh / (vh.sqrt() + eps) + wd * p[i]);
+                }
+            },
+        );
         self.m.store(&m);
         self.v.store(&v);
     }
@@ -249,13 +368,17 @@ impl FirstOrder for AdamW {
 
 // ---------------------------------------------------------------------------
 
+/// Adagrad (per-coordinate accumulated squared gradients).
 pub struct Adagrad {
     acc: StateBuf,
+    /// Denominator dampening ε.
     pub eps: f32,
+    /// Weight-decay coefficient (added to the gradient).
     pub weight_decay: f32,
 }
 
 impl Adagrad {
+    /// Adagrad over `n` parameters with fp32 accumulator storage.
     pub fn new(n: usize, eps: f32, weight_decay: f32) -> Self {
         Self { acc: StateBuf::zeros(n, fp32()), eps, weight_decay }
     }
@@ -268,13 +391,23 @@ impl Adagrad {
 }
 
 impl FirstOrder for Adagrad {
-    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+    fn step_par(&mut self, params: &mut [f32], grad: &[f32], lr: f32, sched: &Scheduler) {
         let mut acc = self.acc.load();
-        for i in 0..params.len() {
-            let g = grad[i] + self.weight_decay * params[i];
-            acc[i] += g * g;
-            params[i] -= lr * g / (acc[i].sqrt() + self.eps);
-        }
+        let (eps, wd) = (self.eps, self.weight_decay);
+        par_elementwise(
+            sched,
+            params,
+            grad,
+            vec![&mut acc],
+            |p: &mut [f32], g: &[f32], s: &mut [&mut [f32]]| {
+                let a = &mut *s[0];
+                for i in 0..p.len() {
+                    let gi = g[i] + wd * p[i];
+                    a[i] += gi * gi;
+                    p[i] -= lr * gi / (a[i].sqrt() + eps);
+                }
+            },
+        );
         self.acc.store(&acc);
     }
 
@@ -310,7 +443,9 @@ pub struct ScheduleFree {
     z: StateBuf,
     x: StateBuf,
     t: u64,
+    /// Interpolation β between z and the average x for the gradient point.
     pub beta: f32,
+    /// Weight-decay coefficient (added to the gradient).
     pub weight_decay: f32,
     /// Some => AdamW-normalized base step (beta2, eps); None => SGD.
     adam: Option<(f32, f32, StateBuf)>,
@@ -320,6 +455,7 @@ pub struct ScheduleFree {
 }
 
 impl ScheduleFree {
+    /// Schedule-free SGD over `n` parameters.
     pub fn sgd(n: usize, beta: f32, weight_decay: f32, warmup: usize) -> Self {
         Self {
             z: StateBuf::zeros(n, fp32()),
@@ -334,6 +470,7 @@ impl ScheduleFree {
         }
     }
 
+    /// Schedule-free AdamW over `n` parameters.
     pub fn adamw(n: usize, beta: f32, beta2: f32, eps: f32, weight_decay: f32,
                  warmup: usize) -> Self {
         Self {
@@ -352,7 +489,7 @@ impl ScheduleFree {
 }
 
 impl FirstOrder for ScheduleFree {
-    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+    fn step_par(&mut self, params: &mut [f32], grad: &[f32], lr: f32, sched: &Scheduler) {
         if !self.initialized {
             self.z.store(params);
             self.x.store(params);
@@ -369,27 +506,56 @@ impl FirstOrder for ScheduleFree {
         } else {
             1.0
         };
-        let bc2 = self.adam.as_ref().map(|(b2, _, _)| 1.0 - b2.powf(self.t as f32));
+        let (beta, wd) = (self.beta, self.weight_decay);
         let mut z = self.z.load();
         let mut x = self.x.load();
         let mut adam = self
             .adam
             .as_ref()
             .map(|(b2, eps, vb)| (*b2, *eps, vb.load()));
-        for i in 0..params.len() {
-            let g = grad[i] + self.weight_decay * params[i];
-            let step_dir = match &mut adam {
-                None => g,
-                Some((b2, eps, v)) => {
-                    v[i] = *b2 * v[i] + (1.0 - *b2) * g * g;
-                    let vh = v[i] / bc2.unwrap();
-                    g / (vh.sqrt() + *eps)
-                }
-            };
-            z[i] -= gamma * step_dir;
-            x[i] = (1.0 - c) * x[i] + c * z[i];
-            // next gradient point y = (1−β)z + βx
-            params[i] = (1.0 - self.beta) * z[i] + self.beta * x[i];
+        match adam.as_mut() {
+            None => par_elementwise(
+                sched,
+                params,
+                grad,
+                vec![&mut z, &mut x],
+                |p: &mut [f32], g: &[f32], s: &mut [&mut [f32]]| {
+                    let (sz, sx) = s.split_at_mut(1);
+                    let (z, x) = (&mut *sz[0], &mut *sx[0]);
+                    for i in 0..p.len() {
+                        let gi = g[i] + wd * p[i];
+                        z[i] -= gamma * gi;
+                        x[i] = (1.0 - c) * x[i] + c * z[i];
+                        // next gradient point y = (1−β)z + βx
+                        p[i] = (1.0 - beta) * z[i] + beta * x[i];
+                    }
+                },
+            ),
+            Some((b2, eps, v)) => {
+                let (b2, eps) = (*b2, *eps);
+                let bc2 = 1.0 - b2.powf(self.t as f32);
+                par_elementwise(
+                    sched,
+                    params,
+                    grad,
+                    vec![&mut z, &mut x, &mut v[..]],
+                    |p: &mut [f32], g: &[f32], s: &mut [&mut [f32]]| {
+                        let (sz, rest) = s.split_at_mut(1);
+                        let (sx, sv) = rest.split_at_mut(1);
+                        let (z, x, v) = (&mut *sz[0], &mut *sx[0], &mut *sv[0]);
+                        for i in 0..p.len() {
+                            let gi = g[i] + wd * p[i];
+                            v[i] = b2 * v[i] + (1.0 - b2) * gi * gi;
+                            let vh = v[i] / bc2;
+                            let step_dir = gi / (vh.sqrt() + eps);
+                            z[i] -= gamma * step_dir;
+                            x[i] = (1.0 - c) * x[i] + c * z[i];
+                            // next gradient point y = (1−β)z + βx
+                            p[i] = (1.0 - beta) * z[i] + beta * x[i];
+                        }
+                    },
+                );
+            }
         }
         self.z.store(&z);
         self.x.store(&x);
@@ -595,6 +761,79 @@ mod tests {
             &mut Sgdm::new(4, 0.9, 0.01).with_codec(q8()),
             &mut Sgdm::new(4, 0.9, 0.01).with_codec(q8()),
             0.05,
+        );
+    }
+
+    /// Drive `serial` with `step` and `chunked` with `step_par` over the
+    /// pooled scheduler; the parameter bit patterns must match exactly.
+    fn assert_chunked_bit_identical(
+        name: &str,
+        serial: &mut dyn FirstOrder,
+        chunked: &mut dyn FirstOrder,
+        n: usize,
+        sched: &Scheduler,
+    ) {
+        let grad: Vec<f32> = (0..n).map(|i| ((i % 97) as f32 - 48.0) * 1e-3).collect();
+        let init: Vec<f32> = (0..n).map(|i| ((i % 53) as f32 - 26.0) * 1e-2).collect();
+        let mut ps = init.clone();
+        let mut pc = init;
+        for _ in 0..3 {
+            serial.step(&mut ps, &grad, 1e-3);
+            chunked.step_par(&mut pc, &grad, 1e-3, sched);
+        }
+        let bits = |p: &[f32]| p.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&ps), bits(&pc), "{name}: chunked update diverged from serial");
+    }
+
+    #[test]
+    fn chunked_step_par_is_bit_identical_to_serial() {
+        // the flat update must not change by a single bit when fanned
+        // across the persistent pool — chunking only moves where an element
+        // is updated, never the arithmetic
+        let n = 3 * MIN_PAR_CHUNK + 137; // force several uneven chunks
+        let sched = Scheduler::new(4);
+        assert!(sched.pool_threads() > 0);
+        assert_chunked_bit_identical(
+            "sgdm",
+            &mut Sgdm::new(n, 0.9, 0.01),
+            &mut Sgdm::new(n, 0.9, 0.01),
+            n,
+            &sched,
+        );
+        assert_chunked_bit_identical(
+            "adamw",
+            &mut AdamW::new(n, 0.9, 0.999, 1e-8, 0.01),
+            &mut AdamW::new(n, 0.9, 0.999, 1e-8, 0.01),
+            n,
+            &sched,
+        );
+        assert_chunked_bit_identical(
+            "nadamw",
+            &mut AdamW::nadamw(n, 0.9, 0.999, 1e-8, 0.01),
+            &mut AdamW::nadamw(n, 0.9, 0.999, 1e-8, 0.01),
+            n,
+            &sched,
+        );
+        assert_chunked_bit_identical(
+            "adagrad",
+            &mut Adagrad::new(n, 1e-10, 0.01),
+            &mut Adagrad::new(n, 1e-10, 0.01),
+            n,
+            &sched,
+        );
+        assert_chunked_bit_identical(
+            "sf-adamw",
+            &mut ScheduleFree::adamw(n, 0.9, 0.999, 1e-8, 0.0, 5),
+            &mut ScheduleFree::adamw(n, 0.9, 0.999, 1e-8, 0.0, 5),
+            n,
+            &sched,
+        );
+        assert_chunked_bit_identical(
+            "sf-sgd",
+            &mut ScheduleFree::sgd(n, 0.9, 0.0, 5),
+            &mut ScheduleFree::sgd(n, 0.9, 0.0, 5),
+            n,
+            &sched,
         );
     }
 

@@ -11,10 +11,12 @@
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::scheduler::Scheduler;
 use crate::quant::{fp32, StateBuf, StateCodec};
 
 use super::first_order::{FirstOrder, StateSnapshot};
 
+/// M-FAC optimizer state: gradient window + momentum buffer.
 pub struct MFac {
     /// ring buffer of the last m gradients (each d long). Pinned to the
     /// `Fp32` codec: the window feeds an exact Woodbury solve, and its
@@ -22,13 +24,17 @@ pub struct MFac {
     grads: Vec<StateBuf>,
     head: usize,
     m: usize,
+    /// Woodbury damping λ.
     pub damp: f32,
+    /// Momentum on the update direction.
     pub momentum: f32,
     buf: StateBuf,
+    /// Weight-decay coefficient (added to the gradient).
     pub weight_decay: f32,
 }
 
 impl MFac {
+    /// M-FAC over `dim` parameters with an m-gradient window.
     pub fn new(dim: usize, m: usize, damp: f32, momentum: f32, weight_decay: f32) -> Self {
         Self {
             grads: Vec::new(),
@@ -144,7 +150,9 @@ fn solve_small(a: &mut [f64], b: &mut [f64], n: usize) -> Vec<f64> {
 }
 
 impl FirstOrder for MFac {
-    fn step(&mut self, params: &mut [f32], grad: &[f32], lr: f32) {
+    // M-FAC's cost is the Woodbury solve (window dot products), not the
+    // elementwise tail, so the update stays serial regardless of `sched`.
+    fn step_par(&mut self, params: &mut [f32], grad: &[f32], lr: f32, _sched: &Scheduler) {
         let g: Vec<f32> = grad
             .iter()
             .zip(params.iter())

@@ -2,7 +2,10 @@
 //! arms of Appendix H. Second-order preconditioning lives in `coordinator`
 //! (it orchestrates the AOT artifacts).
 
+/// The native elementwise optimizers (SGDM, AdamW, Adagrad,
+/// schedule-free) and the [`FirstOrder`] trait they implement.
 pub mod first_order;
+/// M-FAC (matrix-free inverse-Hessian-vector products), Table 11 arm.
 pub mod mfac;
 
 pub use first_order::{Adagrad, AdamW, FirstOrder, ScheduleFree, Sgdm, StateSnapshot};

@@ -9,15 +9,21 @@
 use super::codebook::Boundaries;
 use super::pack::{pack_bits, packed_len, unpack_bits};
 
+/// Default quantization block length (paper §3.3; matches the kernels).
 pub const BLOCK: usize = 64;
 
 /// Quantized vector: packed codes + one f32 scale per block.
 #[derive(Debug, Clone)]
 pub struct QuantizedVec {
+    /// Codes packed at true bitwidth.
     pub packed: Vec<u8>,
+    /// Per-block absmax scales.
     pub scales: Vec<f32>,
+    /// Original element count.
     pub len: usize,
+    /// Bits per code.
     pub bits: u32,
+    /// Block length the scales apply to.
     pub block: usize,
 }
 

@@ -14,6 +14,7 @@ pub enum Mapping {
 }
 
 impl Mapping {
+    /// Parse a config/CLI mapping name.
     pub fn parse(s: &str) -> Option<Mapping> {
         match s.to_ascii_lowercase().as_str() {
             "dt" | "dynamic_tree" => Some(Mapping::Dt),
@@ -23,6 +24,7 @@ impl Mapping {
         }
     }
 
+    /// Canonical config/checkpoint name.
     pub fn name(&self) -> &'static str {
         match self {
             Mapping::Dt => "dt",
@@ -82,6 +84,7 @@ pub fn linear2_codebook(bits: u32) -> Vec<f32> {
         .collect()
 }
 
+/// Plain linear codebook on [-1, 1].
 pub fn linear_codebook(bits: u32) -> Vec<f32> {
     let n = 1usize << bits;
     (0..n)
@@ -119,6 +122,7 @@ pub struct Boundaries {
 }
 
 impl Boundaries {
+    /// Precompute midpoints + duplicate-run remap for a sorted codebook.
     pub fn new(cb: &[f32]) -> Self {
         debug_assert!(cb.windows(2).all(|w| w[0] <= w[1]), "codebook must be sorted");
         let mut remap = vec![0u8; cb.len()];
@@ -131,6 +135,7 @@ impl Boundaries {
         }
     }
 
+    /// Nearest codebook index for `x` (jnp.argmin tie semantics).
     #[inline]
     pub fn nearest(&self, x: f32) -> u8 {
         self.remap[self.mids.partition_point(|&m| m < x)]

@@ -31,11 +31,37 @@ use super::pack::{pack_bits, packed_len, unpack_bits};
 /// verbatim.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EncodedVec {
+    /// The serialized payload (the checkpoint bytes).
     pub bytes: Vec<u8>,
+    /// Element count of the decoded vector.
     pub len: usize,
 }
 
 /// Pluggable storage codec for optimizer state vectors.
+///
+/// Encode → decode round-trips are the storage algorithm itself: exact for
+/// [`Fp32`], rounding for [`Bf16`], block-wise codebook quantization for
+/// [`BlockQuant`]. An [`EncodedVec`]'s bytes ARE the checkpoint payload.
+///
+/// ```
+/// use shampoo4::quant::{codec_for, Mapping, StateCodec};
+///
+/// // fp32 is the identity codec: exact, 4 bytes per element
+/// let fp32 = codec_for(32, Mapping::Dt);
+/// let x = vec![0.25f32, -3.5, 0.0, 7.125];
+/// let enc = fp32.encode(&x);
+/// assert_eq!(enc.bytes.len(), fp32.state_bytes(x.len()));
+/// assert_eq!(fp32.decode(&enc), x);
+///
+/// // a quantized codec round-trips within its published resolution bound
+/// let q4 = codec_for(4, Mapping::Linear2);
+/// let enc = q4.encode(&x);
+/// assert_eq!(enc.bytes.len(), q4.state_bytes(x.len()));
+/// let absmax = 7.125f32;
+/// for (orig, back) in x.iter().zip(q4.decode(&enc)) {
+///     assert!((orig - back).abs() <= q4.resolution(absmax));
+/// }
+/// ```
 pub trait StateCodec: Send + Sync {
     /// Stable identifier persisted in checkpoints ("fp32", "bf16",
     /// "q4-linear2", ...). `codec_by_name` must round-trip it.
@@ -48,8 +74,10 @@ pub trait StateCodec: Send + Sync {
     /// `encode(x).bytes.len()` for any `x` of that length.
     fn state_bytes(&self, len: usize) -> usize;
 
+    /// Encode a vector into this codec's storage format.
     fn encode(&self, x: &[f32]) -> EncodedVec;
 
+    /// Decode a payload produced by [`StateCodec::encode`].
     fn decode(&self, e: &EncodedVec) -> Vec<f32>;
 
     /// Upper bound on |decode(encode(x)) − x| for an element living in a
@@ -211,10 +239,13 @@ pub struct BlockQuant {
 }
 
 impl BlockQuant {
+    /// Block-64 codec for (mapping, bits).
     pub fn new(mapping: Mapping, bits: u32) -> Self {
         Self::with_block(mapping, bits, BLOCK)
     }
 
+    /// Codec with an explicit block length (analyses only; the kernels
+    /// assume block 64).
     pub fn with_block(mapping: Mapping, bits: u32, block: usize) -> Self {
         assert!((2..=8).contains(&bits), "block-quant supports 2..=8 bits, got {bits}");
         assert!(block >= 1);
@@ -224,22 +255,27 @@ impl BlockQuant {
         Self { mapping, bits, block, cb, rcb }
     }
 
+    /// 8-bit codec (first-order moments, Dettmers et al. regime).
     pub fn q8(mapping: Mapping) -> Self {
         Self::new(mapping, 8)
     }
 
+    /// The paper's default second-order codec (4-bit Linear-2).
     pub fn q4_linear2() -> Self {
         Self::new(Mapping::Linear2, 4)
     }
 
+    /// 4-bit DT codec (first-order moments / ablations).
     pub fn q4_dt() -> Self {
         Self::new(Mapping::Dt, 4)
     }
 
+    /// Block length of this codec.
     pub fn block(&self) -> usize {
         self.block
     }
 
+    /// The sorted codebook values.
     pub fn codebook(&self) -> &[f32] {
         &self.cb
     }
@@ -376,6 +412,20 @@ pub fn codec_for(bits: u32, mapping: Mapping) -> Arc<dyn StateCodec> {
 
 /// Resolve a codec name persisted in a checkpoint ("fp32", "bf16",
 /// "q4-linear2", "q8-dt", ...).
+///
+/// Round-trips [`StateCodec::name`], and the resolved codec decodes
+/// payloads encoded by the original bit-exactly:
+///
+/// ```
+/// use shampoo4::quant::{codec_for, codec_by_name, Mapping, StateCodec};
+///
+/// let q4 = codec_for(4, Mapping::Linear2);
+/// let enc = q4.encode(&[1.0, -0.5, 0.25]);
+/// let restored = codec_by_name(&q4.name()).unwrap();
+/// assert_eq!(restored.name(), "q4-linear2");
+/// assert_eq!(restored.decode(&enc), q4.decode(&enc));
+/// assert!(codec_by_name("q9-martian").is_err());
+/// ```
 pub fn codec_by_name(name: &str) -> Result<Arc<dyn StateCodec>> {
     match name {
         "fp32" => Ok(Arc::new(Fp32)),
@@ -417,18 +467,22 @@ impl StateBuf {
         Self { codec, enc }
     }
 
+    /// Element count.
     pub fn len(&self) -> usize {
         self.enc.len
     }
 
+    /// True when the buffer has no elements.
     pub fn is_empty(&self) -> bool {
         self.enc.len == 0
     }
 
+    /// The owning codec.
     pub fn codec(&self) -> &Arc<dyn StateCodec> {
         &self.codec
     }
 
+    /// The live encoded payload (what a checkpoint persists).
     pub fn encoded(&self) -> &EncodedVec {
         &self.enc
     }

@@ -3,9 +3,13 @@
 //! the L1 Pallas kernels, cross-checked via golden artifacts — and the
 //! [`codec::StateCodec`] layer both optimizer families store state through.
 
+/// Block-wise absmax quantize/dequantize kernels.
 pub mod blockwise;
+/// Codebooks (DT / Linear-2 / linear) + decision boundaries.
 pub mod codebook;
+/// The `StateCodec` storage layer.
 pub mod codec;
+/// True-bitwidth code packing.
 pub mod pack;
 
 pub use blockwise::{

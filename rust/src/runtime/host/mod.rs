@@ -4,7 +4,9 @@
 //! model substrates, against a manifest synthesized to match aot.py exactly
 //! (same names, same I/O specs, same bucket set). No Python, no XLA.
 
+/// Native MLP + transformer-LM step/eval (hand-written fwd/bwd).
 pub mod model;
+/// Native Shampoo/quantizer artifact semantics on `linalg` + `quant`.
 pub mod ops;
 
 use std::collections::HashMap;
@@ -26,6 +28,8 @@ const BUCKETS_WITH_KFAC: [usize; 3] = [64, 128, 256];
 const DENSE_BUCKETS: [usize; 4] = [32, 64, 128, 256];
 const CB_LEN: usize = 16;
 
+/// The hermetic pure-Rust [`Backend`]: always available, trains real
+/// models with zero external dependencies.
 pub struct HostBackend {
     manifest: Manifest,
     // Mutex (not RefCell): `execute` is called concurrently by the parallel
@@ -35,6 +39,7 @@ pub struct HostBackend {
 }
 
 impl HostBackend {
+    /// Backend over the synthesized manifest (no filesystem access).
     pub fn new() -> Self {
         Self { manifest: synthetic_manifest(), stats: Mutex::new(HashMap::new()) }
     }

@@ -15,6 +15,7 @@ use crate::runtime::literal::HostTensor;
 
 // ---- boundary marshaling --------------------------------------------------
 
+/// Interpret a 2-D f32 tensor as a dense matrix.
 pub fn mat2(t: &HostTensor) -> Result<Mat> {
     if t.shape.len() != 2 {
         bail!("expected 2-D tensor, got shape {:?}", t.shape);
@@ -22,6 +23,7 @@ pub fn mat2(t: &HostTensor) -> Result<Mat> {
     Ok(Mat::from_vec(t.shape[0], t.shape[1], t.as_f32()?.to_vec()))
 }
 
+/// Read a scalar f32 input.
 pub fn scalar(t: &HostTensor) -> Result<f32> {
     Ok(t.as_f32()?[0])
 }

@@ -19,12 +19,16 @@ use anyhow::{bail, Result};
 /// Typed host buffer (shared, immutable once constructed).
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorData {
+    /// 32-bit floats (parameters, gradients, scales, ...).
     F32(Arc<Vec<f32>>),
+    /// 32-bit ints (labels, tokens).
     I32(Arc<Vec<i32>>),
+    /// Bytes (quantization codes).
     U8(Arc<Vec<u8>>),
 }
 
 impl TensorData {
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             TensorData::F32(v) => v.len(),
@@ -33,11 +37,13 @@ impl TensorData {
         }
     }
 
+    /// True when the buffer has no elements.
     #[allow(clippy::len_zero)]
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Manifest dtype string ("float32" / "int32" / "uint8").
     pub fn dtype_name(&self) -> &'static str {
         match self {
             TensorData::F32(_) => "float32",
@@ -50,38 +56,47 @@ impl TensorData {
 /// A shaped host tensor (row-major), the unit crossing the PJRT boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct HostTensor {
+    /// Row-major dimensions (empty = scalar).
     pub shape: Vec<usize>,
+    /// The shared payload.
     pub data: TensorData,
 }
 
 impl HostTensor {
+    /// f32 tensor from a shape and flat data (lengths must agree).
     pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { shape: shape.to_vec(), data: TensorData::F32(Arc::new(data)) }
     }
 
+    /// i32 tensor from a shape and flat data (lengths must agree).
     pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { shape: shape.to_vec(), data: TensorData::I32(Arc::new(data)) }
     }
 
+    /// u8 tensor from a shape and flat data (lengths must agree).
     pub fn u8(shape: &[usize], data: Vec<u8>) -> Self {
         assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { shape: shape.to_vec(), data: TensorData::U8(Arc::new(data)) }
     }
 
+    /// Rank-0 f32 scalar.
     pub fn scalar_f32(x: f32) -> Self {
         Self { shape: vec![], data: TensorData::F32(Arc::new(vec![x])) }
     }
 
+    /// All-zero f32 tensor of the given shape.
     pub fn zeros_f32(shape: &[usize]) -> Self {
         Self::f32(shape, vec![0.0; shape.iter().product()])
     }
 
+    /// Total element count.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
 
+    /// Borrow the payload as f32 (errors on other dtypes).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
@@ -89,6 +104,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the payload as i32 (errors on other dtypes).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match &self.data {
             TensorData::I32(v) => Ok(v),
@@ -96,6 +112,7 @@ impl HostTensor {
         }
     }
 
+    /// Borrow the payload as u8 (errors on other dtypes).
     pub fn as_u8(&self) -> Result<&[u8]> {
         match &self.data {
             TensorData::U8(v) => Ok(v),

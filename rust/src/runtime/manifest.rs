@@ -13,12 +13,16 @@ use crate::util::json::Json;
 /// One input or output of an artifact, as recorded by aot.py.
 #[derive(Debug, Clone)]
 pub struct IoSpec {
+    /// Logical name recorded by the compiler.
     pub name: String,
+    /// Row-major shape (empty = scalar).
     pub shape: Vec<usize>,
+    /// Manifest dtype string ("float32" / "int32" / "uint8").
     pub dtype: String,
 }
 
 impl IoSpec {
+    /// Build a spec in place (host backend's synthesized manifest).
     pub fn new(name: &str, shape: &[usize], dtype: &str) -> Self {
         Self { name: name.to_string(), shape: shape.to_vec(), dtype: dtype.to_string() }
     }
@@ -32,46 +36,73 @@ impl IoSpec {
     }
 }
 
+/// One compiled artifact: its file and typed I/O signature.
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
+    /// HLO-text file name (PJRT backend; unused on host).
     pub file: String,
+    /// Input signature, in call order.
     pub inputs: Vec<IoSpec>,
+    /// Output signature, in result order.
     pub outputs: Vec<IoSpec>,
 }
 
+/// One model parameter tensor.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// Parameter name.
     pub name: String,
+    /// Row-major shape.
     pub shape: Vec<usize>,
 }
 
+/// One trainable model served by a backend.
 #[derive(Debug, Clone)]
 pub struct ModelSpec {
+    /// Model family ("mlp" / "tlm").
     pub kind: String,
+    /// Parameter tensors, in flattening order.
     pub params: Vec<ParamSpec>,
+    /// Name of the fwd+bwd step artifact.
     pub step: String,
+    /// Name of the eval artifact.
     pub eval: String,
+    /// Batch size the artifacts were compiled for.
     pub batch: usize,
+    /// Layer dims (MLP) / architecture dims (transformer).
     pub dims: Vec<usize>,
+    /// Classifier classes (0 for LMs).
     pub classes: usize,
+    /// Vocabulary size (0 for classifiers).
     pub vocab: usize,
+    /// Sequence length (0 for classifiers).
     pub seq: usize,
     /// attention heads (transformer models; 0 otherwise)
     pub heads: usize,
+    /// Total scalar parameters.
     pub param_count: usize,
 }
 
+/// Everything a backend serves: artifacts, models, and the quantization
+/// grid they were compiled against.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Quantization block length the kernels assume.
     pub block_size: usize,
+    /// Codebook length the quantized kernels assume (16).
     pub cb_len: usize,
+    /// Preconditioner bucket orders.
     pub buckets: Vec<usize>,
+    /// Bucket orders with quantized kernels.
     pub quant_buckets: Vec<usize>,
+    /// Artifact specs by name.
     pub artifacts: HashMap<String, ArtifactSpec>,
+    /// Model specs by name.
     pub models: HashMap<String, ModelSpec>,
 }
 
 impl Manifest {
+    /// Parse `dir`/manifest.json.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let text =
@@ -80,6 +111,7 @@ impl Manifest {
         Self::from_json(&j)
     }
 
+    /// Parse a manifest from its JSON document.
     pub fn from_json(j: &Json) -> Result<Self> {
         let mut artifacts = HashMap::new();
         for (name, a) in j.get("artifacts").and_then(Json::as_obj).context("artifacts")? {
@@ -186,7 +218,10 @@ impl Manifest {
 /// Cumulative per-artifact execution statistics (hot-path observability).
 #[derive(Debug, Default, Clone)]
 pub struct ExecStats {
+    /// Executions of this artifact.
     pub calls: u64,
+    /// Wall seconds inside execute calls.
     pub total_secs: f64,
+    /// One-time compile seconds (PJRT; 0 on host).
     pub compile_secs: f64,
 }

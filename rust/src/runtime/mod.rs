@@ -15,9 +15,13 @@
 //! Both validate inputs against the same [`Manifest`] spec and expose the
 //! same per-artifact [`ExecStats`], so they are drop-in interchangeable.
 
+/// Pure-Rust backend executing every artifact natively.
 pub mod host;
+/// Host tensors, the unit crossing every backend boundary.
 pub mod literal;
+/// The artifact/model manifest shared by every backend.
 pub mod manifest;
+/// PJRT artifact registry (feature `pjrt`).
 #[cfg(feature = "pjrt")]
 pub mod registry;
 
@@ -52,10 +56,12 @@ pub trait Backend: Send + Sync {
     /// Snapshot of per-artifact execution statistics.
     fn stats(&self) -> HashMap<String, ExecStats>;
 
+    /// Whether the manifest serves an artifact by this name.
     fn has_artifact(&self, name: &str) -> bool {
         self.manifest().artifacts.contains_key(name)
     }
 
+    /// The manifest spec for a named artifact.
     fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.manifest()
             .artifacts

@@ -33,6 +33,7 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Load the manifest from `artifact_dir` and bring up a CPU PJRT client.
     pub fn new(artifact_dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(artifact_dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("{e:?}"))?;

@@ -4,10 +4,14 @@
 
 use std::collections::HashMap;
 
+/// Parsed command-line arguments.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Non-flag arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options.
     pub options: HashMap<String, String>,
+    /// Bare `--flag`s seen.
     pub flags: Vec<String>,
 }
 
@@ -41,28 +45,34 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping the binary name).
     pub fn parse(bool_flags: &[&str]) -> Args {
         Self::parse_from(std::env::args().skip(1), bool_flags)
     }
 
+    /// Whether `--name` was passed as a flag.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Integer value of `--name`, or `default` (panics on junk).
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be an integer, got {v:?}")))
             .unwrap_or(default)
     }
 
+    /// Float value of `--name`, or `default` (panics on junk).
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
         self.get(name)
             .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} must be a number, got {v:?}")))

@@ -7,19 +7,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any number (f64 storage, i64-exact fast path).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys — deterministic serialization).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with a byte position.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset in the input.
     pub pos: usize,
 }
 
@@ -32,6 +42,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), i: 0 };
         p.ws();
@@ -45,6 +56,7 @@ impl Json {
 
     // -- accessors ---------------------------------------------------------
 
+    /// Object field lookup (None on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -52,6 +64,7 @@ impl Json {
         }
     }
 
+    /// Borrow as a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -59,6 +72,7 @@ impl Json {
         }
     }
 
+    /// Read as f64.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -66,10 +80,12 @@ impl Json {
         }
     }
 
+    /// Read as usize (truncating).
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|x| x as usize)
     }
 
+    /// Borrow as an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -77,6 +93,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an object map.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -84,6 +101,7 @@ impl Json {
         }
     }
 
+    /// Read as bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -109,24 +127,29 @@ impl Json {
 
     // -- builders ----------------------------------------------------------
 
+    /// Object from (key, value) pairs.
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Numeric array from f32s.
     pub fn arr_f32(v: &[f32]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
+    /// Numeric array from f64s.
     pub fn arr_f64(v: &[f64]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
     }
 
+    /// Numeric array from usizes.
     pub fn arr_usize(v: &[usize]) -> Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
     // -- serialization -----------------------------------------------------
 
+    /// Serialize to a compact JSON string.
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

@@ -2,9 +2,15 @@
 //! property-test helpers, and timing utilities (offline build — see
 //! Cargo.toml).
 
+/// Tiny CLI argument parser.
 pub mod cli;
+/// Minimal JSON parser/serializer.
 pub mod json;
+/// Property-test helpers.
 pub mod prop;
+/// Deterministic PRNG (splitmix-based).
 pub mod rng;
+/// Timing + micro-benchmark harness.
 pub mod timer;
+/// Minimal TOML-subset parser.
 pub mod tomlcfg;

@@ -2,6 +2,8 @@
 //! randomness is needed: synthetic data, initialization checks, property
 //! tests, spectrum generators. In-tree substrate (no `rand` offline).
 
+/// Deterministic 64-bit PRNG (splitmix64-seeded xoshiro256**) with normal
+/// sampling.
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
@@ -16,6 +18,7 @@ fn splitmix64(state: &mut u64) -> u64 {
 }
 
 impl Rng {
+    /// Seeded generator (same seed → same stream).
     pub fn new(seed: u64) -> Self {
         let mut sm = seed;
         Self {
@@ -33,6 +36,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -84,10 +88,12 @@ impl Rng {
         }
     }
 
+    /// Standard-normal sample.
     pub fn normal_f32(&mut self) -> f32 {
         self.normal() as f32
     }
 
+    /// `n` standard-normal samples.
     pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
         (0..n).map(|_| self.normal_f32()).collect()
     }
@@ -102,6 +108,7 @@ impl Rng {
         }
     }
 
+    /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
         for i in (1..v.len()).rev() {
             let j = self.below(i + 1);

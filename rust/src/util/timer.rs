@@ -9,30 +9,41 @@ use std::time::{Duration, Instant};
 pub struct Stopwatch(Instant);
 
 impl Stopwatch {
+    /// Start timing now.
     pub fn start() -> Self {
         Stopwatch(Instant::now())
     }
 
+    /// Seconds since start.
     pub fn secs(&self) -> f64 {
         self.0.elapsed().as_secs_f64()
     }
 
+    /// Milliseconds since start.
     pub fn millis(&self) -> f64 {
         self.secs() * 1e3
     }
 }
 
+/// Summary statistics of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
+    /// Mean nanoseconds per iteration.
     pub mean_ns: f64,
+    /// Median nanoseconds.
     pub p50_ns: f64,
+    /// 95th-percentile nanoseconds.
     pub p95_ns: f64,
+    /// Fastest iteration nanoseconds.
     pub min_ns: f64,
 }
 
 impl BenchStats {
+    /// One-line human-readable row.
     pub fn report(&self) -> String {
         fn fmt(ns: f64) -> String {
             if ns < 1e3 {
@@ -57,9 +68,13 @@ impl BenchStats {
     }
 }
 
+/// Fixed-duration micro-benchmark runner.
 pub struct BenchRunner {
+    /// Untimed warmup duration.
     pub warmup: Duration,
+    /// Timed measurement duration.
     pub measure: Duration,
+    /// Iteration cap within the measurement window.
     pub max_iters: usize,
 }
 
@@ -74,6 +89,7 @@ impl Default for BenchRunner {
 }
 
 impl BenchRunner {
+    /// Shorter windows for expensive benchmarks.
     pub fn quick() -> Self {
         Self {
             warmup: Duration::from_millis(50),

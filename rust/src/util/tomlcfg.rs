@@ -7,16 +7,23 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed TOML scalar value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// An inline array.
     Arr(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// Borrow as a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(s) => Some(s),
@@ -24,6 +31,7 @@ impl TomlValue {
         }
     }
 
+    /// Read as i64 (integers only).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             TomlValue::Int(x) => Some(*x),
@@ -31,6 +39,7 @@ impl TomlValue {
         }
     }
 
+    /// Read as f64 (ints widen).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             TomlValue::Float(x) => Some(*x),
@@ -39,6 +48,7 @@ impl TomlValue {
         }
     }
 
+    /// Read as bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(b) => Some(*b),
@@ -47,9 +57,12 @@ impl TomlValue {
     }
 }
 
+/// Parse failure with a line number.
 #[derive(Debug)]
 pub struct TomlError {
+    /// 1-based line of the failure.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -61,12 +74,15 @@ impl fmt::Display for TomlError {
 
 impl std::error::Error for TomlError {}
 
+/// A parsed TOML-subset document.
 #[derive(Debug, Default, Clone)]
 pub struct TomlDoc {
+    /// Flattened `section.key` → value map.
     pub values: BTreeMap<String, TomlValue>,
 }
 
 impl TomlDoc {
+    /// Parse a TOML-subset document into a flat key map.
     pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
@@ -98,10 +114,12 @@ impl TomlDoc {
         Ok(doc)
     }
 
+    /// Look up a dotted `section.key`.
     pub fn get(&self, key: &str) -> Option<&TomlValue> {
         self.values.get(key)
     }
 
+    /// String at `key`, or `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key)
             .and_then(TomlValue::as_str)
@@ -109,18 +127,22 @@ impl TomlDoc {
             .to_string()
     }
 
+    /// i64 at `key`, or `default`.
     pub fn i64_or(&self, key: &str, default: i64) -> i64 {
         self.get(key).and_then(TomlValue::as_i64).unwrap_or(default)
     }
 
+    /// usize at `key`, or `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.i64_or(key, default as i64) as usize
     }
 
+    /// f64 at `key`, or `default`.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(TomlValue::as_f64).unwrap_or(default)
     }
 
+    /// bool at `key`, or `default`.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(TomlValue::as_bool).unwrap_or(default)
     }
