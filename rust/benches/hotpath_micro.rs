@@ -14,7 +14,10 @@ use shampoo4::config::RunConfig;
 use shampoo4::coordinator::scheduler::Scheduler;
 use shampoo4::coordinator::Trainer;
 use shampoo4::linalg::Mat;
-use shampoo4::quant::{codebook, dequantize, pack_bits, quantize, unpack_bits, Mapping};
+use shampoo4::quant::{
+    codebook, dequantize, dequantize_scalar, pack_bits, quantize, quantize_scalar,
+    unpack_bits, Mapping,
+};
 use shampoo4::runtime::{default_backend, Backend, HostTensor};
 use shampoo4::util::rng::Rng;
 use shampoo4::util::timer::BenchRunner;
@@ -25,13 +28,36 @@ fn main() {
     let cb = codebook(Mapping::Linear2, 4);
 
     // ---- native quantizer -------------------------------------------------
+    // chunked (branch-free lanes + batched pack) vs the scalar reference —
+    // the per-buffer codec policy rides these kernels on every StateBuf
+    // store/load, so the gap here is the policy layer's per-step overhead
     let x: Vec<f32> = rng.normal_vec(128 * 128);
     let q = quantize(&x, &cb, 4, 64);
-    println!("{}", runner.run("quant/native quantize 128x128", || {
+    println!("{}", runner.run("quant/chunked quantize 128x128", || {
         std::hint::black_box(quantize(std::hint::black_box(&x), &cb, 4, 64));
     }).report());
-    println!("{}", runner.run("quant/native dequantize 128x128", || {
+    println!("{}", runner.run("quant/scalar quantize 128x128", || {
+        std::hint::black_box(quantize_scalar(std::hint::black_box(&x), &cb, 4, 64));
+    }).report());
+    println!("{}", runner.run("quant/chunked dequantize 128x128", || {
         std::hint::black_box(dequantize(std::hint::black_box(&q), &cb));
+    }).report());
+    println!("{}", runner.run("quant/scalar dequantize 128x128", || {
+        std::hint::black_box(dequantize_scalar(std::hint::black_box(&q), &cb));
+    }).report());
+    let cb8 = codebook(Mapping::Dt, 8);
+    let q8 = quantize(&x, &cb8, 8, 64);
+    println!("{}", runner.run("quant/chunked quantize 128x128 q8", || {
+        std::hint::black_box(quantize(std::hint::black_box(&x), &cb8, 8, 64));
+    }).report());
+    println!("{}", runner.run("quant/scalar quantize 128x128 q8", || {
+        std::hint::black_box(quantize_scalar(std::hint::black_box(&x), &cb8, 8, 64));
+    }).report());
+    println!("{}", runner.run("quant/chunked dequantize 128x128 q8", || {
+        std::hint::black_box(dequantize(std::hint::black_box(&q8), &cb8));
+    }).report());
+    println!("{}", runner.run("quant/scalar dequantize 128x128 q8", || {
+        std::hint::black_box(dequantize_scalar(std::hint::black_box(&q8), &cb8));
     }).report());
     let codes = q.codes_u8();
     println!("{}", runner.run("quant/pack_bits 16k codes", || {
@@ -109,13 +135,17 @@ fn main() {
     // the per-step first-order overhead of codec storage: decode + encode of
     // a 1M-element moment buffer at each bitwidth
     {
-        use shampoo4::quant::{codec_for, StateCodec};
+        use std::sync::Arc;
+
+        use shampoo4::quant::{codec_for, StateCodec, StochasticRound};
         let xs = rng.normal_vec(1 << 20);
+        let sr: Arc<dyn StateCodec> = Arc::new(StochasticRound::new(Mapping::Dt, 4, 0));
         for (label, codec) in [
             ("codec/fp32 1M roundtrip", codec_for(32, Mapping::Dt)),
             ("codec/bf16 1M roundtrip", codec_for(16, Mapping::Dt)),
             ("codec/q8-dt 1M roundtrip", codec_for(8, Mapping::Dt)),
             ("codec/q4-dt 1M roundtrip", codec_for(4, Mapping::Dt)),
+            ("codec/q4-dt-sr 1M roundtrip", sr),
         ] {
             let enc = codec.encode(&xs);
             println!("{}", slow.run(label, || {

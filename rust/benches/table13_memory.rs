@@ -96,6 +96,51 @@ fn main() {
         Ok(()) => println!("# wrote bench_out/BENCH_state_codec.json"),
         Err(e) => println!("# could not write bench_out/BENCH_state_codec.json: {e}"),
     }
+
+    // ---- mixed-policy arms (the codec policy layer: per-buffer bitwidths) --
+    println!("\n# Mixed codec-policy arms (m / v at independent bitwidths)");
+    println!("{:<44} {:>12} {:>12} {:>9}", "Policy", "first(MB)", "second(MB)", "maxbatch");
+    let policy_arms = [
+        ("m=q4,v=q8", 4u32, 8u32, 0u32),
+        ("m=q4,v=q4", 4, 4, 0),
+        ("m=q4,v=q8 + 4-bit Shampoo", 4, 8, 4),
+        ("m=q4,v=q8 + 32-bit Shampoo", 4, 8, 32),
+        ("m=q4-sr,v=q8 + 4-bit Shampoo", 4, 8, 4),
+    ];
+    let mut policy_rows = Vec::new();
+    for &(label, m_bits, v_bits, shampoo_bits) in &policy_arms {
+        let p = plan(
+            &m,
+            OptimizerPlan::AdamPolicy { m_bits, v_bits, shampoo_bits, max_order: 2048 },
+        );
+        let max_batch = p.max_batch(budget);
+        println!(
+            "{:<44} {:>12.0} {:>12.0} {:>9}",
+            label,
+            p.adam_bytes as f64 / 1048576.0,
+            p.shampoo_bytes as f64 / 1048576.0,
+            max_batch
+        );
+        policy_rows.push(Json::obj(vec![
+            ("policy", Json::Str(label.to_string())),
+            ("m_bits", Json::Num(m_bits as f64)),
+            ("v_bits", Json::Num(v_bits as f64)),
+            ("shampoo_bits", Json::Num(shampoo_bits as f64)),
+            ("first_order_mb", Json::Num(p.adam_bytes as f64 / 1048576.0)),
+            ("second_order_mb", Json::Num(p.shampoo_bytes as f64 / 1048576.0)),
+            ("max_batch", Json::Num(max_batch as f64)),
+        ]));
+    }
+    let policy_out = Json::obj(vec![
+        ("model", Json::Str(m.name.clone())),
+        ("budget_mb", Json::Num(budget as f64 / 1048576.0)),
+        ("rows", Json::Arr(policy_rows)),
+    ]);
+    match std::fs::write("bench_out/BENCH_codec_policy.json", policy_out.to_string()) {
+        Ok(()) => println!("# wrote bench_out/BENCH_codec_policy.json"),
+        Err(e) => println!("# could not write bench_out/BENCH_codec_policy.json: {e}"),
+    }
     println!("# paper: AdamW fits 128 / OOM 256; +32-bit Shampoo OOM@2; +4-bit fits 64 / OOM 128");
     println!("# codec arms: 4-bit moments shave ~45 GB off 32-bit AdamW states at 7B scale");
+    println!("# policy arms: m=q4,v=q8 splits the difference — Li et al.'s sweet spot");
 }

@@ -6,7 +6,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::quant::Mapping;
+use crate::quant::{parse_policy_entry, BufferRole, CodecPolicy, CodecSpec, Mapping};
 use crate::util::tomlcfg::TomlDoc;
 
 /// First-order optimizer family F (eq. 1 + the Appendix H comparison arms).
@@ -172,6 +172,13 @@ pub struct SecondOrderConfig {
     /// Bounded staleness for the pipelined engine: an in-flight refresh is
     /// force-completed after this many steps even if no new refresh is due.
     pub pipeline_max_lag: usize,
+    /// Adaptive lag: when every background job of the in-flight refresh has
+    /// already reported (the pool went idle), swap the results in at the
+    /// next step's barrier instead of waiting out the full lag bound —
+    /// fresher roots at zero extra stall. Completion steps then depend on
+    /// pool timing, so adaptive runs are *reproducible in quality* but not
+    /// bit-reproducible across machines; off by default.
+    pub pipeline_adaptive: bool,
 }
 
 /// Default worker count: the `SHAMPOO4_PARALLELISM` env var when set (CI uses
@@ -199,6 +206,7 @@ impl Default for SecondOrderConfig {
             stagger_invroots: false,
             pipeline: false,
             pipeline_max_lag: 4,
+            pipeline_adaptive: false,
         }
     }
 }
@@ -225,6 +233,8 @@ pub struct FirstOrderConfig {
     /// Storage bitwidth for first-order moment buffers (`first_order.bits`):
     /// 32 = fp32 (default), 16 = bf16, 2–8 = block-wise quantized states
     /// (Dettmers et al. 2021 / Li et al. 2023 — the Table 13 baselines).
+    /// This is the legacy single knob: per-buffer `[quant.policy]` entries
+    /// override it role by role (see [`RunConfig::quant_policy`]).
     pub bits: u32,
     /// Codebook mapping for quantized moment storage (`first_order.mapping`).
     pub mapping: Mapping,
@@ -301,6 +311,12 @@ pub struct RunConfig {
     /// Record dynamic quantization error against a 32-bit shadow
     /// preconditioner (Figures 7/8).
     pub shadow_quant_error: bool,
+    /// Per-buffer codec policy entries (`[quant.policy]` in TOML,
+    /// `--quant-policy` on the CLI; later entries override earlier ones).
+    /// Roles without an entry fall back to the legacy single knobs
+    /// (`first_order.bits`/`.mapping`, `quant.bits`/`.mapping`), so an
+    /// empty policy reproduces pre-policy behavior exactly.
+    pub quant_policy: Vec<(BufferRole, CodecSpec)>,
 }
 
 impl Default for RunConfig {
@@ -319,6 +335,7 @@ impl Default for RunConfig {
             artifact_dir: "artifacts".into(),
             backend: "auto".into(),
             shadow_quant_error: false,
+            quant_policy: Vec::new(),
         }
     }
 }
@@ -350,7 +367,7 @@ impl RunConfig {
         f.eps = doc.f64_or("optimizer.eps", f.eps as f64) as f32;
         f.mfac_m = doc.usize_or("optimizer.mfac_m", f.mfac_m);
         f.bits = doc.usize_or("first_order.bits", f.bits as usize) as u32;
-        f.mapping = Mapping::parse(&doc.str_or("first_order.mapping", f.mapping.name()))
+        f.mapping = Mapping::parse_named(&doc.str_or("first_order.mapping", f.mapping.name()))
             .context("first_order.mapping")?;
 
         let s = &mut cfg.second;
@@ -370,13 +387,28 @@ impl RunConfig {
         s.pipeline_max_lag =
             doc.usize_or("shampoo.pipeline_max_lag", s.pipeline_max_lag).max(1);
 
+        s.pipeline_adaptive = doc.bool_or("shampoo.pipeline_adaptive", s.pipeline_adaptive);
+
         let q = &mut s.quant;
         q.bits = doc.usize_or("quant.bits", q.bits as usize) as u32;
-        q.mapping = Mapping::parse(&doc.str_or("quant.mapping", "linear2"))
+        q.mapping = Mapping::parse_named(&doc.str_or("quant.mapping", "linear2"))
             .context("quant.mapping")?;
         q.quantize_eigen = doc.bool_or("quant.quantize_eigen", q.quantize_eigen);
         q.rectify = doc.bool_or("quant.rectify", q.rectify);
         q.min_quant_elems = doc.usize_or("quant.min_quant_elems", q.min_quant_elems);
+
+        // [quant.policy]: per-buffer codec entries (role = "codec-name")
+        let prefix = "quant.policy.";
+        let (first_map, second_map) = (cfg.first.mapping, cfg.second.quant.mapping);
+        for (key, val) in doc.values.iter().filter(|(k, _)| k.starts_with(prefix)) {
+            let spec = val.as_str().ok_or_else(|| {
+                anyhow!("{key} must be a quoted codec name (e.g. \"q4-linear2\")")
+            })?;
+            cfg.quant_policy.push(
+                parse_policy_entry(&key[prefix.len()..], spec, first_map, second_map)
+                    .with_context(|| key.clone())?,
+            );
+        }
 
         cfg.schedule = match doc.str_or("schedule.kind", "cosine").as_str() {
             "constant" => Schedule::Constant,
@@ -392,6 +424,21 @@ impl RunConfig {
         Ok(cfg)
     }
 
+    /// The run's codec policy resolver: the `[quant.policy]`/`--quant-policy`
+    /// entries plus the run seed (which seeds per-buffer stochastic-rounding
+    /// streams). Built on demand so CLI overrides of entries *and* seed are
+    /// both reflected.
+    pub fn codec_policy(&self) -> CodecPolicy {
+        CodecPolicy::new(self.quant_policy.clone(), self.seed)
+    }
+
+    /// The spec the second-order `role` resolves to under this config
+    /// (policy entry, `eigen` fallback, then the `quant.bits` single knob).
+    pub fn second_order_spec(&self, role: BufferRole) -> CodecSpec {
+        self.codec_policy()
+            .resolve(role, CodecSpec::plain(self.second.quant.bits, self.second.quant.mapping))
+    }
+
     /// Reject storage policies no codec implements (checked again by
     /// `Trainer::new` so CLI overrides are validated too).
     pub fn validate(&self) -> Result<()> {
@@ -401,14 +448,33 @@ impl RunConfig {
                 self.first.bits
             );
         }
-        if self.second.kind != SecondOrderKind::None
-            && !matches!(self.second.quant.bits, 3 | 4 | 16 | 32)
-        {
-            bail!(
-                "quant.bits must be 3 or 4 (quantized kernels) or 16/32 (dense) for \
-                 second-order runs; got {}",
-                self.second.quant.bits
-            );
+        // per-side validation subsumes the old flat quant.bits check: the
+        // resolved spec is the policy entry when one exists, else the
+        // quant.bits/quant.mapping single knob — so `[quant] bits = 8` with a
+        // policy that covers both sides is VALID, and bits = 8 with no policy
+        // still fails here (on the fallback spec)
+        if self.second.kind != SecondOrderKind::None {
+            for role in [BufferRole::LeftSide, BufferRole::RightSide] {
+                let spec = self.second_order_spec(role);
+                if !matches!(spec.bits, 3 | 4 | 16 | 32) {
+                    bail!(
+                        "second-order side {:?} resolves to codec {} (via [quant.policy] \
+                         or the quant.bits knob): sides need 3 or 4 bits (quantized \
+                         kernels) or 16/32 (dense)",
+                        role.name(),
+                        spec.name()
+                    );
+                }
+                if spec.stochastic {
+                    bail!(
+                        "quant policy resolves second-order role {:?} to {}: stochastic \
+                         rounding applies to first-order moment buffers only (the PU/PIRU \
+                         artifacts quantize with nearest-rounding kernels)",
+                        role.name(),
+                        spec.name()
+                    );
+                }
+            }
         }
         if self.second.pipeline
             && self.second.kind != SecondOrderKind::None
@@ -552,6 +618,75 @@ warmup = 20
         assert!(
             RunConfig::from_toml_str("[shampoo]\nenabled = false\n[quant]\nbits = 8").is_ok()
         );
+    }
+
+    #[test]
+    fn quant_policy_table_parses_and_resolves() {
+        let cfg = RunConfig::from_toml_str(
+            r#"
+[first_order]
+mapping = "dt"
+[quant.policy]
+m = "q4-linear2"
+v = "q8-dt"
+eigen = "q4"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.quant_policy.len(), 3);
+        let policy = cfg.codec_policy();
+        let fb = CodecSpec::plain(32, Mapping::Dt);
+        assert_eq!(policy.resolve(BufferRole::Momentum, fb).name(), "q4-linear2");
+        assert_eq!(policy.resolve(BufferRole::SecondMoment, fb).name(), "q8-dt");
+        // eigen shorthand takes the second-order default mapping (linear2)
+        assert_eq!(policy.resolve(BufferRole::LeftSide, fb).name(), "q4-linear2");
+        // no policy → empty entries, knobs unchanged
+        assert!(RunConfig::default().quant_policy.is_empty());
+        assert!(RunConfig::from_toml_str("").unwrap().codec_policy().is_empty());
+    }
+
+    #[test]
+    fn quant_policy_rejects_bad_entries() {
+        let err = RunConfig::from_toml_str("[quant.policy]\nw = \"q4\"").unwrap_err().to_string();
+        assert!(err.contains("quant.policy.w"), "{err}");
+        let err = RunConfig::from_toml_str("[quant.policy]\nm = \"q9\"").unwrap_err().to_string();
+        assert!(err.contains("valid codecs"), "{err}");
+        assert!(RunConfig::from_toml_str("[quant.policy]\nm = 4").is_err());
+        // second-order roles must resolve to kernel-compatible bits...
+        let err = RunConfig::from_toml_str("[quant.policy]\neigen = \"q8\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("second-order"), "{err}");
+        // ...and never to stochastic rounding
+        let err = RunConfig::from_toml_str("[quant.policy]\nleft = \"q4-sr\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("stochastic"), "{err}");
+        // but both are fine when no second-order optimizer runs
+        let off = "[shampoo]\nenabled = false\n[quant.policy]\neigen = \"q8\"";
+        assert!(RunConfig::from_toml_str(off).is_ok());
+        // a policy covering both sides makes the quant.bits knob moot: this
+        // run stores every side through q4 even though the knob says 8
+        let covered = "[quant]\nbits = 8\n[quant.policy]\neigen = \"q4\"";
+        assert!(RunConfig::from_toml_str(covered).is_ok());
+        // ...but an uncovered side still fails on the knob's fallback spec
+        let uncovered = "[quant]\nbits = 8\n[quant.policy]\nleft = \"q4\"";
+        let err = RunConfig::from_toml_str(uncovered).unwrap_err().to_string();
+        assert!(err.contains("right"), "{err}");
+        // stochastic first-order entries are legal
+        let cfg = RunConfig::from_toml_str("[quant.policy]\nm = \"q4-dt-sr\"").unwrap();
+        let fb = CodecSpec::plain(32, Mapping::Dt);
+        assert!(cfg.codec_policy().resolve(BufferRole::Momentum, fb).stochastic);
+    }
+
+    #[test]
+    fn pipeline_adaptive_parses() {
+        let cfg = RunConfig::from_toml_str(
+            "[shampoo]\npipeline = true\npipeline_adaptive = true",
+        )
+        .unwrap();
+        assert!(cfg.second.pipeline_adaptive);
+        assert!(!RunConfig::default().second.pipeline_adaptive);
     }
 
     #[test]

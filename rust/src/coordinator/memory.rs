@@ -117,6 +117,19 @@ pub enum OptimizerPlan {
         /// Largest preconditioner block order.
         max_order: usize,
     },
+    /// AdamW under a per-buffer codec policy (Li et al.'s m-at-4-bit /
+    /// v-at-8-bit regime): each moment at its own bitwidth, optionally
+    /// stacked under Shampoo (`shampoo_bits` 0 = none).
+    AdamPolicy {
+        /// Bits for the first moment m.
+        m_bits: u32,
+        /// Bits for the second moment v.
+        v_bits: u32,
+        /// Bits per Shampoo state element; 0 disables the second order.
+        shampoo_bits: u32,
+        /// Largest preconditioner block order.
+        max_order: usize,
+    },
 }
 
 /// Bytes for Shampoo preconditioner states of a (rows × cols) matrix
@@ -187,19 +200,24 @@ pub fn plan(model: &PlannedModel, opt: OptimizerPlan) -> MemoryPlan {
     let n_params = model.param_count();
     let params_bytes = n_params * 2; // bf16
     let grads_bytes = n_params * 2;
-    let (adam_bytes, shampoo_bytes) = match opt {
-        OptimizerPlan::Adam { bits } => {
-            (2 * n_params * bits as usize / 8 + blockwise_scale_overhead(n_params, bits), 0)
-        }
-        OptimizerPlan::AdamShampoo { adam_bits, shampoo_bits, max_order } => {
-            let adam = 2 * n_params * adam_bits as usize / 8
-                + blockwise_scale_overhead(n_params, adam_bits);
-            let mut sh = 0usize;
-            for p in model.params() {
-                if p.preconditioned && p.cols > 1 {
-                    sh += shampoo_block_bytes(p.rows, p.cols, shampoo_bits, max_order);
-                }
+    let all_shampoo = |bits: u32, max_order: usize| {
+        let mut sh = 0usize;
+        for p in model.params() {
+            if p.preconditioned && p.cols > 1 {
+                sh += shampoo_block_bytes(p.rows, p.cols, bits, max_order);
             }
+        }
+        sh
+    };
+    let (adam_bytes, shampoo_bytes) = match opt {
+        OptimizerPlan::Adam { bits } => (2 * moment_bytes(n_params, bits), 0),
+        OptimizerPlan::AdamShampoo { adam_bits, shampoo_bits, max_order } => {
+            (2 * moment_bytes(n_params, adam_bits), all_shampoo(shampoo_bits, max_order))
+        }
+        OptimizerPlan::AdamPolicy { m_bits, v_bits, shampoo_bits, max_order } => {
+            let adam = moment_bytes(n_params, m_bits) + moment_bytes(n_params, v_bits);
+            let sh =
+                if shampoo_bits > 0 { all_shampoo(shampoo_bits, max_order) } else { 0 };
             (adam, sh)
         }
     };
@@ -217,12 +235,15 @@ pub fn plan(model: &PlannedModel, opt: OptimizerPlan) -> MemoryPlan {
     }
 }
 
-fn blockwise_scale_overhead(n: usize, bits: u32) -> usize {
-    if bits >= 32 {
-        0
+/// Bytes for ONE n-element moment buffer at `bits` — the accounting every
+/// Adam arm (uniform or per-buffer policy) shares: block-64 absmax scales
+/// for quantized states, none for bf16/fp32.
+fn moment_bytes(n: usize, bits: u32) -> usize {
+    let payload = packed_len(n, bits);
+    if bits < 16 {
+        payload + (n / 64) * 4
     } else {
-        // low-bit Adam states use block-64 absmax scales too
-        (n / 64) * 4 * 2
+        payload
     }
 }
 
@@ -267,6 +288,30 @@ mod tests {
         );
         let mb = sh4.max_batch(budget);
         assert!(mb >= 64 && mb < 256, "{mb}");
+    }
+
+    #[test]
+    fn mixed_policy_plan_sits_between_uniform_arms() {
+        let m = PlannedModel::llama2_7b();
+        let uniform = |bits| plan(&m, OptimizerPlan::Adam { bits });
+        let mixed = plan(
+            &m,
+            OptimizerPlan::AdamPolicy { m_bits: 4, v_bits: 8, shampoo_bits: 0, max_order: 2048 },
+        );
+        assert!(mixed.adam_bytes > uniform(4).adam_bytes, "m4v8 must cost more than q4/q4");
+        assert!(mixed.adam_bytes < uniform(8).adam_bytes, "m4v8 must cost less than q8/q8");
+        assert_eq!(mixed.shampoo_bytes, 0);
+        // stacking 4-bit Shampoo adds exactly the AdamShampoo second-order bytes
+        let stacked = plan(
+            &m,
+            OptimizerPlan::AdamPolicy { m_bits: 4, v_bits: 8, shampoo_bits: 4, max_order: 2048 },
+        );
+        let reference = plan(
+            &m,
+            OptimizerPlan::AdamShampoo { adam_bits: 8, shampoo_bits: 4, max_order: 2048 },
+        );
+        assert_eq!(stacked.shampoo_bytes, reference.shampoo_bytes);
+        assert_eq!(stacked.adam_bytes, mixed.adam_bytes);
     }
 
     #[test]

@@ -416,6 +416,10 @@ pub struct StepTimings {
     pub pipeline_stall_secs: f64,
     /// asynchronous refreshes submitted to the persistent pool
     pub pipeline_refreshes: u64,
+    /// refreshes swapped in ahead of the lag bound by the adaptive barrier
+    /// (`shampoo.pipeline_adaptive`): the pool had gone idle, so the results
+    /// landed at the next step instead of waiting out `pipeline_max_lag`
+    pub pipeline_early_completes: u64,
     /// wall time of the slowest step (excludes eval/metrics I/O)
     pub max_step_secs: f64,
     /// which step was slowest
@@ -440,8 +444,13 @@ impl StepTimings {
     /// One-line human summary for the CLI and benches.
     pub fn summary(&self) -> String {
         let pipeline = if self.pipeline_refreshes > 0 {
+            let early = if self.pipeline_early_completes > 0 {
+                format!(" ({} early)", self.pipeline_early_completes)
+            } else {
+                String::new()
+            };
             format!(
-                " | pipe {} refreshes, {:.2}s stalled",
+                " | pipe {} refreshes{early}, {:.2}s stalled",
                 self.pipeline_refreshes, self.pipeline_stall_secs
             )
         } else {

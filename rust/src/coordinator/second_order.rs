@@ -30,7 +30,7 @@ use crate::coordinator::partition::{extract_block, partition, scatter_block, Blo
 use crate::coordinator::scheduler::{stagger_phase, Scheduler, StepTimings};
 use crate::coordinator::state::{run_invroot, run_pu, RefreshedBlock, SideState};
 use crate::linalg::Mat;
-use crate::quant::codec_for;
+use crate::quant::{BufferRole, CodecPolicy, CodecSpec};
 use crate::runtime::{Backend, HostTensor};
 
 /// One partitioned parameter block and its left/right preconditioner pair.
@@ -142,6 +142,10 @@ struct InFlightRefresh {
     submit_step: usize,
     rx: mpsc::Receiver<(usize, Result<RefreshedBlock>)>,
     outstanding: usize,
+    /// Results drained so far — the adaptive-lag path polls them in with
+    /// `try_recv` each step, so the blocking barrier only waits for the
+    /// stragglers.
+    received: Vec<(usize, Result<RefreshedBlock>)>,
     abort: Arc<AtomicBool>,
 }
 
@@ -166,16 +170,38 @@ impl SecondOrder {
     /// Build the preconditioner blocks for `model` under `cfg`'s policy and
     /// stand up the parallel block engine (a persistent pool; with
     /// `cfg.pipeline` it keeps at least one background lane even at
-    /// `parallelism = 1`).
-    pub fn new(cfg: &SecondOrderConfig, model: &ModelHandle, buckets: &[usize]) -> Result<Self> {
-        if !matches!(cfg.quant.bits, 3 | 4 | 16 | 32) {
-            return Err(anyhow!(
-                "second-order quant.bits must be 3 or 4 (quantized kernels) or 16/32 \
-                 (dense), got {}",
-                cfg.quant.bits
-            ));
-        }
-        let codec = codec_for(cfg.quant.bits, cfg.quant.mapping);
+    /// `parallelism = 1`). Each side's storage codec resolves through the
+    /// per-buffer `policy` (`LeftSide`/`RightSide` roles, `eigen` covering
+    /// both, the `quant.bits`/`.mapping` single knob as the fallback).
+    pub fn new(
+        cfg: &SecondOrderConfig,
+        policy: &CodecPolicy,
+        model: &ModelHandle,
+        buckets: &[usize],
+    ) -> Result<Self> {
+        let fallback = CodecSpec::plain(cfg.quant.bits, cfg.quant.mapping);
+        let side_codec = |role: BufferRole| {
+            let spec = policy.resolve(role, fallback);
+            if !matches!(spec.bits, 3 | 4 | 16 | 32) {
+                return Err(anyhow!(
+                    "second-order {} codec {} unsupported: sides need 3/4-bit (quantized \
+                     kernels) or 16/32-bit (dense) storage",
+                    role.name(),
+                    spec.name()
+                ));
+            }
+            if spec.stochastic {
+                return Err(anyhow!(
+                    "second-order {} codec {}: stochastic rounding applies to first-order \
+                     moment buffers only",
+                    role.name(),
+                    spec.name()
+                ));
+            }
+            Ok(spec.build(policy.buffer_seed(role)))
+        };
+        let left_codec = side_codec(BufferRole::LeftSide)?;
+        let right_codec = side_codec(BufferRole::RightSide)?;
         let kfac_mode = matches!(cfg.kind, SecondOrderKind::KFac | SecondOrderKind::AdaBk);
         let blocks = if kfac_mode {
             if model.spec.kind != "mlp" {
@@ -204,8 +230,8 @@ impl SecondOrder {
         let blocks = blocks
             .into_iter()
             .map(|b| BlockPre {
-                left: SideState::new(b.bm, cfg, &codec),
-                right: SideState::new(b.bn, cfg, &codec),
+                left: SideState::new(b.bm, cfg, &left_codec),
+                right: SideState::new(b.bn, cfg, &right_codec),
                 block: b,
                 inv_cache: None,
             })
@@ -498,6 +524,7 @@ impl SecondOrder {
                     submit_step: step,
                     rx,
                     outstanding: submitted,
+                    received: Vec::new(),
                     abort,
                 });
                 self.abort_inflight();
@@ -510,6 +537,7 @@ impl SecondOrder {
             submit_step: step,
             rx,
             outstanding: submitted,
+            received: Vec::new(),
             abort,
         });
         Ok(())
@@ -526,21 +554,19 @@ impl SecondOrder {
     /// barrier still drains every outstanding job before returning, so no
     /// background work outlives the error.
     pub fn complete_pipeline(&mut self, timings: &mut StepTimings) -> Result<()> {
-        let Some(fl) = self.inflight.take() else {
+        let Some(mut fl) = self.inflight.take() else {
             return Ok(());
         };
         let t = Instant::now();
-        let mut updates: Vec<RefreshedBlock> = Vec::with_capacity(fl.outstanding);
-        let mut first_err: Option<(usize, anyhow::Error)> = None;
-        let mut outstanding = fl.outstanding;
-        while outstanding > 0 {
+        // block only for the stragglers — results the adaptive poll already
+        // drained into `received` cost no wait here
+        while fl.received.len() < fl.outstanding {
             match fl.rx.recv() {
-                Ok((_, Ok(rb))) => updates.push(rb),
-                Ok((bi, Err(e))) => {
-                    fl.abort.store(true, Ordering::Relaxed);
-                    if first_err.as_ref().is_none_or(|(b, _)| bi < *b) {
-                        first_err = Some((bi, e));
+                Ok(msg) => {
+                    if msg.1.is_err() {
+                        fl.abort.store(true, Ordering::Relaxed);
                     }
+                    fl.received.push(msg);
                 }
                 // a sender dropped without reporting — should be impossible
                 // (panicking jobs report through their ReportOnPanic guard);
@@ -552,9 +578,20 @@ impl SecondOrder {
                     ));
                 }
             }
-            outstanding -= 1;
         }
         timings.pipeline_stall_secs += t.elapsed().as_secs_f64();
+        let mut updates: Vec<RefreshedBlock> = Vec::with_capacity(fl.outstanding);
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        for (bi, res) in fl.received {
+            match res {
+                Ok(rb) => updates.push(rb),
+                Err(e) => {
+                    if first_err.as_ref().is_none_or(|(b, _)| bi < *b) {
+                        first_err = Some((bi, e));
+                    }
+                }
+            }
+        }
         if let Some((bi, e)) = first_err {
             return Err(e.context(format!("pipelined refresh of block {bi}")));
         }
@@ -572,6 +609,39 @@ impl SecondOrder {
         Ok(())
     }
 
+    /// Adaptive-lag barrier (`shampoo.pipeline_adaptive`): a *non-blocking*
+    /// [`SecondOrder::complete_pipeline`]. Polls the in-flight refresh's
+    /// channel; if every background job has already reported — the pool went
+    /// idle — the results swap in now (returning `true`) instead of waiting
+    /// out the full `pipeline_max_lag` bound. If anything is still running,
+    /// nothing changes and no time is spent waiting.
+    ///
+    /// The early swap step depends on pool timing, so adaptive runs trade
+    /// the pipeline's bit-reproducibility for fresher roots (quality stays
+    /// in the same staleness-tolerance regime — the roots are never *older*
+    /// than the deterministic schedule's).
+    pub fn try_complete_pipeline(&mut self, timings: &mut StepTimings) -> Result<bool> {
+        let all_reported = match self.inflight.as_mut() {
+            None => return Ok(false),
+            Some(fl) => {
+                while let Ok(msg) = fl.rx.try_recv() {
+                    if msg.1.is_err() {
+                        // stop still-queued jobs early; the completion below
+                        // (or the next blocking barrier) surfaces the error
+                        fl.abort.store(true, Ordering::Relaxed);
+                    }
+                    fl.received.push(msg);
+                }
+                fl.received.len() >= fl.outstanding
+            }
+        };
+        if !all_reported {
+            return Ok(false);
+        }
+        self.complete_pipeline(timings)?;
+        Ok(true)
+    }
+
     /// Error-path shutdown: raise the abort flag, wait for every in-flight
     /// job to exit, and discard their results. Called by the trainer when a
     /// step fails (or panics) so no background job outlives the borrowed
@@ -579,7 +649,7 @@ impl SecondOrder {
     pub fn abort_inflight(&mut self) {
         if let Some(fl) = self.inflight.take() {
             fl.abort.store(true, Ordering::Relaxed);
-            let mut outstanding = fl.outstanding;
+            let mut outstanding = fl.outstanding - fl.received.len();
             while outstanding > 0 {
                 if fl.rx.recv().is_err() {
                     break; // every sender gone: nothing left running

@@ -54,18 +54,21 @@ enum SideArm {
 
 impl SideState {
     /// Build the initial state for an order-n side under `cfg`'s policy,
-    /// storing through `codec`. Small matrices (below `min_quant_elems`)
-    /// stay 32-bit dense regardless of the policy.
+    /// storing through `codec` — the codec is resolved per side by the
+    /// codec policy layer (`LeftSide`/`RightSide` roles, `eigen` fallback),
+    /// so this reads the *codec's* bitwidth, never a global knob. Small
+    /// matrices (below `min_quant_elems`) stay 32-bit dense regardless.
     pub fn new(n: usize, cfg: &SecondOrderConfig, codec: &Arc<dyn StateCodec>) -> SideState {
         let q = &cfg.quant;
-        let quantizable =
-            codec.runtime_codebook().is_some() && q.bits < 16 && n * n >= q.min_quant_elems;
+        let quantizable = codec.runtime_codebook().is_some()
+            && codec.bits() < 16
+            && n * n >= q.min_quant_elems;
         if !quantizable {
-            // dense arm: the 16-bit policy stores bf16 (when the matrix is
+            // dense arm: a 16-bit codec stores bf16 (when the matrix is
             // big enough to be policy-governed), small matrices stay fp32
             let big = n * n >= q.min_quant_elems;
             let side_codec: Arc<dyn StateCodec> =
-                if q.bits == 16 && big { codec.clone() } else { fp32() };
+                if codec.bits() == 16 && big { codec.clone() } else { fp32() };
             let l = side_codec.encode_matrix(&Mat::eye(n).scale(cfg.eps).data, n);
             let lhat = side_codec.encode_matrix(&Mat::eye(n).data, n);
             return SideState { codec: side_codec, arm: SideArm::Dense { n, l, lhat } };

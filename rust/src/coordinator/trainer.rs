@@ -135,12 +135,17 @@ impl Trainer {
             crate::config::Schedule::MultiStep { warmup, .. } => warmup,
             _ => 10,
         };
-        let first = build_first_order(&cfg.first, flat_len, warmup);
+        // the per-buffer codec policy resolves every state buffer's storage
+        // codec (first-order moments AND second-order sides); roles without
+        // an entry fall back to the legacy single knobs
+        let policy = cfg.codec_policy();
+        let first = build_first_order(&cfg.first, &policy, flat_len, warmup);
         let second = if cfg.second.kind == SecondOrderKind::None {
             None
         } else {
             Some(SecondOrder::new(
                 &cfg.second,
+                &policy,
                 &model,
                 &rt.manifest().buckets,
             )?)
@@ -281,6 +286,13 @@ impl Trainer {
                         // the in-flight one hit the staleness bound
                         if pu_due || !due.is_empty() || second.inflight_lag_reached(step) {
                             second.complete_pipeline(&mut timings)?;
+                        } else if s2cfg.pipeline_adaptive
+                            && second.try_complete_pipeline(&mut timings)?
+                        {
+                            // adaptive lag: the pool went idle, so the
+                            // finished refresh swaps in at this step's
+                            // barrier instead of waiting out the lag bound
+                            timings.pipeline_early_completes += 1;
                         }
                         if pu_due || !due.is_empty() {
                             second.submit_refresh(
@@ -390,7 +402,10 @@ impl Trainer {
     /// buffers as raw codec bytes, and the second-order blocks as raw codec
     /// bytes). Codec payloads are persisted verbatim — no requantization —
     /// so loading restores the exact optimization trajectory for both
-    /// optimizer families at any state bitwidth.
+    /// optimizer families at any state bitwidth. (Stochastic-rounding
+    /// buffers are the one caveat: the restore itself is byte-exact, but
+    /// post-resume encodes draw a fresh rounding stream — see
+    /// [`load_checkpoint`](Trainer::load_checkpoint).)
     pub fn save_checkpoint(&self, path: &Path, step: usize) -> Result<()> {
         use std::io::Write;
         if let Some(dir) = path.parent() {
@@ -418,6 +433,12 @@ impl Trainer {
             ("opt_bytes", Json::arr_usize(&buf_bytes)),
             ("opt_codecs", Json::Arr(buf_codecs)),
             ("opt_counters", Json::arr_f64(&snap.counters)),
+            // observability: the configured role→codec policy ("" when the
+            // run used the single knobs). Enforcement is per buffer — every
+            // buffer's codec name above (and inside the second-order blob)
+            // must match on load, so a mismatched policy is rejected even
+            // for checkpoints predating this field.
+            ("quant_policy", Json::Str(self.cfg.codec_policy().summary())),
             ("second_order_bytes", Json::Num(second_blob.len() as f64)),
         ])
         .to_string();
@@ -439,8 +460,13 @@ impl Trainer {
     /// state (when both the checkpoint and this run have one), and the
     /// resume position — a subsequent `train` continues at step + 1.
     /// Returns the step. The restore is bit-exact: codec payloads are
-    /// adopted verbatim, so the resumed loss trajectory is identical to an
-    /// uninterrupted run.
+    /// adopted verbatim, so for deterministic codecs the resumed loss
+    /// trajectory is identical to an uninterrupted run. Stochastic-rounding
+    /// (`-sr`) buffers restore their bytes exactly too, but their in-memory
+    /// encode-call counter restarts at zero, so post-resume updates draw a
+    /// fresh (still seed-deterministic) rounding stream rather than
+    /// replaying the uninterrupted run's — the resumed trajectory is
+    /// equivalent in distribution, not bit-identical.
     pub fn load_checkpoint(&mut self, path: &Path) -> Result<usize> {
         use std::io::Read;
         let mut f = std::fs::File::open(path)?;

@@ -7,17 +7,24 @@
 //!                [--first-order-bits 4|8|16|32] [--first-order-mapping dt|linear2]
 //!                (StateCodec policy for first-order moment buffers — 4-bit
 //!                AdamW/SGDM states, the Table 13 memory baseline regime)
+//!                [--quant-policy m=q4,v=q8,...]
+//!                (per-buffer codec policy: role=codec pairs overriding the
+//!                single knobs role by role; roles m/v/left/right/eigen,
+//!                codecs fp32|bf16|q2..q8[-mapping][-sr] — -sr = stochastic
+//!                rounding, seeded from --seed)
 //!                [--backend host|pjrt|auto] [--out runs/NAME]
+//!                [--resume ckpt.bin]  (load a checkpoint, continue at step+1)
 //!                [--shadow-quant-error]
 //!                [--parallelism N] [--stagger-invroots]
 //!                (parallel block engine: N worker threads for per-block
 //!                PU/PIRU/precondition, bit-identical to serial; staggered
 //!                inverse-root cohorts flatten the T2-step wall-time spike)
-//!                [--pipeline] [--pipeline-max-lag K]
+//!                [--pipeline] [--pipeline-max-lag K] [--pipeline-adaptive]
 //!                (cross-step pipelining: PU/PIRU refreshes run on the
 //!                persistent pool and overlap subsequent model steps;
 //!                preconditioning tolerates roots up to K steps stale —
-//!                double-buffered swap, deterministic barriers)
+//!                double-buffered swap, deterministic barriers; adaptive
+//!                swaps finished refreshes in early when the pool is idle)
 //!   quant-error  [--n 1200] [--bits 4] [--block 64]
 //!                (Table 1/5/6/7, Figures 2/3/5/6 — see benches for the
 //!                full sweeps)
@@ -38,8 +45,14 @@ use shampoo4::quant::Mapping;
 use shampoo4::runtime::{backend_by_name, Backend};
 use shampoo4::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] =
-    &["shadow-quant-error", "stagger-invroots", "pipeline", "help", "quiet"];
+const BOOL_FLAGS: &[&str] = &[
+    "shadow-quant-error",
+    "stagger-invroots",
+    "pipeline",
+    "pipeline-adaptive",
+    "help",
+    "quiet",
+];
 
 fn main() -> Result<()> {
     let args = Args::parse(BOOL_FLAGS);
@@ -97,8 +110,7 @@ pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
         cfg.second.quant.bits = b.parse().context("--shampoo-bits")?;
     }
     if let Some(m) = args.get("mapping") {
-        cfg.second.quant.mapping =
-            Mapping::parse(m).with_context(|| format!("bad --mapping {m}"))?;
+        cfg.second.quant.mapping = Mapping::parse_named(m).context("--mapping")?;
     }
     if let Some(v) = args.get("quantize-eigen") {
         cfg.second.quant.quantize_eigen = v == "true";
@@ -107,8 +119,19 @@ pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
         cfg.first.bits = b.parse().context("--first-order-bits")?;
     }
     if let Some(m) = args.get("first-order-mapping") {
-        cfg.first.mapping =
-            Mapping::parse(m).with_context(|| format!("bad --first-order-mapping {m}"))?;
+        cfg.first.mapping = Mapping::parse_named(m).context("--first-order-mapping")?;
+    }
+    if let Some(p) = args.get("quant-policy") {
+        // appended after any TOML entries: later entries win on lookup, so
+        // the CLI overrides the config file role by role
+        cfg.quant_policy.extend(
+            shampoo4::quant::parse_policy_overrides(
+                p,
+                cfg.first.mapping,
+                cfg.second.quant.mapping,
+            )
+            .context("--quant-policy")?,
+        );
     }
     if let Some(v) = args.get("rectify") {
         cfg.second.quant.rectify = v == "true";
@@ -140,6 +163,9 @@ pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if let Some(k) = args.get("pipeline-max-lag") {
         cfg.second.pipeline_max_lag =
             k.parse::<usize>().context("--pipeline-max-lag")?.max(1);
+    }
+    if args.flag("pipeline-adaptive") {
+        cfg.second.pipeline_adaptive = true;
     }
     if let Some(b) = args.get("backend") {
         cfg.backend = b.to_string();
@@ -179,8 +205,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             "sync".to_string()
         },
     );
+    let policy_summary = cfg.codec_policy().summary();
+    if !policy_summary.is_empty() {
+        println!("quant-policy: {policy_summary}");
+    }
     let out_dir = PathBuf::from(args.get_or("out", &format!("runs/{}", cfg.name)));
     let mut trainer = Trainer::new(rt, cfg.clone())?;
+    if let Some(ckpt) = args.get("resume") {
+        let step = trainer.load_checkpoint(Path::new(ckpt))?;
+        println!("resumed from {ckpt} at step {step} (continuing to {})", cfg.steps);
+    }
     let mem0 = trainer.memory_report();
     println!(
         "params={:.2}MB first-order={:.2}MB second-order={:.2}MB total={:.2}MB",

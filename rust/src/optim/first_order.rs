@@ -297,11 +297,23 @@ impl AdamW {
         Self { nesterov: true, ..Self::new(n, beta1, beta2, eps, weight_decay) }
     }
 
-    /// Store both moments through `codec` (the `first_order.bits` policy).
-    pub fn with_codec(mut self, codec: Arc<dyn StateCodec>) -> Self {
+    /// Store both moments through `codec` (the single-knob
+    /// `first_order.bits` policy).
+    pub fn with_codec(self, codec: Arc<dyn StateCodec>) -> Self {
+        self.with_moment_codecs(codec.clone(), codec)
+    }
+
+    /// Store m and v through *separate* codecs — the per-buffer codec
+    /// policy (Li et al.'s m-at-4-bit / v-at-8-bit regime resolves the
+    /// `Momentum` and `SecondMoment` roles independently).
+    pub fn with_moment_codecs(
+        mut self,
+        m_codec: Arc<dyn StateCodec>,
+        v_codec: Arc<dyn StateCodec>,
+    ) -> Self {
         let n = self.m.len();
-        self.m = StateBuf::zeros(n, codec.clone());
-        self.v = StateBuf::zeros(n, codec);
+        self.m = StateBuf::zeros(n, m_codec);
+        self.v = StateBuf::zeros(n, v_codec);
         self
     }
 }
@@ -884,5 +896,21 @@ mod tests {
         let q4 = AdamW::new(128, 0.9, 0.999, 1e-8, 0.0)
             .with_codec(codec_for(4, Mapping::Dt));
         assert_eq!(q4.state_bytes(), 2 * (64 + 8));
+        // per-buffer policy: m at 4-bit (72 B) + v at 8-bit (136 B)
+        let mixed = AdamW::new(128, 0.9, 0.999, 1e-8, 0.0)
+            .with_moment_codecs(codec_for(4, Mapping::Dt), codec_for(8, Mapping::Dt));
+        assert_eq!(mixed.state_bytes(), (64 + 8) + (128 + 8));
+    }
+
+    #[test]
+    fn mixed_moment_codecs_converge_and_roundtrip() {
+        // the Li et al. regime end-to-end at optimizer level: m=q4, v=q8
+        let mixed = || {
+            AdamW::new(4, 0.9, 0.999, 1e-8, 0.01)
+                .with_moment_codecs(codec_for(4, Mapping::Dt), codec_for(8, Mapping::Dt))
+        };
+        let mut o = mixed();
+        assert!(run_quadratic(&mut o, 0.05, 800) < 1.0);
+        check_state_roundtrip(&mut mixed(), &mut mixed(), 0.05);
     }
 }

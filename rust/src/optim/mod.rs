@@ -12,34 +12,47 @@ pub use first_order::{Adagrad, AdamW, FirstOrder, ScheduleFree, Sgdm, StateSnaps
 pub use mfac::MFac;
 
 use crate::config::{FirstOrderConfig, FirstOrderKind};
-use crate::quant::codec_for;
+use crate::quant::{BufferRole, CodecPolicy, CodecSpec};
 
-/// Build a first-order optimizer for an n-parameter model. Moment buffers
-/// are stored through the `first_order.bits` / `first_order.mapping` codec
-/// policy (M-FAC's dense gradient window is exempt by design — its memory
-/// footprint is the Table 11 comparison point).
-pub fn build_first_order(cfg: &FirstOrderConfig, n: usize, warmup: usize) -> Box<dyn FirstOrder> {
-    let codec = codec_for(cfg.bits, cfg.mapping);
+/// Build a first-order optimizer for an n-parameter model. Every moment
+/// buffer resolves its storage codec through the per-buffer `policy`:
+/// first-moment buffers (AdamW m, SGDM momentum) through the `Momentum`
+/// role, second-moment buffers (AdamW v, the Adagrad accumulator, the
+/// schedule-free v) through `SecondMoment`; roles without a policy entry
+/// fall back to the legacy `first_order.bits` / `first_order.mapping`
+/// single knob, so pre-policy configs behave unchanged. (M-FAC's dense
+/// gradient window is exempt by design — its memory footprint is the
+/// Table 11 comparison point; schedule-free z/x iterates stay pinned fp32.)
+pub fn build_first_order(
+    cfg: &FirstOrderConfig,
+    policy: &CodecPolicy,
+    n: usize,
+    warmup: usize,
+) -> Box<dyn FirstOrder> {
+    let fallback = CodecSpec::plain(cfg.bits, cfg.mapping);
+    let m_codec = || policy.codec(BufferRole::Momentum, fallback);
+    let v_codec = || policy.codec(BufferRole::SecondMoment, fallback);
     match cfg.kind {
         FirstOrderKind::Sgdm => {
-            Box::new(Sgdm::new(n, cfg.momentum, cfg.weight_decay).with_codec(codec))
+            Box::new(Sgdm::new(n, cfg.momentum, cfg.weight_decay).with_codec(m_codec()))
         }
         FirstOrderKind::AdamW => Box::new(
-            AdamW::new(n, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay).with_codec(codec),
+            AdamW::new(n, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
+                .with_moment_codecs(m_codec(), v_codec()),
         ),
         FirstOrderKind::NAdamW => Box::new(
             AdamW::nadamw(n, cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay)
-                .with_codec(codec),
+                .with_moment_codecs(m_codec(), v_codec()),
         ),
         FirstOrderKind::Adagrad => {
-            Box::new(Adagrad::new(n, 1e-10, cfg.weight_decay).with_codec(codec))
+            Box::new(Adagrad::new(n, 1e-10, cfg.weight_decay).with_codec(v_codec()))
         }
         FirstOrderKind::SgdScheduleFree => {
-            Box::new(ScheduleFree::sgd(n, 0.9, cfg.weight_decay, warmup).with_codec(codec))
+            Box::new(ScheduleFree::sgd(n, 0.9, cfg.weight_decay, warmup).with_codec(v_codec()))
         }
         FirstOrderKind::AdamWScheduleFree => Box::new(
             ScheduleFree::adamw(n, 0.9, cfg.beta2, cfg.eps, cfg.weight_decay, warmup)
-                .with_codec(codec),
+                .with_codec(v_codec()),
         ),
         FirstOrderKind::MFac => Box::new(MFac::new(
             n,

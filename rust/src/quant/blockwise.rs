@@ -7,7 +7,7 @@
 //! packed state buffers it feeds the artifacts.
 
 use super::codebook::Boundaries;
-use super::pack::{pack_bits, packed_len, unpack_bits};
+use super::pack::{pack_bits, packed_len, unpack_bits, unpack_bits_into};
 
 /// Default quantization block length (paper §3.3; matches the kernels).
 pub const BLOCK: usize = 64;
@@ -44,13 +44,50 @@ impl QuantizedVec {
 /// eigenvector matrix (paper §3.3); a trailing partial block (flat
 /// first-order moments whose length is not a block multiple) carries its
 /// own scale.
+///
+/// This is the chunked encode hot path: per block the elements are
+/// normalized into a flat block-major scratch lane, codes come from the
+/// branch-free [`Boundaries::nearest_block`] kernel, and the whole code
+/// vector is packed in one batched [`pack_bits`] call. Bit-identical to
+/// [`quantize_scalar`] (property-tested), just auto-vectorizable.
 pub fn quantize(x: &[f32], cb: &[f32], bits: u32, block: usize) -> QuantizedVec {
+    assert!(block >= 1, "block must be >= 1");
+    assert!(cb.len() >= (1usize << bits));
+    let bounds = Boundaries::new(cb);
+    let mut codes = vec![0u8; x.len()];
+    let mut scales = Vec::with_capacity(x.len().div_ceil(block));
+    let mut normed = vec![0.0f32; block.min(x.len())];
+    for (blk, cblk) in x.chunks(block).zip(codes.chunks_mut(block)) {
+        let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax } else { 1.0 };
+        let inv = 1.0 / scale;
+        scales.push(scale);
+        // same arithmetic as the scalar path (v * inv, then the strict
+        // midpoint compare) so codes cannot drift by rounding
+        let lane = &mut normed[..blk.len()];
+        for (n, &v) in lane.iter_mut().zip(blk) {
+            *n = v * inv;
+        }
+        bounds.nearest_block(lane, cblk);
+    }
+    QuantizedVec {
+        packed: pack_bits(&codes, bits),
+        scales,
+        len: x.len(),
+        bits,
+        block,
+    }
+}
+
+/// Reference scalar encoder (the pre-chunking implementation): one
+/// element at a time through [`Boundaries::nearest`]. Kept as the
+/// equivalence baseline for the chunked [`quantize`] — property tests
+/// assert bit-identical output, `hotpath_micro` benchmarks the gap.
+pub fn quantize_scalar(x: &[f32], cb: &[f32], bits: u32, block: usize) -> QuantizedVec {
     assert!(block >= 1, "block must be >= 1");
     assert!(cb.len() >= (1usize << bits));
     let mut codes = Vec::with_capacity(x.len());
     let mut scales = Vec::with_capacity(x.len().div_ceil(block));
-    // §Perf L3-1: binary search over precomputed decision boundaries
-    // instead of a 2^b-way argmin per element (see codebook::Boundaries).
     let bounds = Boundaries::new(cb);
     for blk in x.chunks(block) {
         let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
@@ -70,8 +107,73 @@ pub fn quantize(x: &[f32], cb: &[f32], bits: u32, block: usize) -> QuantizedVec 
     }
 }
 
+/// Stochastic-rounding quantize (SOLO / "Pushing the Limits of Low-Bit
+/// Optimizers" regime): instead of rounding to the nearest codebook entry,
+/// each normalized value rounds *up* to its bracketing entry with
+/// probability equal to the distance fraction, so the expected dequantized
+/// value equals the input inside the codebook's range. The caller owns the
+/// RNG — fixed seed ⇒ exactly reproducible codes ([`StochasticRound`]
+/// derives one stream per buffer).
+///
+/// [`StochasticRound`]: super::codec::StochasticRound
+pub fn quantize_stochastic(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> QuantizedVec {
+    assert!(block >= 1, "block must be >= 1");
+    assert!(cb.len() >= (1usize << bits));
+    let bounds = Boundaries::new(cb);
+    let mut codes = Vec::with_capacity(x.len());
+    let mut scales = Vec::with_capacity(x.len().div_ceil(block));
+    for blk in x.chunks(block) {
+        let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        let scale = if absmax > 0.0 { absmax } else { 1.0 };
+        let inv = 1.0 / scale;
+        scales.push(scale);
+        for &v in blk {
+            let (lo, hi, p) = bounds.stochastic_pair(v * inv);
+            let up = (rng.uniform() as f32) < p;
+            codes.push(if up { hi } else { lo });
+        }
+    }
+    QuantizedVec {
+        packed: pack_bits(&codes, bits),
+        scales,
+        len: x.len(),
+        bits,
+        block,
+    }
+}
+
 /// Dequantize: R(codes) ⊙ scales.
+///
+/// Chunked decode hot path: batched unpack into a flat code scratch, then a
+/// per-block multiply lane against a 256-entry lookup table (a `u8` code
+/// indexes it with no bounds check, so the loop is branch-free and
+/// auto-vectorizable). No per-element `i / block` division, no `Vec::push`.
 pub fn dequantize(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
+    let mut table = [0.0f32; 256];
+    let k = cb.len().min(256);
+    table[..k].copy_from_slice(&cb[..k]);
+    let mut codes = vec![0u8; q.len];
+    unpack_bits_into(&q.packed, q.bits, &mut codes);
+    let mut out = vec![0.0f32; q.len];
+    for ((oblk, cblk), &scale) in
+        out.chunks_mut(q.block).zip(codes.chunks(q.block)).zip(&q.scales)
+    {
+        for (o, &c) in oblk.iter_mut().zip(cblk) {
+            *o = table[c as usize] * scale;
+        }
+    }
+    out
+}
+
+/// Reference scalar decoder (the pre-chunking implementation) — the
+/// equivalence baseline for the chunked [`dequantize`].
+pub fn dequantize_scalar(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
     let codes = q.codes_u8();
     let mut out = Vec::with_capacity(q.len);
     for (i, &c) in codes.iter().enumerate() {
@@ -221,6 +323,61 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn chunked_matches_scalar_bit_for_bit() {
+        // the chunked encode/decode kernels are a pure performance rewrite:
+        // packed bytes, scales, and decoded values must be identical to the
+        // scalar reference at every bitwidth, block size, and odd length
+        for (mapping, bits) in
+            [(Mapping::Linear2, 4u32), (Mapping::Dt, 3), (Mapping::Dt, 8), (Mapping::Dt, 2)]
+        {
+            let cb = codebook(mapping, bits);
+            prop::check(&format!("chunked == scalar {mapping:?}/{bits}"), 15, |rng| {
+                let n = 1 + rng.below(400);
+                let block = [7, 32, 64, 100][rng.below(4)];
+                let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let q = quantize(&x, &cb, bits, block);
+                let qs = quantize_scalar(&x, &cb, bits, block);
+                if q.packed != qs.packed || q.scales != qs.scales {
+                    return Err(format!("encode diverged at n={n} block={block}"));
+                }
+                let d = dequantize(&q, &cb);
+                let ds = dequantize_scalar(&qs, &cb);
+                let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                if bits_of(&d) != bits_of(&ds) {
+                    return Err(format!("decode diverged at n={n} block={block}"));
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn stochastic_quantize_is_seeded_and_in_book() {
+        let cb = codebook(Mapping::Linear2, 4);
+        let mut rng_a = crate::util::rng::Rng::new(5);
+        let mut rng_b = crate::util::rng::Rng::new(5);
+        let mut data_rng = crate::util::rng::Rng::new(6);
+        let x: Vec<f32> = (0..200).map(|_| data_rng.normal_f32()).collect();
+        let qa = quantize_stochastic(&x, &cb, 4, 64, &mut rng_a);
+        let qb = quantize_stochastic(&x, &cb, 4, 64, &mut rng_b);
+        // fixed seed ⇒ identical codes
+        assert_eq!(qa.packed, qb.packed);
+        assert_eq!(qa.scales, qb.scales);
+        // every decoded value is a scaled codebook entry
+        let d = dequantize(&qa, &cb);
+        for (b, chunk) in d.chunks(64).enumerate() {
+            for &v in chunk {
+                let normed = v / qa.scales[b];
+                assert!(cb.iter().any(|&c| (c - normed).abs() < 1e-6), "{normed}");
+            }
+        }
+        // a different seed draws a different rounding stream
+        let mut rng_c = crate::util::rng::Rng::new(99);
+        let qc = quantize_stochastic(&x, &cb, 4, 64, &mut rng_c);
+        assert_ne!(qa.packed, qc.packed, "distinct seeds should round differently");
     }
 
     #[test]

@@ -32,6 +32,17 @@ impl Mapping {
             Mapping::Linear => "linear",
         }
     }
+
+    /// [`Mapping::parse`] with a helpful error that lists the valid names —
+    /// the config/CLI entry point, so typos name their alternatives.
+    pub fn parse_named(s: &str) -> anyhow::Result<Mapping> {
+        Mapping::parse(s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown codebook mapping {s:?}; valid mappings: dt (dynamic tree), \
+                 linear2 (linear-square), linear"
+            )
+        })
+    }
 }
 
 /// Sorted codebook for (mapping, bits).
@@ -113,23 +124,34 @@ pub fn runtime_codebook(mapping: Mapping, bits: u32) -> Vec<f32> {
 /// Tie semantics: jnp.argmin picks the LOWEST index on exact midpoint ties,
 /// i.e. x == mid[i] maps to i, so the search uses `mid[j] < x` strictly.
 pub struct Boundaries {
+    /// the sorted codebook these boundaries were built from — owned so
+    /// [`Boundaries::stochastic_pair`] can never be fed a mismatched book
+    cb: Vec<f32>,
     mids: Vec<f32>,
     /// canonical (lowest) index per position — collapses duplicate runs in
     /// padded runtime codebooks so emitted codes always match `nearest`
     /// (critical: 3-bit packing requires codes < 8 even if a rounding
-    /// artifact pushes x past the last unique entry)
-    remap: Vec<u8>,
+    /// artifact pushes x past the last unique entry). Fixed 256 entries so
+    /// a `u8` count indexes it with no bounds check on the lane hot path.
+    remap: [u8; 256],
 }
+
+/// Books at or below this many midpoints (≤ 5-bit) take the branch-free
+/// counting kernel in [`Boundaries::nearest_block`]; wider books binary
+/// search per element instead (8 ordered probes beat 255 linear compares).
+const COUNTING_MIDS_MAX: usize = 31;
 
 impl Boundaries {
     /// Precompute midpoints + duplicate-run remap for a sorted codebook.
     pub fn new(cb: &[f32]) -> Self {
         debug_assert!(cb.windows(2).all(|w| w[0] <= w[1]), "codebook must be sorted");
-        let mut remap = vec![0u8; cb.len()];
+        debug_assert!(cb.len() <= 256, "codebooks are at most 8-bit");
+        let mut remap = [0u8; 256];
         for i in 1..cb.len() {
             remap[i] = if cb[i] == cb[i - 1] { remap[i - 1] } else { i as u8 };
         }
         Self {
+            cb: cb.to_vec(),
             mids: cb.windows(2).map(|w| 0.5 * (w[0] + w[1])).collect(),
             remap,
         }
@@ -139,6 +161,58 @@ impl Boundaries {
     #[inline]
     pub fn nearest(&self, x: f32) -> u8 {
         self.remap[self.mids.partition_point(|&m| m < x)]
+    }
+
+    /// Nearest codebook index for every element of `xs`, written to the
+    /// matching slot of `codes` — the chunked encode hot path.
+    ///
+    /// For small books (5-bit and below) the code is computed branch-free as
+    /// `#{mids strictly below x}`: the midpoint loop runs *outside* a
+    /// fixed-width element lane, so the inner `count += (mid < x)` lane
+    /// auto-vectorizes with no data-dependent branches. This is exactly the
+    /// quantity `partition_point(|m| m < x)` returns, so the chunked path is
+    /// bit-identical to [`Boundaries::nearest`] — tie semantics included.
+    /// Wide books (8-bit) keep the per-element binary search in a tight loop.
+    pub fn nearest_block(&self, xs: &[f32], codes: &mut [u8]) {
+        debug_assert_eq!(xs.len(), codes.len());
+        if self.mids.len() <= COUNTING_MIDS_MAX {
+            codes.fill(0);
+            for &m in &self.mids {
+                for (c, &x) in codes.iter_mut().zip(xs) {
+                    *c += (m < x) as u8;
+                }
+            }
+            for c in codes.iter_mut() {
+                *c = self.remap[*c as usize];
+            }
+        } else {
+            for (c, &x) in codes.iter_mut().zip(xs) {
+                *c = self.nearest(x);
+            }
+        }
+    }
+
+    /// Codebook neighbours bracketing `x` for stochastic rounding (against
+    /// the book this `Boundaries` was built from): `(lo, hi, p)` where `p`
+    /// is the probability of rounding *up* to `hi` (the distance fraction,
+    /// so the expected dequantized value equals `x` inside the book's
+    /// range). Out-of-range values clamp to the end entries with `p` 0/1,
+    /// and an exact codebook hit returns itself.
+    #[inline]
+    pub fn stochastic_pair(&self, x: f32) -> (u8, u8, f32) {
+        let cb = &self.cb;
+        let hi = cb.partition_point(|&c| c < x);
+        if hi == 0 {
+            return (self.remap[0], self.remap[0], 0.0);
+        }
+        if hi >= cb.len() {
+            let last = self.remap[cb.len() - 1];
+            return (last, last, 1.0);
+        }
+        let (lo, hi) = (hi - 1, hi);
+        let gap = cb[hi] - cb[lo];
+        let p = if gap > 0.0 { (x - cb[lo]) / gap } else { 1.0 };
+        (self.remap[lo], self.remap[hi], p)
     }
 }
 
@@ -277,5 +351,60 @@ mod tests {
         assert_eq!(Mapping::parse("DT"), Some(Mapping::Dt));
         assert_eq!(Mapping::parse("linear-2"), Some(Mapping::Linear2));
         assert_eq!(Mapping::parse("bogus"), None);
+        let err = Mapping::parse_named("bogus").unwrap_err().to_string();
+        assert!(err.contains("dt") && err.contains("linear2"), "{err}");
+    }
+
+    #[test]
+    fn nearest_block_matches_scalar_nearest() {
+        use crate::util::prop;
+        // both the counting kernel (≤5-bit) and the binary-search fallback
+        // (8-bit) must be bit-identical to the scalar `nearest`
+        for (mapping, bits) in [
+            (Mapping::Dt, 4u32),
+            (Mapping::Linear2, 4),
+            (Mapping::Linear2, 3),
+            (Mapping::Dt, 8),
+        ] {
+            let cb = codebook(mapping, bits);
+            let b = Boundaries::new(&cb);
+            prop::check(&format!("nearest_block == nearest {mapping:?}/{bits}"), 10, |rng| {
+                let n = 1 + rng.below(130);
+                let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.7) as f32).collect();
+                let mut codes = vec![0u8; n];
+                b.nearest_block(&xs, &mut codes);
+                for (&x, &c) in xs.iter().zip(&codes) {
+                    if c != b.nearest(x) {
+                        return Err(format!("x={x}: block {c} vs scalar {}", b.nearest(x)));
+                    }
+                }
+                Ok(())
+            });
+        }
+        // padded runtime books: lane codes stay below the true width too
+        let cb = runtime_codebook(Mapping::Dt, 3);
+        let b = Boundaries::new(&cb);
+        let xs = [-1.0f32, -0.2, 0.0, 0.3, 0.99, 1.0, 2.0];
+        let mut codes = [0u8; 7];
+        b.nearest_block(&xs, &mut codes);
+        assert!(codes.iter().all(|&c| c < 8), "{codes:?}");
+    }
+
+    #[test]
+    fn stochastic_pair_brackets_and_clamps() {
+        let cb = codebook(Mapping::Linear2, 4);
+        let b = Boundaries::new(&cb);
+        // interior point: bracketed, p is the distance fraction
+        let x = 0.5 * (cb[4] + cb[5]);
+        let (lo, hi, p) = b.stochastic_pair(x);
+        assert_eq!((lo, hi), (4, 5));
+        assert!((p - 0.5).abs() < 1e-6, "{p}");
+        // exact hit rounds to itself with certainty
+        let (lo, hi, p) = b.stochastic_pair(cb[7]);
+        assert_eq!(hi, 7);
+        assert!(p >= 1.0 || lo == hi, "lo={lo} hi={hi} p={p}");
+        // out of range clamps
+        assert_eq!(b.stochastic_pair(-2.0).0, 0);
+        assert_eq!(b.stochastic_pair(2.0).1 as usize, cb.len() - 1);
     }
 }

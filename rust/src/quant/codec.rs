@@ -18,13 +18,15 @@
 //! codec-encoded buffers; `codec_for` maps a (bits, mapping) policy to a
 //! codec and `codec_by_name` resolves the names persisted in checkpoints.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::blockwise::{dequantize, quantize, QuantizedVec, BLOCK};
+use super::blockwise::{dequantize, quantize, quantize_stochastic, QuantizedVec, BLOCK};
 use super::codebook::{codebook, Mapping};
 use super::pack::{pack_bits, packed_len, unpack_bits};
+use crate::util::rng::Rng;
 
 /// A codec-encoded state buffer: opaque payload + element count. The byte
 /// layout is the owning codec's contract; checkpoints persist `bytes`
@@ -400,6 +402,89 @@ impl StateCodec for BlockQuant {
 
 // ---------------------------------------------------------------------------
 
+/// Stochastic-rounding wrapper over a [`BlockQuant`] codec (SOLO, "Pushing
+/// the Limits of Low-Bit Optimizers"): `encode` rounds each normalized value
+/// *up* to its bracketing codebook entry with probability equal to the
+/// distance fraction, so the expected dequantized value equals the input —
+/// the property that keeps low-bit EMA dynamics unbiased. `decode` is the
+/// inner codec's deterministic decode, so checkpoint payloads still restore
+/// bit-exactly.
+///
+/// Reproducibility: the wrapper owns a seed and an encode-call counter; call
+/// k draws from the derived stream `Rng::new(seed).fork(k)`
+/// (`util/rng.rs`), so a fixed seed replays the exact rounding sequence —
+/// two runs with the same seed and the same encode order are bit-identical.
+/// The counter is in-memory state, so a *resumed* run continues
+/// deterministically but draws a fresh stream rather than replaying the
+/// interrupted one.
+pub struct StochasticRound {
+    inner: BlockQuant,
+    seed: u64,
+    calls: AtomicU64,
+}
+
+impl StochasticRound {
+    /// Stochastic-rounding block codec for (mapping, bits), seeded per
+    /// buffer by the codec policy layer.
+    pub fn new(mapping: Mapping, bits: u32, seed: u64) -> Self {
+        Self::wrap(BlockQuant::new(mapping, bits), seed)
+    }
+
+    /// Wrap an existing [`BlockQuant`] codec.
+    pub fn wrap(inner: BlockQuant, seed: u64) -> Self {
+        Self { inner, seed, calls: AtomicU64::new(0) }
+    }
+}
+
+impl StateCodec for StochasticRound {
+    fn name(&self) -> String {
+        format!("{}-sr", self.inner.name())
+    }
+
+    fn bits(&self) -> u32 {
+        self.inner.bits()
+    }
+
+    fn state_bytes(&self, len: usize) -> usize {
+        self.inner.state_bytes(len)
+    }
+
+    fn encode(&self, x: &[f32]) -> EncodedVec {
+        let k = self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut base = Rng::new(self.seed);
+        let mut rng = base.fork(k);
+        self.inner.from_quantized(&quantize_stochastic(
+            x,
+            &self.inner.cb,
+            self.inner.bits,
+            self.inner.block,
+            &mut rng,
+        ))
+    }
+
+    fn decode(&self, e: &EncodedVec) -> Vec<f32> {
+        self.inner.decode(e)
+    }
+
+    fn resolution(&self, absmax: f32) -> f32 {
+        // stochastic rounding can land on the *far* neighbour, so the bound
+        // is the full codebook gap, not half of it
+        let max_gap =
+            self.inner.cb.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
+        let scale = if absmax > 0.0 { absmax } else { 1.0 };
+        max_gap * scale + 1e-6
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// The registry's valid codec names, spelled out for error messages —
+/// unknown `bits` / `mapping` / policy entries point here instead of failing
+/// with a bare "unknown codec".
+pub const CODEC_REGISTRY_HELP: &str = "valid codecs: fp32, bf16, and q<bits>-<mapping> \
+    with bits 2..=8 and mapping one of dt, linear2, linear (e.g. q4-linear2, q8-dt), \
+    plus an optional -sr suffix for stochastic rounding (e.g. q4-dt-sr)";
+
 /// Codec for a (bits, mapping) storage policy: 32 → `Fp32`, 16 → `Bf16`,
 /// else block-wise quantization at that bitwidth.
 pub fn codec_for(bits: u32, mapping: Mapping) -> Arc<dyn StateCodec> {
@@ -427,26 +512,34 @@ pub fn codec_for(bits: u32, mapping: Mapping) -> Arc<dyn StateCodec> {
 /// assert!(codec_by_name("q9-martian").is_err());
 /// ```
 pub fn codec_by_name(name: &str) -> Result<Arc<dyn StateCodec>> {
-    match name {
+    let (base, stochastic) = match name.strip_suffix("-sr") {
+        Some(b) => (b, true),
+        None => (name, false),
+    };
+    match base {
+        "fp32" | "bf16" if stochastic => bail!(
+            "state codec {name:?}: stochastic rounding applies to block-quant codecs \
+             only; {CODEC_REGISTRY_HELP}"
+        ),
         "fp32" => Ok(Arc::new(Fp32)),
         "bf16" => Ok(Arc::new(Bf16)),
         other => {
-            let Some(rest) = other.strip_prefix('q') else {
-                bail!("unknown state codec {other:?}");
-            };
-            let Some((bits_s, map_s)) = rest.split_once('-') else {
-                bail!("unknown state codec {other:?}");
-            };
-            let bits: u32 = bits_s.parse().map_err(|_| {
-                anyhow::anyhow!("unknown state codec {other:?}")
-            })?;
-            let Some(mapping) = Mapping::parse(map_s) else {
-                bail!("unknown state codec {other:?}");
-            };
+            let unknown =
+                || anyhow::anyhow!("unknown state codec {name:?}; {CODEC_REGISTRY_HELP}");
+            let rest = other.strip_prefix('q').ok_or_else(unknown)?;
+            let (bits_s, map_s) = rest.split_once('-').ok_or_else(unknown)?;
+            let bits: u32 = bits_s.parse().map_err(|_| unknown())?;
+            let mapping = Mapping::parse(map_s).ok_or_else(unknown)?;
             if !(2..=8).contains(&bits) {
-                bail!("state codec {other:?}: bits out of range");
+                bail!("state codec {name:?}: bits out of range; {CODEC_REGISTRY_HELP}");
             }
-            Ok(Arc::new(BlockQuant::new(mapping, bits)))
+            if stochastic {
+                // checkpoint restores only decode, which is deterministic;
+                // the policy layer re-seeds live buffers itself
+                Ok(Arc::new(StochasticRound::new(mapping, bits, 0)))
+            } else {
+                Ok(Arc::new(BlockQuant::new(mapping, bits)))
+            }
         }
     }
 }
@@ -548,6 +641,63 @@ mod tests {
         assert!(codec_by_name("q9-dt").is_err());
         assert!(codec_by_name("q4-bogus").is_err());
         assert!(codec_by_name("int8").is_err());
+    }
+
+    #[test]
+    fn unknown_codec_errors_list_the_registry() {
+        for bad in ["int8", "q9-dt", "q4-bogus", "fp32-sr"] {
+            let err = codec_by_name(bad).unwrap_err().to_string();
+            assert!(
+                err.contains("fp32") && err.contains("q4-linear2") && err.contains("-sr"),
+                "{bad}: error does not name the valid codecs: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn stochastic_round_names_and_restores() {
+        let sr = StochasticRound::new(Mapping::Dt, 4, 7);
+        assert_eq!(sr.name(), "q4-dt-sr");
+        assert_eq!(sr.bits(), 4);
+        let mut rng = Rng::new(1);
+        let x: Vec<f32> = (0..130).map(|_| rng.normal_f32()).collect();
+        let enc = sr.encode(&x);
+        assert_eq!(enc.bytes.len(), sr.state_bytes(x.len()));
+        // decode is deterministic: the registry codec (any seed) restores
+        // the payload bit-exactly
+        let restored = codec_by_name("q4-dt-sr").unwrap();
+        assert_eq!(restored.name(), "q4-dt-sr");
+        let a = sr.decode(&enc);
+        let b = restored.decode(&enc);
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // error stays within the published (full-gap) bound
+        for (orig, back) in x.iter().zip(&a) {
+            let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert!((orig - back).abs() <= sr.resolution(absmax), "{orig} vs {back}");
+        }
+    }
+
+    #[test]
+    fn stochastic_round_fixed_seed_replays_exactly() {
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..256).map(|_| rng.normal_f32()).collect();
+        let a = StochasticRound::new(Mapping::Linear2, 4, 42);
+        let b = StochasticRound::new(Mapping::Linear2, 4, 42);
+        // same seed, same call sequence → identical bytes, call after call
+        for _ in 0..5 {
+            assert_eq!(a.encode(&x).bytes, b.encode(&x).bytes);
+        }
+        // successive calls draw fresh streams (the EMA sees fresh noise)...
+        let c = StochasticRound::new(Mapping::Linear2, 4, 42);
+        let first = c.encode(&x).bytes;
+        let second = c.encode(&x).bytes;
+        assert_ne!(first, second, "per-call streams must differ");
+        // ...and different seeds give different streams
+        let d = StochasticRound::new(Mapping::Linear2, 4, 43);
+        assert_ne!(first, d.encode(&x).bytes);
     }
 
     #[test]

@@ -11,14 +11,20 @@ pub mod codebook;
 pub mod codec;
 /// True-bitwidth code packing.
 pub mod pack;
+/// The per-buffer codec policy resolver (role → codec spec).
+pub mod policy;
 
 pub use blockwise::{
-    dequantize, dequantize_matrix_cols, matrix_state_bytes, quantize,
-    quantize_matrix_cols, QuantizedVec, BLOCK,
+    dequantize, dequantize_matrix_cols, dequantize_scalar, matrix_state_bytes, quantize,
+    quantize_matrix_cols, quantize_scalar, quantize_stochastic, QuantizedVec, BLOCK,
 };
 pub use codebook::{codebook, runtime_codebook, Boundaries, Mapping};
 pub use codec::{
     codec_by_name, codec_for, fp32, Bf16, BlockQuant, EncodedVec, Fp32, StateBuf,
-    StateCodec,
+    StateCodec, StochasticRound, CODEC_REGISTRY_HELP,
 };
-pub use pack::{pack_bits, packed_len, unpack_bits};
+pub use pack::{pack_bits, packed_len, unpack_bits, unpack_bits_into};
+pub use policy::{
+    parse_policy_entry, parse_policy_overrides, BufferRole, CodecPolicy, CodecSpec,
+    ROLE_HELP,
+};

@@ -6,16 +6,54 @@
 //! code per byte only transiently at the artifact boundary.
 
 /// Pack `codes` (each < 2^bits) into a little-endian bitstream.
+///
+/// The byte-aligned widths (8/4/2/1-bit) take batched, branch-free fast
+/// paths — fixed-width chunks, no running bit cursor — which is what keeps
+/// the `StateBuf` encode hot loop auto-vectorizable; odd widths fall back to
+/// the generic bit-cursor loop. All paths emit identical bytes.
 pub fn pack_bits(codes: &[u8], bits: u32) -> Vec<u8> {
     assert!((1..=8).contains(&bits));
+    #[cfg(debug_assertions)]
+    for &c in codes {
+        debug_assert!((c as u32) < (1u32 << bits), "code {c} out of range for {bits}-bit");
+    }
+    match bits {
+        8 => codes.to_vec(),
+        4 => {
+            let mut out = vec![0u8; codes.len().div_ceil(2)];
+            for (o, c) in out.iter_mut().zip(codes.chunks(2)) {
+                *o = c[0] | (c.get(1).copied().unwrap_or(0) << 4);
+            }
+            out
+        }
+        2 => {
+            let mut out = vec![0u8; codes.len().div_ceil(4)];
+            for (o, c) in out.iter_mut().zip(codes.chunks(4)) {
+                for (k, &v) in c.iter().enumerate() {
+                    *o |= v << (2 * k);
+                }
+            }
+            out
+        }
+        1 => {
+            let mut out = vec![0u8; codes.len().div_ceil(8)];
+            for (o, c) in out.iter_mut().zip(codes.chunks(8)) {
+                for (k, &v) in c.iter().enumerate() {
+                    *o |= v << k;
+                }
+            }
+            out
+        }
+        _ => pack_bits_generic(codes, bits),
+    }
+}
+
+/// Generic bit-cursor packing for widths that straddle byte boundaries.
+fn pack_bits_generic(codes: &[u8], bits: u32) -> Vec<u8> {
     let total_bits = codes.len() * bits as usize;
     let mut out = vec![0u8; total_bits.div_ceil(8)];
     let mut bitpos = 0usize;
     for &c in codes {
-        debug_assert!(
-            (c as u32) < (1u32 << bits),
-            "code {c} out of range for {bits}-bit"
-        );
         let byte = bitpos / 8;
         let off = bitpos % 8;
         out[byte] |= c << off;
@@ -27,22 +65,57 @@ pub fn pack_bits(codes: &[u8], bits: u32) -> Vec<u8> {
     out
 }
 
+/// Unpack codes from a bitstream produced by `pack_bits` into `out`
+/// (one code per byte). Byte-aligned widths use batched fast paths mirroring
+/// [`pack_bits`]; this is the decode-side hot path, so it writes into a
+/// caller-provided buffer instead of growing a `Vec` element by element.
+pub fn unpack_bits_into(packed: &[u8], bits: u32, out: &mut [u8]) {
+    assert!((1..=8).contains(&bits));
+    match bits {
+        8 => out.copy_from_slice(&packed[..out.len()]),
+        4 => {
+            for (c, &b) in out.chunks_mut(2).zip(packed) {
+                c[0] = b & 0x0F;
+                if let Some(hi) = c.get_mut(1) {
+                    *hi = b >> 4;
+                }
+            }
+        }
+        2 => {
+            for (c, &b) in out.chunks_mut(4).zip(packed) {
+                for (k, v) in c.iter_mut().enumerate() {
+                    *v = (b >> (2 * k)) & 0x03;
+                }
+            }
+        }
+        1 => {
+            for (c, &b) in out.chunks_mut(8).zip(packed) {
+                for (k, v) in c.iter_mut().enumerate() {
+                    *v = (b >> k) & 0x01;
+                }
+            }
+        }
+        _ => {
+            let mask = ((1u16 << bits) - 1) as u8;
+            let mut bitpos = 0usize;
+            for o in out.iter_mut() {
+                let byte = bitpos / 8;
+                let off = bitpos % 8;
+                let mut v = packed[byte] >> off;
+                if off + bits as usize > 8 {
+                    v |= packed[byte + 1] << (8 - off);
+                }
+                *o = v & mask;
+                bitpos += bits as usize;
+            }
+        }
+    }
+}
+
 /// Unpack `count` codes from a bitstream produced by `pack_bits`.
 pub fn unpack_bits(packed: &[u8], bits: u32, count: usize) -> Vec<u8> {
-    assert!((1..=8).contains(&bits));
-    let mask = ((1u16 << bits) - 1) as u8;
-    let mut out = Vec::with_capacity(count);
-    let mut bitpos = 0usize;
-    for _ in 0..count {
-        let byte = bitpos / 8;
-        let off = bitpos % 8;
-        let mut v = packed[byte] >> off;
-        if off + bits as usize > 8 {
-            v |= packed[byte + 1] << (8 - off);
-        }
-        out.push(v & mask);
-        bitpos += bits as usize;
-    }
+    let mut out = vec![0u8; count];
+    unpack_bits_into(packed, bits, &mut out);
     out
 }
 
@@ -102,5 +175,23 @@ mod tests {
     fn empty() {
         assert!(pack_bits(&[], 4).is_empty());
         assert!(unpack_bits(&[], 4, 0).is_empty());
+    }
+
+    #[test]
+    fn fast_paths_match_generic_layout() {
+        // the batched 8/4/2/1-bit paths must emit byte-for-byte what the
+        // generic bit-cursor loop emits (checkpoints depend on the layout)
+        let mut rng = crate::util::rng::Rng::new(17);
+        for bits in [1u32, 2, 4, 8] {
+            for n in [0usize, 1, 2, 3, 7, 64, 129] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.below(1usize << bits) as u8).collect();
+                assert_eq!(
+                    pack_bits(&codes, bits),
+                    pack_bits_generic(&codes, bits),
+                    "bits={bits} n={n}"
+                );
+            }
+        }
     }
 }

@@ -1,0 +1,394 @@
+//! The codec policy layer: maps a typed buffer role (first-order momentum,
+//! second moment, second-order left/right sides, ...) to a [`StateCodec`]
+//! spec, so *which* state is quantized and *how* is configured per buffer —
+//! the paper's central observation (eigenvector matrix over preconditioner,
+//! linear-square over DT), Li et al.'s per-moment bitwidths (m at 4-bit,
+//! v at 8-bit), and SOLO's stochastic rounding, all as one resolver.
+//!
+//! Resolution order (first match wins):
+//!
+//! 1. a policy entry for the exact role (`[quant.policy] m = "q4-linear2"`
+//!    in TOML, overridden by `--quant-policy m=q4,...` on the CLI);
+//! 2. for the side roles, an `eigen` entry covering both sides at once;
+//! 3. the legacy single-knob fallback (`first_order.bits`/`.mapping` for
+//!    first-order roles, `quant.bits`/`.mapping` for second-order roles) —
+//!    which is why configs and checkpoints that predate the policy layer
+//!    keep working unchanged.
+//!
+//! Stochastic-rounding specs (`-sr` suffix) build one [`StochasticRound`]
+//! codec *per buffer*, each seeded from the run seed and the buffer's role
+//! through `util/rng.rs` — fixed run seed ⇒ reproducible rounding streams.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use super::codebook::Mapping;
+use super::codec::{Bf16, BlockQuant, Fp32, StateCodec, StochasticRound, CODEC_REGISTRY_HELP};
+use crate::util::rng::Rng;
+
+/// The typed role of one optimizer state buffer — what the policy resolver
+/// keys on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BufferRole {
+    /// First-order momentum / first moment (AdamW m, SGDM momentum).
+    Momentum,
+    /// Second moment / accumulator (AdamW v, Adagrad accumulator,
+    /// schedule-free v).
+    SecondMoment,
+    /// Left (row-side) second-order preconditioner state.
+    LeftSide,
+    /// Right (column-side) second-order preconditioner state.
+    RightSide,
+    /// Both second-order sides at once (the eigenvector-matrix storage of
+    /// the paper); a `LeftSide`/`RightSide` entry overrides it per side.
+    EigenVectors,
+}
+
+/// Valid policy role names, for error messages.
+pub const ROLE_HELP: &str = "valid roles: m | momentum, v | second_moment, \
+    left | left_side, right | right_side, eigen | eigenvectors";
+
+impl BufferRole {
+    /// Parse a policy key (`m`, `v`, `left`, `eigen`, ...).
+    pub fn parse(s: &str) -> Result<BufferRole> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "m" | "momentum" => Self::Momentum,
+            "v" | "second_moment" | "secondmoment" => Self::SecondMoment,
+            "left" | "left_side" => Self::LeftSide,
+            "right" | "right_side" => Self::RightSide,
+            "eigen" | "eigenvectors" => Self::EigenVectors,
+            other => bail!("unknown quant policy role {other:?}; {ROLE_HELP}"),
+        })
+    }
+
+    /// Canonical policy-key name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Momentum => "m",
+            Self::SecondMoment => "v",
+            Self::LeftSide => "left",
+            Self::RightSide => "right",
+            Self::EigenVectors => "eigen",
+        }
+    }
+
+    /// Whether this role stores second-order (preconditioner-side) state.
+    pub fn is_second_order(&self) -> bool {
+        matches!(self, Self::LeftSide | Self::RightSide | Self::EigenVectors)
+    }
+
+    /// Stable tag mixed into the per-buffer stochastic-rounding seed.
+    fn seed_tag(&self) -> u64 {
+        match self {
+            Self::Momentum => 1,
+            Self::SecondMoment => 2,
+            Self::LeftSide => 3,
+            Self::RightSide => 4,
+            Self::EigenVectors => 5,
+        }
+    }
+}
+
+/// A parsed codec specification: everything needed to build a codec for one
+/// buffer, minus the per-buffer seed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CodecSpec {
+    /// Storage bits: 32 = fp32, 16 = bf16, 2–8 = block quantization.
+    pub bits: u32,
+    /// Codebook mapping (ignored by the dense 16/32-bit codecs).
+    pub mapping: Mapping,
+    /// Wrap the block codec in [`StochasticRound`].
+    pub stochastic: bool,
+}
+
+impl CodecSpec {
+    /// Deterministic spec from the legacy single-knob (bits, mapping) pair.
+    pub fn plain(bits: u32, mapping: Mapping) -> Self {
+        Self { bits, mapping, stochastic: false }
+    }
+
+    /// Parse a codec name (`fp32`, `bf16`, `q4-linear2`, `q8-dt`,
+    /// `q4-dt-sr`, ...). The shorthand `q4` (no mapping) takes
+    /// `default_mapping`, so `--quant-policy m=q4,v=q8` works without
+    /// spelling the codebook out.
+    pub fn parse(s: &str, default_mapping: Mapping) -> Result<CodecSpec> {
+        let (base, stochastic) = match s.strip_suffix("-sr") {
+            Some(b) => (b, true),
+            None => (s, false),
+        };
+        let spec = match base {
+            "fp32" => Self::plain(32, default_mapping),
+            "bf16" => Self::plain(16, default_mapping),
+            other => {
+                let unknown = || {
+                    anyhow::anyhow!("unknown codec {s:?} in quant policy; {CODEC_REGISTRY_HELP}")
+                };
+                let rest = other.strip_prefix('q').ok_or_else(unknown)?;
+                let (bits_s, mapping) = match rest.split_once('-') {
+                    Some((b, m)) => (b, Mapping::parse(m).ok_or_else(unknown)?),
+                    None => (rest, default_mapping),
+                };
+                let bits: u32 = bits_s.parse().map_err(|_| unknown())?;
+                if !(2..=8).contains(&bits) {
+                    bail!("codec {s:?} in quant policy: bits out of range; {CODEC_REGISTRY_HELP}");
+                }
+                Self { bits, mapping, stochastic: false }
+            }
+        };
+        if stochastic && spec.bits > 8 {
+            bail!(
+                "codec {s:?} in quant policy: stochastic rounding applies to block-quant \
+                 codecs only; {CODEC_REGISTRY_HELP}"
+            );
+        }
+        Ok(Self { stochastic, ..spec })
+    }
+
+    /// Canonical codec name ([`StateCodec::name`] of the built codec).
+    pub fn name(&self) -> String {
+        let sr = if self.stochastic { "-sr" } else { "" };
+        match self.bits {
+            32 => "fp32".into(),
+            16 => "bf16".into(),
+            b => format!("q{b}-{}{sr}", self.mapping.name()),
+        }
+    }
+
+    /// Build the codec. `seed` feeds the stochastic-rounding stream and is
+    /// ignored by deterministic codecs.
+    pub fn build(&self, seed: u64) -> Arc<dyn StateCodec> {
+        match self.bits {
+            32 => Arc::new(Fp32),
+            16 => Arc::new(Bf16),
+            b if self.stochastic => Arc::new(StochasticRound::new(self.mapping, b, seed)),
+            b => Arc::new(BlockQuant::new(self.mapping, b)),
+        }
+    }
+}
+
+/// The per-run codec policy: role → spec entries (later entries override
+/// earlier ones, so CLI overrides layer on top of TOML) plus the run seed
+/// that stochastic-rounding buffers derive their streams from.
+#[derive(Debug, Clone, Default)]
+pub struct CodecPolicy {
+    entries: Vec<(BufferRole, CodecSpec)>,
+    seed: u64,
+}
+
+impl CodecPolicy {
+    /// Policy from explicit entries and the run seed.
+    pub fn new(entries: Vec<(BufferRole, CodecSpec)>, seed: u64) -> Self {
+        Self { entries, seed }
+    }
+
+    /// Whether any role has a policy entry.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Add or override an entry (last write wins on lookup).
+    pub fn set(&mut self, role: BufferRole, spec: CodecSpec) {
+        self.entries.push((role, spec));
+    }
+
+    /// The effective entry for `role`, if any: the most recent exact-role
+    /// entry, or — for the side roles — the most recent `eigen` entry.
+    pub fn lookup(&self, role: BufferRole) -> Option<CodecSpec> {
+        let last = |r: BufferRole| {
+            self.entries.iter().rev().find(|(er, _)| *er == r).map(|&(_, s)| s)
+        };
+        last(role).or_else(|| {
+            matches!(role, BufferRole::LeftSide | BufferRole::RightSide)
+                .then(|| last(BufferRole::EigenVectors))
+                .flatten()
+        })
+    }
+
+    /// Resolve `role` to a spec: policy entry (with the `eigen` fallback for
+    /// sides) or the caller's legacy single-knob `fallback`.
+    pub fn resolve(&self, role: BufferRole, fallback: CodecSpec) -> CodecSpec {
+        self.lookup(role).unwrap_or(fallback)
+    }
+
+    /// Resolve and build the codec for one buffer. Stochastic-rounding
+    /// buffers get a role-distinct seed derived from the run seed through
+    /// `util/rng.rs`, so every buffer draws an independent, reproducible
+    /// rounding stream.
+    pub fn codec(&self, role: BufferRole, fallback: CodecSpec) -> Arc<dyn StateCodec> {
+        self.resolve(role, fallback).build(self.buffer_seed(role))
+    }
+
+    /// The derived stochastic-rounding seed for a role's buffer.
+    pub fn buffer_seed(&self, role: BufferRole) -> u64 {
+        Rng::new(self.seed).fork(role.seed_tag()).next_u64()
+    }
+
+    /// Canonical `role=codec` summary of the explicit entries, in fixed
+    /// role order (m, v, left, right, eigen) so equal policies always
+    /// produce equal strings — checkpoint-header observability; empty when
+    /// no policy is set.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = [
+            BufferRole::Momentum,
+            BufferRole::SecondMoment,
+            BufferRole::LeftSide,
+            BufferRole::RightSide,
+            BufferRole::EigenVectors,
+        ]
+        .iter()
+        .filter_map(|&r| {
+            // only exact entries: the summary records what was configured,
+            // resolution (eigen → sides) happens at build time
+            self.entries
+                .iter()
+                .rev()
+                .find(|(er, _)| *er == r)
+                .map(|(_, s)| format!("{}={}", r.name(), s.name()))
+        })
+        .collect();
+        parts.join(",")
+    }
+}
+
+/// Parse one `role = "codec"` policy entry (shared by the TOML table and
+/// the CLI override). The shorthand mapping default is role-dependent:
+/// first-order roles default to `first_default`, second-order roles to
+/// `second_default` — matching the legacy knobs they override.
+pub fn parse_policy_entry(
+    role_s: &str,
+    spec_s: &str,
+    first_default: Mapping,
+    second_default: Mapping,
+) -> Result<(BufferRole, CodecSpec)> {
+    let role = BufferRole::parse(role_s)?;
+    let default = if role.is_second_order() { second_default } else { first_default };
+    let spec = CodecSpec::parse(spec_s.trim(), default)?;
+    Ok((role, spec))
+}
+
+/// Parse a CLI `--quant-policy` value: comma-separated `role=codec` pairs,
+/// e.g. `m=q4,v=q8` or `m=q4-dt-sr,eigen=q4-linear2`.
+pub fn parse_policy_overrides(
+    s: &str,
+    first_default: Mapping,
+    second_default: Mapping,
+) -> Result<Vec<(BufferRole, CodecSpec)>> {
+    let mut out = Vec::new();
+    for pair in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let Some((role_s, spec_s)) = pair.split_once('=') else {
+            bail!(
+                "--quant-policy entry {pair:?} is not role=codec (e.g. m=q4,v=q8); {ROLE_HELP}"
+            );
+        };
+        out.push(parse_policy_entry(role_s.trim(), spec_s, first_default, second_default)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roles_parse_with_aliases() {
+        assert_eq!(BufferRole::parse("m").unwrap(), BufferRole::Momentum);
+        assert_eq!(BufferRole::parse("momentum").unwrap(), BufferRole::Momentum);
+        assert_eq!(BufferRole::parse("V").unwrap(), BufferRole::SecondMoment);
+        assert_eq!(BufferRole::parse("eigenvectors").unwrap(), BufferRole::EigenVectors);
+        let err = BufferRole::parse("w").unwrap_err().to_string();
+        assert!(err.contains("second_moment"), "{err}");
+    }
+
+    #[test]
+    fn specs_parse_shorthand_and_full_names() {
+        let s = CodecSpec::parse("q4", Mapping::Dt).unwrap();
+        assert_eq!((s.bits, s.mapping, s.stochastic), (4, Mapping::Dt, false));
+        let s = CodecSpec::parse("q8-linear2", Mapping::Dt).unwrap();
+        assert_eq!((s.bits, s.mapping), (8, Mapping::Linear2));
+        let s = CodecSpec::parse("q4-dt-sr", Mapping::Linear2).unwrap();
+        assert!(s.stochastic);
+        assert_eq!(s.name(), "q4-dt-sr");
+        let s = CodecSpec::parse("q4-sr", Mapping::Dt).unwrap();
+        assert!(s.stochastic);
+        assert_eq!(s.name(), "q4-dt-sr");
+        assert_eq!(CodecSpec::parse("fp32", Mapping::Dt).unwrap().bits, 32);
+        assert_eq!(CodecSpec::parse("bf16", Mapping::Dt).unwrap().bits, 16);
+        for bad in ["q1", "q9-dt", "int8", "fp32-sr", "q4-bogus"] {
+            let err = CodecSpec::parse(bad, Mapping::Dt).unwrap_err().to_string();
+            assert!(err.contains("valid codecs"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn built_codec_names_match_specs() {
+        for name in ["fp32", "bf16", "q4-linear2", "q8-dt", "q4-dt-sr", "q3-linear2"] {
+            let spec = CodecSpec::parse(name, Mapping::Dt).unwrap();
+            assert_eq!(spec.build(0).name(), name, "spec {name}");
+            assert_eq!(spec.name(), name);
+        }
+    }
+
+    #[test]
+    fn resolution_order_role_then_eigen_then_fallback() {
+        let mut p = CodecPolicy::new(Vec::new(), 0);
+        let fb = CodecSpec::plain(32, Mapping::Dt);
+        // empty policy: everything falls back to the single knob
+        assert_eq!(p.resolve(BufferRole::Momentum, fb), fb);
+        assert_eq!(p.resolve(BufferRole::LeftSide, fb), fb);
+        // eigen covers both sides...
+        p.set(BufferRole::EigenVectors, CodecSpec::parse("q4-linear2", Mapping::Dt).unwrap());
+        assert_eq!(p.resolve(BufferRole::LeftSide, fb).name(), "q4-linear2");
+        assert_eq!(p.resolve(BufferRole::RightSide, fb).name(), "q4-linear2");
+        // ...but an exact side entry wins over eigen
+        p.set(BufferRole::LeftSide, CodecSpec::parse("bf16", Mapping::Dt).unwrap());
+        assert_eq!(p.resolve(BufferRole::LeftSide, fb).name(), "bf16");
+        assert_eq!(p.resolve(BufferRole::RightSide, fb).name(), "q4-linear2");
+        // first-order roles never see the eigen entry
+        assert_eq!(p.resolve(BufferRole::Momentum, fb), fb);
+        // later entries override earlier ones (CLI over TOML)
+        p.set(BufferRole::LeftSide, CodecSpec::parse("fp32", Mapping::Dt).unwrap());
+        assert_eq!(p.resolve(BufferRole::LeftSide, fb).name(), "fp32");
+    }
+
+    #[test]
+    fn cli_overrides_parse() {
+        let entries = parse_policy_overrides("m=q4,v=q8", Mapping::Dt, Mapping::Linear2).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].0, BufferRole::Momentum);
+        assert_eq!(entries[0].1.name(), "q4-dt");
+        assert_eq!(entries[1].1.name(), "q8-dt");
+        // second-order shorthand takes the second-order default mapping
+        let entries =
+            parse_policy_overrides("eigen=q4", Mapping::Dt, Mapping::Linear2).unwrap();
+        assert_eq!(entries[0].1.name(), "q4-linear2");
+        assert!(parse_policy_overrides("m:q4", Mapping::Dt, Mapping::Dt).is_err());
+        assert!(parse_policy_overrides("w=q4", Mapping::Dt, Mapping::Dt).is_err());
+        assert!(parse_policy_overrides("", Mapping::Dt, Mapping::Dt).unwrap().is_empty());
+    }
+
+    #[test]
+    fn buffer_seeds_are_role_distinct_and_reproducible() {
+        let p = CodecPolicy::new(Vec::new(), 7);
+        let q = CodecPolicy::new(Vec::new(), 7);
+        assert_eq!(p.buffer_seed(BufferRole::Momentum), q.buffer_seed(BufferRole::Momentum));
+        assert_ne!(
+            p.buffer_seed(BufferRole::Momentum),
+            p.buffer_seed(BufferRole::SecondMoment)
+        );
+        let r = CodecPolicy::new(Vec::new(), 8);
+        assert_ne!(p.buffer_seed(BufferRole::Momentum), r.buffer_seed(BufferRole::Momentum));
+    }
+
+    #[test]
+    fn summary_is_canonical() {
+        let mut p = CodecPolicy::new(Vec::new(), 0);
+        assert_eq!(p.summary(), "");
+        p.set(BufferRole::SecondMoment, CodecSpec::parse("q8", Mapping::Dt).unwrap());
+        p.set(BufferRole::Momentum, CodecSpec::parse("q4", Mapping::Dt).unwrap());
+        assert_eq!(p.summary(), "m=q4-dt,v=q8-dt");
+        // override keeps one entry per role
+        p.set(BufferRole::Momentum, CodecSpec::parse("fp32", Mapping::Dt).unwrap());
+        assert_eq!(p.summary(), "m=fp32,v=q8-dt");
+    }
+}

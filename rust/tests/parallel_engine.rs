@@ -205,6 +205,48 @@ fn pipelined_quality_matches_sync_engine() {
     );
 }
 
+#[test]
+fn adaptive_pipeline_completes_early_and_matches_quality() {
+    // `pipeline_adaptive`: with a lag bound far beyond the refresh cadence,
+    // finished refreshes must swap in at the next step's barrier (the pool
+    // goes idle between refreshes on this small model) instead of waiting
+    // out the bound — and quality stays in the sync engine's regime
+    let steps = 60;
+    let mut cfg = pipeline_cfg(4, true, steps);
+    cfg.name = "pipe_adaptive".into();
+    // long refresh intervals + a generous lag bound: the pool has many
+    // cheap steps to finish each refresh, so only the adaptive barrier can
+    // be the thing that swaps it in early
+    cfg.second.update_precond_every = 10;
+    cfg.second.update_invroot_every = 20;
+    cfg.second.pipeline_max_lag = 50;
+    cfg.second.pipeline_adaptive = true;
+    let (_, adaptive) = run(cfg);
+    assert!(adaptive.timings.pipeline_refreshes > 0, "pipeline never ran");
+    assert!(
+        adaptive.timings.pipeline_early_completes > 0,
+        "adaptive barrier never completed a refresh early (refreshes: {})",
+        adaptive.timings.pipeline_refreshes
+    );
+    assert!(
+        adaptive.timings.pipeline_early_completes <= adaptive.timings.pipeline_refreshes,
+        "more early completions than refreshes"
+    );
+    let mut sync_cfg = pipeline_cfg(2, false, steps);
+    sync_cfg.second.update_precond_every = 10;
+    sync_cfg.second.update_invroot_every = 20;
+    let (_, sync) = run(sync_cfg);
+    let ea = adaptive.final_eval.as_ref().unwrap();
+    let es = sync.final_eval.as_ref().unwrap();
+    assert!(ea.accuracy.unwrap() > 0.3, "adaptive arm did not learn");
+    assert!(
+        (ea.loss - es.loss).abs() < 0.5,
+        "adaptive eval loss {} vs sync {} drifted apart",
+        ea.loss,
+        es.loss
+    );
+}
+
 /// HostBackend wrapper that injects a failure into the N-th execution of a
 /// matching artifact — exercises the pipeline's error path from a pool
 /// thread.

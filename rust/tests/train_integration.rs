@@ -257,6 +257,158 @@ fn quantized_first_order_resume_is_exact() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Build the Li et al. mixed policy: m at 4-bit DT, v at 8-bit DT.
+fn mixed_policy_entries() -> Vec<(shampoo4::quant::BufferRole, shampoo4::quant::CodecSpec)> {
+    use shampoo4::quant::{BufferRole, CodecSpec, Mapping};
+    vec![
+        (BufferRole::Momentum, CodecSpec::parse("q4-dt", Mapping::Dt).unwrap()),
+        (BufferRole::SecondMoment, CodecSpec::parse("q8-dt", Mapping::Dt).unwrap()),
+    ]
+}
+
+#[test]
+fn mixed_policy_trains_checkpoints_and_resumes_bit_identically() {
+    // the acceptance run: m=q4,v=q8 AdamW under q4-eigenvector Shampoo must
+    // train, checkpoint, and resume on the exact trajectory of an
+    // uninterrupted run — per-buffer codec bytes persist verbatim
+    let rt = backend();
+    let dir = std::env::temp_dir().join("shampoo4_policy_resume");
+    let ckpt = dir.join("ck.bin");
+    let mut cfg = base_cfg(20);
+    cfg.name = "it_policy".into();
+    cfg.first.kind = FirstOrderKind::AdamW;
+    cfg.first.lr = 1e-3;
+    cfg.quant_policy = mixed_policy_entries();
+    cfg.second.update_precond_every = 4;
+    cfg.second.update_invroot_every = 8;
+    cfg.schedule = shampoo4::config::Schedule::Constant;
+
+    let mut straight = Trainer::new(&rt, cfg.clone()).unwrap();
+    let r_straight = straight.train(&rt, None).unwrap();
+    assert!(r_straight.losses.last().unwrap().1.is_finite());
+
+    let mut half_cfg = cfg.clone();
+    half_cfg.steps = 10;
+    let mut first_half = Trainer::new(&rt, half_cfg).unwrap();
+    first_half.train(&rt, None).unwrap();
+    first_half.save_checkpoint(&ckpt, 10).unwrap();
+
+    let mut resumed = Trainer::new(&rt, cfg).unwrap();
+    assert_eq!(resumed.load_checkpoint(&ckpt).unwrap(), 10);
+    resumed.train(&rt, None).unwrap();
+    let bits = |v: &[Vec<f32>]| -> Vec<Vec<u32>> {
+        v.iter().map(|p| p.iter().map(|x| x.to_bits()).collect()).collect()
+    };
+    assert_eq!(
+        bits(&resumed.model.params),
+        bits(&straight.model.params),
+        "mixed-policy resume diverged from the straight run"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mixed_policy_buffers_have_distinct_bitwidths() {
+    // m at 4-bit must cost roughly half of v at 8-bit, and the pair must sit
+    // strictly between uniform q4 and uniform q8 AdamW states
+    use shampoo4::quant::{BufferRole, CodecSpec};
+    let rt = backend();
+    let mk = |policy: Vec<(BufferRole, CodecSpec)>, bits: u32| {
+        let mut cfg = base_cfg(1);
+        cfg.name = "it_policy_bytes".into();
+        cfg.first.kind = FirstOrderKind::AdamW;
+        cfg.first.bits = bits;
+        cfg.quant_policy = policy;
+        cfg.second.kind = SecondOrderKind::None;
+        Trainer::new(&rt, cfg).unwrap().memory_report().first_order_bytes
+    };
+    let mixed = mk(mixed_policy_entries(), 32);
+    let q4 = mk(Vec::new(), 4);
+    let q8 = mk(Vec::new(), 8);
+    assert!(mixed > q4, "mixed {mixed} vs q4 {q4}");
+    assert!(mixed < q8, "mixed {mixed} vs q8 {q8}");
+}
+
+#[test]
+fn policy_overrides_second_order_codec() {
+    // quant.bits = 32 (dense fallback) + an eigen=q4 policy entry: the
+    // policy must win — the run's second-order state shrinks to 4-bit and
+    // the live sides report the policy codec
+    use shampoo4::quant::{BufferRole, CodecSpec, Mapping};
+    let rt = backend();
+    let mk = |policy: Vec<(BufferRole, CodecSpec)>, bits: u32| {
+        let mut cfg = base_cfg(1);
+        cfg.name = "it_policy_so".into();
+        cfg.second.quant.bits = bits;
+        cfg.quant_policy = policy;
+        Trainer::new(&rt, cfg).unwrap()
+    };
+    let eigen_q4 = CodecSpec::parse("q4-linear2", Mapping::Dt).unwrap();
+    let t_policy = mk(vec![(BufferRole::EigenVectors, eigen_q4)], 32);
+    let t_dense = mk(Vec::new(), 32);
+    let b_policy = t_policy.memory_report().second_order_bytes;
+    let b_dense = t_dense.memory_report().second_order_bytes;
+    assert!(
+        b_dense as f64 / b_policy as f64 > 5.5,
+        "policy did not shrink second-order state: {b_policy} vs dense {b_dense}"
+    );
+    let block = &t_policy.second.as_ref().unwrap().blocks[0];
+    assert_eq!(block.left.codec_name(), "q4-linear2");
+    assert_eq!(block.right.codec_name(), "q4-linear2");
+}
+
+#[test]
+fn stochastic_rounding_policy_run_is_seed_reproducible() {
+    // m=q4-dt-sr: two runs with the same seed must be bit-identical (the
+    // per-buffer rounding streams derive from the run seed), and the run
+    // must still learn
+    use shampoo4::quant::{BufferRole, CodecSpec, Mapping};
+    let rt = backend();
+    let mk_cfg = || {
+        let mut cfg = base_cfg(25);
+        cfg.name = "it_sr".into();
+        cfg.first.kind = FirstOrderKind::AdamW;
+        cfg.first.lr = 1e-3;
+        cfg.quant_policy = vec![(
+            BufferRole::Momentum,
+            CodecSpec::parse("q4-dt-sr", Mapping::Dt).unwrap(),
+        )];
+        cfg.second.kind = SecondOrderKind::None;
+        cfg
+    };
+    let mut a = Trainer::new(&rt, mk_cfg()).unwrap();
+    let ra = a.train(&rt, None).unwrap();
+    let mut b = Trainer::new(&rt, mk_cfg()).unwrap();
+    b.train(&rt, None).unwrap();
+    assert_eq!(a.model.params, b.model.params, "same seed must replay the SR stream");
+    let first = ra.losses.first().unwrap().1;
+    let last = ra.losses.last().unwrap().1;
+    assert!(last.is_finite() && last < first, "SR run did not learn: {first} -> {last}");
+}
+
+#[test]
+fn checkpoint_rejects_mismatched_policy() {
+    // a m=q4,v=q8 checkpoint must not load into a uniform-q4 run: the
+    // per-buffer codec names recorded in the header catch the mismatch
+    let rt = backend();
+    let dir = std::env::temp_dir().join("shampoo4_policy_mismatch");
+    let ckpt = dir.join("ck.bin");
+    let mut cfg = base_cfg(1);
+    cfg.name = "it_policy_mismatch".into();
+    cfg.first.kind = FirstOrderKind::AdamW;
+    cfg.quant_policy = mixed_policy_entries();
+    cfg.second.kind = SecondOrderKind::None;
+    let t = Trainer::new(&rt, cfg.clone()).unwrap();
+    t.save_checkpoint(&ckpt, 1).unwrap();
+    let mut cfg2 = cfg;
+    cfg2.quant_policy.clear();
+    cfg2.first.bits = 4; // uniform q4: v buffer codec no longer matches
+    let mut t2 = Trainer::new(&rt, cfg2).unwrap();
+    let err = t2.load_checkpoint(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("codec"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn checkpoint_rejects_mismatched_first_order_codec() {
     // a 4-bit-states checkpoint must not silently load into an fp32 run
