@@ -67,6 +67,19 @@ fn main() {
         std::hint::black_box(unpack_bits(std::hint::black_box(&q.packed), 4, codes.len()));
     }).report());
 
+    // explicit SIMD arms (--features simd); the full scalar/chunked/SIMD
+    // throughput matrix lives in `cargo bench --bench quant_simd`
+    #[cfg(feature = "simd")]
+    {
+        use shampoo4::quant::{dequantize_simd, quantize_simd};
+        println!("{}", runner.run("quant/simd quantize 128x128", || {
+            std::hint::black_box(quantize_simd(std::hint::black_box(&x), &cb, 4, 64));
+        }).report());
+        println!("{}", runner.run("quant/simd dequantize 128x128", || {
+            std::hint::black_box(dequantize_simd(std::hint::black_box(&q), &cb));
+        }).report());
+    }
+
     // ---- host linalg --------------------------------------------------------
     let a = Mat::randn(128, 128, &mut rng);
     let b = Mat::randn(128, 128, &mut rng);

@@ -1,0 +1,218 @@
+//! Quant-kernel throughput harness: scalar vs chunked vs SIMD arms for the
+//! block-wise quantizer (encode + decode at q2/q3/q4/q8) and the bit-pack
+//! lanes (1/2/4/8-bit), with bytes/second columns.
+//!
+//!   cargo bench --bench quant_simd                  # scalar + chunked arms
+//!   cargo bench --bench quant_simd --features simd  # + explicit SIMD arms
+//!
+//! Normal runs append a machine-readable run record (rows + derived
+//! speedups) to `BENCH_quant_simd.json` at the repo root — the committed
+//! baseline the SIMD rewrite is judged against. Set `QUANT_BENCH_SMOKE=1`
+//! (CI) for short measurement windows and a throwaway output file under
+//! `bench_out/` so the committed baseline is never overwritten by a noisy
+//! smoke run.
+
+use shampoo4::quant::{
+    codebook, dequantize_chunked, dequantize_scalar, pack_bits_chunked, quantize_chunked,
+    quantize_scalar, unpack_bits_into_chunked, Mapping, BLOCK,
+};
+#[cfg(feature = "simd")]
+use shampoo4::quant::{dequantize_simd, quantize_simd};
+use shampoo4::util::json::Json;
+use shampoo4::util::rng::Rng;
+use shampoo4::util::timer::BenchRunner;
+
+/// Repo-root baseline file (normal mode appends a run record here).
+const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_quant_simd.json");
+/// Most recent run records kept in the baseline's `runs` array.
+const KEEP_RUNS: usize = 20;
+
+fn arch() -> &'static str {
+    #[cfg(feature = "simd")]
+    {
+        shampoo4::quant::simd::simd_arch()
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        "disabled"
+    }
+}
+
+/// Time one arm, print its throughput row, and record it as a JSON row.
+fn row(runner: &BenchRunner, rows: &mut Vec<Json>, name: &str, bytes: usize, f: impl FnMut()) {
+    let s = runner.run(name, f);
+    println!("{}", s.throughput_report(bytes));
+    rows.push(Json::obj(vec![
+        ("name", Json::Str(name.to_string())),
+        ("mean_ns", Json::Num(s.mean_ns)),
+        ("p50_ns", Json::Num(s.p50_ns)),
+        ("min_ns", Json::Num(s.min_ns)),
+        ("bytes", Json::Num(bytes as f64)),
+        ("bytes_per_sec", Json::Num(s.bytes_per_sec(bytes))),
+    ]));
+}
+
+fn mean_of(rows: &[Json], name: &str) -> Option<f64> {
+    rows.iter()
+        .find(|r| r.get("name").and_then(|v| v.as_str()) == Some(name))
+        .and_then(|r| r.get("mean_ns").and_then(|v| v.as_f64()))
+}
+
+/// `a / b` as a speedup (how many times faster `b` is than `a`).
+fn speedup(a: Option<f64>, b: Option<f64>) -> Json {
+    match (a, b) {
+        (Some(a), Some(b)) if b > 0.0 => Json::Num(a / b),
+        _ => Json::Null,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("QUANT_BENCH_SMOKE").is_ok_and(|v| v == "1");
+    let (runner, n) = if smoke {
+        (BenchRunner::quick(), 1usize << 16)
+    } else {
+        (BenchRunner::default(), 1usize << 20)
+    };
+    let simd_on = cfg!(feature = "simd");
+    println!("# quant throughput harness: n={n} f32 elems, simd={simd_on}, arch={}", arch());
+    let mut rng = Rng::new(42);
+    let x: Vec<f32> = rng.normal_vec(n);
+    let fbytes = n * 4; // payload one encode reads / one decode writes
+    let mut rows: Vec<Json> = Vec::new();
+
+    // ---- block quantizer: encode + decode at every bitwidth class ---------
+    // q3 exercises the generic bit-cursor pack path; the byte-aligned widths
+    // exercise the chunked fast paths and (with --features simd) the
+    // SSE2/SWAR lanes.
+    for (label, mapping, bits) in [
+        ("q2-dt", Mapping::Dt, 2u32),
+        ("q3-dt", Mapping::Dt, 3),
+        ("q4-linear2", Mapping::Linear2, 4),
+        ("q8-dt", Mapping::Dt, 8),
+    ] {
+        let cb = codebook(mapping, bits);
+        let q = quantize_chunked(&x, &cb, bits, BLOCK);
+        row(&runner, &mut rows, &format!("{label}/encode scalar"), fbytes, || {
+            std::hint::black_box(quantize_scalar(std::hint::black_box(&x), &cb, bits, BLOCK));
+        });
+        row(&runner, &mut rows, &format!("{label}/encode chunked"), fbytes, || {
+            std::hint::black_box(quantize_chunked(std::hint::black_box(&x), &cb, bits, BLOCK));
+        });
+        #[cfg(feature = "simd")]
+        row(&runner, &mut rows, &format!("{label}/encode simd"), fbytes, || {
+            std::hint::black_box(quantize_simd(std::hint::black_box(&x), &cb, bits, BLOCK));
+        });
+        row(&runner, &mut rows, &format!("{label}/decode scalar"), fbytes, || {
+            std::hint::black_box(dequantize_scalar(std::hint::black_box(&q), &cb));
+        });
+        row(&runner, &mut rows, &format!("{label}/decode chunked"), fbytes, || {
+            std::hint::black_box(dequantize_chunked(std::hint::black_box(&q), &cb));
+        });
+        #[cfg(feature = "simd")]
+        row(&runner, &mut rows, &format!("{label}/decode simd"), fbytes, || {
+            std::hint::black_box(dequantize_simd(std::hint::black_box(&q), &cb));
+        });
+    }
+
+    // ---- raw pack lanes ---------------------------------------------------
+    for bits in [1u32, 2, 4, 8] {
+        let codes: Vec<u8> = (0..n).map(|_| rng.below(1usize << bits) as u8).collect();
+        let packed = pack_bits_chunked(&codes, bits);
+        let mut out = vec![0u8; n];
+        row(&runner, &mut rows, &format!("pack{bits}/chunked"), n, || {
+            std::hint::black_box(pack_bits_chunked(std::hint::black_box(&codes), bits));
+        });
+        #[cfg(feature = "simd")]
+        row(&runner, &mut rows, &format!("pack{bits}/simd"), n, || {
+            std::hint::black_box(shampoo4::quant::simd::pack_bits_simd(
+                std::hint::black_box(&codes),
+                bits,
+            ));
+        });
+        row(&runner, &mut rows, &format!("unpack{bits}/chunked"), n, || {
+            unpack_bits_into_chunked(std::hint::black_box(&packed), bits, &mut out);
+            std::hint::black_box(&out);
+        });
+        #[cfg(feature = "simd")]
+        row(&runner, &mut rows, &format!("unpack{bits}/simd"), n, || {
+            shampoo4::quant::simd::unpack_bits_into_simd(
+                std::hint::black_box(&packed),
+                bits,
+                &mut out,
+            );
+            std::hint::black_box(&out);
+        });
+    }
+
+    // ---- derived speedups (the acceptance numbers) ------------------------
+    let enc_scalar = mean_of(&rows, "q4-linear2/encode scalar");
+    let derived = Json::obj(vec![
+        (
+            "q4_encode_speedup_simd_vs_scalar",
+            speedup(enc_scalar, mean_of(&rows, "q4-linear2/encode simd")),
+        ),
+        (
+            "q4_encode_speedup_chunked_vs_scalar",
+            speedup(enc_scalar, mean_of(&rows, "q4-linear2/encode chunked")),
+        ),
+        (
+            "q4_decode_speedup_simd_vs_scalar",
+            speedup(
+                mean_of(&rows, "q4-linear2/decode scalar"),
+                mean_of(&rows, "q4-linear2/decode simd"),
+            ),
+        ),
+    ]);
+    for (k, v) in derived.as_obj().unwrap() {
+        match v.as_f64() {
+            Some(r) => println!("# {k}: {r:.2}x"),
+            None => println!("# {k}: n/a (build with --features simd)"),
+        }
+    }
+
+    let timestamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let run = Json::obj(vec![
+        ("timestamp_unix", Json::Num(timestamp as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("simd_enabled", Json::Bool(simd_on)),
+        ("simd_arch", Json::Str(arch().to_string())),
+        ("n", Json::Num(n as f64)),
+        ("rows", Json::Arr(rows)),
+        ("derived", derived),
+    ]);
+
+    if smoke {
+        // throwaway output: never touches the committed baseline
+        std::fs::create_dir_all("bench_out").ok();
+        let out = Json::obj(vec![("runs", Json::Arr(vec![run]))]);
+        match std::fs::write("bench_out/BENCH_quant_simd.smoke.json", out.to_string()) {
+            Ok(()) => println!("# wrote bench_out/BENCH_quant_simd.smoke.json (smoke mode)"),
+            Err(e) => println!("# could not write smoke output: {e}"),
+        }
+        return;
+    }
+
+    // merge into the committed baseline: keep the last KEEP_RUNS records
+    let mut runs: Vec<Json> = std::fs::read_to_string(OUT_PATH)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.get("runs").and_then(|r| r.as_arr().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    runs.push(run);
+    let excess = runs.len().saturating_sub(KEEP_RUNS);
+    let runs = runs.split_off(excess);
+    let note = "quant throughput baseline; regenerate with \
+                `cargo bench --bench quant_simd --features simd` (and once without \
+                --features simd for the scalar/chunked-only arms)";
+    let out = Json::obj(vec![
+        ("_note", Json::Str(note.to_string())),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match std::fs::write(OUT_PATH, out.to_string()) {
+        Ok(()) => println!("# appended run to BENCH_quant_simd.json (repo root)"),
+        Err(e) => println!("# could not write BENCH_quant_simd.json: {e}"),
+    }
+}

@@ -362,6 +362,9 @@ impl SideState {
                     side.codec.matrix_state_bytes(n)
                 );
             }
+            // byte-level ingest validation: out-of-range codes / non-finite
+            // scales are a descriptive error, not a silent 0.0 decode
+            side.codec.validate_payload(e)?;
             Ok(())
         };
         match &side.arm {

@@ -5,12 +5,66 @@
 //! Used (a) natively by the error-analysis harness (8-bit rows of Table 7
 //! never touch artifacts) and (b) by the coordinator to create/unpack the
 //! packed state buffers it feeds the artifacts.
+//!
+//! Three interchangeable encode/decode arms share one contract:
+//!  * **scalar** — the reference implementation, one element at a time;
+//!  * **chunked** — branch-free block lanes that auto-vectorize;
+//!  * **simd** (`--features simd`) — explicit SSE2/SWAR lanes in
+//!    `quant::simd`.
+//!
+//! The property suite asserts scalar == chunked == SIMD *bit-for-bit*
+//! (packed bytes, scales, decoded values) at every bitwidth, mapping, block
+//! size, and odd length; `quantize`/`dequantize` dispatch to the fastest
+//! arm compiled in.
+//!
+//! Non-finite inputs are a typed error, not silent corruption: a NaN
+//! element would vanish from the absmax fold (`f32::max` drops NaN) and
+//! encode as code 0, and an Inf element would drive `scale = inf`,
+//! `inv = 0`, collapsing its whole block to `nearest(0.0)`. Every encoder
+//! arm therefore gates each block on finiteness and returns
+//! [`QuantError::NonFinite`] (the infallible wrappers panic with the same
+//! message — fail loud, never corrupt).
 
 use super::codebook::Boundaries;
-use super::pack::{pack_bits, packed_len, unpack_bits, unpack_bits_into};
+use super::pack::{pack_bits_chunked, packed_len, unpack_bits, unpack_bits_into_chunked};
 
 /// Default quantization block length (paper §3.3; matches the kernels).
 pub const BLOCK: usize = 64;
+
+/// Smallest divisor block [`matrix_layout`] will accept before falling back
+/// to per-column chunking: a tiny block means one f32 scale per few
+/// elements, which defeats the Appendix-G memory arithmetic (a 1-element
+/// block stores *more* than fp32).
+pub const MATRIX_BLOCK_MIN: usize = 8;
+
+/// Typed quantization error.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QuantError {
+    /// A block contained NaN or ±Inf; encoding it would silently corrupt
+    /// the whole block (see the module docs), so the encoder refuses.
+    NonFinite {
+        /// Index of the offending block (scale slot).
+        block: usize,
+        /// Flat element index of the first non-finite value.
+        index: usize,
+        /// The offending value (NaN or ±Inf).
+        value: f32,
+    },
+}
+
+impl std::fmt::Display for QuantError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QuantError::NonFinite { block, index, value } => write!(
+                f,
+                "non-finite value {value} at element {index} (block {block}): \
+                 refusing to quantize — NaN/Inf would silently corrupt the block"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for QuantError {}
 
 /// Quantized vector: packed codes + one f32 scale per block.
 #[derive(Debug, Clone)]
@@ -25,6 +79,14 @@ pub struct QuantizedVec {
     pub bits: u32,
     /// Block length the scales apply to.
     pub block: usize,
+    /// Column-chunked layout: `Some(c)` means the flat data is a sequence
+    /// of length-`c` columns and blocks restart at every column boundary
+    /// (each column ends with its own partial block). `None` is the flat
+    /// layout: consecutive blocks of `block` with at most one trailing
+    /// partial. [`matrix_layout`] picks `Some` only when no usable divisor
+    /// block exists (e.g. prime n > 64), keeping §3.3's one-column-per-block
+    /// contract on every matrix shape.
+    pub col: Option<usize>,
 }
 
 impl QuantizedVec {
@@ -39,72 +101,309 @@ impl QuantizedVec {
     }
 }
 
-/// Quantize with blocks of `block` consecutive elements. Matrix callers
-/// arrange column-major layout so blocks stay within one column of an
-/// eigenvector matrix (paper §3.3); a trailing partial block (flat
-/// first-order moments whose length is not a block multiple) carries its
-/// own scale.
+/// Visit every quantization block of a layout as `(block_index, start,
+/// len)`, stopping at the first error. With `col: Some(c)` blocks restart
+/// at each column boundary; `c` must divide `len`.
+fn try_for_blocks<E>(
+    len: usize,
+    block: usize,
+    col: Option<usize>,
+    mut f: impl FnMut(usize, usize, usize) -> Result<(), E>,
+) -> Result<(), E> {
+    if len == 0 {
+        return Ok(());
+    }
+    let seg = match col {
+        Some(c) => {
+            assert!(c > 0 && len % c == 0, "column {c} must divide len {len}");
+            c
+        }
+        None => len,
+    };
+    let mut bi = 0usize;
+    let mut seg_start = 0usize;
+    while seg_start < len {
+        let seg_end = (seg_start + seg).min(len);
+        let mut s = seg_start;
+        while s < seg_end {
+            let blen = block.min(seg_end - s);
+            f(bi, s, blen)?;
+            bi += 1;
+            s += blen;
+        }
+        seg_start = seg_end;
+    }
+    Ok(())
+}
+
+/// Infallible [`try_for_blocks`].
+fn for_blocks(
+    len: usize,
+    block: usize,
+    col: Option<usize>,
+    mut f: impl FnMut(usize, usize, usize),
+) {
+    let _ = try_for_blocks(len, block, col, |bi, s, l| {
+        f(bi, s, l);
+        Ok::<(), std::convert::Infallible>(())
+    });
+}
+
+/// Number of scales a layout produces (exact, including partial blocks).
+pub fn layout_scale_count(len: usize, block: usize, col: Option<usize>) -> usize {
+    match col {
+        None => len.div_ceil(block),
+        Some(c) => (len / c) * c.div_ceil(block),
+    }
+}
+
+/// Locate the first non-finite element of a block for the error report.
+fn nonfinite_err(blk: &[f32], block: usize, start: usize) -> QuantError {
+    for (i, &v) in blk.iter().enumerate() {
+        if !v.is_finite() {
+            return QuantError::NonFinite { block, index: start + i, value: v };
+        }
+    }
+    QuantError::NonFinite { block, index: start, value: f32::NAN }
+}
+
+/// Branch-free finiteness gate: `v * 0.0` is ±0.0 for every finite `v` and
+/// NaN for NaN/±Inf, and NaN propagates through the sum — so the fold is
+/// 0.0 iff the block is entirely finite (LLVM cannot fold `x * 0.0` away
+/// without fast-math, which this crate never enables).
+fn block_is_finite(blk: &[f32]) -> bool {
+    let mut nf = 0.0f32;
+    for &v in blk {
+        nf += v * 0.0;
+    }
+    nf == 0.0
+}
+
+// ---------------------------------------------------------------------------
+// encode arms
+// ---------------------------------------------------------------------------
+
+/// Quantize with blocks of `block` consecutive elements — dispatches to the
+/// SIMD arm when compiled with `--features simd`, the chunked arm
+/// otherwise (all arms are bit-identical). Matrix callers arrange
+/// column-major layout so blocks stay within one column of an eigenvector
+/// matrix (paper §3.3); a trailing partial block (flat first-order moments
+/// whose length is not a block multiple) carries its own scale.
 ///
-/// This is the chunked encode hot path: per block the elements are
-/// normalized into a flat block-major scratch lane, codes come from the
-/// branch-free [`Boundaries::nearest_block`] kernel, and the whole code
-/// vector is packed in one batched [`pack_bits`] call. Bit-identical to
-/// [`quantize_scalar`] (property-tested), just auto-vectorizable.
+/// # Panics
+/// On non-finite input (NaN/±Inf), with the [`QuantError::NonFinite`]
+/// message. Use [`try_quantize`] to handle the error instead.
 pub fn quantize(x: &[f32], cb: &[f32], bits: u32, block: usize) -> QuantizedVec {
+    try_quantize(x, cb, bits, block).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible [`quantize`]: returns [`QuantError::NonFinite`] instead of
+/// silently corrupting blocks that contain NaN/±Inf.
+pub fn try_quantize(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+) -> Result<QuantizedVec, QuantError> {
+    try_quantize_layout(x, cb, bits, block, None)
+}
+
+/// [`try_quantize`] with an explicit column layout (see
+/// [`QuantizedVec::col`]) — the matrix entry point.
+pub fn try_quantize_layout(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    col: Option<usize>,
+) -> Result<QuantizedVec, QuantError> {
+    #[cfg(feature = "simd")]
+    {
+        try_quantize_simd_layout(x, cb, bits, block, col)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        try_quantize_chunked_layout(x, cb, bits, block, col)
+    }
+}
+
+/// Chunked encode arm (infallible wrapper — panics on non-finite input).
+pub fn quantize_chunked(x: &[f32], cb: &[f32], bits: u32, block: usize) -> QuantizedVec {
+    try_quantize_chunked(x, cb, bits, block).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Chunked encode arm: per block the elements are normalized into a flat
+/// block-major scratch lane, codes come from the branch-free
+/// [`Boundaries::nearest_block`] kernel, and the whole code vector is
+/// packed in one batched [`pack_bits_chunked`] call. Bit-identical to
+/// [`try_quantize_scalar`] (property-tested), just auto-vectorizable.
+pub fn try_quantize_chunked(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+) -> Result<QuantizedVec, QuantError> {
+    try_quantize_chunked_layout(x, cb, bits, block, None)
+}
+
+/// [`try_quantize_chunked`] with an explicit column layout.
+pub fn try_quantize_chunked_layout(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    col: Option<usize>,
+) -> Result<QuantizedVec, QuantError> {
     assert!(block >= 1, "block must be >= 1");
     assert!(cb.len() >= (1usize << bits));
     let bounds = Boundaries::new(cb);
     let mut codes = vec![0u8; x.len()];
-    let mut scales = Vec::with_capacity(x.len().div_ceil(block));
+    let mut scales = Vec::with_capacity(layout_scale_count(x.len(), block, col));
     let mut normed = vec![0.0f32; block.min(x.len())];
-    for (blk, cblk) in x.chunks(block).zip(codes.chunks_mut(block)) {
+    try_for_blocks(x.len(), block, col, |bi, start, blen| {
+        let blk = &x[start..start + blen];
+        if !block_is_finite(blk) {
+            return Err(nonfinite_err(blk, bi, start));
+        }
         let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let scale = if absmax > 0.0 { absmax } else { 1.0 };
         let inv = 1.0 / scale;
         scales.push(scale);
         // same arithmetic as the scalar path (v * inv, then the strict
         // midpoint compare) so codes cannot drift by rounding
-        let lane = &mut normed[..blk.len()];
+        let lane = &mut normed[..blen];
         for (n, &v) in lane.iter_mut().zip(blk) {
             *n = v * inv;
         }
-        bounds.nearest_block(lane, cblk);
-    }
-    QuantizedVec {
-        packed: pack_bits(&codes, bits),
+        bounds.nearest_block(lane, &mut codes[start..start + blen]);
+        Ok(())
+    })?;
+    Ok(QuantizedVec {
+        packed: pack_bits_chunked(&codes, bits),
         scales,
         len: x.len(),
         bits,
         block,
-    }
+        col,
+    })
+}
+
+/// SIMD encode arm (infallible wrapper — panics on non-finite input).
+#[cfg(feature = "simd")]
+pub fn quantize_simd(x: &[f32], cb: &[f32], bits: u32, block: usize) -> QuantizedVec {
+    try_quantize_simd(x, cb, bits, block).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// SIMD encode arm: absmax / finiteness / normalize run through the f32
+/// lanes in [`simd`](super::simd), nearest codes through
+/// [`Boundaries::nearest_block_simd`], packing through the SIMD/SWAR pack
+/// lanes. Bit-identical to the scalar and chunked arms (property-tested).
+#[cfg(feature = "simd")]
+pub fn try_quantize_simd(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+) -> Result<QuantizedVec, QuantError> {
+    try_quantize_simd_layout(x, cb, bits, block, None)
+}
+
+/// [`try_quantize_simd`] with an explicit column layout.
+#[cfg(feature = "simd")]
+pub fn try_quantize_simd_layout(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    col: Option<usize>,
+) -> Result<QuantizedVec, QuantError> {
+    use super::simd;
+    assert!(block >= 1, "block must be >= 1");
+    assert!(cb.len() >= (1usize << bits));
+    let bounds = Boundaries::new(cb);
+    let mut codes = vec![0u8; x.len()];
+    let mut scales = Vec::with_capacity(layout_scale_count(x.len(), block, col));
+    let mut normed = vec![0.0f32; block.min(x.len())];
+    try_for_blocks(x.len(), block, col, |bi, start, blen| {
+        let blk = &x[start..start + blen];
+        if !simd::all_finite(blk) {
+            return Err(nonfinite_err(blk, bi, start));
+        }
+        let absmax = simd::absmax(blk);
+        let scale = if absmax > 0.0 { absmax } else { 1.0 };
+        let inv = 1.0 / scale;
+        scales.push(scale);
+        let lane = &mut normed[..blen];
+        simd::normalize_into(blk, inv, lane);
+        bounds.nearest_block_simd(lane, &mut codes[start..start + blen]);
+        Ok(())
+    })?;
+    Ok(QuantizedVec {
+        packed: simd::pack_bits_simd(&codes, bits),
+        scales,
+        len: x.len(),
+        bits,
+        block,
+        col,
+    })
 }
 
 /// Reference scalar encoder (the pre-chunking implementation): one
 /// element at a time through [`Boundaries::nearest`]. Kept as the
-/// equivalence baseline for the chunked [`quantize`] — property tests
-/// assert bit-identical output, `hotpath_micro` benchmarks the gap.
+/// equivalence baseline for the chunked and SIMD arms — property tests
+/// assert bit-identical output, the throughput harness benchmarks the gap.
+///
+/// # Panics
+/// On non-finite input; use [`try_quantize_scalar`] to handle the error.
 pub fn quantize_scalar(x: &[f32], cb: &[f32], bits: u32, block: usize) -> QuantizedVec {
+    try_quantize_scalar(x, cb, bits, block).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible [`quantize_scalar`].
+pub fn try_quantize_scalar(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+) -> Result<QuantizedVec, QuantError> {
+    try_quantize_scalar_layout(x, cb, bits, block, None)
+}
+
+/// [`try_quantize_scalar`] with an explicit column layout.
+pub fn try_quantize_scalar_layout(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    col: Option<usize>,
+) -> Result<QuantizedVec, QuantError> {
     assert!(block >= 1, "block must be >= 1");
     assert!(cb.len() >= (1usize << bits));
-    let mut codes = Vec::with_capacity(x.len());
-    let mut scales = Vec::with_capacity(x.len().div_ceil(block));
+    let mut codes = vec![0u8; x.len()];
+    let mut scales = Vec::with_capacity(layout_scale_count(x.len(), block, col));
     let bounds = Boundaries::new(cb);
-    for blk in x.chunks(block) {
+    try_for_blocks(x.len(), block, col, |bi, start, blen| {
+        let blk = &x[start..start + blen];
+        if !block_is_finite(blk) {
+            return Err(nonfinite_err(blk, bi, start));
+        }
         let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let scale = if absmax > 0.0 { absmax } else { 1.0 };
         let inv = 1.0 / scale;
         scales.push(scale);
-        for &v in blk {
-            codes.push(bounds.nearest(v * inv));
+        for (c, &v) in codes[start..start + blen].iter_mut().zip(blk) {
+            *c = bounds.nearest(v * inv);
         }
-    }
-    QuantizedVec {
-        packed: pack_bits(&codes, bits),
+        Ok(())
+    })?;
+    Ok(QuantizedVec {
+        packed: pack_bits_chunked(&codes, bits),
         scales,
         len: x.len(),
         bits,
         block,
-    }
+        col,
+    })
 }
 
 /// Stochastic-rounding quantize (SOLO / "Pushing the Limits of Low-Bit
@@ -115,6 +414,9 @@ pub fn quantize_scalar(x: &[f32], cb: &[f32], bits: u32, block: usize) -> Quanti
 /// RNG — fixed seed ⇒ exactly reproducible codes ([`StochasticRound`]
 /// derives one stream per buffer).
 ///
+/// # Panics
+/// On non-finite input; use [`try_quantize_stochastic`] to handle it.
+///
 /// [`StochasticRound`]: super::codec::StochasticRound
 pub fn quantize_stochastic(
     x: &[f32],
@@ -123,81 +425,207 @@ pub fn quantize_stochastic(
     block: usize,
     rng: &mut crate::util::rng::Rng,
 ) -> QuantizedVec {
+    try_quantize_stochastic(x, cb, bits, block, rng).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible [`quantize_stochastic`]: same finiteness gate as the
+/// deterministic arms. The RNG stream position is only advanced for
+/// blocks that pass the gate, and the error is returned before any draw
+/// for the offending block.
+pub fn try_quantize_stochastic(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Result<QuantizedVec, QuantError> {
     assert!(block >= 1, "block must be >= 1");
     assert!(cb.len() >= (1usize << bits));
     let bounds = Boundaries::new(cb);
-    let mut codes = Vec::with_capacity(x.len());
+    let mut codes = vec![0u8; x.len()];
     let mut scales = Vec::with_capacity(x.len().div_ceil(block));
-    for blk in x.chunks(block) {
+    try_for_blocks(x.len(), block, None, |bi, start, blen| {
+        let blk = &x[start..start + blen];
+        if !block_is_finite(blk) {
+            return Err(nonfinite_err(blk, bi, start));
+        }
         let absmax = blk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
         let scale = if absmax > 0.0 { absmax } else { 1.0 };
         let inv = 1.0 / scale;
         scales.push(scale);
-        for &v in blk {
+        for (c, &v) in codes[start..start + blen].iter_mut().zip(blk) {
             let (lo, hi, p) = bounds.stochastic_pair(v * inv);
             let up = (rng.uniform() as f32) < p;
-            codes.push(if up { hi } else { lo });
+            *c = if up { hi } else { lo };
         }
-    }
-    QuantizedVec {
-        packed: pack_bits(&codes, bits),
+        Ok(())
+    })?;
+    Ok(QuantizedVec {
+        packed: pack_bits_chunked(&codes, bits),
         scales,
         len: x.len(),
         bits,
         block,
+        col: None,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// decode arms
+// ---------------------------------------------------------------------------
+
+/// Dequantize: R(codes) ⊙ scales — dispatches to the SIMD arm when
+/// compiled with `--features simd`, the chunked arm otherwise.
+pub fn dequantize(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
+    #[cfg(feature = "simd")]
+    {
+        dequantize_simd(q, cb)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        dequantize_chunked(q, cb)
     }
 }
 
-/// Dequantize: R(codes) ⊙ scales.
-///
-/// Chunked decode hot path: batched unpack into a flat code scratch, then a
+/// Chunked decode arm: batched unpack into a flat code scratch, then a
 /// per-block multiply lane against a 256-entry lookup table (a `u8` code
 /// indexes it with no bounds check, so the loop is branch-free and
 /// auto-vectorizable). No per-element `i / block` division, no `Vec::push`.
-pub fn dequantize(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
+pub fn dequantize_chunked(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(q.scales.len(), layout_scale_count(q.len, q.block, q.col));
     let mut table = [0.0f32; 256];
     let k = cb.len().min(256);
     table[..k].copy_from_slice(&cb[..k]);
     let mut codes = vec![0u8; q.len];
-    unpack_bits_into(&q.packed, q.bits, &mut codes);
+    unpack_bits_into_chunked(&q.packed, q.bits, &mut codes);
     let mut out = vec![0.0f32; q.len];
-    for ((oblk, cblk), &scale) in
-        out.chunks_mut(q.block).zip(codes.chunks(q.block)).zip(&q.scales)
-    {
-        for (o, &c) in oblk.iter_mut().zip(cblk) {
+    for_blocks(q.len, q.block, q.col, |bi, start, blen| {
+        let scale = q.scales[bi];
+        for (o, &c) in out[start..start + blen].iter_mut().zip(&codes[start..start + blen]) {
             *o = table[c as usize] * scale;
         }
-    }
+    });
+    out
+}
+
+/// SIMD decode arm: SIMD/SWAR unpack lanes, then the 4-wide
+/// [`decode_block`](super::simd::decode_block) multiply per block.
+/// Bit-identical to the chunked arm.
+#[cfg(feature = "simd")]
+pub fn dequantize_simd(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
+    use super::simd;
+    debug_assert_eq!(q.scales.len(), layout_scale_count(q.len, q.block, q.col));
+    let mut table = [0.0f32; 256];
+    let k = cb.len().min(256);
+    table[..k].copy_from_slice(&cb[..k]);
+    let mut codes = vec![0u8; q.len];
+    simd::unpack_bits_into_simd(&q.packed, q.bits, &mut codes);
+    let mut out = vec![0.0f32; q.len];
+    for_blocks(q.len, q.block, q.col, |bi, start, blen| {
+        simd::decode_block(
+            &codes[start..start + blen],
+            &table,
+            q.scales[bi],
+            &mut out[start..start + blen],
+        );
+    });
     out
 }
 
 /// Reference scalar decoder (the pre-chunking implementation) — the
-/// equivalence baseline for the chunked [`dequantize`].
+/// equivalence baseline for the chunked and SIMD decode arms.
 pub fn dequantize_scalar(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(q.scales.len(), layout_scale_count(q.len, q.block, q.col));
     let codes = q.codes_u8();
-    let mut out = Vec::with_capacity(q.len);
-    for (i, &c) in codes.iter().enumerate() {
-        out.push(cb[c as usize] * q.scales[i / q.block]);
-    }
+    let mut out = vec![0.0f32; q.len];
+    for_blocks(q.len, q.block, q.col, |bi, start, blen| {
+        let scale = q.scales[bi];
+        for (o, &c) in out[start..start + blen].iter_mut().zip(&codes[start..start + blen]) {
+            *o = cb[c as usize] * scale;
+        }
+    });
     out
 }
 
+// ---------------------------------------------------------------------------
+// matrix layout
+// ---------------------------------------------------------------------------
+
+/// Pick the block layout for an order-`n` matrix quantized down its
+/// columns with preferred block length `pref` (normally [`BLOCK`]):
+///
+/// * `n <= pref` → one block per column (`(n, None)`), as before;
+/// * otherwise the **largest divisor of `n` that is ≤ `pref`**, so blocks
+///   tile columns exactly (`n = 128 → 64`, `96 → 48`, `100 → 50`) and the
+///   flat layout stays identical to the historical one whenever
+///   `pref` already divides `n`;
+/// * if the best divisor is degenerate (< [`MATRIX_BLOCK_MIN`], e.g. a
+///   prime `n = 101`) → per-column chunking (`(pref, Some(n))`): blocks of
+///   `pref` restart at every column boundary and each column ends with its
+///   own partial block.
+///
+/// Every choice keeps the §3.3 contract — no block ever straddles a column
+/// boundary — for *all* `n`, where the old `min(64, n)` rule panicked
+/// (n = 100) or silently straddled columns (n = 96).
+pub fn matrix_layout(n: usize, pref: usize) -> (usize, Option<usize>) {
+    let pref = pref.max(1);
+    if n == 0 {
+        return (pref, None);
+    }
+    if n <= pref {
+        return (n, None);
+    }
+    let mut best = 1usize;
+    for d in 1..=pref {
+        if n % d == 0 {
+            best = d;
+        }
+    }
+    if best >= MATRIX_BLOCK_MIN {
+        (best, None)
+    } else {
+        (pref, Some(n))
+    }
+}
+
 /// Quantize a square order-n matrix (row-major) with blocks running down
-/// columns (§3.3): we quantize the transpose's rows. Block = min(64, n).
+/// columns (§3.3): we quantize the transpose's rows, with the block layout
+/// chosen by [`matrix_layout`] so blocks never straddle columns at any `n`.
+///
+/// # Panics
+/// On non-finite input; use [`try_quantize_matrix_cols`] to handle it.
 pub fn quantize_matrix_cols(a: &[f32], n: usize, cb: &[f32], bits: u32) -> QuantizedVec {
+    try_quantize_matrix_cols(a, n, cb, bits).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// Fallible [`quantize_matrix_cols`] (preferred block = [`BLOCK`]).
+pub fn try_quantize_matrix_cols(
+    a: &[f32],
+    n: usize,
+    cb: &[f32],
+    bits: u32,
+) -> Result<QuantizedVec, QuantError> {
+    try_quantize_matrix_cols_with(a, n, cb, bits, BLOCK)
+}
+
+/// [`try_quantize_matrix_cols`] with an explicit preferred block length.
+pub fn try_quantize_matrix_cols_with(
+    a: &[f32],
+    n: usize,
+    cb: &[f32],
+    bits: u32,
+    pref: usize,
+) -> Result<QuantizedVec, QuantError> {
     assert_eq!(a.len(), n * n);
-    let block = BLOCK.min(n);
-    // matrices must fill whole blocks (flat vectors may end with a partial
-    // block, but the (nblocks, block) artifact grid cannot)
-    assert_eq!(a.len() % block, 0, "len {} % block {block}", a.len());
-    // transpose to column-major so each block of 64 is within a column
+    let (block, col) = matrix_layout(n, pref);
+    // transpose to column-major so blocks run down columns
     let mut t = vec![0.0f32; n * n];
     for i in 0..n {
         for j in 0..n {
             t[j * n + i] = a[i * n + j];
         }
     }
-    quantize(&t, cb, bits, block)
+    try_quantize_layout(&t, cb, bits, block, col)
 }
 
 /// Inverse of `quantize_matrix_cols`: returns row-major order-n matrix.
@@ -213,10 +641,14 @@ pub fn dequantize_matrix_cols(q: &QuantizedVec, n: usize, cb: &[f32]) -> Vec<f32
 }
 
 /// Memory model: bytes for an order-n matrix state at `bits` with per-block
-/// f32 scales — the "32/(4+0.5) ≈ 7x" arithmetic of Appendix G.
-pub fn matrix_state_bytes(n: usize, bits: u32, block: usize) -> usize {
+/// f32 scales — the "32/(4+0.5) ≈ 7x" arithmetic of Appendix G. `pref` is
+/// the *preferred* block; the actual layout (and so the scale count)
+/// follows [`matrix_layout`], keeping this in lock-step with
+/// [`quantize_matrix_cols`] on every shape.
+pub fn matrix_state_bytes(n: usize, bits: u32, pref: usize) -> usize {
     let elems = n * n;
-    packed_len(elems, bits) + elems.div_ceil(block.min(n).max(1)) * 4
+    let (block, col) = matrix_layout(n, pref);
+    packed_len(elems, bits) + layout_scale_count(elems, block, col) * 4
 }
 
 #[cfg(test)]
@@ -303,6 +735,85 @@ mod tests {
     }
 
     #[test]
+    fn matrix_layout_picks_divisors_then_columns() {
+        assert_eq!(matrix_layout(64, 64), (64, None));
+        assert_eq!(matrix_layout(32, 64), (32, None));
+        assert_eq!(matrix_layout(128, 64), (64, None)); // historical layout kept
+        assert_eq!(matrix_layout(96, 64), (48, None));
+        assert_eq!(matrix_layout(100, 64), (50, None));
+        assert_eq!(matrix_layout(101, 64), (64, Some(101))); // prime: per-column
+        assert_eq!(matrix_layout(0, 64), (64, None));
+        // scale accounting follows the layout
+        assert_eq!(layout_scale_count(96 * 96, 48, None), 96 * 2);
+        assert_eq!(layout_scale_count(101 * 101, 64, Some(101)), 101 * 2);
+    }
+
+    #[test]
+    fn matrix_cols_column_blocking_regression_non_multiple_of_64() {
+        // the old `block = min(64, n)` rule panicked at n=100 and straddled
+        // column boundaries at n=96 — a huge entry in column 0 must never
+        // leak into any other column, at every layout class
+        let cb = codebook(Mapping::Linear2, 4);
+        for n in [96usize, 100, 101] {
+            let mut a = vec![0.01f32; n * n];
+            a[0] = 100.0; // a[0,0]: column 0 only
+            let q = quantize_matrix_cols(&a, n, &cb, 4);
+            assert_eq!(
+                q.state_bytes(),
+                matrix_state_bytes(n, 4, 64),
+                "n={n}: accounting out of sync"
+            );
+            let d = dequantize_matrix_cols(&q, n, &cb);
+            for i in 0..n {
+                for j in 1..n {
+                    assert!(
+                        (d[i * n + j] - 0.01).abs() < 0.005,
+                        "n={n} ({i},{j}): {} polluted by column 0",
+                        d[i * n + j]
+                    );
+                }
+            }
+            assert!((d[0] - 100.0).abs() < 2.0, "n={n}: lost the spike: {}", d[0]);
+        }
+    }
+
+    #[test]
+    fn nonfinite_inputs_are_typed_errors_in_every_encoder() {
+        let cb = codebook(Mapping::Linear2, 4);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for pos in [0usize, 63, 64, 99] {
+                let mut x = vec![0.25f32; 100];
+                x[pos] = bad;
+                let expect_block = pos / 64;
+                let check = |r: Result<QuantizedVec, QuantError>, arm: &str| match r {
+                    Err(QuantError::NonFinite { block, index, .. }) => {
+                        assert_eq!(index, pos, "{arm}: wrong index for {bad} at {pos}");
+                        assert_eq!(block, expect_block, "{arm}: wrong block");
+                    }
+                    Ok(_) => panic!("{arm}: accepted {bad} at {pos}"),
+                };
+                check(try_quantize(&x, &cb, 4, 64), "dispatch");
+                check(try_quantize_chunked(&x, &cb, 4, 64), "chunked");
+                check(try_quantize_scalar(&x, &cb, 4, 64), "scalar");
+                #[cfg(feature = "simd")]
+                check(try_quantize_simd(&x, &cb, 4, 64), "simd");
+                let mut rng = crate::util::rng::Rng::new(7);
+                check(try_quantize_stochastic(&x, &cb, 4, 64, &mut rng), "stochastic");
+                // the matrix path transposes, so only assert that it refuses
+                assert!(
+                    try_quantize_matrix_cols(&x, 10, &cb, 4).is_err(),
+                    "matrix accepted {bad} at {pos}"
+                );
+            }
+        }
+        // the error message is descriptive and the infallible wrapper panics
+        let e = try_quantize(&[f32::NAN], &cb, 4, 64).unwrap_err();
+        assert!(e.to_string().contains("non-finite"), "{e}");
+        let caught = std::panic::catch_unwind(|| quantize(&[f32::INFINITY], &cb, 4, 64));
+        assert!(caught.is_err(), "infallible wrapper must fail loud");
+    }
+
+    #[test]
     fn three_bit_roundtrip() {
         let cb = codebook(Mapping::Dt, 3);
         prop::check("3-bit roundtrip stores 3 bits", 10, |rng| {
@@ -326,31 +837,80 @@ mod tests {
     }
 
     #[test]
-    fn chunked_matches_scalar_bit_for_bit() {
-        // the chunked encode/decode kernels are a pure performance rewrite:
+    fn all_arms_bit_identical() {
+        // the chunked and SIMD kernels are pure performance rewrites:
         // packed bytes, scales, and decoded values must be identical to the
-        // scalar reference at every bitwidth, block size, and odd length
+        // scalar reference at every bitwidth, block size, odd length, and
+        // column layout — the three-way equivalence contract
         for (mapping, bits) in
             [(Mapping::Linear2, 4u32), (Mapping::Dt, 3), (Mapping::Dt, 8), (Mapping::Dt, 2)]
         {
             let cb = codebook(mapping, bits);
-            prop::check(&format!("chunked == scalar {mapping:?}/{bits}"), 15, |rng| {
+            prop::check(&format!("arms identical {mapping:?}/{bits}"), 15, |rng| {
                 let n = 1 + rng.below(400);
                 let block = [7, 32, 64, 100][rng.below(4)];
                 let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
-                let q = quantize(&x, &cb, bits, block);
-                let qs = quantize_scalar(&x, &cb, bits, block);
-                if q.packed != qs.packed || q.scales != qs.scales {
-                    return Err(format!("encode diverged at n={n} block={block}"));
+                let qs = try_quantize_scalar(&x, &cb, bits, block).unwrap();
+                let qc = try_quantize_chunked(&x, &cb, bits, block).unwrap();
+                let qd = try_quantize(&x, &cb, bits, block).unwrap();
+                let same = |a: &QuantizedVec, b: &QuantizedVec| {
+                    a.packed == b.packed && a.scales == b.scales
+                };
+                if !same(&qc, &qs) {
+                    return Err(format!("chunked diverged at n={n} block={block}"));
                 }
-                let d = dequantize(&q, &cb);
-                let ds = dequantize_scalar(&qs, &cb);
+                if !same(&qd, &qs) {
+                    return Err(format!("dispatch diverged at n={n} block={block}"));
+                }
+                #[cfg(feature = "simd")]
+                {
+                    let qv = try_quantize_simd(&x, &cb, bits, block).unwrap();
+                    if !same(&qv, &qs) {
+                        return Err(format!("simd diverged at n={n} block={block}"));
+                    }
+                }
                 let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
-                if bits_of(&d) != bits_of(&ds) {
-                    return Err(format!("decode diverged at n={n} block={block}"));
+                let ds = bits_of(&dequantize_scalar(&qs, &cb));
+                if bits_of(&dequantize_chunked(&qc, &cb)) != ds {
+                    return Err(format!("chunked decode diverged at n={n} block={block}"));
+                }
+                if bits_of(&dequantize(&qd, &cb)) != ds {
+                    return Err(format!("dispatch decode diverged at n={n} block={block}"));
+                }
+                #[cfg(feature = "simd")]
+                if bits_of(&dequantize_simd(&qc, &cb)) != ds {
+                    return Err(format!("simd decode diverged at n={n} block={block}"));
                 }
                 Ok(())
             });
+        }
+    }
+
+    #[test]
+    fn column_layout_arms_bit_identical() {
+        // the per-column fallback layout (prime n) must also be identical
+        // across arms, including partial blocks at every column end
+        let cb = codebook(Mapping::Dt, 4);
+        for n in [5usize, 101] {
+            let mut rng = crate::util::rng::Rng::new(21);
+            let x: Vec<f32> = (0..n * n).map(|_| rng.normal_f32()).collect();
+            let (block, col) = matrix_layout(n, 64);
+            let qs = try_quantize_scalar_layout(&x, &cb, 4, block, col).unwrap();
+            let qc = try_quantize_chunked_layout(&x, &cb, 4, block, col).unwrap();
+            assert_eq!(qs.packed, qc.packed, "n={n}");
+            assert_eq!(qs.scales, qc.scales, "n={n}");
+            #[cfg(feature = "simd")]
+            {
+                let qv = try_quantize_simd_layout(&x, &cb, 4, block, col).unwrap();
+                assert_eq!(qs.packed, qv.packed, "n={n} simd");
+                assert_eq!(qs.scales, qv.scales, "n={n} simd");
+            }
+            let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(
+                bits_of(&dequantize_chunked(&qc, &cb)),
+                bits_of(&dequantize_scalar(&qs, &cb)),
+                "n={n} decode"
+            );
         }
     }
 

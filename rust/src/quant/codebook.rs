@@ -192,6 +192,27 @@ impl Boundaries {
         }
     }
 
+    /// SIMD arm of [`Boundaries::nearest_block`] (`--features simd`): the
+    /// small-book counting kernel runs 16 elements per step through
+    /// [`count_below_mids`](super::simd::count_below_mids), followed by the
+    /// same duplicate-run remap pass; wide books keep the per-element binary
+    /// search (8 ordered probes don't vectorize usefully). Bit-identical to
+    /// the chunked arm — the count is exactly `partition_point(|m| m < x)`.
+    #[cfg(feature = "simd")]
+    pub fn nearest_block_simd(&self, xs: &[f32], codes: &mut [u8]) {
+        debug_assert_eq!(xs.len(), codes.len());
+        if self.mids.len() <= COUNTING_MIDS_MAX {
+            super::simd::count_below_mids(&self.mids, xs, codes);
+            for c in codes.iter_mut() {
+                *c = self.remap[*c as usize];
+            }
+        } else {
+            for (c, &x) in codes.iter_mut().zip(xs) {
+                *c = self.nearest(x);
+            }
+        }
+    }
+
     /// Codebook neighbours bracketing `x` for stochastic rounding (against
     /// the book this `Boundaries` was built from): `(lo, hi, p)` where `p`
     /// is the probability of rounding *up* to `hi` (the distance fraction,
@@ -388,6 +409,34 @@ mod tests {
         let mut codes = [0u8; 7];
         b.nearest_block(&xs, &mut codes);
         assert!(codes.iter().all(|&c| c < 8), "{codes:?}");
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    fn nearest_block_simd_matches_chunked() {
+        use crate::util::prop;
+        for (mapping, bits) in [
+            (Mapping::Dt, 2u32),
+            (Mapping::Dt, 4),
+            (Mapping::Linear2, 4),
+            (Mapping::Linear2, 3),
+            (Mapping::Dt, 8),
+        ] {
+            let cb = codebook(mapping, bits);
+            let b = Boundaries::new(&cb);
+            prop::check(&format!("simd nearest_block {mapping:?}/{bits}"), 10, |rng| {
+                let n = 1 + rng.below(200);
+                let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.7) as f32).collect();
+                let mut chunked = vec![0u8; n];
+                let mut simd = vec![0u8; n];
+                b.nearest_block(&xs, &mut chunked);
+                b.nearest_block_simd(&xs, &mut simd);
+                if chunked != simd {
+                    return Err(format!("simd arm diverged at n={n}"));
+                }
+                Ok(())
+            });
+        }
     }
 
     #[test]

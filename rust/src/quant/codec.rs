@@ -23,7 +23,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use super::blockwise::{dequantize, quantize, quantize_stochastic, QuantizedVec, BLOCK};
+use super::blockwise::{
+    dequantize, matrix_layout, quantize, try_quantize, try_quantize_matrix_cols_with,
+    try_quantize_stochastic, QuantizedVec, BLOCK,
+};
 use super::codebook::{codebook, Mapping};
 use super::pack::{pack_bits, packed_len, unpack_bits};
 use crate::util::rng::Rng;
@@ -77,10 +80,40 @@ pub trait StateCodec: Send + Sync {
     fn state_bytes(&self, len: usize) -> usize;
 
     /// Encode a vector into this codec's storage format.
+    ///
+    /// Quantized codecs panic on non-finite input (silently corrupting the
+    /// block is never acceptable); use [`StateCodec::try_encode`] where the
+    /// caller can handle the error instead.
     fn encode(&self, x: &[f32]) -> EncodedVec;
+
+    /// Fallible [`StateCodec::encode`]: quantized codecs return a
+    /// [`QuantError::NonFinite`](super::QuantError) instead of panicking
+    /// when the input contains NaN/±Inf. Exact codecs never fail.
+    fn try_encode(&self, x: &[f32]) -> Result<EncodedVec> {
+        Ok(self.encode(x))
+    }
 
     /// Decode a payload produced by [`StateCodec::encode`].
     fn decode(&self, e: &EncodedVec) -> Vec<f32>;
+
+    /// Validate a serialized payload before adopting it (checkpoint
+    /// ingest): structural length, code range against the codebook, scale
+    /// finiteness. The default is the exact dense-length check; codebook
+    /// codecs override with the full check so a corrupted byte is a
+    /// descriptive error instead of silently decoding to 0.0 (the decode
+    /// table is zero-padded to 256 entries).
+    fn validate_payload(&self, e: &EncodedVec) -> Result<()> {
+        if e.bytes.len() != self.state_bytes(e.len) {
+            bail!(
+                "payload is {} bytes, codec {} expects {} for {} elems",
+                e.bytes.len(),
+                self.name(),
+                self.state_bytes(e.len),
+                e.len
+            );
+        }
+        Ok(())
+    }
 
     /// Upper bound on |decode(encode(x)) − x| for an element living in a
     /// block whose absmax is `absmax` (the codebook-resolution bound; exact
@@ -297,6 +330,7 @@ impl BlockQuant {
             len: e.len,
             bits: self.bits,
             block: self.block,
+            col: None,
         }
     }
 
@@ -327,8 +361,58 @@ impl StateCodec for BlockQuant {
         self.from_quantized(&quantize(x, &self.cb, self.bits, self.block))
     }
 
+    fn try_encode(&self, x: &[f32]) -> Result<EncodedVec> {
+        Ok(self.from_quantized(&try_quantize(x, &self.cb, self.bits, self.block)?))
+    }
+
     fn decode(&self, e: &EncodedVec) -> Vec<f32> {
         dequantize(&self.to_quantized(e), &self.cb)
+    }
+
+    fn validate_payload(&self, e: &EncodedVec) -> Result<()> {
+        // structural: packed codes, then whole little-endian f32 scales.
+        // matrix payloads may carry more scales than the flat layout (the
+        // block divides the order, or blocks restart per column), so the
+        // check is layout-shape, not an exact byte count.
+        let split = packed_len(e.len, self.bits);
+        let min_scales = usize::from(e.len > 0);
+        let structurally_ok =
+            e.bytes.len() >= split + 4 * min_scales && (e.bytes.len() - split) % 4 == 0;
+        if !structurally_ok {
+            bail!(
+                "payload is {} bytes, codec {} expects {} code bytes plus \
+                 whole f32 scales for {} elems",
+                e.bytes.len(),
+                self.name(),
+                split,
+                e.len
+            );
+        }
+        // code range: anything >= the codebook length would silently decode
+        // through the zero-padded region of the 256-entry table as 0.0
+        let codes = unpack_bits(&e.bytes[..split], self.bits, e.len);
+        if let Some((i, &c)) =
+            codes.iter().enumerate().find(|(_, &c)| (c as usize) >= self.cb.len())
+        {
+            bail!(
+                "corrupt payload: code {c} at element {i} out of range for \
+                 codec {} ({} codebook entries)",
+                self.name(),
+                self.cb.len()
+            );
+        }
+        // scales: a NaN/Inf scale corrupts its whole block on decode
+        for (bi, chunk) in e.bytes[split..].chunks_exact(4).enumerate() {
+            let s = f32::from_le_bytes(chunk.try_into().unwrap());
+            if !s.is_finite() {
+                bail!(
+                    "corrupt payload: non-finite scale {s} in block {bi} \
+                     (codec {})",
+                    self.name()
+                );
+            }
+        }
+        Ok(())
     }
 
     fn resolution(&self, absmax: f32) -> f32 {
@@ -345,26 +429,24 @@ impl StateCodec for BlockQuant {
         super::blockwise::matrix_state_bytes(n, self.bits, self.block)
     }
 
-    /// §3.3: blocks run down columns, so encode the transpose's rows.
+    /// §3.3: blocks run down columns, so encode the transpose's rows. The
+    /// block layout follows [`matrix_layout`] — identical to
+    /// [`quantize_matrix_cols`](super::quantize_matrix_cols) on every
+    /// order, including non-multiples of the block length.
     fn encode_matrix(&self, a: &[f32], n: usize) -> EncodedVec {
         debug_assert_eq!(a.len(), n * n);
-        let block = self.block.min(n);
-        // matrices must fill whole blocks — the artifact boundary is a
-        // rectangular (nblocks, block) grid (matches quantize_matrix_cols)
-        assert_eq!((n * n) % block, 0, "order {n}: {} % block {block}", n * n);
-        let mut t = vec![0.0f32; n * n];
-        for i in 0..n {
-            for j in 0..n {
-                t[j * n + i] = a[i * n + j];
-            }
-        }
-        self.from_quantized(&quantize(&t, &self.cb, self.bits, block))
+        self.from_quantized(
+            &try_quantize_matrix_cols_with(a, n, &self.cb, self.bits, self.block)
+                .unwrap_or_else(|e| panic!("{e}")),
+        )
     }
 
     fn decode_matrix(&self, e: &EncodedVec, n: usize) -> Vec<f32> {
         debug_assert_eq!(e.len, n * n);
         let mut q = self.to_quantized(e);
-        q.block = self.block.min(n);
+        let (block, col) = matrix_layout(n, self.block);
+        q.block = block;
+        q.col = col;
         let t = dequantize(&q, &self.cb);
         let mut a = vec![0.0f32; n * n];
         for j in 0..n {
@@ -434,6 +516,21 @@ impl StochasticRound {
     pub fn wrap(inner: BlockQuant, seed: u64) -> Self {
         Self { inner, seed, calls: AtomicU64::new(0) }
     }
+
+    /// One encode call = one derived rounding stream; the call counter
+    /// advances exactly once whether the encode succeeds or fails.
+    fn encode_inner(&self, x: &[f32]) -> Result<EncodedVec> {
+        let k = self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut base = Rng::new(self.seed);
+        let mut rng = base.fork(k);
+        Ok(self.inner.from_quantized(&try_quantize_stochastic(
+            x,
+            &self.inner.cb,
+            self.inner.bits,
+            self.inner.block,
+            &mut rng,
+        )?))
+    }
 }
 
 impl StateCodec for StochasticRound {
@@ -450,20 +547,19 @@ impl StateCodec for StochasticRound {
     }
 
     fn encode(&self, x: &[f32]) -> EncodedVec {
-        let k = self.calls.fetch_add(1, Ordering::Relaxed);
-        let mut base = Rng::new(self.seed);
-        let mut rng = base.fork(k);
-        self.inner.from_quantized(&quantize_stochastic(
-            x,
-            &self.inner.cb,
-            self.inner.bits,
-            self.inner.block,
-            &mut rng,
-        ))
+        self.encode_inner(x).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    fn try_encode(&self, x: &[f32]) -> Result<EncodedVec> {
+        self.encode_inner(x)
     }
 
     fn decode(&self, e: &EncodedVec) -> Vec<f32> {
         self.inner.decode(e)
+    }
+
+    fn validate_payload(&self, e: &EncodedVec) -> Result<()> {
+        self.inner.validate_payload(e)
     }
 
     fn resolution(&self, absmax: f32) -> f32 {
@@ -610,6 +706,7 @@ impl StateBuf {
                 self.codec.state_bytes(enc.len)
             );
         }
+        self.codec.validate_payload(&enc)?;
         self.enc = enc;
         Ok(())
     }

@@ -13,17 +13,28 @@ pub mod codec;
 pub mod pack;
 /// The per-buffer codec policy resolver (role → codec spec).
 pub mod policy;
+/// Explicit SIMD lanes for the hot loops (`--features simd`).
+#[cfg(feature = "simd")]
+pub mod simd;
 
 pub use blockwise::{
-    dequantize, dequantize_matrix_cols, dequantize_scalar, matrix_state_bytes, quantize,
-    quantize_matrix_cols, quantize_scalar, quantize_stochastic, QuantizedVec, BLOCK,
+    dequantize, dequantize_chunked, dequantize_matrix_cols, dequantize_scalar,
+    layout_scale_count, matrix_layout, matrix_state_bytes, quantize, quantize_chunked,
+    quantize_matrix_cols, quantize_scalar, quantize_stochastic, try_quantize,
+    try_quantize_chunked, try_quantize_matrix_cols, try_quantize_scalar,
+    try_quantize_stochastic, QuantError, QuantizedVec, BLOCK, MATRIX_BLOCK_MIN,
 };
+#[cfg(feature = "simd")]
+pub use blockwise::{dequantize_simd, quantize_simd, try_quantize_simd};
 pub use codebook::{codebook, runtime_codebook, Boundaries, Mapping};
 pub use codec::{
     codec_by_name, codec_for, fp32, Bf16, BlockQuant, EncodedVec, Fp32, StateBuf,
     StateCodec, StochasticRound, CODEC_REGISTRY_HELP,
 };
-pub use pack::{pack_bits, packed_len, unpack_bits, unpack_bits_into};
+pub use pack::{
+    pack_bits, pack_bits_chunked, packed_len, unpack_bits, unpack_bits_into,
+    unpack_bits_into_chunked,
+};
 pub use policy::{
     parse_policy_entry, parse_policy_overrides, BufferRole, CodecPolicy, CodecSpec,
     ROLE_HELP,

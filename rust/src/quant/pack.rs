@@ -7,16 +7,34 @@
 
 /// Pack `codes` (each < 2^bits) into a little-endian bitstream.
 ///
-/// The byte-aligned widths (8/4/2/1-bit) take batched, branch-free fast
-/// paths — fixed-width chunks, no running bit cursor — which is what keeps
-/// the `StateBuf` encode hot loop auto-vectorizable; odd widths fall back to
-/// the generic bit-cursor loop. All paths emit identical bytes.
+/// Dispatcher: with the `simd` feature this routes byte-aligned widths to
+/// the explicit SIMD/SWAR lanes in `quant::simd`; otherwise it runs
+/// the chunked fast paths. Every arm emits byte-for-byte identical output
+/// (asserted by the three-way property suite), so the feature flag can
+/// never change a checkpoint.
 pub fn pack_bits(codes: &[u8], bits: u32) -> Vec<u8> {
-    assert!((1..=8).contains(&bits));
     #[cfg(debug_assertions)]
     for &c in codes {
         debug_assert!((c as u32) < (1u32 << bits), "code {c} out of range for {bits}-bit");
     }
+    #[cfg(feature = "simd")]
+    {
+        super::simd::pack_bits_simd(codes, bits)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        pack_bits_chunked(codes, bits)
+    }
+}
+
+/// Chunked (auto-vectorizable scalar) arm of [`pack_bits`].
+///
+/// The byte-aligned widths (8/4/2/1-bit) take batched, branch-free fast
+/// paths — fixed-width chunks, no running bit cursor — which is what keeps
+/// the `StateBuf` encode hot loop auto-vectorizable; odd widths fall back to
+/// the generic bit-cursor loop. All paths emit identical bytes.
+pub fn pack_bits_chunked(codes: &[u8], bits: u32) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
     match bits {
         8 => codes.to_vec(),
         4 => {
@@ -49,7 +67,7 @@ pub fn pack_bits(codes: &[u8], bits: u32) -> Vec<u8> {
 }
 
 /// Generic bit-cursor packing for widths that straddle byte boundaries.
-fn pack_bits_generic(codes: &[u8], bits: u32) -> Vec<u8> {
+pub(crate) fn pack_bits_generic(codes: &[u8], bits: u32) -> Vec<u8> {
     let total_bits = codes.len() * bits as usize;
     let mut out = vec![0u8; total_bits.div_ceil(8)];
     let mut bitpos = 0usize;
@@ -66,10 +84,26 @@ fn pack_bits_generic(codes: &[u8], bits: u32) -> Vec<u8> {
 }
 
 /// Unpack codes from a bitstream produced by `pack_bits` into `out`
-/// (one code per byte). Byte-aligned widths use batched fast paths mirroring
-/// [`pack_bits`]; this is the decode-side hot path, so it writes into a
-/// caller-provided buffer instead of growing a `Vec` element by element.
+/// (one code per byte). Dispatcher mirroring [`pack_bits`]: the `simd`
+/// feature routes byte-aligned widths to the SIMD/SWAR lanes, otherwise
+/// the chunked fast paths run. All arms are bit-identical.
 pub fn unpack_bits_into(packed: &[u8], bits: u32, out: &mut [u8]) {
+    #[cfg(feature = "simd")]
+    {
+        super::simd::unpack_bits_into_simd(packed, bits, out)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        unpack_bits_into_chunked(packed, bits, out)
+    }
+}
+
+/// Chunked (auto-vectorizable scalar) arm of [`unpack_bits_into`].
+/// Byte-aligned widths use batched fast paths mirroring
+/// [`pack_bits_chunked`]; this is the decode-side hot path, so it writes
+/// into a caller-provided buffer instead of growing a `Vec` element by
+/// element.
+pub fn unpack_bits_into_chunked(packed: &[u8], bits: u32, out: &mut [u8]) {
     assert!((1..=8).contains(&bits));
     match bits {
         8 => out.copy_from_slice(&packed[..out.len()]),
@@ -179,18 +213,36 @@ mod tests {
 
     #[test]
     fn fast_paths_match_generic_layout() {
-        // the batched 8/4/2/1-bit paths must emit byte-for-byte what the
-        // generic bit-cursor loop emits (checkpoints depend on the layout)
+        // every arm — dispatcher, chunked fast paths, and (when built) the
+        // SIMD lanes — must emit byte-for-byte what the generic bit-cursor
+        // loop emits (checkpoints depend on the layout)
         let mut rng = crate::util::rng::Rng::new(17);
         for bits in [1u32, 2, 4, 8] {
-            for n in [0usize, 1, 2, 3, 7, 64, 129] {
+            for n in [0usize, 1, 2, 3, 7, 15, 16, 17, 64, 129, 1000] {
                 let codes: Vec<u8> =
                     (0..n).map(|_| rng.below(1usize << bits) as u8).collect();
+                let want = pack_bits_generic(&codes, bits);
+                assert_eq!(pack_bits(&codes, bits), want, "dispatch bits={bits} n={n}");
                 assert_eq!(
-                    pack_bits(&codes, bits),
-                    pack_bits_generic(&codes, bits),
-                    "bits={bits} n={n}"
+                    pack_bits_chunked(&codes, bits),
+                    want,
+                    "chunked bits={bits} n={n}"
                 );
+                #[cfg(feature = "simd")]
+                assert_eq!(
+                    crate::quant::simd::pack_bits_simd(&codes, bits),
+                    want,
+                    "simd bits={bits} n={n}"
+                );
+                let mut back = vec![0u8; n];
+                unpack_bits_into_chunked(&want, bits, &mut back);
+                assert_eq!(back, codes, "chunked unpack bits={bits} n={n}");
+                #[cfg(feature = "simd")]
+                {
+                    let mut back2 = vec![0u8; n];
+                    crate::quant::simd::unpack_bits_into_simd(&want, bits, &mut back2);
+                    assert_eq!(back2, codes, "simd unpack bits={bits} n={n}");
+                }
             }
         }
     }

@@ -1,0 +1,516 @@
+//! Explicit SIMD lanes for the quant hot loops (`--features simd`).
+//!
+//! Every kernel here is a *bit-identical* rewrite of the corresponding
+//! chunked kernel in [`blockwise`](super::blockwise) /
+//! [`pack`](super::pack) / [`Boundaries::nearest_block`] — the property
+//! suite asserts scalar == chunked == SIMD at every bitwidth, mapping,
+//! block size, and odd length, so enabling the feature can never change
+//! codes, scales, packed bytes, or decoded values.
+//!
+//! Lane strategy (stable Rust — no nightly `portable_simd`):
+//!  * **x86_64**: SSE2 intrinsics (`std::arch::x86_64`). SSE2 is part of
+//!    the x86_64 baseline, so there is no runtime feature detection and
+//!    no `target_feature` gating — the intrinsics are unconditionally
+//!    sound to call.
+//!  * **2/1-bit pack lanes**: u64 SWAR (shift-mask folds that pack 8
+//!    codes per word) — portable, branch-free, and identical on every
+//!    arch.
+//!  * **other arches**: scalar tails double as the full implementation,
+//!    so the `simd` feature builds (and stays bit-identical) everywhere.
+//!
+//! Why SIMD can be exact here: the encode pipeline is `abs` / `max` /
+//! `mul` / `cmplt` / integer adds — none of which reassociate rounding
+//! (f32 max is order-insensitive for finite inputs, and non-finite
+//! blocks are rejected before the fold is used). The counting kernel
+//! computes `#{mids strictly below x}` exactly like the chunked lane,
+//! which is exactly `partition_point(|m| m < x)` — tie semantics
+//! included.
+//!
+//! [`Boundaries::nearest_block`]: super::codebook::Boundaries::nearest_block
+
+use super::pack::{pack_bits_chunked, packed_len, unpack_bits_into_chunked};
+
+/// Name of the active lane backend, for bench/JSON provenance.
+pub fn simd_arch() -> &'static str {
+    if cfg!(target_arch = "x86_64") {
+        "sse2+swar"
+    } else {
+        "portable-swar"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 block lanes: absmax, finiteness, normalize
+// ---------------------------------------------------------------------------
+
+/// Max |x| over the slice (0.0 for an empty slice). Identical to the
+/// scalar `fold(0.0, |m, v| m.max(v.abs()))` for finite inputs — callers
+/// must reject non-finite blocks (see [`all_finite`]) before trusting it.
+pub fn absmax(xs: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::*;
+        let mut i = 0usize;
+        let mut r = 0.0f32;
+        if xs.len() >= 4 {
+            unsafe {
+                let signbit = _mm_set1_ps(-0.0);
+                let mut m = _mm_setzero_ps();
+                while i + 4 <= xs.len() {
+                    let v = _mm_loadu_ps(xs.as_ptr().add(i));
+                    m = _mm_max_ps(m, _mm_andnot_ps(signbit, v));
+                    i += 4;
+                }
+                let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+                let m = _mm_max_ss(m, _mm_shuffle_ps::<0x55>(m, m));
+                r = _mm_cvtss_f32(m);
+            }
+        }
+        for &v in &xs[i..] {
+            r = r.max(v.abs());
+        }
+        r
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+/// True iff every element is finite. Branch-free: accumulates `v * 0.0`
+/// (exactly ±0.0 for finite `v`, NaN for ±Inf/NaN — a fold LLVM cannot
+/// constant-fold away without fast-math) and tests the sum against 0.0.
+pub fn all_finite(xs: &[f32]) -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::*;
+        let mut i = 0usize;
+        let mut s = 0.0f32;
+        if xs.len() >= 4 {
+            unsafe {
+                let zero = _mm_setzero_ps();
+                let mut acc = zero;
+                while i + 4 <= xs.len() {
+                    let v = _mm_loadu_ps(xs.as_ptr().add(i));
+                    acc = _mm_add_ps(acc, _mm_mul_ps(v, zero));
+                    i += 4;
+                }
+                let a = _mm_add_ps(acc, _mm_movehl_ps(acc, acc));
+                let a = _mm_add_ss(a, _mm_shuffle_ps::<0x55>(a, a));
+                s = _mm_cvtss_f32(a);
+            }
+        }
+        for &v in &xs[i..] {
+            s += v * 0.0;
+        }
+        s == 0.0
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let mut s = 0.0f32;
+        for &v in xs {
+            s += v * 0.0;
+        }
+        s == 0.0
+    }
+}
+
+/// `out[i] = xs[i] * inv` — the per-block normalize lane. IEEE multiply
+/// is elementwise, so the SIMD arm is bit-identical to the scalar loop.
+pub fn normalize_into(xs: &[f32], inv: f32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::*;
+        let mut i = 0usize;
+        if xs.len() >= 4 {
+            unsafe {
+                let iv = _mm_set1_ps(inv);
+                while i + 4 <= xs.len() {
+                    let v = _mm_loadu_ps(xs.as_ptr().add(i));
+                    _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_mul_ps(v, iv));
+                    i += 4;
+                }
+            }
+        }
+        for (o, &v) in out[i..].iter_mut().zip(&xs[i..]) {
+            *o = v * inv;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        for (o, &v) in out.iter_mut().zip(xs) {
+            *o = v * inv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// nearest-code counting lane
+// ---------------------------------------------------------------------------
+
+/// `codes[i] = #{m in mids : m < xs[i]}` — the small-book (≤ 31 midpoints)
+/// nearest-code counting kernel, before the duplicate-run remap.
+///
+/// SSE2 lane layout: 16 elements per group held in four f32x4 registers;
+/// per midpoint, four `cmplt` masks are narrowed `i32 → i16 → i8`
+/// (saturating packs are exact on 0/-1 masks) and subtracted from a
+/// 16-lane u8 accumulator, so one register holds all 16 running counts.
+/// The tail (< 16 elements) runs the same count arithmetic scalar.
+pub fn count_below_mids(mids: &[f32], xs: &[f32], codes: &mut [u8]) {
+    debug_assert_eq!(xs.len(), codes.len());
+    debug_assert!(mids.len() <= 255, "count must fit a u8 lane");
+    let mut i = 0usize;
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::*;
+        unsafe {
+            while i + 16 <= xs.len() {
+                let x0 = _mm_loadu_ps(xs.as_ptr().add(i));
+                let x1 = _mm_loadu_ps(xs.as_ptr().add(i + 4));
+                let x2 = _mm_loadu_ps(xs.as_ptr().add(i + 8));
+                let x3 = _mm_loadu_ps(xs.as_ptr().add(i + 12));
+                let mut acc = _mm_setzero_si128();
+                for &m in mids {
+                    let mv = _mm_set1_ps(m);
+                    let c0 = _mm_castps_si128(_mm_cmplt_ps(mv, x0));
+                    let c1 = _mm_castps_si128(_mm_cmplt_ps(mv, x1));
+                    let c2 = _mm_castps_si128(_mm_cmplt_ps(mv, x2));
+                    let c3 = _mm_castps_si128(_mm_cmplt_ps(mv, x3));
+                    let lo = _mm_packs_epi32(c0, c1);
+                    let hi = _mm_packs_epi32(c2, c3);
+                    // 16 bytes of 0x00 / 0xFF; subtracting adds 1 per hit
+                    acc = _mm_sub_epi8(acc, _mm_packs_epi16(lo, hi));
+                }
+                _mm_storeu_si128(codes.as_mut_ptr().add(i) as *mut __m128i, acc);
+                i += 16;
+            }
+        }
+    }
+    for (c, &x) in codes[i..].iter_mut().zip(&xs[i..]) {
+        let mut n = 0u8;
+        for &m in mids {
+            n += (m < x) as u8;
+        }
+        *c = n;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pack / unpack lanes
+// ---------------------------------------------------------------------------
+
+/// SIMD arm of [`pack_bits`](super::pack::pack_bits): byte-for-byte
+/// identical output (the property suite asserts it against both the
+/// chunked fast paths and the generic bit-cursor loop).
+pub fn pack_bits_simd(codes: &[u8], bits: u32) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    match bits {
+        8 => codes.to_vec(),
+        4 => pack4(codes),
+        2 => pack2(codes),
+        1 => pack1(codes),
+        _ => pack_bits_chunked(codes, bits),
+    }
+}
+
+/// SIMD arm of [`unpack_bits_into`](super::pack::unpack_bits_into).
+pub fn unpack_bits_into_simd(packed: &[u8], bits: u32, out: &mut [u8]) {
+    assert!((1..=8).contains(&bits));
+    match bits {
+        8 => out.copy_from_slice(&packed[..out.len()]),
+        4 => unpack4(packed, out),
+        2 => unpack2(packed, out),
+        1 => unpack1(packed, out),
+        _ => unpack_bits_into_chunked(packed, bits, out),
+    }
+}
+
+/// 4-bit pack: 16 codes → 8 bytes per SSE2 step. Each u16 lane holds an
+/// (even, odd) code pair; `even | odd << 4` stays below 256, so a
+/// saturating `packus` narrows the 8 lanes to the 8 output bytes.
+fn pack4(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    #[cfg(target_arch = "x86_64")]
+    let done = {
+        use std::arch::x86_64::*;
+        let mut ci = 0usize;
+        unsafe {
+            let lomask = _mm_set1_epi16(0x00FF);
+            while ci + 16 <= codes.len() {
+                let v = _mm_loadu_si128(codes.as_ptr().add(ci) as *const __m128i);
+                let even = _mm_and_si128(v, lomask);
+                let odd = _mm_srli_epi16::<8>(v);
+                let pair = _mm_or_si128(even, _mm_slli_epi16::<4>(odd));
+                let b = _mm_packus_epi16(pair, _mm_setzero_si128());
+                _mm_storel_epi64(out.as_mut_ptr().add(ci / 2) as *mut __m128i, b);
+                ci += 16;
+            }
+        }
+        ci
+    };
+    #[cfg(not(target_arch = "x86_64"))]
+    let done = 0usize;
+    for (o, c) in out[done / 2..].iter_mut().zip(codes[done..].chunks(2)) {
+        *o = c[0] | (c.get(1).copied().unwrap_or(0) << 4);
+    }
+    out
+}
+
+/// 4-bit unpack: 8 bytes → 16 codes per SSE2 step (zero-extend bytes to
+/// u16 lanes, split nibbles, re-interleave as `lo | hi << 8`).
+fn unpack4(packed: &[u8], out: &mut [u8]) {
+    #[cfg(target_arch = "x86_64")]
+    let done = {
+        use std::arch::x86_64::*;
+        let mut i = 0usize;
+        unsafe {
+            let nib = _mm_set1_epi16(0x000F);
+            while i + 16 <= out.len() {
+                let p = _mm_loadl_epi64(packed.as_ptr().add(i / 2) as *const __m128i);
+                let w = _mm_unpacklo_epi8(p, _mm_setzero_si128());
+                let lo = _mm_and_si128(w, nib);
+                let hi = _mm_and_si128(_mm_srli_epi16::<4>(w), nib);
+                let o = _mm_or_si128(lo, _mm_slli_epi16::<8>(hi));
+                _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, o);
+                i += 16;
+            }
+        }
+        i
+    };
+    #[cfg(not(target_arch = "x86_64"))]
+    let done = 0usize;
+    for (c, &b) in out[done..].chunks_mut(2).zip(&packed[done / 2..]) {
+        c[0] = b & 0x0F;
+        if let Some(hi) = c.get_mut(1) {
+            *hi = b >> 4;
+        }
+    }
+}
+
+/// 2-bit pack: u64 SWAR, 8 codes (one word) → 2 bytes. Two shift-mask
+/// folds gather the 2-bit fields: bytes → nibbles → packed bytes.
+fn pack2(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(4)];
+    let mut ci = 0usize;
+    let mut oi = 0usize;
+    while ci + 8 <= codes.len() {
+        let x = u64::from_le_bytes(codes[ci..ci + 8].try_into().unwrap());
+        let x = (x | (x >> 6)) & 0x000F_000F_000F_000F;
+        let x = (x | (x >> 12)) & 0x0000_00FF_0000_00FF;
+        out[oi] = x as u8;
+        out[oi + 1] = (x >> 32) as u8;
+        ci += 8;
+        oi += 2;
+    }
+    for (o, c) in out[oi..].iter_mut().zip(codes[ci..].chunks(4)) {
+        for (k, &v) in c.iter().enumerate() {
+            *o |= v << (2 * k);
+        }
+    }
+    out
+}
+
+/// 2-bit unpack: inverse SWAR spread, 2 bytes → 8 codes.
+fn unpack2(packed: &[u8], out: &mut [u8]) {
+    let mut ci = 0usize;
+    let mut pi = 0usize;
+    while ci + 8 <= out.len() {
+        let y = (packed[pi] as u64) | ((packed[pi + 1] as u64) << 32);
+        let y = (y | (y << 12)) & 0x000F_000F_000F_000F;
+        let y = (y | (y << 6)) & 0x0303_0303_0303_0303;
+        out[ci..ci + 8].copy_from_slice(&y.to_le_bytes());
+        ci += 8;
+        pi += 2;
+    }
+    for (c, &b) in out[ci..].chunks_mut(4).zip(&packed[pi..]) {
+        for (k, v) in c.iter_mut().enumerate() {
+            *v = (b >> (2 * k)) & 0x03;
+        }
+    }
+}
+
+/// 1-bit pack: the classic multiply-gather — 8 LSBs fan out to bits
+/// 56..63 of the product with no cross-term collisions, one byte per word.
+fn pack1(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(8)];
+    let mut ci = 0usize;
+    let mut oi = 0usize;
+    while ci + 8 <= codes.len() {
+        let x = u64::from_le_bytes(codes[ci..ci + 8].try_into().unwrap()) & 0x0101_0101_0101_0101;
+        out[oi] = (x.wrapping_mul(0x0102_0408_1020_4080) >> 56) as u8;
+        ci += 8;
+        oi += 1;
+    }
+    for (o, c) in out[oi..].iter_mut().zip(codes[ci..].chunks(8)) {
+        for (k, &v) in c.iter().enumerate() {
+            *o |= v << k;
+        }
+    }
+    out
+}
+
+/// 1-bit unpack: broadcast the byte to all 8 lanes, isolate bit k in
+/// byte k, then normalize each nonzero byte to 1 with a carryless
+/// `+0x7F >> 7` (a set bit ≤ 0x80 never carries across its byte).
+fn unpack1(packed: &[u8], out: &mut [u8]) {
+    let mut ci = 0usize;
+    let mut pi = 0usize;
+    while ci + 8 <= out.len() {
+        let spread =
+            (packed[pi] as u64).wrapping_mul(0x0101_0101_0101_0101) & 0x8040_2010_0804_0201;
+        let y = (spread.wrapping_add(0x7F7F_7F7F_7F7F_7F7F) >> 7) & 0x0101_0101_0101_0101;
+        out[ci..ci + 8].copy_from_slice(&y.to_le_bytes());
+        ci += 8;
+        pi += 1;
+    }
+    for (c, &b) in out[ci..].chunks_mut(8).zip(&packed[pi..]) {
+        for (k, v) in c.iter_mut().enumerate() {
+            *v = (b >> k) & 0x01;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decode lane
+// ---------------------------------------------------------------------------
+
+/// Decode lane: `out[i] = table[codes[i]] * scale` for one block. The
+/// gather is scalar (SSE2 has no gather); the scale multiply runs 4-wide.
+/// IEEE multiply is elementwise, so this is bit-identical to the chunked
+/// table loop.
+pub fn decode_block(codes: &[u8], table: &[f32; 256], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::arch::x86_64::*;
+        let mut i = 0usize;
+        if codes.len() >= 4 {
+            unsafe {
+                let sv = _mm_set1_ps(scale);
+                while i + 4 <= codes.len() {
+                    let g = _mm_set_ps(
+                        table[codes[i + 3] as usize],
+                        table[codes[i + 2] as usize],
+                        table[codes[i + 1] as usize],
+                        table[codes[i] as usize],
+                    );
+                    _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_mul_ps(g, sv));
+                    i += 4;
+                }
+            }
+        }
+        for (o, &c) in out[i..].iter_mut().zip(&codes[i..]) {
+            *o = table[c as usize] * scale;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        for (o, &c) in out.iter_mut().zip(codes) {
+            *o = table[c as usize] * scale;
+        }
+    }
+}
+
+/// Unpack a whole payload through the SIMD lanes (convenience mirror of
+/// [`unpack_bits`](super::pack::unpack_bits)).
+pub fn unpack_bits_simd(packed: &[u8], bits: u32, count: usize) -> Vec<u8> {
+    debug_assert!(packed.len() >= packed_len(count, bits));
+    let mut out = vec![0u8; count];
+    unpack_bits_into_simd(packed, bits, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn absmax_and_finite_match_scalar() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 3, 4, 5, 15, 16, 17, 64, 100] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let want = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert_eq!(absmax(&xs).to_bits(), want.to_bits(), "n={n}");
+            assert!(all_finite(&xs), "n={n}");
+        }
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for pos in [0usize, 3, 7, 63] {
+                let mut xs = vec![0.25f32; 64];
+                xs[pos] = bad;
+                assert!(!all_finite(&xs), "bad={bad} pos={pos}");
+            }
+        }
+        // -0.0 stays finite and abs-es to +0.0
+        assert!(all_finite(&[-0.0f32; 9]));
+        assert_eq!(absmax(&[-0.0f32; 9]), 0.0);
+    }
+
+    #[test]
+    fn normalize_matches_scalar() {
+        let mut rng = Rng::new(12);
+        for n in [1usize, 4, 7, 33] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let inv = 0.371f32;
+            let mut a = vec![0.0f32; n];
+            normalize_into(&xs, inv, &mut a);
+            for (av, &x) in a.iter().zip(&xs) {
+                assert_eq!(av.to_bits(), (x * inv).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn count_below_mids_matches_scalar() {
+        let mut rng = Rng::new(13);
+        let mids: Vec<f32> = {
+            let mut m: Vec<f32> = (0..15).map(|_| rng.normal_f32()).collect();
+            m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            m
+        };
+        for n in [0usize, 1, 15, 16, 17, 31, 32, 100] {
+            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let mut got = vec![0u8; n];
+            count_below_mids(&mids, &xs, &mut got);
+            for (&x, &c) in xs.iter().zip(&got) {
+                let want = mids.iter().filter(|&&m| m < x).count() as u8;
+                assert_eq!(c, want, "x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_lanes_match_chunked_all_widths() {
+        let mut rng = Rng::new(14);
+        for bits in [1u32, 2, 3, 4, 8] {
+            for n in [0usize, 1, 2, 7, 8, 15, 16, 17, 63, 64, 129, 1000] {
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.below(1usize << bits) as u8).collect();
+                let want = pack_bits_chunked(&codes, bits);
+                let got = pack_bits_simd(&codes, bits);
+                assert_eq!(got, want, "pack bits={bits} n={n}");
+                let mut back = vec![0u8; n];
+                unpack_bits_into_simd(&got, bits, &mut back);
+                assert_eq!(back, codes, "unpack bits={bits} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_block_matches_scalar() {
+        let mut rng = Rng::new(15);
+        let mut table = [0.0f32; 256];
+        for t in table.iter_mut().take(16) {
+            *t = rng.normal_f32();
+        }
+        for n in [1usize, 3, 4, 5, 64] {
+            let codes: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+            let mut out = vec![0.0f32; n];
+            decode_block(&codes, &table, 1.7, &mut out);
+            for (o, &c) in out.iter().zip(&codes) {
+                assert_eq!(o.to_bits(), (table[c as usize] * 1.7).to_bits());
+            }
+        }
+    }
+}

@@ -4,7 +4,8 @@
 //!
 //! Boundary format: quantized square matrices travel as
 //! (codes u8 [n²/qb, qb] column-blocked, scales f32 [n²/qb]) with
-//! qb = min(64, n), plus the 16-entry runtime codebook — identical to the
+//! qb the `matrix_layout` block (n when n ≤ 64, else the largest divisor
+//! of n ≤ 64), plus the 16-entry runtime codebook — identical to the
 //! AOT artifacts, so backends are interchangeable per call.
 
 use anyhow::{bail, Context, Result};
@@ -51,6 +52,7 @@ pub fn dequant_cols(codes: &HostTensor, scales: &HostTensor, cb: &[f32]) -> Resu
         len: raw.len(),
         bits: 4,
         block: qb,
+        col: None,
     };
     Ok(Mat::from_vec(n, n, dequantize_matrix_cols(&q, n, cb)))
 }
@@ -59,6 +61,10 @@ pub fn dequant_cols(codes: &HostTensor, scales: &HostTensor, cb: &[f32]) -> Resu
 pub fn quant_cols_tensors(a: &Mat, cb: &[f32]) -> (HostTensor, HostTensor) {
     let n = a.rows;
     let q = quantize_matrix_cols(&a.data, n, cb, 4);
+    // the artifact boundary is a rectangular (nblocks, block) grid; every
+    // order with a usable divisor block has one (per-column fallback
+    // layouts — prime n > 64 — have no grid and cannot travel here)
+    assert!(q.col.is_none(), "order {n} has no rectangular block grid");
     let qb = q.block;
     let nb = q.scales.len();
     (HostTensor::u8(&[nb, qb], q.codes_u8()), HostTensor::f32(&[nb], q.scales))

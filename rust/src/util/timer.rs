@@ -43,6 +43,21 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// Mean throughput in bytes/second, given the payload size one
+    /// iteration processes — the unit the quant throughput harness records
+    /// (`BENCH_quant_simd.json`).
+    pub fn bytes_per_sec(&self, bytes: usize) -> f64 {
+        if self.mean_ns <= 0.0 {
+            return 0.0;
+        }
+        bytes as f64 * 1e9 / self.mean_ns
+    }
+
+    /// One-line row with a throughput column appended.
+    pub fn throughput_report(&self, bytes: usize) -> String {
+        format!("{}  {}", self.report(), fmt_bytes_per_sec(self.bytes_per_sec(bytes)))
+    }
+
     /// One-line human-readable row.
     pub fn report(&self) -> String {
         fn fmt(ns: f64) -> String {
@@ -65,6 +80,19 @@ impl BenchStats {
             fmt(self.min_ns),
             self.iters
         )
+    }
+}
+
+/// Render a bytes/second figure with a binary-prefix unit.
+pub fn fmt_bytes_per_sec(bps: f64) -> String {
+    if bps >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GiB/s", bps / (1024.0 * 1024.0 * 1024.0))
+    } else if bps >= 1024.0 * 1024.0 {
+        format!("{:.2} MiB/s", bps / (1024.0 * 1024.0))
+    } else if bps >= 1024.0 {
+        format!("{:.2} KiB/s", bps / 1024.0)
+    } else {
+        format!("{bps:.0} B/s")
     }
 }
 
@@ -162,5 +190,11 @@ mod tests {
             min_ns: 9.0e5,
         };
         assert!(s.report().contains("ms"));
+        // 1 MiB in 1.5 ms ≈ 666 MiB/s
+        let bps = s.bytes_per_sec(1 << 20);
+        assert!((bps / (1024.0 * 1024.0) - 666.0).abs() < 10.0, "{bps}");
+        assert!(s.throughput_report(1 << 20).contains("MiB/s"));
+        assert!(fmt_bytes_per_sec(2.0 * 1024.0 * 1024.0 * 1024.0).contains("GiB/s"));
+        assert!(fmt_bytes_per_sec(10.0).contains("B/s"));
     }
 }

@@ -6,13 +6,20 @@
 //!    and block sizes (including empty and partial trailing blocks);
 //!  * serialize→deserialize round-trip is exact: the encoded bytes ARE the
 //!    checkpoint payload, and re-decoding through a registry-resolved codec
-//!    is bit-identical.
+//!    is bit-identical;
+//!  * adversarial inputs: non-finite values are typed `try_encode` errors on
+//!    every quantized codec, and corrupted checkpoint payloads are rejected
+//!    by `validate_payload` at ingest instead of silently decoding to junk;
+//!  * non-multiple-of-64 matrix orders round-trip through
+//!    `encode_matrix`/`decode_matrix` with column blocking intact;
+//!  * under `--features simd` the dispatcher arms stay bit-identical to the
+//!    scalar reference all the way through the codec serialization layer.
 
 use std::sync::Arc;
 
 use shampoo4::quant::{
-    codec_by_name, codec_for, packed_len, BlockQuant, Mapping, StateCodec,
-    StochasticRound,
+    codec_by_name, codec_for, packed_len, BlockQuant, EncodedVec, Mapping, StateBuf,
+    StateCodec, StochasticRound,
 };
 use shampoo4::util::prop;
 
@@ -173,6 +180,162 @@ fn stochastic_rounding_is_reproducible_for_fixed_seed() {
     let e = a.encode(&x);
     let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
     assert_eq!(bits(&a.decode(&e)), bits(&restored.decode(&e)));
+}
+
+#[test]
+fn try_encode_rejects_non_finite_on_quantized_codecs() {
+    let mut base: Vec<f32> = (0..130).map(|i| (i as f32 * 0.1).sin()).collect();
+    for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+        base[77] = bad;
+        for codec in all_codecs() {
+            let r = codec.try_encode(&base);
+            if codec.bits() >= 16 {
+                // dense codecs store non-finite values verbatim
+                let e = r.expect("dense codecs never fail");
+                assert_eq!(e.len, base.len());
+            } else {
+                // NaN would be dropped by the absmax fold; ±Inf collapses
+                // the block scale — both must be refused, not absorbed
+                let err = r.expect_err(&format!("{} accepted {bad}", codec.name()));
+                assert!(err.to_string().contains("non-finite"), "{err}");
+            }
+        }
+    }
+}
+
+#[test]
+fn adversarial_finite_floats_stay_finite_through_quantized_codecs() {
+    // zeros, signed zeros, subnormal-scale, and full-range magnitudes: the
+    // scale path must never overflow or emit NaN for finite input
+    let x = vec![
+        0.0f32,
+        -0.0,
+        f32::MIN_POSITIVE,
+        -f32::MIN_POSITIVE,
+        1.5e-42, // subnormal
+        f32::MAX,
+        -f32::MAX,
+        1e-30,
+    ];
+    for codec in all_codecs() {
+        if codec.bits() >= 16 {
+            continue; // bf16 legitimately rounds f32::MAX to +Inf
+        }
+        let e = codec.try_encode(&x).unwrap_or_else(|err| panic!("{}: {err}", codec.name()));
+        codec.validate_payload(&e).unwrap();
+        let d = codec.decode(&e);
+        assert_eq!(d.len(), x.len());
+        for (i, v) in d.iter().enumerate() {
+            assert!(v.is_finite(), "{} elem {i} decoded to {v}", codec.name());
+        }
+    }
+}
+
+#[test]
+fn validate_payload_accepts_every_valid_payload() {
+    for codec in all_codecs() {
+        for n in [0usize, 1, 63, 64, 65, 200] {
+            let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).cos()).collect();
+            let e = codec.encode(&x);
+            codec
+                .validate_payload(&e)
+                .unwrap_or_else(|err| panic!("{} n={n}: {err}", codec.name()));
+        }
+    }
+}
+
+#[test]
+fn validate_payload_rejects_corrupt_checkpoint_payloads() {
+    let q4 = codec_for(4, Mapping::Linear2);
+    let x: Vec<f32> = (0..130).map(|i| (i as f32 * 0.2).sin()).collect();
+    let e = q4.encode(&x);
+    let split = packed_len(130, 4);
+
+    // a NaN scale would silently poison its whole block on decode
+    let mut bad = e.clone();
+    bad.bytes[split..split + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+    let err = q4.validate_payload(&bad).unwrap_err().to_string();
+    assert!(err.contains("non-finite scale"), "{err}");
+
+    // truncated payload
+    let mut short = e.clone();
+    short.bytes.pop();
+    assert!(q4.validate_payload(&short).is_err(), "truncated payload accepted");
+
+    // ragged scale region (scale bytes not a whole number of f32s)
+    let mut ragged = e.clone();
+    ragged.bytes.extend_from_slice(&[0, 0]);
+    assert!(q4.validate_payload(&ragged).is_err(), "ragged payload accepted");
+
+    // empty payload claiming a non-empty buffer
+    let empty = EncodedVec { bytes: vec![], len: 130 };
+    assert!(q4.validate_payload(&empty).is_err(), "empty payload accepted");
+
+    // the stochastic wrapper delegates to the same checks
+    let sr = StochasticRound::new(Mapping::Linear2, 4, 5);
+    assert!(sr.validate_payload(&bad).is_err());
+}
+
+#[test]
+fn statebuf_restore_rejects_corrupt_checkpoint_payloads() {
+    let mut b = StateBuf::zeros(130, codec_for(4, Mapping::Dt));
+    let mut snap = b.encoded().clone();
+    let split = packed_len(130, 4);
+    snap.bytes[split..split + 4].copy_from_slice(&f32::INFINITY.to_le_bytes());
+    let err = b.restore(snap).unwrap_err().to_string();
+    assert!(err.contains("non-finite scale"), "{err}");
+    // the buffer keeps its original contents after a rejected restore
+    assert!(b.load().iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn matrix_codec_handles_non_multiple_of_64_orders() {
+    // n=96 blocks at 48, n=100 at 50 (largest divisor ≤ 64); prime n=101
+    // falls back to per-column chunking — all must keep the §3.3 guarantee
+    // that a huge entry in one column cannot pollute any other column
+    let c = BlockQuant::q4_linear2();
+    for n in [96usize, 100, 101] {
+        let mut a = vec![0.01f32; n * n];
+        a[0] = 100.0;
+        let e = c.encode_matrix(&a, n);
+        assert_eq!(e.bytes.len(), c.matrix_state_bytes(n), "n={n}: matrix_state_bytes");
+        c.validate_payload(&e).unwrap_or_else(|err| panic!("n={n}: {err}"));
+        let d = c.decode_matrix(&e, n);
+        for i in 0..n {
+            for j in 1..n {
+                assert!((d[i * n + j] - 0.01).abs() < 0.005, "n={n} leak at ({i},{j})");
+            }
+        }
+        assert!(d[0] > 50.0, "n={n}: spike in column 0 lost");
+    }
+}
+
+#[cfg(feature = "simd")]
+#[test]
+fn codec_encode_is_bit_identical_to_scalar_reference_under_simd() {
+    // with --features simd, codec.encode routes through the SIMD arms; the
+    // serialized payload must still match the scalar reference byte-for-byte
+    // (the equivalence contract that makes the feature checkpoint-safe)
+    use shampoo4::quant::{codebook, quantize_scalar};
+    let mut rng = shampoo4::util::rng::Rng::new(9);
+    let arms =
+        [(2u32, Mapping::Dt), (3, Mapping::Dt), (4, Mapping::Linear2), (8, Mapping::Dt)];
+    for (bits, mapping) in arms {
+        let codec = codec_for(bits, mapping);
+        for n in [1usize, 63, 64, 65, 500] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let e = codec.encode(&x);
+            let q = quantize_scalar(&x, &codebook(mapping, bits), bits, 64);
+            let split = packed_len(n, bits);
+            assert_eq!(&e.bytes[..split], &q.packed[..], "codes bits={bits} n={n}");
+            let scales: Vec<u32> = e.bytes[split..]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()).to_bits())
+                .collect();
+            let want: Vec<u32> = q.scales.iter().map(|s| s.to_bits()).collect();
+            assert_eq!(scales, want, "scales bits={bits} n={n}");
+        }
+    }
 }
 
 #[test]
