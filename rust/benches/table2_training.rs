@@ -13,6 +13,11 @@
 //! synchronous vs cross-step pipelined (`shampoo.pipeline`) refreshes, with
 //! wall-clock + worst-step rows printed and the machine-readable summary
 //! written to bench_out/BENCH_parallel.json.
+//!
+//! A third section exercises the sharded block engine: single-process vs
+//! `--shards {2,4}` (sync + pipelined), reporting bytes-on-wire per refresh
+//! round and the codec-vs-fp32 state wire-format ratio to
+//! bench_out/BENCH_shard.json (schema committed at repo root).
 
 #![allow(clippy::field_reassign_with_default)]
 
@@ -94,6 +99,7 @@ fn main() -> Result<()> {
     println!("# curves (Figures 1/4): bench_out/table2_*.csv");
 
     parallel_engine_rows(rt, steps)?;
+    shard_engine_rows(rt, steps)?;
     Ok(())
 }
 
@@ -214,6 +220,120 @@ fn parallel_engine_rows(rt: &dyn Backend, steps: usize) -> Result<()> {
         stag4.timings.max_step_secs / par4.timings.max_step_secs.max(1e-12),
         pipe4.timings.max_step_secs / par4.timings.max_step_secs.max(1e-12),
         "bench_out/BENCH_parallel.json"
+    );
+    Ok(())
+}
+
+/// Sharded block engine rows for the 4-bit Shampoo MLP arm: single-process
+/// vs `--shards {2,4}` (sync and pipelined), with wall time, worst step,
+/// and bytes-on-wire per refresh round — the codec-byte wire format
+/// against what an fp32 wire format would ship. Writes
+/// bench_out/BENCH_shard.json (schema committed at repo root).
+fn shard_engine_rows(rt: &dyn Backend, steps: usize) -> Result<()> {
+    let run_engine = |shards: usize, pipeline: bool| -> Result<TrainResult> {
+        let mut cfg = RunConfig::default();
+        cfg.name =
+            format!("table2_shard{shards}{}", if pipeline { "_pipeline" } else { "" });
+        cfg.model = "mlp_base".into();
+        cfg.steps = steps;
+        cfg.first.kind = FirstOrderKind::Sgdm;
+        cfg.first.lr = 0.05;
+        cfg.first.weight_decay = 5e-4;
+        cfg.second.kind = SecondOrderKind::Shampoo;
+        cfg.second.update_precond_every = 10;
+        cfg.second.update_invroot_every = 30;
+        cfg.second.parallelism = 2;
+        cfg.second.shards = shards;
+        cfg.second.pipeline = pipeline;
+        cfg.schedule = Schedule::Cosine { warmup: steps / 20 };
+        cfg.eval_every = 0;
+        cfg.eval_batches = 8;
+        cfg.log_every = (steps / 20).max(1);
+        Trainer::new(rt, cfg)?.train(rt, None)
+    };
+
+    println!("\n# Sharded block engine @ {steps} steps (mlp_base, 4-bit Shampoo, T2=30)");
+    println!(
+        "{:<28} {:>8} {:>12} {:>7} {:>12} {:>12} {:>10}",
+        "Engine", "WCT(s)", "max step(ms)", "rounds", "wire(KiB)", "state(KiB)", "vs fp32"
+    );
+    let mut results: Vec<(&str, TrainResult)> = Vec::new();
+    for (label, shards, pipeline) in [
+        ("single-process", 1, false),
+        ("shards=2", 2, false),
+        ("shards=4", 4, false),
+        ("shards=2, pipelined", 2, true),
+    ] {
+        let res = run_engine(shards, pipeline)?;
+        let tm = &res.timings;
+        let ratio = tm.shard_state_fp32_bytes as f64 / tm.shard_state_bytes.max(1) as f64;
+        println!(
+            "{:<28} {:>8.2} {:>12.2} {:>7} {:>12.1} {:>12.1} {:>9.1}x",
+            label,
+            res.wall_secs,
+            tm.max_step_secs * 1e3,
+            tm.shard_rounds,
+            tm.shard_wire_bytes as f64 / 1024.0,
+            tm.shard_state_bytes as f64 / 1024.0,
+            ratio
+        );
+        results.push((label, res));
+    }
+
+    let arm = |res: &TrainResult| {
+        let tm = &res.timings;
+        Json::obj(vec![
+            ("wall_secs", Json::Num(res.wall_secs)),
+            ("max_step_secs", Json::Num(tm.max_step_secs)),
+            ("shard_rounds", Json::Num(tm.shard_rounds as f64)),
+            ("wire_bytes", Json::Num(tm.shard_wire_bytes as f64)),
+            ("state_bytes", Json::Num(tm.shard_state_bytes as f64)),
+            ("state_fp32_bytes", Json::Num(tm.shard_state_fp32_bytes as f64)),
+            (
+                "wire_bytes_per_round",
+                Json::Num(tm.shard_wire_bytes as f64 / tm.shard_rounds.max(1) as f64),
+            ),
+            (
+                "final_eval_loss",
+                Json::Num(res.final_loss().map(|l| l as f64).unwrap_or(f64::NAN)),
+            ),
+        ])
+    };
+    let (single, sh2, sh4, sh2pipe) =
+        (&results[0].1, &results[1].1, &results[2].1, &results[3].1);
+    let state_ratio = sh2.timings.shard_state_fp32_bytes as f64
+        / sh2.timings.shard_state_bytes.max(1) as f64;
+    let j = Json::obj(vec![
+        ("bench", Json::Str("table2_training/shard_engine".into())),
+        ("model", Json::Str("mlp_base".into())),
+        ("steps", Json::Num(steps as f64)),
+        (
+            "note",
+            Json::Str(
+                "wire format ratio compares the state traffic (refreshed \
+                 back-buffers) as codec bytes vs an fp32 wire format; request \
+                 traffic (fp32 gradient frames) is format-invariant"
+                    .into(),
+            ),
+        ),
+        ("single_process", arm(single)),
+        ("shards2", arm(sh2)),
+        ("shards4", arm(sh4)),
+        ("shards2_pipeline", arm(sh2pipe)),
+        ("state_codec_over_fp32", Json::Num(state_ratio)),
+        (
+            "max_step_shards2_over_single",
+            Json::Num(sh2.timings.max_step_secs / single.timings.max_step_secs.max(1e-12)),
+        ),
+        ("wall_shards2_over_single", Json::Num(sh2.wall_secs / single.wall_secs.max(1e-12))),
+    ]);
+    std::fs::create_dir_all("bench_out")?;
+    std::fs::write("bench_out/BENCH_shard.json", j.to_string())?;
+    println!(
+        "# state wire codec/fp32 = {:.1}x smaller, shards=2 wall/single = {:.2} -> {}",
+        state_ratio,
+        sh2.wall_secs / single.wall_secs.max(1e-12),
+        "bench_out/BENCH_shard.json"
     );
     Ok(())
 }

@@ -179,6 +179,14 @@ pub struct SecondOrderConfig {
     /// pool timing, so adaptive runs are *reproducible in quality* but not
     /// bit-reproducible across machines; off by default.
     pub pipeline_adaptive: bool,
+    /// Shard the second-order blocks across this many shard workers, each
+    /// owning its own `Backend` instance and its own slice of block states
+    /// (`[shard]` `count` / `--shards`). Blocks are assigned round-robin
+    /// (`block_idx % shards`) and refresh requests/replies travel as
+    /// codec-encoded bytes, so sharded runs are bit-identical to
+    /// single-process runs at any shard count. 1 = no sharding (the
+    /// in-process engine runs unchanged).
+    pub shards: usize,
 }
 
 /// Default worker count: the `SHAMPOO4_PARALLELISM` env var when set (CI uses
@@ -207,6 +215,7 @@ impl Default for SecondOrderConfig {
             pipeline: false,
             pipeline_max_lag: 4,
             pipeline_adaptive: false,
+            shards: 1,
         }
     }
 }
@@ -388,6 +397,7 @@ impl RunConfig {
             doc.usize_or("shampoo.pipeline_max_lag", s.pipeline_max_lag).max(1);
 
         s.pipeline_adaptive = doc.bool_or("shampoo.pipeline_adaptive", s.pipeline_adaptive);
+        s.shards = doc.usize_or("shard.count", s.shards).max(1);
 
         let q = &mut s.quant;
         q.bits = doc.usize_or("quant.bits", q.bits as usize) as u32;
@@ -677,6 +687,16 @@ eigen = "q4"
         let cfg = RunConfig::from_toml_str("[quant.policy]\nm = \"q4-dt-sr\"").unwrap();
         let fb = CodecSpec::plain(32, Mapping::Dt);
         assert!(cfg.codec_policy().resolve(BufferRole::Momentum, fb).stochastic);
+    }
+
+    #[test]
+    fn shard_keys_parse() {
+        let cfg = RunConfig::from_toml_str("[shard]\ncount = 4").unwrap();
+        assert_eq!(cfg.second.shards, 4);
+        // clamped to >= 1, default 1 (no shard engine)
+        let cfg = RunConfig::from_toml_str("[shard]\ncount = 0").unwrap();
+        assert_eq!(cfg.second.shards, 1);
+        assert_eq!(RunConfig::default().second.shards, 1);
     }
 
     #[test]

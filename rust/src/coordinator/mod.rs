@@ -7,6 +7,9 @@
 //! * `scheduler`    — the parallel block engine: persistent worker pool,
 //!                    cross-step pipelining, staggered inverse-root
 //!                    cohorts, per-stage timings
+//! * `shard`        — the sharded block engine: blocks partitioned
+//!                    round-robin across N backend shards, codec bytes as
+//!                    the wire format
 //! * `model`        — parameter buffers + model step/eval marshaling
 //! * `trainer`      — the training loop, eval, metrics, checkpoints
 //! * `shadow`       — 32-bit shadow for dynamic quant-error (Figs 7/8)
@@ -23,6 +26,9 @@ pub mod partition;
 pub mod scheduler;
 /// Algorithm-3 orchestration over the artifacts.
 pub mod second_order;
+/// The sharded block engine: blocks partitioned across N backend shards,
+/// codec bytes as the wire format.
+pub mod shard;
 /// 32-bit shadow preconditioner for dynamic quant-error (Figs 7/8).
 pub mod shadow;
 /// Per-block preconditioner states + the pipeline's double buffer.
@@ -33,4 +39,5 @@ pub mod trainer;
 pub use model::ModelHandle;
 pub use scheduler::{Scheduler, StepTimings};
 pub use second_order::SecondOrder;
+pub use shard::ShardSet;
 pub use trainer::{EvalPoint, MemoryReport, TrainResult, Trainer};

@@ -36,6 +36,14 @@ impl Block {
 ///
 /// `buckets` must be sorted ascending; `max_order` is the largest allowed
 /// bucket (blocks are split so both dims ≤ max_order).
+///
+/// The output *order* is a contract, not an incident: blocks are emitted
+/// param-major, then row-major within each parameter, deterministically for
+/// a given (shapes, buckets, max_order). Checkpoint blobs serialize
+/// second-order state in this order, and the sharded block engine's
+/// round-robin assignment ([`shard_for`](crate::coordinator::shard::shard_for))
+/// keys off the block's index in it — which is what makes checkpoints
+/// shard-count-portable.
 pub fn partition(
     shapes: &[Vec<usize>],
     buckets: &[usize],

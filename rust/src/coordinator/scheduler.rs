@@ -424,6 +424,20 @@ pub struct StepTimings {
     pub max_step_secs: f64,
     /// which step was slowest
     pub max_step_index: usize,
+    /// refresh rounds dispatched to the sharded block engine (0 = unsharded)
+    pub shard_rounds: u64,
+    /// total actual bytes on the shard wire (codec-encoded requests +
+    /// replies)
+    pub shard_wire_bytes: u64,
+    /// the state traffic (refreshed back-buffers shipped back by the
+    /// shards), as actually sent: raw codec bytes
+    pub shard_state_bytes: u64,
+    /// what the same state traffic would cost under an fp32 wire format —
+    /// `shard_state_fp32_bytes / shard_state_bytes` is the wire-format
+    /// compression ratio reported in `BENCH_shard.json`. (Request traffic
+    /// is excluded from the ratio: gradients ship as lossless fp32 frames
+    /// under either format, so only the state payloads differ.)
+    pub shard_state_fp32_bytes: u64,
 }
 
 impl StepTimings {
@@ -456,9 +470,19 @@ impl StepTimings {
         } else {
             String::new()
         };
+        let shard = if self.shard_rounds > 0 {
+            format!(
+                " | shard {} rounds, {:.1} KiB wire (state {:.1}x vs fp32)",
+                self.shard_rounds,
+                self.shard_wire_bytes as f64 / 1024.0,
+                self.shard_state_fp32_bytes as f64 / self.shard_state_bytes.max(1) as f64
+            )
+        } else {
+            String::new()
+        };
         format!(
             "model {:.2}s | pu {:.2}s | piru {:.2}s | precond {:.2}s | F {:.2}s | \
-             max step {:.1} ms (step {}){pipeline}",
+             max step {:.1} ms (step {}){pipeline}{shard}",
             self.model_step_secs,
             self.pu_secs,
             self.piru_secs,

@@ -26,8 +26,11 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{SecondOrderConfig, SecondOrderKind};
 use crate::coordinator::model::ModelHandle;
+use std::path::Path;
+
 use crate::coordinator::partition::{extract_block, partition, scatter_block, Block};
 use crate::coordinator::scheduler::{stagger_phase, Scheduler, StepTimings};
+use crate::coordinator::shard::ShardSet;
 use crate::coordinator::state::{run_invroot, run_pu, RefreshedBlock, SideState};
 use crate::linalg::Mat;
 use crate::quant::{BufferRole, CodecPolicy, CodecSpec};
@@ -44,13 +47,15 @@ pub struct BlockPre {
     /// cached artifact-input tensors for the inverse roots (§Perf L3-2):
     /// rebuilt only when PIRU runs (every T2), not on every step's
     /// precondition — saves the nibble-unpack + clone per block per step.
-    inv_cache: Option<Vec<HostTensor>>,
+    /// `pub(crate)` so the sharded engine can invalidate it when it swaps
+    /// a refreshed root in.
+    pub(crate) inv_cache: Option<Vec<HostTensor>>,
 }
 
 /// Statistics payload for one block's PU — captured on the coordinator
-/// thread, consumed by [`refresh_pu`] (synchronously, or on a pool thread
-/// for pipelined refreshes).
-enum StatInput {
+/// thread, consumed by [`refresh_pu`] (synchronously, on a pool thread for
+/// pipelined refreshes, or shard-side after an fp32 wire trip).
+pub(crate) enum StatInput {
     /// Shampoo/CASPR: the block's raw gradient; the gram artifact runs
     /// where the PU runs (so for pipelined refreshes the GGᵀ cost overlaps
     /// the model step too).
@@ -61,9 +66,10 @@ enum StatInput {
 }
 
 /// Capture the PU statistics payload for block `bi` (`bp`) — the ONE place
-/// the stats-to-side mapping is written, shared by the synchronous engine
-/// and the pipeline's submission path.
-fn capture_stat(
+/// the stats-to-side mapping is written, shared by the synchronous engine,
+/// the pipeline's submission path, and the shard coordinator's request
+/// builder.
+pub(crate) fn capture_stat(
     kfac_mode: bool,
     bi: usize,
     bp: &BlockPre,
@@ -87,9 +93,9 @@ fn capture_stat(
 }
 
 /// Apply one block's PU (Algorithm 3 line 6) to its side pair — the ONE
-/// implementation both the synchronous engine and the pipelined background
-/// jobs execute, so the two paths cannot numerically diverge.
-fn refresh_pu(
+/// implementation the synchronous engine, the pipelined background jobs,
+/// and the shard workers all execute, so no path can numerically diverge.
+pub(crate) fn refresh_pu(
     rt: &dyn Backend,
     left: &mut SideState,
     right: &mut SideState,
@@ -164,6 +170,10 @@ pub struct SecondOrder {
     scheduler: Scheduler,
     /// the pipelined engine's current in-flight refresh, if any
     inflight: Option<InFlightRefresh>,
+    /// the sharded block engine (`shampoo.shards > 1`): every refresh —
+    /// synchronous or pipelined — routes through its codec-byte rounds
+    /// instead of the in-process paths above
+    shards: Option<ShardSet>,
 }
 
 impl SecondOrder {
@@ -173,11 +183,18 @@ impl SecondOrder {
     /// `parallelism = 1`). Each side's storage codec resolves through the
     /// per-buffer `policy` (`LeftSide`/`RightSide` roles, `eigen` covering
     /// both, the `quant.bits`/`.mapping` single knob as the fallback).
+    ///
+    /// With `cfg.shards > 1` this also spawns the sharded block engine: one
+    /// worker per shard, each constructing its own backend from
+    /// `(backend_name, artifact_dir)` and owning its round-robin slice of
+    /// the block states; every refresh then travels as codec bytes.
     pub fn new(
         cfg: &SecondOrderConfig,
         policy: &CodecPolicy,
         model: &ModelHandle,
         buckets: &[usize],
+        backend_name: &str,
+        artifact_dir: &Path,
     ) -> Result<Self> {
         let fallback = CodecSpec::plain(cfg.quant.bits, cfg.quant.mapping);
         let side_codec = |role: BufferRole| {
@@ -227,7 +244,7 @@ impl SecondOrder {
         } else {
             partition(&model.shapes, buckets, cfg.max_order)
         };
-        let blocks = blocks
+        let blocks: Vec<BlockPre> = blocks
             .into_iter()
             .map(|b| BlockPre {
                 left: SideState::new(b.bm, cfg, &left_codec),
@@ -241,6 +258,11 @@ impl SecondOrder {
         } else {
             Scheduler::new(cfg.parallelism)
         };
+        let shards = if cfg.shards > 1 && !blocks.is_empty() {
+            Some(ShardSet::new(cfg, backend_name, artifact_dir, &blocks)?)
+        } else {
+            None
+        };
         Ok(Self {
             cfg: cfg.clone(),
             blocks,
@@ -248,7 +270,20 @@ impl SecondOrder {
             host_fallbacks: 0,
             scheduler,
             inflight: None,
+            shards,
         })
+    }
+
+    /// Number of shard workers the refreshes fan across (1 = the
+    /// in-process engines).
+    pub fn shard_count(&self) -> usize {
+        self.shards.as_ref().map_or(1, |s| s.num_shards())
+    }
+
+    /// Wire accounting of the sharded engine, if it is active: `(total
+    /// wire bytes, state bytes as codec, state bytes as fp32, rounds)`.
+    pub fn shard_wire_stats(&self) -> Option<(u64, u64, u64, u64)> {
+        self.shards.as_ref().map(|s| s.wire_stats())
     }
 
     /// The engine handle — `Clone`s share the same persistent pool, so the
@@ -310,6 +345,12 @@ impl SecondOrder {
             bp.right = it.next().expect("one side per parsed entry");
             bp.inv_cache = None;
         }
+        // re-sync the shard workers' copies: the blob is in global block
+        // order (shard-agnostic), so a checkpoint saved at any shard count
+        // restores at any other
+        if let Some(sh) = self.shards.as_mut() {
+            sh.sync_states(&self.blocks)?;
+        }
         Ok(())
     }
 
@@ -340,6 +381,12 @@ impl SecondOrder {
         let beta = self.cfg.beta;
         let kind = self.cfg.kind;
         let kfac_mode = self.kfac_mode;
+        if let Some(sh) = self.shards.as_mut() {
+            // synchronous sharded round: submit + complete back to back.
+            // `rt` is unused — each shard runs its own backend instance.
+            sh.submit_round(Some((model, grads, stats)), kfac_mode, &self.blocks, &[], 0)?;
+            return sh.complete_round(&mut self.blocks, None);
+        }
         self.scheduler.par_map_mut(&mut self.blocks, |bi, bp| {
             let stat = capture_stat(kfac_mode, bi, bp, model, grads, stats);
             refresh_pu(rt, &mut bp.left, &mut bp.right, stat, beta, kind)
@@ -358,6 +405,10 @@ impl SecondOrder {
     pub fn update_invroots_subset(&mut self, rt: &dyn Backend, idxs: &[usize]) -> Result<()> {
         if idxs.is_empty() {
             return Ok(());
+        }
+        if let Some(sh) = self.shards.as_mut() {
+            sh.submit_round(None, self.kfac_mode, &self.blocks, idxs, 0)?;
+            return sh.complete_round(&mut self.blocks, None);
         }
         let eps = self.cfg.eps;
         let kind = self.cfg.kind;
@@ -406,9 +457,12 @@ impl SecondOrder {
     /// Whether the in-flight refresh (if any) has hit the bounded-staleness
     /// limit at trainer step `step` and must be completed this step.
     pub fn inflight_lag_reached(&self, step: usize) -> bool {
-        self.inflight
-            .as_ref()
-            .is_some_and(|fl| step >= fl.submit_step + self.cfg.pipeline_max_lag)
+        let submit_step = if let Some(sh) = self.shards.as_ref() {
+            sh.submit_step()
+        } else {
+            self.inflight.as_ref().map(|fl| fl.submit_step)
+        };
+        submit_step.is_some_and(|s| step >= s + self.cfg.pipeline_max_lag)
     }
 
     /// Submit this refresh step's PU (`do_pu`, all blocks) and/or PIRU
@@ -443,6 +497,19 @@ impl SecondOrder {
             self.inflight.is_none(),
             "submit_refresh while a refresh is still in flight (missing barrier)"
         );
+        if let Some(sh) = self.shards.as_mut() {
+            // sharded pipelining: the round runs on the shard workers' own
+            // backends, so no lifetime erasure of `rt` is needed — the
+            // request ships and the trainer keeps stepping until the same
+            // deterministic barrier calls `complete_pipeline`
+            return sh.submit_round(
+                do_pu.then_some((model, grads, stats)),
+                self.kfac_mode,
+                &self.blocks,
+                piru_due,
+                step,
+            );
+        }
         let involved: Vec<usize> = if do_pu {
             (0..self.blocks.len()).collect()
         } else {
@@ -554,6 +621,9 @@ impl SecondOrder {
     /// barrier still drains every outstanding job before returning, so no
     /// background work outlives the error.
     pub fn complete_pipeline(&mut self, timings: &mut StepTimings) -> Result<()> {
+        if let Some(sh) = self.shards.as_mut() {
+            return sh.complete_round(&mut self.blocks, Some(timings));
+        }
         let Some(mut fl) = self.inflight.take() else {
             return Ok(());
         };
@@ -621,6 +691,13 @@ impl SecondOrder {
     /// in the same staleness-tolerance regime — the roots are never *older*
     /// than the deterministic schedule's).
     pub fn try_complete_pipeline(&mut self, timings: &mut StepTimings) -> Result<bool> {
+        if let Some(sh) = self.shards.as_mut() {
+            if !sh.round_in_flight() || !sh.try_drain() {
+                return Ok(false);
+            }
+            sh.complete_round(&mut self.blocks, Some(timings))?;
+            return Ok(true);
+        }
         let all_reported = match self.inflight.as_mut() {
             None => return Ok(false),
             Some(fl) => {
@@ -647,6 +724,9 @@ impl SecondOrder {
     /// step fails (or panics) so no background job outlives the borrowed
     /// backend; a no-op when nothing is in flight.
     pub fn abort_inflight(&mut self) {
+        if let Some(sh) = self.shards.as_mut() {
+            sh.abort_round();
+        }
         if let Some(fl) = self.inflight.take() {
             fl.abort.store(true, Ordering::Relaxed);
             let mut outstanding = fl.outstanding - fl.received.len();

@@ -1,0 +1,688 @@
+//! Sharded block engine: partition second-order blocks across N shard
+//! workers, each owning its own [`Backend`](crate::runtime::Backend)
+//! instance and its own slice of [`SideState`] pairs, with codec-encoded
+//! bytes as the inter-shard message format.
+//!
+//! # Assignment
+//!
+//! Blocks are assigned deterministically round-robin over the partitioner's
+//! output: block `i` belongs to shard [`shard_for`]`(i, shards)` =
+//! `i % shards`. The assignment is a pure function of the block index and
+//! the shard count, checkpoints store second-order state in global block
+//! order (shard-agnostic), and a restore re-syncs every shard — so a
+//! checkpoint written at one shard count resumes at any other.
+//!
+//! # Wire format
+//!
+//! Messages reuse the codec byte layouts that already exist for
+//! checkpoints — the paper's compressed representation IS the wire format,
+//! so a 4-bit eigenbasis costs on the wire what it costs at rest
+//! (4–8× less than fp32 would):
+//!
+//! * **Request** (coordinator → shard, one buffer per refresh round):
+//!   `n_entries (u32 LE)`, then per entry `block_idx (u32 LE) | flags (u8:
+//!   bit0 = PU, bit1 = PIRU)` and, when PU is set, `stat_tag (u8)` followed
+//!   by the statistics as [`put_frame`] frames — `0` = one fp32-codec
+//!   gradient-block frame (Shampoo/CASPR; grams run shard-side), `1` = two
+//!   fp32 layer-statistics frames (K-FAC/AdaBK). Gradients ship lossless so
+//!   sharded PU is bit-identical to in-process PU.
+//! * **Reply** (shard → coordinator, one buffer per round): `n_entries
+//!   (u32 LE)`, then per entry `block_idx (u32 LE) | refreshed_invroot (u8)
+//!   | pu_secs (f64 LE) | piru_secs (f64 LE)` followed by the refreshed
+//!   left and right sides as [`SideState::serialize`] bytes — raw codec
+//!   payloads, byte-exact with the shard's own state.
+//!
+//! # Barriers and determinism
+//!
+//! At most one round is in flight, and the coordinator swaps a round's
+//! results into its front copies in ascending block order at the same
+//! deterministic barriers the in-process pipeline uses ([`SecondOrder`]
+//! routes both engines through the same submit/complete seam). Each shard
+//! runs its blocks through its own [`Scheduler`] with an index-ordered
+//! merge. PU/PIRU are pure functions of `(state, stat)` per block, every
+//! shard starts from identical state (serialize → deserialize round-trips
+//! are byte-exact), and stats ship lossless — so a sharded run is
+//! **bit-identical** to the single-process run at any shard count.
+//!
+//! [`SecondOrder`]: crate::coordinator::SecondOrder
+
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{SecondOrderConfig, SecondOrderKind};
+use crate::coordinator::model::ModelHandle;
+use crate::coordinator::scheduler::{Scheduler, StepTimings};
+use crate::coordinator::second_order::{capture_stat, refresh_pu, BlockPre, StatInput};
+use crate::coordinator::state::{run_invroot, SideState};
+use crate::quant::{fp32, put_frame, read_frame};
+use crate::runtime::backend_by_name;
+
+/// Deterministic block → shard assignment: round-robin over the
+/// partitioner's block order. A pure function of `(block_idx, shards)`, so
+/// any process can recompute the placement from the checkpointed shard
+/// count alone.
+pub fn shard_for(block_idx: usize, shards: usize) -> usize {
+    block_idx % shards.max(1)
+}
+
+/// Request flag: this entry carries a PU statistics payload.
+const FLAG_PU: u8 = 1;
+/// Request flag: this entry's inverse roots are due.
+const FLAG_PIRU: u8 = 1 << 1;
+
+/// Coordinator → shard messages. Senders dropping is the shutdown signal.
+enum ToShard {
+    /// Replace the shard's owned states: concatenated
+    /// [`SideState::serialize`] pairs for its blocks, in ascending global
+    /// block order (initial sync and checkpoint restore).
+    Load(Vec<u8>),
+    /// One refresh round's framed request bytes (module-level wire format).
+    Refresh(Vec<u8>),
+}
+
+/// One shard worker: its request sender and join handle.
+struct ShardHandle {
+    tx: Option<mpsc::Sender<ToShard>>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Bookkeeping for one in-flight refresh round.
+struct InFlightRound {
+    /// Trainer step at which the round was submitted (staleness clock).
+    submit_step: usize,
+    /// Shards that were sent a request this round and have not replied.
+    outstanding: usize,
+    /// Replies drained so far (the adaptive poll feeds this).
+    received: Vec<(usize, Result<Vec<u8>>)>,
+}
+
+/// The sharded block engine: N worker threads, each with its own backend
+/// and its own slice of block states, driven by codec-byte messages.
+pub struct ShardSet {
+    shards: Vec<ShardHandle>,
+    reply_rx: mpsc::Receiver<(usize, Result<Vec<u8>>)>,
+    inflight: Option<InFlightRound>,
+    /// refresh rounds submitted so far
+    rounds: u64,
+    /// total actual bytes on the wire (requests + replies)
+    wire_bytes: u64,
+    /// reply/state traffic as actually sent (raw codec bytes)
+    state_bytes: u64,
+    /// what the same state traffic would cost under an fp32 wire format
+    state_fp32_bytes: u64,
+}
+
+impl ShardSet {
+    /// Spawn `cfg.shards` workers — each constructs its own backend from
+    /// `(backend_name, artifact_dir)` on its own thread (its own executable
+    /// cache, which is what unblocks multi-device PJRT) — and sync the
+    /// initial block states to them.
+    pub fn new(
+        cfg: &SecondOrderConfig,
+        backend_name: &str,
+        artifact_dir: &Path,
+        blocks: &[BlockPre],
+    ) -> Result<Self> {
+        let n = cfg.shards.max(1);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let mut shards = Vec::with_capacity(n);
+        for shard_id in 0..n {
+            let (tx, rx) = mpsc::channel::<ToShard>();
+            let reply = reply_tx.clone();
+            let backend_name = backend_name.to_string();
+            let artifact_dir = PathBuf::from(artifact_dir);
+            let (beta, eps, kind, parallelism) =
+                (cfg.beta, cfg.eps, cfg.kind, cfg.parallelism);
+            let join = std::thread::Builder::new()
+                .name(format!("shampoo4-shard-{shard_id}"))
+                .spawn(move || {
+                    shard_main(
+                        shard_id,
+                        rx,
+                        reply,
+                        &backend_name,
+                        &artifact_dir,
+                        beta,
+                        eps,
+                        kind,
+                        parallelism,
+                    )
+                })
+                .context("spawning shard worker")?;
+            shards.push(ShardHandle { tx: Some(tx), join: Some(join) });
+        }
+        let mut set = Self {
+            shards,
+            reply_rx,
+            inflight: None,
+            rounds: 0,
+            wire_bytes: 0,
+            state_bytes: 0,
+            state_fp32_bytes: 0,
+        };
+        set.sync_states(blocks).context("initial shard state sync")?;
+        Ok(set)
+    }
+
+    /// Configured shard count.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// `(total wire bytes, state bytes as codec, state bytes as fp32,
+    /// rounds)` shipped so far — the `BENCH_shard.json` columns. The
+    /// compression ratio is `state_fp32 / state`: request traffic is
+    /// format-invariant (gradients are fp32 frames either way), so the
+    /// ratio is computed on the state payloads where the codec matters.
+    pub fn wire_stats(&self) -> (u64, u64, u64, u64) {
+        (self.wire_bytes, self.state_bytes, self.state_fp32_bytes, self.rounds)
+    }
+
+    /// Whether a refresh round is in flight.
+    pub fn round_in_flight(&self) -> bool {
+        self.inflight.is_some()
+    }
+
+    /// The in-flight round's submission step, if any.
+    pub fn submit_step(&self) -> Option<usize> {
+        self.inflight.as_ref().map(|fl| fl.submit_step)
+    }
+
+    /// Push every shard's slice of `blocks` (ascending block order) as a
+    /// `Load` message and wait for all acks — used at construction and
+    /// after a checkpoint restore, so shard state is always byte-exact with
+    /// the coordinator's front copies. Must not be called with a round in
+    /// flight.
+    pub fn sync_states(&mut self, blocks: &[BlockPre]) -> Result<()> {
+        assert!(
+            self.inflight.is_none(),
+            "sync_states while a refresh round is in flight (missing barrier)"
+        );
+        let n = self.shards.len();
+        let mut payloads: Vec<Vec<u8>> = vec![Vec::new(); n];
+        for (bi, bp) in blocks.iter().enumerate() {
+            let p = &mut payloads[shard_for(bi, n)];
+            p.extend((bi as u32).to_le_bytes());
+            p.extend(bp.left.serialize());
+            p.extend(bp.right.serialize());
+        }
+        let mut outstanding = 0usize;
+        for (sid, payload) in payloads.into_iter().enumerate() {
+            self.send(sid, ToShard::Load(payload))?;
+            outstanding += 1;
+        }
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        for _ in 0..outstanding {
+            match self.reply_rx.recv() {
+                Ok((sid, Err(e))) => {
+                    if first_err.as_ref().is_none_or(|(s, _)| sid < *s) {
+                        first_err = Some((sid, e));
+                    }
+                }
+                Ok((_, Ok(_))) => {}
+                Err(_) => return Err(anyhow!("a shard worker died during state sync")),
+            }
+        }
+        if let Some((sid, e)) = first_err {
+            return Err(e.context(format!("loading state into shard {sid}")));
+        }
+        Ok(())
+    }
+
+    /// Submit one refresh round: PU for every block when `pu` carries the
+    /// step's model/grads/stats, plus PIRU for the `piru_due` cohort. Builds
+    /// one codec-byte request per involved shard (gradients as lossless
+    /// fp32 frames) and returns as soon as they are sent — the round
+    /// completes at [`ShardSet::complete_round`].
+    #[allow(clippy::type_complexity)]
+    pub fn submit_round(
+        &mut self,
+        pu: Option<(&ModelHandle, &[Vec<f32>], &[Vec<f32>])>,
+        kfac_mode: bool,
+        blocks: &[BlockPre],
+        piru_due: &[usize],
+        step: usize,
+    ) -> Result<()> {
+        assert!(
+            self.inflight.is_none(),
+            "submit_round while a round is still in flight (missing barrier)"
+        );
+        let do_pu = pu.is_some();
+        let involved: Vec<usize> = if do_pu {
+            (0..blocks.len()).collect()
+        } else {
+            piru_due.to_vec()
+        };
+        if involved.is_empty() {
+            return Ok(());
+        }
+        let mut piru = vec![false; blocks.len()];
+        for &i in piru_due {
+            piru[i] = true;
+        }
+        let n = self.shards.len();
+        let grad_codec = fp32();
+        // per-shard request: entry count placeholder, then entries in
+        // ascending block order (involved is sorted for both branches)
+        let mut reqs: Vec<(u32, Vec<u8>)> = vec![(0, Vec::new()); n];
+        for &bi in &involved {
+            let (count, buf) = &mut reqs[shard_for(bi, n)];
+            *count += 1;
+            buf.extend((bi as u32).to_le_bytes());
+            let mut flags = 0u8;
+            if do_pu {
+                flags |= FLAG_PU;
+            }
+            if piru[bi] {
+                flags |= FLAG_PIRU;
+            }
+            buf.push(flags);
+            if let Some((model, grads, stats)) = pu {
+                match capture_stat(kfac_mode, bi, &blocks[bi], model, grads, stats) {
+                    StatInput::Grad(g) => {
+                        buf.push(0);
+                        put_frame(buf, &grad_codec.encode(&g));
+                    }
+                    StatInput::Layer { lx, ry } => {
+                        buf.push(1);
+                        put_frame(buf, &grad_codec.encode(&lx));
+                        put_frame(buf, &grad_codec.encode(&ry));
+                    }
+                }
+            }
+        }
+        let mut outstanding = 0usize;
+        for (sid, (count, body)) in reqs.into_iter().enumerate() {
+            if count == 0 {
+                continue;
+            }
+            let mut msg = Vec::with_capacity(4 + body.len());
+            msg.extend(count.to_le_bytes());
+            msg.extend(body);
+            self.wire_bytes += msg.len() as u64;
+            self.send(sid, ToShard::Refresh(msg))?;
+            outstanding += 1;
+        }
+        self.rounds += 1;
+        self.inflight = Some(InFlightRound {
+            submit_step: step,
+            outstanding,
+            received: Vec::new(),
+        });
+        Ok(())
+    }
+
+    /// Non-blocking poll: drain any replies already available and report
+    /// whether every involved shard has replied (the adaptive-lag barrier).
+    pub fn try_drain(&mut self) -> bool {
+        match self.inflight.as_mut() {
+            None => false,
+            Some(fl) => {
+                while let Ok(msg) = self.reply_rx.try_recv() {
+                    fl.received.push(msg);
+                }
+                fl.received.len() >= fl.outstanding
+            }
+        }
+    }
+
+    /// Completion barrier: block until every involved shard has replied,
+    /// then decode the replies and swap the refreshed sides into `blocks`
+    /// in ascending block order. With `timings` (the pipelined engine),
+    /// wait time lands in `pipeline_stall_secs` and the shards' per-block
+    /// PU/PIRU seconds in `pu_secs`/`piru_secs`; the synchronous engine
+    /// passes `None` because the trainer already wall-clocks the call.
+    pub fn complete_round(
+        &mut self,
+        blocks: &mut [BlockPre],
+        mut timings: Option<&mut StepTimings>,
+    ) -> Result<()> {
+        let Some(mut fl) = self.inflight.take() else {
+            return Ok(());
+        };
+        let t = Instant::now();
+        while fl.received.len() < fl.outstanding {
+            match self.reply_rx.recv() {
+                Ok(msg) => fl.received.push(msg),
+                Err(_) => {
+                    if let Some(tm) = timings.as_deref_mut() {
+                        tm.pipeline_stall_secs += t.elapsed().as_secs_f64();
+                    }
+                    return Err(anyhow!("a shard worker died before replying"));
+                }
+            }
+        }
+        if let Some(tm) = timings.as_deref_mut() {
+            tm.pipeline_stall_secs += t.elapsed().as_secs_f64();
+        }
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+        let mut updates: Vec<(usize, bool, f64, f64, SideState, SideState)> = Vec::new();
+        for (sid, res) in fl.received {
+            match res {
+                Ok(reply) => {
+                    self.wire_bytes += reply.len() as u64;
+                    self.state_bytes += reply.len() as u64;
+                    match decode_reply(&reply) {
+                        Ok(mut entries) => updates.append(&mut entries),
+                        Err(e) => {
+                            if first_err.as_ref().is_none_or(|(s, _)| sid < *s) {
+                                first_err = Some((sid, e));
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    if first_err.as_ref().is_none_or(|(s, _)| sid < *s) {
+                        first_err = Some((sid, e));
+                    }
+                }
+            }
+        }
+        if let Some((sid, e)) = first_err {
+            return Err(e.context(format!("sharded refresh round on shard {sid}")));
+        }
+        updates.sort_by_key(|u| u.0);
+        for (bi, refreshed, pu_secs, piru_secs, left, right) in updates {
+            let bp = blocks
+                .get_mut(bi)
+                .ok_or_else(|| anyhow!("shard reply names unknown block {bi}"))?;
+            // fp32-equivalent reply cost: same per-entry header, raw f32
+            // payloads instead of codec bytes
+            self.state_fp32_bytes +=
+                (4 + 1 + 16 + left.fp32_wire_bytes() + right.fp32_wire_bytes()) as u64;
+            if let Some(tm) = timings.as_deref_mut() {
+                tm.pu_secs += pu_secs;
+                tm.piru_secs += piru_secs;
+            }
+            bp.left = left;
+            bp.right = right;
+            if refreshed {
+                bp.inv_cache = None;
+            }
+        }
+        Ok(())
+    }
+
+    /// Error-path barrier: wait the in-flight round out (shard workers
+    /// always finish the round they are on) and discard the results.
+    pub fn abort_round(&mut self) {
+        if let Some(fl) = self.inflight.take() {
+            let mut outstanding = fl.outstanding - fl.received.len();
+            while outstanding > 0 {
+                if self.reply_rx.recv().is_err() {
+                    break; // every worker gone: nothing left running
+                }
+                outstanding -= 1;
+            }
+        }
+    }
+
+    fn send(&self, shard: usize, msg: ToShard) -> Result<()> {
+        self.shards[shard]
+            .tx
+            .as_ref()
+            .expect("sender live until drop")
+            .send(msg)
+            .map_err(|_| anyhow!("shard {shard} worker exited early"))
+    }
+}
+
+impl Drop for ShardSet {
+    /// Graceful shutdown: drain any in-flight round, close every request
+    /// sender (the workers' recv loop ends), and join the threads. Workers
+    /// own their backends and states outright, so no borrowed resource is
+    /// at stake — this is cleanliness, not soundness.
+    fn drop(&mut self) {
+        self.abort_round();
+        for s in self.shards.iter_mut() {
+            s.tx = None;
+        }
+        for s in self.shards.iter_mut() {
+            if let Some(j) = s.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Slice `n` bytes at `*off` out of a wire buffer, advancing the cursor;
+/// `what` labels the buffer ("request"/"reply") in truncation errors.
+fn take<'a>(bytes: &'a [u8], off: &mut usize, n: usize, what: &str) -> Result<&'a [u8]> {
+    if bytes.len() < *off + n {
+        anyhow::bail!("shard {what} truncated at byte {}", *off);
+    }
+    let s = &bytes[*off..*off + n];
+    *off += n;
+    Ok(s)
+}
+
+/// Decode one shard reply into `(block_idx, refreshed_invroot, pu_secs,
+/// piru_secs, left, right)` entries.
+#[allow(clippy::type_complexity)]
+fn decode_reply(bytes: &[u8]) -> Result<Vec<(usize, bool, f64, f64, SideState, SideState)>> {
+    let mut off = 0usize;
+    let n = u32::from_le_bytes(take(bytes, &mut off, 4, "reply")?.try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let bi =
+            u32::from_le_bytes(take(bytes, &mut off, 4, "reply")?.try_into().unwrap()) as usize;
+        let refreshed = take(bytes, &mut off, 1, "reply")?[0] != 0;
+        let pu_secs = f64::from_le_bytes(take(bytes, &mut off, 8, "reply")?.try_into().unwrap());
+        let piru_secs = f64::from_le_bytes(take(bytes, &mut off, 8, "reply")?.try_into().unwrap());
+        let (left, used) = SideState::deserialize(&bytes[off..])?;
+        off += used;
+        let (right, used) = SideState::deserialize(&bytes[off..])?;
+        off += used;
+        out.push((bi, refreshed, pu_secs, piru_secs, left, right));
+    }
+    if off != bytes.len() {
+        anyhow::bail!("shard reply has {} trailing bytes", bytes.len() - off);
+    }
+    Ok(out)
+}
+
+/// One block owned by a shard worker. The side pair is `Some` between
+/// rounds and moves into the round's [`Work`] items while it runs (which
+/// also makes a duplicate request entry a hard error instead of a silent
+/// state clobber).
+struct OwnedBlock {
+    idx: usize,
+    states: Option<(SideState, SideState)>,
+}
+
+/// Per-entry work item for one refresh round, fanned over the shard's own
+/// scheduler (index-ordered merge, so intra-shard parallelism keeps the
+/// bit-identity contract).
+struct Work {
+    pos: usize,
+    stat: Option<StatInput>,
+    do_piru: bool,
+    left: SideState,
+    right: SideState,
+    pu_secs: f64,
+    piru_secs: f64,
+}
+
+/// Shard worker main loop: build the shard's own backend, then serve
+/// `Load`/`Refresh` messages until every sender is gone. Every message gets
+/// exactly one reply; panics inside a round are caught and reported as that
+/// round's error, so the coordinator's barrier can never hang.
+#[allow(clippy::too_many_arguments)]
+fn shard_main(
+    shard_id: usize,
+    rx: mpsc::Receiver<ToShard>,
+    reply: mpsc::Sender<(usize, Result<Vec<u8>>)>,
+    backend_name: &str,
+    artifact_dir: &Path,
+    beta: f32,
+    eps: f32,
+    kind: SecondOrderKind,
+    parallelism: usize,
+) {
+    let rt = match backend_by_name(backend_name, artifact_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // reply with the construction error to every message so the
+            // coordinator surfaces it at the next barrier
+            let e = format!("shard {shard_id}: backend construction failed: {e:#}");
+            for _ in rx {
+                let _ = reply.send((shard_id, Err(anyhow!(e.clone()))));
+            }
+            return;
+        }
+    };
+    let scheduler = Scheduler::new(parallelism);
+    let mut owned: Vec<OwnedBlock> = Vec::new();
+    for msg in rx {
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match msg {
+            ToShard::Load(bytes) => {
+                owned = load_states(&bytes)?;
+                Ok(Vec::new())
+            }
+            ToShard::Refresh(bytes) => {
+                process_round(rt.as_ref(), &scheduler, &mut owned, &bytes, beta, eps, kind)
+            }
+        }));
+        let res = match res {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!("shard {shard_id} worker panicked during a round")),
+        };
+        if reply.send((shard_id, res)).is_err() {
+            return; // coordinator gone
+        }
+    }
+}
+
+/// Parse a `Load` payload into the shard's owned blocks.
+fn load_states(bytes: &[u8]) -> Result<Vec<OwnedBlock>> {
+    let mut owned = Vec::new();
+    let mut off = 0usize;
+    while off < bytes.len() {
+        if bytes.len() < off + 4 {
+            anyhow::bail!("shard load payload truncated at byte {off}");
+        }
+        let idx = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        let (left, used) = SideState::deserialize(&bytes[off..])?;
+        off += used;
+        let (right, used) = SideState::deserialize(&bytes[off..])?;
+        off += used;
+        owned.push(OwnedBlock { idx, states: Some((left, right)) });
+    }
+    Ok(owned)
+}
+
+/// Execute one refresh round against the shard's owned states and build
+/// the reply buffer (reply wire format in the module docs).
+fn process_round(
+    rt: &dyn crate::runtime::Backend,
+    scheduler: &Scheduler,
+    owned: &mut Vec<OwnedBlock>,
+    req: &[u8],
+    beta: f32,
+    eps: f32,
+    kind: SecondOrderKind,
+) -> Result<Vec<u8>> {
+    let mut off = 0usize;
+    let n = u32::from_le_bytes(take(req, &mut off, 4, "request")?.try_into().unwrap()) as usize;
+    let mut work: Vec<Work> = Vec::with_capacity(n);
+    let grad_codec = fp32();
+    for _ in 0..n {
+        let bi =
+            u32::from_le_bytes(take(req, &mut off, 4, "request")?.try_into().unwrap()) as usize;
+        let flags = take(req, &mut off, 1, "request")?[0];
+        let stat = if flags & FLAG_PU != 0 {
+            let tag = take(req, &mut off, 1, "request")?[0];
+            Some(match tag {
+                0 => StatInput::Grad(grad_codec.decode(&read_frame(req, &mut off)?)),
+                1 => StatInput::Layer {
+                    lx: grad_codec.decode(&read_frame(req, &mut off)?),
+                    ry: grad_codec.decode(&read_frame(req, &mut off)?),
+                },
+                other => anyhow::bail!("shard request: unknown stat tag {other}"),
+            })
+        } else {
+            None
+        };
+        let pos = owned
+            .iter()
+            .position(|b| b.idx == bi)
+            .ok_or_else(|| anyhow!("shard request names block {bi} this shard does not own"))?;
+        // move the states into the work item; they return to the store
+        // after the round
+        let (left, right) = owned[pos]
+            .states
+            .take()
+            .ok_or_else(|| anyhow!("shard request names block {bi} twice in one round"))?;
+        work.push(Work {
+            pos,
+            stat,
+            do_piru: flags & FLAG_PIRU != 0,
+            left,
+            right,
+            pu_secs: 0.0,
+            piru_secs: 0.0,
+        });
+    }
+    if off != req.len() {
+        anyhow::bail!("shard request has {} trailing bytes", req.len() - off);
+    }
+    let round = scheduler.par_map_mut(&mut work, |_, w| {
+        if let Some(stat) = w.stat.take() {
+            let t = Instant::now();
+            refresh_pu(rt, &mut w.left, &mut w.right, stat, beta, kind)?;
+            w.pu_secs = t.elapsed().as_secs_f64();
+        }
+        if w.do_piru {
+            let t = Instant::now();
+            run_invroot(rt, &mut w.left, eps, kind)?;
+            run_invroot(rt, &mut w.right, eps, kind)?;
+            w.piru_secs = t.elapsed().as_secs_f64();
+        }
+        Ok(())
+    });
+    // whatever happened, put the states back before surfacing errors, so a
+    // failed round leaves the shard consistent (unvisited items keep their
+    // pre-round state)
+    let mut reply = Vec::new();
+    reply.extend((work.len() as u32).to_le_bytes());
+    for w in work {
+        let bi = owned[w.pos].idx;
+        reply.extend((bi as u32).to_le_bytes());
+        reply.push(w.do_piru as u8);
+        reply.extend(w.pu_secs.to_le_bytes());
+        reply.extend(w.piru_secs.to_le_bytes());
+        reply.extend(w.left.serialize());
+        reply.extend(w.right.serialize());
+        owned[w.pos].states = Some((w.left, w.right));
+    }
+    round?;
+    Ok(reply)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assignment_is_round_robin_and_total() {
+        for shards in 1..=5 {
+            let mut counts = vec![0usize; shards];
+            for bi in 0..23 {
+                let s = shard_for(bi, shards);
+                assert!(s < shards);
+                counts[s] += 1;
+            }
+            let (min, max) = (
+                counts.iter().min().copied().unwrap(),
+                counts.iter().max().copied().unwrap(),
+            );
+            assert!(max - min <= 1, "round-robin must balance: {counts:?}");
+        }
+        assert_eq!(shard_for(7, 0), 0, "degenerate shard count clamps");
+    }
+}

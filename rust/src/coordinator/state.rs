@@ -130,6 +130,22 @@ impl SideState {
         }
     }
 
+    /// Bytes a *hypothetical fp32 wire format* would need to ship this side:
+    /// every payload (eigenvalues/diagonal, eigenbasis or preconditioner
+    /// matrix, inverse-root diagonal + off-diagonal) as raw f32, ignoring
+    /// the storage codec. The shard engine reports this next to the actual
+    /// codec-byte wire size so the compression ratio of the codec-bytes-as-
+    /// wire-format invariant is measurable (`BENCH_shard.json`).
+    pub fn fp32_wire_bytes(&self) -> usize {
+        let n = self.order();
+        match &self.arm {
+            // lam (n) + basis (n×n) + inv_diag (n) + inv off-diag (n×n)
+            SideArm::Quantized { .. } | SideArm::Naive { .. } => 4 * (n + n * n + n + n * n),
+            // L (n×n) + L̂ (n×n)
+            SideArm::Dense { .. } => 4 * 2 * n * n,
+        }
+    }
+
     /// Which artifact family this side uses ("quant" / "dense" / "naive").
     pub fn arm_name(&self) -> &'static str {
         match &self.arm {

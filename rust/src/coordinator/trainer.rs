@@ -148,6 +148,8 @@ impl Trainer {
                 &policy,
                 &model,
                 &rt.manifest().buckets,
+                &cfg.backend,
+                Path::new(&cfg.artifact_dir),
             )?)
         };
         let shadow = if cfg.shadow_quant_error {
@@ -377,6 +379,12 @@ impl Trainer {
         // subsequent `train` call) reflects every submitted refresh
         if let Some(second) = self.second.as_mut() {
             second.complete_pipeline(&mut timings)?;
+            if let Some((wire, state, state_fp32, rounds)) = second.shard_wire_stats() {
+                timings.shard_wire_bytes = wire;
+                timings.shard_state_bytes = state;
+                timings.shard_state_fp32_bytes = state_fp32;
+                timings.shard_rounds = rounds;
+            }
         }
 
         let final_eval = if self.cfg.eval_batches > 0 {
@@ -439,6 +447,10 @@ impl Trainer {
             // must match on load, so a mismatched policy is rejected even
             // for checkpoints predating this field.
             ("quant_policy", Json::Str(self.cfg.codec_policy().summary())),
+            // observability only: restore recomputes the round-robin
+            // assignment from the run's own shard count, so checkpoints
+            // are shard-count-portable by construction
+            ("shards", Json::Num(self.cfg.second.shards as f64)),
             ("second_order_bytes", Json::Num(second_blob.len() as f64)),
         ])
         .to_string();

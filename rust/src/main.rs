@@ -25,6 +25,11 @@
 //!                preconditioning tolerates roots up to K steps stale —
 //!                double-buffered swap, deterministic barriers; adaptive
 //!                swaps finished refreshes in early when the pool is idle)
+//!                [--shards N]
+//!                (sharded block engine: partition second-order blocks
+//!                round-robin across N shard workers, each with its own
+//!                Backend instance; requests/replies travel as codec-encoded
+//!                bytes and results are bit-identical to --shards 1)
 //!   quant-error  [--n 1200] [--bits 4] [--block 64]
 //!                (Table 1/5/6/7, Figures 2/3/5/6 — see benches for the
 //!                full sweeps)
@@ -167,6 +172,12 @@ pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if args.flag("pipeline-adaptive") {
         cfg.second.pipeline_adaptive = true;
     }
+    if let Some(n) = args.get("shards") {
+        cfg.second.shards = n.parse::<usize>().context("--shards")?.max(1);
+    }
+    if let Some(d) = args.get("artifact-dir") {
+        cfg.artifact_dir = d.to_string();
+    }
     if let Some(b) = args.get("backend") {
         cfg.backend = b.to_string();
     }
@@ -188,7 +199,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let rt = rt.as_ref();
     println!(
         "platform={} model={} steps={} F={}@{}bit second={} bits={} mapping={} \
-         parallelism={} piru={} engine={}",
+         parallelism={} shards={} piru={} engine={}",
         rt.platform(),
         cfg.model,
         cfg.steps,
@@ -198,6 +209,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.second.quant.bits,
         cfg.second.quant.mapping.name(),
         cfg.second.parallelism,
+        cfg.second.shards,
         if cfg.second.stagger_invroots { "staggered" } else { "batch" },
         if cfg.second.pipeline {
             format!("pipelined(lag<={})", cfg.second.pipeline_max_lag)

@@ -193,23 +193,21 @@ impl Boundaries {
     }
 
     /// SIMD arm of [`Boundaries::nearest_block`] (`--features simd`): the
-    /// small-book counting kernel runs 16 elements per step through
+    /// counting kernel runs 16 elements per step through
     /// [`count_below_mids`](super::simd::count_below_mids), followed by the
-    /// same duplicate-run remap pass; wide books keep the per-element binary
-    /// search (8 ordered probes don't vectorize usefully). Bit-identical to
-    /// the chunked arm — the count is exactly `partition_point(|m| m < x)`.
+    /// same duplicate-run remap pass — for EVERY book width. Unlike the
+    /// scalar arm (where 255 linear compares lose to an 8-probe binary
+    /// search), the vectorized count amortizes the midpoint sweep across a
+    /// whole register of elements at once, so 8-bit books take the counting
+    /// kernel too: a 256-entry book is 255 mids, and the count still fits
+    /// `u8`. Bit-identical to the scalar arms at any width — the count is
+    /// exactly `partition_point(|m| m < x)`.
     #[cfg(feature = "simd")]
     pub fn nearest_block_simd(&self, xs: &[f32], codes: &mut [u8]) {
         debug_assert_eq!(xs.len(), codes.len());
-        if self.mids.len() <= COUNTING_MIDS_MAX {
-            super::simd::count_below_mids(&self.mids, xs, codes);
-            for c in codes.iter_mut() {
-                *c = self.remap[*c as usize];
-            }
-        } else {
-            for (c, &x) in codes.iter_mut().zip(xs) {
-                *c = self.nearest(x);
-            }
+        super::simd::count_below_mids(&self.mids, xs, codes);
+        for c in codes.iter_mut() {
+            *c = self.remap[*c as usize];
         }
     }
 

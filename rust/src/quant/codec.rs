@@ -42,6 +42,34 @@ pub struct EncodedVec {
     pub len: usize,
 }
 
+/// Append an [`EncodedVec`] to `out` as a self-describing wire frame:
+/// `len (u32 LE) | nbytes (u32 LE) | bytes`. This is the same framing
+/// checkpoint side-state blobs use, reused verbatim as the inter-shard
+/// message format — codec bytes ARE the wire format, so a frame costs
+/// exactly what the state costs at rest.
+pub fn put_frame(out: &mut Vec<u8>, e: &EncodedVec) {
+    out.extend((e.len as u32).to_le_bytes());
+    out.extend((e.bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(&e.bytes);
+}
+
+/// Read one [`put_frame`]-encoded frame from `bytes` starting at `*off`,
+/// advancing `*off` past it. Errors on truncated input.
+pub fn read_frame(bytes: &[u8], off: &mut usize) -> anyhow::Result<EncodedVec> {
+    fn take<'a>(bytes: &'a [u8], off: &mut usize, n: usize) -> anyhow::Result<&'a [u8]> {
+        if bytes.len() < *off + n {
+            anyhow::bail!("wire frame truncated at byte {}", *off);
+        }
+        let s = &bytes[*off..*off + n];
+        *off += n;
+        Ok(s)
+    }
+    let len = u32::from_le_bytes(take(bytes, off, 4)?.try_into().unwrap()) as usize;
+    let nbytes = u32::from_le_bytes(take(bytes, off, 4)?.try_into().unwrap()) as usize;
+    let payload = take(bytes, off, nbytes)?.to_vec();
+    Ok(EncodedVec { bytes: payload, len })
+}
+
 /// Pluggable storage codec for optimizer state vectors.
 ///
 /// Encode → decode round-trips are the storage algorithm itself: exact for

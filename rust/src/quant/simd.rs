@@ -149,8 +149,11 @@ pub fn normalize_into(xs: &[f32], inv: f32, out: &mut [f32]) {
 // nearest-code counting lane
 // ---------------------------------------------------------------------------
 
-/// `codes[i] = #{m in mids : m < xs[i]}` — the small-book (≤ 31 midpoints)
-/// nearest-code counting kernel, before the duplicate-run remap.
+/// `codes[i] = #{m in mids : m < xs[i]}` — the nearest-code counting
+/// kernel for every book width (up to 255 midpoints, i.e. 8-bit books),
+/// before the duplicate-run remap. The vectorized sweep amortizes each
+/// midpoint across 16 elements, so it beats the scalar binary search even
+/// for wide books where the scalar counting arm does not.
 ///
 /// SSE2 lane layout: 16 elements per group held in four f32x4 registers;
 /// per midpoint, four `cmplt` masks are narrowed `i32 → i16 → i8`
@@ -464,18 +467,22 @@ mod tests {
     #[test]
     fn count_below_mids_matches_scalar() {
         let mut rng = Rng::new(13);
-        let mids: Vec<f32> = {
-            let mut m: Vec<f32> = (0..15).map(|_| rng.normal_f32()).collect();
-            m.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            m
-        };
-        for n in [0usize, 1, 15, 16, 17, 31, 32, 100] {
-            let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
-            let mut got = vec![0u8; n];
-            count_below_mids(&mids, &xs, &mut got);
-            for (&x, &c) in xs.iter().zip(&got) {
-                let want = mids.iter().filter(|&&m| m < x).count() as u8;
-                assert_eq!(c, want, "x={x}");
+        // 15 mids = a 4-bit book; 255 mids = the widest (8-bit) book, which
+        // the SIMD encode path now routes through this kernel too
+        for width in [15usize, 255] {
+            let mids: Vec<f32> = {
+                let mut m: Vec<f32> = (0..width).map(|_| rng.normal_f32()).collect();
+                m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                m
+            };
+            for n in [0usize, 1, 15, 16, 17, 31, 32, 100] {
+                let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let mut got = vec![0u8; n];
+                count_below_mids(&mids, &xs, &mut got);
+                for (&x, &c) in xs.iter().zip(&got) {
+                    let want = mids.iter().filter(|&&m| m < x).count() as u8;
+                    assert_eq!(c, want, "x={x} width={width}");
+                }
             }
         }
     }

@@ -10,7 +10,8 @@ pub mod model;
 pub mod ops;
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -28,20 +29,38 @@ const BUCKETS_WITH_KFAC: [usize; 3] = [64, 128, 256];
 const DENSE_BUCKETS: [usize; 4] = [32, 64, 128, 256];
 const CB_LEN: usize = 16;
 
+/// Per-artifact execution tally: `(calls, total nanoseconds)`. Lock-free so
+/// concurrent `execute` calls never contend on a stats mutex.
+type StatCell = Arc<(AtomicU64, AtomicU64)>;
+
 /// The hermetic pure-Rust [`Backend`]: always available, trains real
 /// models with zero external dependencies.
 pub struct HostBackend {
     manifest: Manifest,
-    // Mutex (not RefCell): `execute` is called concurrently by the parallel
-    // block engine's workers; dispatch itself is pure, only the stats tally
-    // needs the lock.
-    stats: Mutex<HashMap<String, ExecStats>>,
+    // `execute` is called concurrently by the parallel block engine's
+    // workers and the shard workers' schedulers; dispatch itself is pure,
+    // and the tally is atomic counters behind an RwLock'd map — the steady
+    // state (every artifact already seen) is a read lock + two relaxed
+    // atomic adds, with the write lock taken once per artifact name.
+    stats: RwLock<HashMap<String, StatCell>>,
 }
 
 impl HostBackend {
     /// Backend over the synthesized manifest (no filesystem access).
     pub fn new() -> Self {
-        Self { manifest: synthetic_manifest(), stats: Mutex::new(HashMap::new()) }
+        Self { manifest: synthetic_manifest(), stats: RwLock::new(HashMap::new()) }
+    }
+
+    /// The counter cell for artifact `name` (insert-once on first sight).
+    fn stat_cell(&self, name: &str) -> StatCell {
+        if let Some(cell) = self.stats.read().expect("stats lock").get(name) {
+            return Arc::clone(cell);
+        }
+        let mut map = self.stats.write().expect("stats lock");
+        Arc::clone(
+            map.entry(name.to_string())
+                .or_insert_with(|| Arc::new((AtomicU64::new(0), AtomicU64::new(0)))),
+        )
     }
 
     fn dispatch(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
@@ -207,16 +226,29 @@ impl Backend for HostBackend {
         self.manifest.validate_inputs(name, inputs)?;
         let t0 = Instant::now();
         let outs = self.dispatch(name, inputs)?;
-        let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.stats.lock().expect("stats lock");
-        let ent = stats.entry(name.to_string()).or_default();
-        ent.calls += 1;
-        ent.total_secs += dt;
+        let dt = t0.elapsed();
+        let cell = self.stat_cell(name);
+        cell.0.fetch_add(1, Ordering::Relaxed);
+        cell.1.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
         Ok(outs)
     }
 
     fn stats(&self) -> HashMap<String, ExecStats> {
-        self.stats.lock().expect("stats lock").clone()
+        self.stats
+            .read()
+            .expect("stats lock")
+            .iter()
+            .map(|(name, cell)| {
+                (
+                    name.clone(),
+                    ExecStats {
+                        calls: cell.0.load(Ordering::Relaxed),
+                        total_secs: cell.1.load(Ordering::Relaxed) as f64 / 1e9,
+                        compile_secs: 0.0,
+                    },
+                )
+            })
+            .collect()
     }
 }
 

@@ -8,7 +8,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -20,15 +20,17 @@ use super::Backend;
 /// The PJRT backend: one CPU client + lazily compiled executables.
 ///
 /// `Backend: Send + Sync` note: the compile cache and stats sit behind
-/// `Mutex`es, and executions serialize on the executable cache lock — PJRT
-/// device submission is one-at-a-time here, which is what a single-device
-/// client wants anyway. (When swapping the stub for the real xla-rs crate,
-/// its client/executable handles must be wrapped if they are not `Send`.)
+/// `Mutex`es, but executions do NOT serialize on them — the cache stores
+/// `Arc`-wrapped executables, `execute` clones the handle and releases the
+/// lock before submitting, so concurrent callers (the parallel block
+/// engine, shard workers) only contend for the map lookup. (When swapping
+/// the stub for the real xla-rs crate, its client/executable handles must
+/// be wrapped if they are not `Send + Sync`.)
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     stats: Mutex<HashMap<String, ExecStats>>,
 }
 
@@ -46,9 +48,12 @@ impl PjrtBackend {
         })
     }
 
-    fn ensure_compiled(&self, name: &str) -> Result<()> {
-        if self.exes.lock().expect("exes lock").contains_key(name) {
-            return Ok(());
+    /// The `name` executable, compiling (and caching) it on first use. The
+    /// returned `Arc` keeps the executable alive independent of the cache
+    /// lock, so callers execute without holding it.
+    fn compiled(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().expect("exes lock").get(name) {
+            return Ok(Arc::clone(exe));
         }
         let spec = self
             .manifest
@@ -62,10 +67,18 @@ impl PjrtBackend {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
         let dt = t0.elapsed().as_secs_f64();
-        self.exes.lock().expect("exes lock").insert(name.to_string(), exe);
+        // under a compile race the first insert wins and every caller shares
+        // its executable; the loser's compile time still lands in stats
+        let exe = Arc::clone(
+            self.exes
+                .lock()
+                .expect("exes lock")
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(exe)),
+        );
         self.stats.lock().expect("stats lock").entry(name.to_string()).or_default().compile_secs +=
             dt;
-        Ok(())
+        Ok(exe)
     }
 }
 
@@ -79,13 +92,13 @@ impl Backend for PjrtBackend {
     }
 
     /// Execute an artifact by name. Inputs must match the manifest order.
+    /// The executable handle is cloned out of the cache first, so device
+    /// submission runs with no lock held and concurrent executions overlap.
     fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         self.manifest.validate_inputs(name, inputs)?;
-        self.ensure_compiled(name)?;
+        let exe = self.compiled(name)?;
         let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
         let t0 = Instant::now();
-        let exes = self.exes.lock().expect("exes lock");
-        let exe = exes.get(name).unwrap();
         let result =
             exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("executing {name}: {e:?}"))?;
         let out_lit = result[0][0]

@@ -1,0 +1,220 @@
+//! Sharded block engine: determinism, wire accounting, and resume
+//! portability guarantees.
+//!
+//! * `shards = N` must produce bit-identical losses, parameters, AND
+//!   serialized second-order state (preconditioners + inverse roots, raw
+//!   codec bytes) to `shards = 1` for every second-order arm — gradients
+//!   ship as lossless fp32 frames, PU/PIRU are pure per-block functions,
+//!   and results swap in block-index order at the same barriers, so the
+//!   shard count is a pure deployment knob.
+//! * The same holds with the cross-step pipeline on: the shard round
+//!   replaces the in-process background jobs behind identical
+//!   deterministic barriers.
+//! * Checkpoints store second-order state in global block order, so a run
+//!   saved at one shard count must resume bit-identically at another.
+//! * The reply traffic (refreshed back-buffers) must ship as codec bytes:
+//!   for 4-bit sides the state wire cost must be ≥ 4× below what an fp32
+//!   wire format would ship.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use shampoo4::config::{FirstOrderKind, RunConfig, SecondOrderKind};
+use shampoo4::coordinator::{TrainResult, Trainer};
+use shampoo4::runtime::HostBackend;
+
+fn shard_cfg(kind: SecondOrderKind, shards: usize, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = format!("se_{}_{shards}", kind.name());
+    cfg.model = "mlp_base".into();
+    cfg.steps = steps;
+    cfg.first.kind = FirstOrderKind::Sgdm;
+    cfg.first.lr = 0.05;
+    cfg.first.weight_decay = 5e-4;
+    cfg.second.kind = kind;
+    cfg.second.update_precond_every = 5;
+    cfg.second.update_invroot_every = 10;
+    cfg.second.shards = shards;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 4;
+    cfg.log_every = 1;
+    cfg
+}
+
+/// Train to completion; return (params, second-order state blob, result).
+fn run(cfg: RunConfig) -> (Vec<Vec<f32>>, Vec<u8>, TrainResult) {
+    let rt = HostBackend::new();
+    let mut t = Trainer::new(&rt, cfg).unwrap();
+    let res = t.train(&rt, None).unwrap();
+    let blob = t.second.as_ref().map(|s| s.serialize_state()).unwrap_or_default();
+    (t.model.params.clone(), blob, res)
+}
+
+/// Exact f32 bit patterns (NaN-proof equality).
+fn param_bits(params: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    params.iter().map(|p| p.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+fn loss_bits(losses: &[(usize, f32)]) -> Vec<(usize, u32)> {
+    losses.iter().map(|&(s, l)| (s, l.to_bits())).collect()
+}
+
+/// shards ∈ {1, 2, 4} must agree bit-for-bit: losses, parameters, and the
+/// serialized preconditioner/inverse-root state itself.
+fn assert_shards_bit_identical(kind: SecondOrderKind, steps: usize) {
+    let (p1, s1, r1) = run(shard_cfg(kind, 1, steps));
+    assert!(
+        r1.losses.last().unwrap().1.is_finite(),
+        "{}: baseline produced non-finite loss",
+        kind.name()
+    );
+    for shards in [2usize, 4] {
+        let (pn, sn, rn) = run(shard_cfg(kind, shards, steps));
+        assert_eq!(
+            loss_bits(&r1.losses),
+            loss_bits(&rn.losses),
+            "{}: losses diverge between shards=1 and shards={shards}",
+            kind.name()
+        );
+        assert_eq!(
+            param_bits(&p1),
+            param_bits(&pn),
+            "{}: parameters diverge between shards=1 and shards={shards}",
+            kind.name()
+        );
+        assert_eq!(
+            s1, sn,
+            "{}: serialized second-order state diverges between shards=1 and \
+             shards={shards}",
+            kind.name()
+        );
+        assert!(rn.timings.shard_rounds > 0, "sharded run never dispatched a round");
+        assert_eq!(r1.timings.shard_rounds, 0, "shards=1 must not build the shard engine");
+    }
+}
+
+#[test]
+fn shampoo_shards_are_bit_identical() {
+    assert_shards_bit_identical(SecondOrderKind::Shampoo, 22);
+}
+
+#[test]
+fn caspr_shards_are_bit_identical() {
+    assert_shards_bit_identical(SecondOrderKind::Caspr, 22);
+}
+
+#[test]
+fn kfac_shards_are_bit_identical() {
+    assert_shards_bit_identical(SecondOrderKind::KFac, 12);
+}
+
+#[test]
+fn pipelined_shards_are_bit_identical() {
+    // with `shampoo.pipeline` on, the shard round replaces the in-process
+    // background jobs but fires at the same deterministic barriers — the
+    // pipelined trajectory must not depend on the shard count either
+    let mk = |shards: usize| {
+        let mut cfg = shard_cfg(SecondOrderKind::Shampoo, shards, 22);
+        cfg.name = format!("se_pipe_{shards}");
+        cfg.second.pipeline = true;
+        cfg.second.pipeline_max_lag = 3;
+        cfg
+    };
+    let (p1, s1, r1) = run(mk(1));
+    let (p2, s2, r2) = run(mk(2));
+    assert!(r1.timings.pipeline_refreshes > 0, "pipeline never submitted a refresh");
+    assert_eq!(r1.timings.pipeline_refreshes, r2.timings.pipeline_refreshes);
+    assert!(r2.timings.shard_rounds > 0, "sharded pipeline never dispatched a round");
+    assert_eq!(loss_bits(&r1.losses), loss_bits(&r2.losses));
+    assert_eq!(param_bits(&p1), param_bits(&p2));
+    assert_eq!(s1, s2, "pipelined second-order state diverges across shard counts");
+}
+
+#[test]
+fn checkpoint_resumes_across_shard_counts() {
+    // checkpoints store second-order state in global block order and the
+    // round-robin assignment is a pure function of (block_idx, shards), so
+    // a run saved at shards=2 must resume bit-identically at shards=4
+    let rt = HostBackend::new();
+    let dir = std::env::temp_dir().join("shampoo4_shard_resume_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("ck.bin");
+
+    let mut cfg = shard_cfg(SecondOrderKind::Shampoo, 1, 20);
+    cfg.name = "se_resume".into();
+    cfg.second.update_precond_every = 4;
+    cfg.second.update_invroot_every = 8;
+    cfg.schedule = shampoo4::config::Schedule::Constant;
+
+    let mut straight = Trainer::new(&rt, cfg.clone()).unwrap();
+    straight.train(&rt, None).unwrap();
+
+    let mut half_cfg = cfg.clone();
+    half_cfg.steps = 10;
+    half_cfg.second.shards = 2;
+    let mut first_half = Trainer::new(&rt, half_cfg).unwrap();
+    first_half.train(&rt, None).unwrap();
+    first_half.save_checkpoint(&ckpt, 10).unwrap();
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.second.shards = 4;
+    let mut resumed = Trainer::new(&rt, resume_cfg).unwrap();
+    assert_eq!(resumed.load_checkpoint(&ckpt).unwrap(), 10);
+    let r = resumed.train(&rt, None).unwrap();
+    assert_eq!(r.timings.steps, 10, "resume must run only the back half");
+    assert_eq!(
+        param_bits(&resumed.model.params),
+        param_bits(&straight.model.params),
+        "shards=2 checkpoint resumed at shards=4 diverged from the unsharded run"
+    );
+    assert_eq!(
+        resumed.second.as_ref().unwrap().serialize_state(),
+        straight.second.as_ref().unwrap().serialize_state(),
+        "second-order state diverged across the shard-count change"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shard_wire_is_codec_compressed() {
+    // the refreshed back-buffers must travel as raw codec bytes: with the
+    // default 4-bit sides, the state traffic must be at least 4x below the
+    // fp32 wire format (the paper's at-rest compression carried onto the
+    // wire), and all counters must be self-consistent
+    let (_, _, res) = run(shard_cfg(SecondOrderKind::Shampoo, 2, 22));
+    let tm = &res.timings;
+    assert!(tm.shard_rounds > 0, "no shard rounds dispatched");
+    assert!(tm.shard_state_bytes > 0, "no state traffic accounted");
+    assert!(
+        tm.shard_wire_bytes > tm.shard_state_bytes,
+        "total wire must include request traffic on top of state traffic"
+    );
+    let ratio = tm.shard_state_fp32_bytes as f64 / tm.shard_state_bytes as f64;
+    assert!(
+        ratio >= 4.0,
+        "4-bit state wire must be >= 4x below fp32 wire, got {ratio:.2}x \
+         ({} vs {} bytes)",
+        tm.shard_state_bytes,
+        tm.shard_state_fp32_bytes
+    );
+}
+
+#[test]
+fn shard_engine_error_reports_backend_name() {
+    // a shard worker that cannot construct its backend must surface a
+    // descriptive error at the first barrier (construction sync), not hang
+    let mut cfg = shard_cfg(SecondOrderKind::Shampoo, 2, 5);
+    cfg.name = "se_bad_backend".into();
+    cfg.backend = "pjrt".into(); // not compiled in default builds
+    let rt = HostBackend::new();
+    let err = match Trainer::new(&rt, cfg) {
+        Err(e) => format!("{e:#}"),
+        Ok(mut t) => match t.train(&rt, None) {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("shard engine trained against an unavailable backend"),
+        },
+    };
+    assert!(
+        err.contains("pjrt") || err.contains("backend"),
+        "unexpected error chain: {err}"
+    );
+}
