@@ -1,0 +1,736 @@
+//! The in-workspace invariant linter (`cargo run -p shampoo-lint`).
+//!
+//! `clippy` enforces general Rust hygiene; this crate enforces the
+//! *repo-specific* contracts that the concurrent engine stakes its
+//! correctness on but that no general-purpose tool can express:
+//!
+//! * **`unsafe-safety`** — every `unsafe` block/impl carries a `// SAFETY:`
+//!   comment explaining why the invariants hold (backed crate-wide by
+//!   `clippy::undocumented_unsafe_blocks`; this linter re-checks it so the
+//!   gate also covers tests/benches and non-clippy runs).
+//! * **`unsafe-module`** — `unsafe` is confined to an explicit module
+//!   allowlist (`quant/simd.rs`, `coordinator/scheduler.rs`,
+//!   `coordinator/second_order.rs`). New unsafe code must either live
+//!   there or change this list in a reviewed diff.
+//! * **`atomic-ordering`** — every atomic load/store/RMW spells its
+//!   `Ordering::` path explicitly (no bare `Relaxed` imports) and carries a
+//!   one-line `// ordering:` rationale at the call site.
+//! * **`det-hash`** — determinism-contract modules (`coordinator/*`,
+//!   `quant/*`) may not use `HashMap`/`HashSet`/`RandomState` at all:
+//!   iteration order would leak nondeterminism into merge/swap paths, and
+//!   the bit-reproducibility contract (sharded == pipelined == serial)
+//!   cannot survive that.
+//! * **`det-wallclock`** — determinism modules read the wall clock only
+//!   through `util::timer` (`Stopwatch`), whose results may feed
+//!   `StepTimings` telemetry but never control flow. Raw `Instant::now` /
+//!   `SystemTime` reads are flagged.
+//! * **`det-rand`** — determinism modules may not touch ambient/unseeded
+//!   randomness (`thread_rng`, `from_entropy`, `rand::random`,
+//!   `getrandom`); all streams fork from the run seed via `util::rng`.
+//! * **`lock-unwrap`** — `coordinator/{scheduler,shard}.rs` may not call
+//!   bare `.unwrap()`/`.expect()` on lock/channel results (mutex poison,
+//!   condvar waits, `send`/`recv`): those must propagate a typed
+//!   [`ScheduleError`](https://docs.rs/) / shard error-ack, recover
+//!   deliberately (`unwrap_or_else(PoisonError::into_inner)` with a
+//!   rationale), or carry an allow annotation.
+//!
+//! # Allow annotations
+//!
+//! A violation that is intentional carries a site-level annotation — the
+//! marker `lint:allow` immediately followed by the rule name in
+//! parentheses and a one-line reason (see `ARCHITECTURE.md` §6 for the
+//! grammar spelled out; this doc avoids writing a literal annotation,
+//! which the linter would otherwise pick up right here) —
+//! either trailing on the offending line or on the comment line directly
+//! above it. The linter counts every annotation, validates that the rule
+//! name exists and the reason is non-empty (`allow-grammar` violations are
+//! not themselves allowable), and reports the full list in its summary —
+//! so the set of blessed exceptions is always visible in CI logs.
+//!
+//! # Scanner
+//!
+//! A lightweight line-oriented token scanner, not a parser: comments and
+//! string/char literals are stripped (line + nested block comments, plain
+//! and raw strings, char-vs-lifetime disambiguation) so rules match only
+//! real code tokens, and `#[cfg(test)]`-gated regions plus `tests/` and
+//! `benches/` trees are tracked so test scaffolding is exempt from the
+//! rules that target production invariants (test code still answers for
+//! `unsafe`). This is deliberately simple enough to audit by eye — the
+//! linter guards the engine, so the linter itself must be boring.
+
+use std::path::{Path, PathBuf};
+
+/// One enforced rule: `(name, what it enforces)`.
+pub const RULES: &[(&str, &str)] = &[
+    ("unsafe-safety", "every `unsafe` block/impl carries a `// SAFETY:` comment"),
+    (
+        "unsafe-module",
+        "`unsafe` is confined to quant/simd.rs, coordinator/scheduler.rs, \
+         coordinator/second_order.rs",
+    ),
+    (
+        "atomic-ordering",
+        "atomic ops spell `Ordering::` explicitly and carry a `// ordering:` rationale",
+    ),
+    (
+        "det-hash",
+        "determinism modules (coordinator/*, quant/*) must not use \
+         HashMap/HashSet (unordered iteration)",
+    ),
+    (
+        "det-wallclock",
+        "determinism modules read wall-clock only via util::timer, never \
+         Instant::now/SystemTime directly",
+    ),
+    (
+        "det-rand",
+        "determinism modules must not use ambient/unseeded randomness",
+    ),
+    (
+        "lock-unwrap",
+        "no bare .unwrap()/.expect() on lock/channel results in \
+         coordinator/{scheduler,shard}.rs",
+    ),
+    (
+        "allow-grammar",
+        "every lint:allow(<rule>) names an existing rule and carries a reason \
+         (meta-rule; not itself allowable)",
+    ),
+];
+
+/// Modules permitted to contain `unsafe` code (path suffixes).
+pub const UNSAFE_ALLOWLIST: &[&str] = &[
+    "src/quant/simd.rs",
+    "src/coordinator/scheduler.rs",
+    "src/coordinator/second_order.rs",
+];
+
+/// Files under the lock-discipline rule (path suffixes).
+pub const LOCK_DISCIPLINE_FILES: &[&str] =
+    &["src/coordinator/scheduler.rs", "src/coordinator/shard.rs"];
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Name of the violated rule (see [`RULES`]).
+    pub rule: &'static str,
+    /// Human-readable description of the specific violation.
+    pub message: String,
+}
+
+/// One allow annotation (`lint:allow` + rule + reason) found in the tree.
+#[derive(Debug, Clone)]
+pub struct AllowSite {
+    /// Repo-relative path (forward slashes).
+    pub file: String,
+    /// 1-based line number of the annotation comment.
+    pub line: usize,
+    /// Rule name inside the parentheses.
+    pub rule: String,
+    /// Free text after the closing parenthesis.
+    pub reason: String,
+}
+
+/// Result of linting one source file.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    /// Violations found (allow-annotated sites excluded).
+    pub violations: Vec<Violation>,
+    /// Every allow annotation in the file, used or not.
+    pub allows: Vec<AllowSite>,
+}
+
+/// Result of linting a whole tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    /// Files scanned.
+    pub files: usize,
+    /// All violations across the tree.
+    pub violations: Vec<Violation>,
+    /// All allow annotations across the tree.
+    pub allows: Vec<AllowSite>,
+}
+
+/// True iff `name` is a registered rule (see [`RULES`]).
+pub fn rule_exists(name: &str) -> bool {
+    RULES.iter().any(|(n, _)| *n == name)
+}
+
+// ---------------------------------------------------------------------------
+// scanner: strip comments/strings, keep comment text per line
+// ---------------------------------------------------------------------------
+
+/// One scanned source line: code with comments and literal *contents*
+/// removed (string literals collapse to `""`), plus the comment text.
+#[derive(Debug, Default, Clone)]
+struct ScanLine {
+    code: String,
+    comment: String,
+}
+
+/// Split source into per-line (code, comment) pairs. Handles line
+/// comments, nested block comments, plain strings (with `\"` escapes and
+/// backslash-newline continuations), raw strings (`r".."`, `r#".."#`,
+/// `br#".."#`), and char-literal-vs-lifetime disambiguation.
+fn split_source(src: &str) -> Vec<ScanLine> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum Mode {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+    }
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut lines = Vec::new();
+    let mut cur = ScanLine::default();
+    let mut mode = Mode::Code;
+    let mut prev_ident = false;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            if mode == Mode::LineComment {
+                mode = Mode::Code;
+            }
+            lines.push(std::mem::take(&mut cur));
+            prev_ident = false;
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    mode = Mode::Str;
+                    cur.code.push('"');
+                    prev_ident = false;
+                    i += 1;
+                    continue;
+                }
+                // raw strings: r"..", r#".."#, br#".."# — only when the `r`
+                // does not continue an identifier
+                let raw_at = if c == 'r' && !prev_ident {
+                    Some(i + 1)
+                } else if c == 'b' && !prev_ident && next == Some('r') {
+                    Some(i + 2)
+                } else {
+                    None
+                };
+                if let Some(mut j) = raw_at {
+                    let mut hashes = 0u32;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        mode = Mode::RawStr(hashes);
+                        cur.code.push('"');
+                        prev_ident = false;
+                        i = j + 1;
+                        continue;
+                    }
+                }
+                if c == '\'' {
+                    // char literal vs lifetime: '\x' escapes and 'c' single
+                    // chars are literals; anything else is a lifetime tick
+                    if next == Some('\\') {
+                        let mut j = i + 2;
+                        while j < n && chars[j] != '\'' && chars[j] != '\n' {
+                            j += 1;
+                        }
+                        cur.code.push_str("' '");
+                        prev_ident = false;
+                        i = if j < n && chars[j] == '\'' { j + 1 } else { j };
+                        continue;
+                    }
+                    if chars.get(i + 2).copied() == Some('\'') && next != Some('\'') {
+                        cur.code.push_str("' '");
+                        prev_ident = false;
+                        i += 3;
+                        continue;
+                    }
+                }
+                cur.code.push(c);
+                prev_ident = c.is_alphanumeric() || c == '_';
+                i += 1;
+            }
+            Mode::LineComment => {
+                cur.comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    mode = if depth == 1 { Mode::Code } else { Mode::BlockComment(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    cur.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // keep backslash-newline continuations on their own
+                    // lines so line numbering never drifts
+                    if chars.get(i + 1).copied() == Some('\n') {
+                        i += 1;
+                    } else {
+                        i += 2;
+                    }
+                    continue;
+                }
+                if c == '"' {
+                    cur.code.push('"');
+                    mode = Mode::Code;
+                }
+                i += 1;
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if chars.get(i + 1 + k).copied() != Some('#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        cur.code.push('"');
+                        mode = Mode::Code;
+                        i += 1 + hashes as usize;
+                        continue;
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    lines.push(cur);
+    lines
+}
+
+/// Per-line flags: is the line inside a `#[cfg(test)]`-gated region?
+/// Tracks brace depth on stripped code, so braces inside strings/comments
+/// never confuse the region bounds.
+fn test_region_flags(lines: &[ScanLine]) -> Vec<bool> {
+    let mut flags = vec![false; lines.len()];
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut region_parent_depth: Option<i64> = None;
+    for (idx, l) in lines.iter().enumerate() {
+        if region_parent_depth.is_some() || pending {
+            flags[idx] = true;
+        }
+        if l.code.contains("#[cfg(test)]") || l.code.contains("#[cfg(all(test") {
+            pending = true;
+            flags[idx] = true;
+        }
+        for ch in l.code.chars() {
+            match ch {
+                '{' => {
+                    depth += 1;
+                    if pending {
+                        region_parent_depth = Some(depth - 1);
+                        pending = false;
+                    }
+                }
+                '}' => {
+                    depth -= 1;
+                    if let Some(d) = region_parent_depth {
+                        if depth <= d {
+                            region_parent_depth = None;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    flags
+}
+
+/// Does `code` contain `word` with non-identifier characters (or edges) on
+/// both sides?
+fn contains_word(code: &str, word: &str) -> bool {
+    let mut start = 0usize;
+    while let Some(pos) = code[start..].find(word) {
+        let at = start + pos;
+        let before_ok = at == 0
+            || !code[..at]
+                .chars()
+                .next_back()
+                .map(|c| c.is_alphanumeric() || c == '_')
+                .unwrap_or(false);
+        let after = code[at + word.len()..].chars().next();
+        let after_ok = !after.map(|c| c.is_alphanumeric() || c == '_').unwrap_or(false);
+        if before_ok && after_ok {
+            return true;
+        }
+        start = at + word.len();
+    }
+    false
+}
+
+/// Is the marker (`SAFETY:` / `ordering:`) present on this line's comment
+/// or in the contiguous comment/attribute/blank block directly above?
+fn has_marker(lines: &[ScanLine], idx: usize, marker: &str) -> bool {
+    if lines[idx].comment.contains(marker) {
+        return true;
+    }
+    let mut j = idx;
+    let mut looked = 0;
+    while j > 0 && looked < 12 {
+        j -= 1;
+        looked += 1;
+        let code = lines[j].code.trim();
+        if !code.is_empty() && !code.starts_with("#[") {
+            // a continuation head (`let x =`, an open delimiter, a trailing
+            // comma/operator) doesn't end the comment block: the marker may
+            // sit above the whole statement the flagged line belongs to
+            const CONT: &[&str] = &["=", "(", "{", ",", "+", "&&", "||", "=>"];
+            if !CONT.iter().any(|c| code.ends_with(c)) {
+                return false; // hit real code: the comment block ended
+            }
+        }
+        if lines[j].comment.contains(marker) {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// rule engine
+// ---------------------------------------------------------------------------
+
+const ATOMIC_OPS: &[&str] = &[
+    ".load(",
+    ".store(",
+    ".swap(",
+    ".fetch_add(",
+    ".fetch_sub(",
+    ".fetch_and(",
+    ".fetch_or(",
+    ".fetch_xor(",
+    ".fetch_max(",
+    ".fetch_min(",
+    ".fetch_update(",
+    ".compare_exchange",
+];
+
+const BARE_ORDERINGS: &[&str] = &["Relaxed", "SeqCst", "Acquire", "Release", "AcqRel"];
+
+const LOCK_CHANNEL_PATTERNS: &[&str] = &[
+    ".lock(",
+    ".read()",
+    ".write()",
+    ".wait(",
+    ".wait_timeout(",
+    ".send(",
+    ".recv(",
+    ".try_recv(",
+    ".recv_timeout(",
+    ".into_inner(",
+    ".join()",
+];
+
+const RAND_TOKENS: &[&str] = &["thread_rng", "from_entropy", "getrandom"];
+
+fn is_test_path(rel: &str) -> bool {
+    rel.split('/').any(|seg| seg == "tests" || seg == "benches")
+}
+
+fn is_det_module(rel: &str) -> bool {
+    rel.contains("src/coordinator/") || rel.contains("src/quant/")
+}
+
+fn suffix_match(rel: &str, suffixes: &[&str]) -> bool {
+    suffixes.iter().any(|s| rel.ends_with(s))
+}
+
+/// Lint one source file. `rel_path` is the repo-relative path with forward
+/// slashes — rule scoping (allowlists, determinism modules, test trees)
+/// keys off it, so fixture tests can probe any scope by labeling their
+/// snippet accordingly.
+pub fn lint_source(rel_path: &str, src: &str) -> FileReport {
+    let lines = split_source(src);
+    let test_flags = test_region_flags(&lines);
+    let file_is_test = is_test_path(rel_path);
+    let det = is_det_module(rel_path) && !file_is_test;
+    let lock_scope = suffix_match(rel_path, LOCK_DISCIPLINE_FILES) && !file_is_test;
+    let unsafe_ok = suffix_match(rel_path, UNSAFE_ALLOWLIST);
+
+    let mut report = FileReport::default();
+
+    // pass 1: collect allow annotations and attach each to the line it
+    // governs (its own line when it trails code, else the next code line)
+    let mut allowed: Vec<Vec<usize>> = vec![Vec::new(); lines.len()];
+    for (idx, l) in lines.iter().enumerate() {
+        let Some(pos) = l.comment.find("lint:allow(") else { continue };
+        let rest = &l.comment[pos + "lint:allow(".len()..];
+        let (rule, reason) = match rest.find(')') {
+            Some(close) => (rest[..close].trim().to_string(), rest[close + 1..].trim().to_string()),
+            None => (rest.trim().to_string(), String::new()),
+        };
+        let site = report.allows.len();
+        report.allows.push(AllowSite {
+            file: rel_path.to_string(),
+            line: idx + 1,
+            rule: rule.clone(),
+            reason: reason.clone(),
+        });
+        if !rule_exists(&rule) || rule == "allow-grammar" {
+            report.violations.push(Violation {
+                file: rel_path.to_string(),
+                line: idx + 1,
+                rule: "allow-grammar",
+                message: format!("lint:allow names unknown rule `{rule}`"),
+            });
+        } else if reason.len() < 3 {
+            report.violations.push(Violation {
+                file: rel_path.to_string(),
+                line: idx + 1,
+                rule: "allow-grammar",
+                message: format!("lint:allow({rule}) carries no reason"),
+            });
+        }
+        // attach to this line if it has code, else the next line with code
+        let mut target = idx;
+        if lines[idx].code.trim().is_empty() {
+            let mut j = idx + 1;
+            while j < lines.len() && lines[j].code.trim().is_empty() {
+                j += 1;
+            }
+            if j < lines.len() {
+                target = j;
+            }
+        }
+        allowed[target].push(site);
+    }
+
+    let is_allowed = |allows: &[AllowSite], site_ids: &[usize], rule: &str| -> bool {
+        site_ids.iter().any(|&s| allows[s].rule == rule)
+    };
+
+    // pass 2: the rules
+    for (idx, l) in lines.iter().enumerate() {
+        let code = &l.code;
+        let lineno = idx + 1;
+        let in_test = file_is_test || test_flags[idx];
+        let mut push = |report: &mut FileReport, rule: &'static str, message: String| {
+            if !is_allowed(&report.allows, &allowed[idx], rule) {
+                report.violations.push(Violation {
+                    file: rel_path.to_string(),
+                    line: lineno,
+                    rule,
+                    message,
+                });
+            }
+        };
+
+        // unsafe rules apply everywhere, tests included
+        if contains_word(code, "unsafe") {
+            if !unsafe_ok {
+                push(
+                    &mut report,
+                    "unsafe-module",
+                    format!("`unsafe` outside the allowlisted modules ({rel_path})"),
+                );
+            }
+            if !has_marker(&lines, idx, "SAFETY:") {
+                push(
+                    &mut report,
+                    "unsafe-safety",
+                    "`unsafe` without a `// SAFETY:` comment".to_string(),
+                );
+            }
+        }
+
+        if in_test {
+            continue;
+        }
+
+        // atomic-ordering: src-wide, non-test
+        if ATOMIC_OPS.iter().any(|op| code.contains(op)) {
+            let mut window = code.clone();
+            for w in lines.iter().skip(idx + 1).take(2) {
+                window.push(' ');
+                window.push_str(&w.code);
+            }
+            if window.contains("Ordering::") {
+                if !has_marker(&lines, idx, "ordering:") {
+                    push(
+                        &mut report,
+                        "atomic-ordering",
+                        "atomic op without a `// ordering:` rationale".to_string(),
+                    );
+                }
+            } else if BARE_ORDERINGS.iter().any(|o| contains_word(&window, o)) {
+                push(
+                    &mut report,
+                    "atomic-ordering",
+                    "atomic op must spell `Ordering::` explicitly".to_string(),
+                );
+            }
+        }
+
+        if det {
+            for tok in ["HashMap", "HashSet", "RandomState"] {
+                if contains_word(code, tok) {
+                    push(
+                        &mut report,
+                        "det-hash",
+                        format!("`{tok}` in a determinism module (unordered iteration)"),
+                    );
+                    break;
+                }
+            }
+            if code.contains("Instant::now") || contains_word(code, "SystemTime") {
+                push(
+                    &mut report,
+                    "det-wallclock",
+                    "raw wall-clock read in a determinism module (use util::timer)".to_string(),
+                );
+            }
+            if RAND_TOKENS.iter().any(|t| contains_word(code, t))
+                || code.contains("rand::random")
+            {
+                push(
+                    &mut report,
+                    "det-rand",
+                    "ambient/unseeded randomness in a determinism module".to_string(),
+                );
+            }
+        }
+
+        if lock_scope && (code.contains(".unwrap()") || code.contains(".expect(")) {
+            let mut window = String::new();
+            if idx > 0 {
+                window.push_str(&lines[idx - 1].code);
+                window.push(' ');
+            }
+            window.push_str(code);
+            // an unwrap/expect whose lock/channel call continues on the next
+            // line (`...expect("live").` / newline / `.send(msg)`): pull the
+            // continuation in, but only when this line is visibly unfinished,
+            // so an unrelated channel op on the following statement does not
+            // trip the rule
+            let unfinished = !matches!(
+                code.trim_end().chars().last(),
+                Some(';') | Some('{') | Some('}') | None
+            );
+            if unfinished {
+                if let Some(next) = lines.get(idx + 1) {
+                    window.push(' ');
+                    window.push_str(&next.code);
+                }
+            }
+            if LOCK_CHANNEL_PATTERNS.iter().any(|p| window.contains(p)) {
+                push(
+                    &mut report,
+                    "lock-unwrap",
+                    "bare unwrap/expect on a lock/channel result (propagate a typed \
+                     error or recover deliberately)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+    report
+}
+
+// ---------------------------------------------------------------------------
+// tree walking
+// ---------------------------------------------------------------------------
+
+/// Directories scanned relative to the repo root.
+pub const SCAN_DIRS: &[&str] = &[
+    "rust/src",
+    "rust/tests",
+    "rust/benches",
+    "rust/lint/src",
+    "rust/lint/tests",
+    "rust/xla-stub/src",
+];
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        std::fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under [`SCAN_DIRS`] below `repo_root`.
+pub fn lint_tree(repo_root: &Path) -> std::io::Result<LintReport> {
+    let mut report = LintReport::default();
+    for dir in SCAN_DIRS {
+        let d = repo_root.join(dir);
+        if !d.is_dir() {
+            continue;
+        }
+        let mut files = Vec::new();
+        collect_rs(&d, &mut files)?;
+        for f in files {
+            let src = std::fs::read_to_string(&f)?;
+            let rel = f
+                .strip_prefix(repo_root)
+                .unwrap_or(&f)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let fr = lint_source(&rel, &src);
+            report.files += 1;
+            report.violations.extend(fr.violations);
+            report.allows.extend(fr.allows);
+        }
+    }
+    Ok(report)
+}
+
+/// Render the report the way `main` prints it (tests assert on pieces).
+pub fn render(report: &LintReport) -> String {
+    let mut out = String::new();
+    for v in &report.violations {
+        out.push_str(&format!("{}:{}: [{}] {}\n", v.file, v.line, v.rule, v.message));
+    }
+    if !report.allows.is_empty() {
+        out.push_str(&format!("{} lint:allow annotation(s):\n", report.allows.len()));
+        for a in &report.allows {
+            out.push_str(&format!(
+                "  {}:{}: allow({}) — {}\n",
+                a.file, a.line, a.rule, a.reason
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "{} file(s) scanned, {} violation(s)\n",
+        report.files,
+        report.violations.len()
+    ));
+    out
+}

@@ -1,0 +1,28 @@
+//! CLI entry point: `cargo run -p shampoo-lint [repo_root]`.
+//!
+//! Walks the workspace source trees, prints every violation and the full
+//! allow-annotation inventory, and exits non-zero if any rule fired — the
+//! blocking CI contract.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    // default root: two levels above this crate's manifest (rust/lint -> repo)
+    let root = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+    });
+    let report = match shampoo_lint::lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("shampoo-lint: cannot walk {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    print!("{}", shampoo_lint::render(&report));
+    if report.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

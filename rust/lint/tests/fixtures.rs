@@ -1,0 +1,398 @@
+//! Fixture tests: every rule must fire on a violating snippet and stay
+//! quiet on the clean twin. Snippets live in raw strings, so the linter's
+//! own scanner (which strips string literals) never trips over this file
+//! when it walks the real tree.
+
+use shampoo_lint::{lint_source, FileReport};
+
+fn rules_fired(r: &FileReport) -> Vec<&'static str> {
+    let mut v: Vec<&'static str> = r.violations.iter().map(|x| x.rule).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+// --- unsafe-safety / unsafe-module ----------------------------------------
+
+#[test]
+fn unsafe_without_safety_fires_in_allowlisted_module() {
+    let src = r#"
+pub fn f(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+"#;
+    let r = lint_source("rust/src/quant/simd.rs", src);
+    assert_eq!(rules_fired(&r), vec!["unsafe-safety"]);
+}
+
+#[test]
+fn unsafe_with_safety_comment_is_clean() {
+    let src = r#"
+pub fn f(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees p is valid and aligned for reads.
+    unsafe { *p }
+}
+"#;
+    let r = lint_source("rust/src/quant/simd.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn unsafe_trailing_safety_comment_is_clean() {
+    let src = "pub fn f(p: *const f32) -> f32 { unsafe { *p } } // SAFETY: p valid.\n";
+    let r = lint_source("rust/src/quant/simd.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn unsafe_outside_allowlist_fires_module_rule() {
+    let src = r#"
+pub fn f(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees p is valid.
+    unsafe { *p }
+}
+"#;
+    let r = lint_source("rust/src/quant/codec.rs", src);
+    assert_eq!(rules_fired(&r), vec!["unsafe-module"]);
+}
+
+#[test]
+fn unsafe_in_tests_still_needs_safety() {
+    let src = r#"
+fn t(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"#;
+    let r = lint_source("rust/tests/some_test.rs", src);
+    assert!(rules_fired(&r).contains(&"unsafe-safety"));
+}
+
+#[test]
+fn the_word_unsafe_in_a_string_is_not_code() {
+    let src = "pub fn f() -> &'static str { \"unsafe\" }\n";
+    let r = lint_source("rust/src/quant/codec.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+// --- atomic-ordering ------------------------------------------------------
+
+#[test]
+fn atomic_without_rationale_fires() {
+    let src = r#"
+pub fn f(a: &std::sync::atomic::AtomicUsize) -> usize {
+    a.load(std::sync::atomic::Ordering::Relaxed)
+}
+"#;
+    let r = lint_source("rust/src/runtime/host/mod.rs", src);
+    assert_eq!(rules_fired(&r), vec!["atomic-ordering"]);
+}
+
+#[test]
+fn atomic_with_rationale_is_clean() {
+    let src = r#"
+pub fn f(a: &std::sync::atomic::AtomicUsize) -> usize {
+    // ordering: monotone counter read, no synchronizes-with edge needed.
+    a.load(std::sync::atomic::Ordering::Relaxed)
+}
+"#;
+    let r = lint_source("rust/src/runtime/host/mod.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn atomic_bare_imported_ordering_fires() {
+    let src = r#"
+use std::sync::atomic::Ordering::Relaxed;
+pub fn f(a: &std::sync::atomic::AtomicUsize) -> usize {
+    // ordering: counter only.
+    a.load(Relaxed)
+}
+"#;
+    let r = lint_source("rust/src/runtime/host/mod.rs", src);
+    assert_eq!(rules_fired(&r), vec!["atomic-ordering"]);
+}
+
+#[test]
+fn non_atomic_load_method_is_not_flagged() {
+    // Manifest::load(dir) / config.load(path): no Ordering token in sight
+    let src = r#"
+pub fn f(dir: &std::path::Path) -> std::io::Result<String> {
+    std::fs::read_to_string(dir.join("manifest.json"))
+}
+pub fn g(m: &M) { m.load(3); }
+"#;
+    let r = lint_source("rust/src/runtime/host/mod.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn atomic_in_cfg_test_region_is_exempt() {
+    let src = r#"
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    #[test]
+    fn t() {
+        let a = AtomicUsize::new(0);
+        a.store(1, Ordering::SeqCst);
+    }
+}
+"#;
+    let r = lint_source("rust/src/runtime/host/mod.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+// --- det-hash -------------------------------------------------------------
+
+#[test]
+fn hashmap_in_determinism_module_fires() {
+    let src = "use std::collections::HashMap;\n";
+    let r = lint_source("rust/src/coordinator/merge.rs", src);
+    assert_eq!(rules_fired(&r), vec!["det-hash"]);
+}
+
+#[test]
+fn hashmap_outside_determinism_modules_is_fine() {
+    let src = "use std::collections::HashMap;\n";
+    let r = lint_source("rust/src/runtime/registry.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn btreemap_in_determinism_module_is_fine() {
+    let src = "use std::collections::BTreeMap;\n";
+    let r = lint_source("rust/src/coordinator/merge.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+// --- det-wallclock --------------------------------------------------------
+
+#[test]
+fn instant_now_in_determinism_module_fires() {
+    let src = r#"
+pub fn f() -> std::time::Instant {
+    std::time::Instant::now()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/trainer.rs", src);
+    assert_eq!(rules_fired(&r), vec!["det-wallclock"]);
+}
+
+#[test]
+fn stopwatch_in_determinism_module_is_clean() {
+    let src = r#"
+pub fn f(sw: &crate::util::timer::Stopwatch) -> f64 {
+    sw.secs()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/trainer.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn instant_now_in_blessed_timer_module_is_fine() {
+    let src = "pub fn now() -> std::time::Instant { std::time::Instant::now() }\n";
+    let r = lint_source("rust/src/util/timer.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+// --- det-rand -------------------------------------------------------------
+
+#[test]
+fn thread_rng_in_determinism_module_fires() {
+    let src = "pub fn f() { let _r = thread_rng(); }\n";
+    let r = lint_source("rust/src/quant/policy.rs", src);
+    assert_eq!(rules_fired(&r), vec!["det-rand"]);
+}
+
+#[test]
+fn seeded_rng_in_determinism_module_is_clean() {
+    let src = "pub fn f(seed: u64) { let _r = crate::util::rng::SplitMix64::new(seed); }\n";
+    let r = lint_source("rust/src/quant/policy.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+// --- lock-unwrap ----------------------------------------------------------
+
+#[test]
+fn lock_unwrap_in_scheduler_fires() {
+    let src = r#"
+pub fn f(m: &std::sync::Mutex<Vec<u32>>) -> usize {
+    m.lock().unwrap().len()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert_eq!(rules_fired(&r), vec!["lock-unwrap"]);
+}
+
+#[test]
+fn lock_expect_split_across_lines_fires() {
+    let src = r#"
+pub fn f(m: &std::sync::Mutex<Vec<u32>>) -> usize {
+    m.lock()
+        .expect("queue lock")
+        .len()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/shard.rs", src);
+    assert_eq!(rules_fired(&r), vec!["lock-unwrap"]);
+}
+
+#[test]
+fn channel_recv_unwrap_in_shard_fires() {
+    let src = r#"
+pub fn f(rx: &std::sync::mpsc::Receiver<u8>) -> u8 {
+    rx.recv().unwrap()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/shard.rs", src);
+    assert_eq!(rules_fired(&r), vec!["lock-unwrap"]);
+}
+
+#[test]
+fn expect_with_channel_op_on_next_line_fires() {
+    // the unwrap line is visibly unfinished (no trailing `;`), so the
+    // continuation — where the channel op actually appears — is part of
+    // the detection window
+    let src = r#"
+pub fn f(tx: &Option<std::sync::mpsc::Sender<u8>>) {
+    tx.as_ref().expect("sender live until drop")
+        .send(7)
+        .ok();
+}
+"#;
+    let r = lint_source("rust/src/coordinator/shard.rs", src);
+    assert_eq!(rules_fired(&r), vec!["lock-unwrap"]);
+}
+
+#[test]
+fn finished_unwrap_before_unrelated_send_is_clean() {
+    // here the unwrap statement ends in `;`, so the send on the next
+    // statement must not be pulled into the window
+    let src = r#"
+pub fn f(s: &str, tx: &std::sync::mpsc::Sender<u32>) {
+    let n = s.parse::<u32>().unwrap();
+    tx.send(n).ok();
+}
+"#;
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn poison_recovery_is_clean() {
+    let src = r#"
+pub fn f(m: &std::sync::Mutex<Vec<u32>>) -> usize {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner).len()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn non_lock_unwrap_in_scheduler_is_fine() {
+    let src = r#"
+pub fn f(s: &str) -> u32 {
+    s.parse::<u32>().unwrap()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn lock_unwrap_outside_named_files_is_fine() {
+    let src = r#"
+pub fn f(m: &std::sync::Mutex<Vec<u32>>) -> usize {
+    m.lock().unwrap().len()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/second_order.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+// --- allow annotations ----------------------------------------------------
+
+#[test]
+fn trailing_allow_suppresses_and_is_counted() {
+    let src = r#"
+pub fn f(m: &std::sync::Mutex<Vec<u32>>) -> usize {
+    m.lock().unwrap().len() // lint:allow(lock-unwrap) test-only helper, poison impossible
+}
+"#;
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+    assert_eq!(r.allows.len(), 1);
+    assert_eq!(r.allows[0].rule, "lock-unwrap");
+    assert!(r.allows[0].reason.contains("poison impossible"));
+}
+
+#[test]
+fn standalone_allow_governs_next_code_line() {
+    let src = r#"
+pub fn f(m: &std::sync::Mutex<Vec<u32>>) -> usize {
+    // lint:allow(lock-unwrap) single-threaded setup path, cannot poison
+
+    m.lock().unwrap().len()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+    assert_eq!(r.allows.len(), 1);
+}
+
+#[test]
+fn allow_of_wrong_rule_does_not_suppress() {
+    let src = r#"
+pub fn f(m: &std::sync::Mutex<Vec<u32>>) -> usize {
+    m.lock().unwrap().len() // lint:allow(det-hash) mismatched rule name
+}
+"#;
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert_eq!(rules_fired(&r), vec!["lock-unwrap"]);
+}
+
+#[test]
+fn allow_with_unknown_rule_is_a_grammar_violation() {
+    let src = "pub fn f() {} // lint:allow(no-such-rule) whatever\n";
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert_eq!(rules_fired(&r), vec!["allow-grammar"]);
+}
+
+#[test]
+fn allow_without_reason_is_a_grammar_violation() {
+    let src = "pub fn f() {} // lint:allow(lock-unwrap)\n";
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert_eq!(rules_fired(&r), vec!["allow-grammar"]);
+}
+
+// --- scanner robustness ---------------------------------------------------
+
+#[test]
+fn raw_strings_and_char_literals_are_stripped() {
+    let src = r##"
+pub fn f<'a>(x: &'a str) -> (char, &'a str) {
+    let c = '{';
+    let s = r#"unsafe HashMap Instant::now .lock().unwrap()"#;
+    (c, s)
+}
+"##;
+    let r = lint_source("rust/src/coordinator/scheduler.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn nested_block_comments_are_stripped() {
+    let src = "/* outer /* unsafe inner */ still comment unsafe */ pub fn f() {}\n";
+    let r = lint_source("rust/src/coordinator/merge.rs", src);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn violation_line_numbers_are_one_based_and_exact() {
+    let src = "\n\nuse std::collections::HashMap;\n";
+    let r = lint_source("rust/src/coordinator/merge.rs", src);
+    assert_eq!(r.violations.len(), 1);
+    assert_eq!(r.violations[0].line, 3);
+}

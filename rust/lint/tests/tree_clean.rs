@@ -1,0 +1,56 @@
+//! Meta-tests over the real tree: the workspace must lint clean, and every
+//! `// lint:allow` annotation that exists anywhere must name a registered
+//! rule and carry a reason. This is the same walk CI's blocking
+//! `cargo run -p shampoo-lint` step performs, so `cargo test` catches a
+//! dirty tree before the lint job does.
+
+use std::path::PathBuf;
+
+fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("..")
+}
+
+#[test]
+fn workspace_tree_lints_clean() {
+    let report = shampoo_lint::lint_tree(&repo_root()).expect("walk workspace tree");
+    assert!(report.files > 20, "suspiciously few files scanned: {}", report.files);
+    assert!(
+        report.violations.is_empty(),
+        "tree has lint violations:\n{}",
+        shampoo_lint::render(&report)
+    );
+}
+
+#[test]
+fn every_allow_annotation_is_well_formed() {
+    let report = shampoo_lint::lint_tree(&repo_root()).expect("walk workspace tree");
+    for a in &report.allows {
+        assert!(
+            shampoo_lint::rule_exists(&a.rule),
+            "{}:{}: lint:allow names unknown rule `{}`",
+            a.file,
+            a.line,
+            a.rule
+        );
+        assert!(
+            a.reason.len() >= 3,
+            "{}:{}: lint:allow({}) carries no reason",
+            a.file,
+            a.line,
+            a.rule
+        );
+    }
+}
+
+#[test]
+fn rule_catalog_is_consistent() {
+    // every rule has a non-empty description and a unique name
+    let mut names: Vec<&str> = shampoo_lint::RULES.iter().map(|(n, _)| *n).collect();
+    names.sort_unstable();
+    let before = names.len();
+    names.dedup();
+    assert_eq!(before, names.len(), "duplicate rule names");
+    for (name, desc) in shampoo_lint::RULES {
+        assert!(!name.is_empty() && !desc.is_empty());
+    }
+}

@@ -37,7 +37,7 @@ pub mod state;
 pub mod trainer;
 
 pub use model::ModelHandle;
-pub use scheduler::{Scheduler, StepTimings};
+pub use scheduler::{ScheduleError, Scheduler, StepTimings};
 pub use second_order::SecondOrder;
 pub use shard::ShardSet;
 pub use trainer::{EvalPoint, MemoryReport, TrainResult, Trainer};

@@ -35,10 +35,66 @@ use std::any::Any;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
+
+/// Typed failures surfaced by the scheduler and the engines built on it,
+/// instead of panics inside worker threads or stringly-typed `anyhow!`s.
+///
+/// Lock-poison inside the pool itself is *recovered*, not errored: every
+/// pool critical section is a panic-atomic push/pop/assignment (the guarded
+/// state cannot be observed half-updated), so
+/// `unwrap_or_else(PoisonError::into_inner)` is sound there and keeps
+/// `Drop`-path shutdown panic-safe. What cannot be recovered — a task that
+/// never produced a result, a shard worker whose channel closed early —
+/// becomes one of these variants and propagates as an error the trainer can
+/// report.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ScheduleError {
+    /// A fan-out task was never started because an earlier task (at a lower
+    /// or unrelated index) already failed and aborted the queue.
+    TaskSkipped {
+        /// Index of the task that was skipped.
+        index: usize,
+    },
+    /// A fan-out task produced no result and no failure was recorded — an
+    /// engine invariant breach (every drained task must fill its slot).
+    TaskAbandoned {
+        /// Index of the task whose result slot stayed empty.
+        index: usize,
+    },
+    /// A background job needed the persistent pool but it has no threads.
+    NoPoolThreads,
+    /// A shard worker's request channel or reply channel disconnected while
+    /// the coordinator still had traffic for it (worker thread exited early).
+    ShardDisconnected {
+        /// Index of the shard whose worker went away.
+        shard: usize,
+    },
+}
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::TaskSkipped { index } => {
+                write!(f, "scheduler: task {index} skipped after an earlier task failed")
+            }
+            Self::TaskAbandoned { index } => {
+                write!(f, "scheduler: task {index} never completed")
+            }
+            Self::NoPoolThreads => {
+                write!(f, "scheduler: persistent pool refused a background job (no threads)")
+            }
+            Self::ShardDisconnected { shard } => {
+                write!(f, "shard {shard} worker exited early")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
 
 /// A queued unit of work for the persistent pool.
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -100,6 +156,8 @@ impl WorkerPool {
 
     /// Jobs queued or currently running (approximate — racy by nature).
     pub fn pending(&self) -> usize {
+        // ordering: advisory snapshot for helper-count sizing; staleness only
+        // shifts how many helpers fan out, never the merged result
         self.shared.pending.load(Ordering::Relaxed)
     }
 
@@ -107,8 +165,12 @@ impl WorkerPool {
     /// never run); callers gate on [`WorkerPool::threads`].
     fn submit(&self, job: Job) {
         assert!(!self.handles.is_empty(), "submit on a zero-thread pool");
+        // ordering: SeqCst pairs with the worker-side fetch_sub so `pending`
+        // can never under-count a job that is already visible in the queue
         self.shared.pending.fetch_add(1, Ordering::SeqCst);
-        let mut q = self.shared.queue.lock().expect("pool queue lock");
+        // poison recovery: the only critical section is a panic-atomic
+        // push_back, so a poisoned queue is still structurally sound
+        let mut q = self.shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
         q.push_back(job);
         drop(q);
         self.shared.cv.notify_one();
@@ -127,7 +189,11 @@ impl Drop for WorkerPool {
         // check and `cv.wait` holds that lock, so the store (and the notify
         // that follows) cannot slip into that window and be missed
         {
-            let _q = self.shared.queue.lock().expect("pool queue lock");
+            // poison recovery: we only hold the lock to order the store, and
+            // shutdown must proceed even if a worker panicked mid-job
+            let _q = self.shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
+            // ordering: SeqCst store under the queue lock — see the comment
+            // above; the matching load sits in `worker_loop`
             self.shared.shutdown.store(true, Ordering::SeqCst);
         }
         self.shared.cv.notify_all();
@@ -141,21 +207,28 @@ impl Drop for WorkerPool {
 fn worker_loop(shared: &PoolShared) {
     loop {
         let job = {
-            let mut q = shared.queue.lock().expect("pool queue lock");
+            // poison recovery: a sibling worker panicking between pop and
+            // run poisons nothing structural (pop_front is panic-atomic), so
+            // the surviving workers keep serving the queue
+            let mut q = shared.queue.lock().unwrap_or_else(PoisonError::into_inner);
             loop {
                 if let Some(job) = q.pop_front() {
                     break job;
                 }
+                // ordering: SeqCst load pairs with the store in `Drop`, made
+                // under this same lock, so a set flag is always observed here
                 if shared.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                q = shared.cv.wait(q).expect("pool queue lock");
+                q = shared.cv.wait(q).unwrap_or_else(PoisonError::into_inner);
             }
         };
         // contain panics to the job: fan-out tasks re-raise them on the
         // submitting thread; background jobs surface them as a dropped
         // result channel at the pipeline barrier
         let _ = catch_unwind(AssertUnwindSafe(job));
+        // ordering: SeqCst pairs with submit's fetch_add; the decrement must
+        // not be visible before the job's effects are done
         shared.pending.fetch_sub(1, Ordering::SeqCst);
     }
 }
@@ -174,7 +247,9 @@ impl Latch {
     }
 
     fn arrive(&self) {
-        let mut r = self.remaining.lock().expect("latch lock");
+        // poison recovery: the decrement is panic-atomic, and `arrive` runs
+        // from drop guards during unwinds — it must never double-panic
+        let mut r = self.remaining.lock().unwrap_or_else(PoisonError::into_inner);
         *r -= 1;
         if *r == 0 {
             self.cv.notify_all();
@@ -182,9 +257,11 @@ impl Latch {
     }
 
     fn wait(&self) {
-        let mut r = self.remaining.lock().expect("latch lock");
+        // poison recovery: the count is valid even if a helper panicked (its
+        // ArriveOnDrop guard still decremented during the unwind)
+        let mut r = self.remaining.lock().unwrap_or_else(PoisonError::into_inner);
         while *r > 0 {
-            r = self.cv.wait(r).expect("latch lock");
+            r = self.cv.wait(r).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -315,22 +392,31 @@ impl Scheduler {
         let panic_slot: Mutex<Option<Box<dyn Any + Send>>> = Mutex::new(None);
         let drain = || {
             loop {
+                // ordering: Relaxed — the abort flag is a best-effort "stop
+                // starting new tasks" hint; the merge below is what decides
+                // the returned error, deterministically
                 if abort.load(Ordering::Relaxed) {
                     break;
                 }
-                // take the queue lock only to pop, never while running f
-                let next = queue.lock().expect("task queue lock").next();
+                // take the queue lock only to pop, never while running f;
+                // poison recovery: `next()` on the shared iterator is
+                // panic-atomic (task panics happen outside this lock)
+                let next = queue.lock().unwrap_or_else(PoisonError::into_inner).next();
                 let Some((i, item)) = next else { break };
                 match catch_unwind(AssertUnwindSafe(|| f(i, item))) {
                     Ok(r) => {
                         if r.is_err() {
+                            // ordering: Relaxed — see the load above
                             abort.store(true, Ordering::Relaxed);
                         }
-                        *slots[i].lock().expect("result slot lock") = Some(r);
+                        // poison recovery: a plain assignment cannot leave
+                        // the slot half-written
+                        *slots[i].lock().unwrap_or_else(PoisonError::into_inner) = Some(r);
                     }
                     Err(payload) => {
+                        // ordering: Relaxed — see the load above
                         abort.store(true, Ordering::Relaxed);
-                        let mut p = panic_slot.lock().expect("panic slot lock");
+                        let mut p = panic_slot.lock().unwrap_or_else(PoisonError::into_inner);
                         p.get_or_insert(payload);
                     }
                 }
@@ -361,19 +447,24 @@ impl Scheduler {
         }
         drain(); // the caller is a full worker too
         latch.wait();
-        if let Some(payload) = panic_slot.into_inner().expect("panic slot lock") {
+        // poison recovery (both into_inner calls): the latch has been waited
+        // out, every helper is done, and the guarded values are plain
+        // `Option`s that cannot be half-written
+        if let Some(payload) = panic_slot.into_inner().unwrap_or_else(PoisonError::into_inner) {
             std::panic::resume_unwind(payload);
         }
         let mut out = Vec::with_capacity(n);
         for (i, slot) in slots.into_iter().enumerate() {
-            match slot.into_inner().expect("result slot lock") {
+            match slot.into_inner().unwrap_or_else(PoisonError::into_inner) {
                 Some(Ok(r)) => out.push(r),
                 Some(Err(e)) => return Err(e),
                 None => {
+                    // ordering: Relaxed — post-barrier read; the latch wait
+                    // above is the synchronizing edge
                     if abort.load(Ordering::Relaxed) {
-                        bail!("scheduler: task {i} skipped after an earlier task failed")
+                        return Err(ScheduleError::TaskSkipped { index: i }.into());
                     }
-                    bail!("scheduler: task {i} never completed")
+                    return Err(ScheduleError::TaskAbandoned { index: i }.into());
                 }
             }
         }
@@ -497,8 +588,43 @@ impl StepTimings {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use anyhow::bail;
     use std::collections::HashSet;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn schedule_errors_are_typed_and_downcastable() {
+        // the merge layer reports skipped/abandoned tasks as ScheduleError,
+        // and anyhow callers can still recover the typed value
+        let e: anyhow::Error = ScheduleError::TaskSkipped { index: 7 }.into();
+        assert_eq!(
+            e.downcast_ref::<ScheduleError>(),
+            Some(&ScheduleError::TaskSkipped { index: 7 })
+        );
+        assert!(e.to_string().contains("task 7 skipped"));
+        assert!(ScheduleError::NoPoolThreads.to_string().contains("no threads"));
+        assert!(
+            ScheduleError::ShardDisconnected { shard: 2 }.to_string().contains("shard 2")
+        );
+    }
+
+    #[test]
+    fn skipped_tasks_surface_as_typed_errors() {
+        // force the skip path: enough items that an early failure leaves
+        // later tasks unvisited on the parallel engine, then check the
+        // returned error is either the task's own error (lowest index) —
+        // never a panic from inside a worker
+        let mut items: Vec<usize> = (0..64).collect();
+        let err = Scheduler::new(4)
+            .par_map_mut(&mut items, |i, _| {
+                if i == 0 {
+                    bail!("task 0 failed")
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+        assert_eq!(err.to_string(), "task 0 failed");
+    }
 
     #[test]
     fn serial_and_parallel_merge_identically() {

@@ -20,7 +20,6 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
@@ -29,12 +28,13 @@ use crate::coordinator::model::ModelHandle;
 use std::path::Path;
 
 use crate::coordinator::partition::{extract_block, partition, scatter_block, Block};
-use crate::coordinator::scheduler::{stagger_phase, Scheduler, StepTimings};
+use crate::coordinator::scheduler::{stagger_phase, ScheduleError, Scheduler, StepTimings};
 use crate::coordinator::shard::ShardSet;
 use crate::coordinator::state::{run_invroot, run_pu, RefreshedBlock, SideState};
 use crate::linalg::Mat;
 use crate::quant::{BufferRole, CodecPolicy, CodecSpec};
 use crate::runtime::{Backend, HostTensor};
+use crate::util::timer::Stopwatch;
 
 /// One partitioned parameter block and its left/right preconditioner pair.
 pub struct BlockPre {
@@ -131,6 +131,8 @@ struct ReportOnPanic {
 impl Drop for ReportOnPanic {
     fn drop(&mut self) {
         if let Some(tx) = self.tx.take() {
+            // ordering: Relaxed — best-effort "stop starting work" hint; the
+            // completion barrier, not this flag, decides the surfaced error
             self.abort.store(true, Ordering::Relaxed);
             let _ = tx.send((
                 self.bi,
@@ -551,21 +553,23 @@ impl SecondOrder {
                     abort: Arc::clone(&job_abort),
                 };
                 let work = (|| -> Result<RefreshedBlock> {
+                    // ordering: Relaxed — early-exit hint only; a stale read
+                    // just means this job does work the barrier discards
                     if job_abort.load(Ordering::Relaxed) {
                         return Err(anyhow!("refresh aborted before block {bi} started"));
                     }
                     let mut pu_secs = 0.0;
                     let mut piru_secs = 0.0;
                     if let Some(stat) = stat {
-                        let t = Instant::now();
+                        let t = Stopwatch::start();
                         refresh_pu(rt, &mut left, &mut right, stat, beta, kind)?;
-                        pu_secs = t.elapsed().as_secs_f64();
+                        pu_secs = t.secs();
                     }
                     if do_piru {
-                        let t = Instant::now();
+                        let t = Stopwatch::start();
                         run_invroot(rt, &mut left, eps, kind)?;
                         run_invroot(rt, &mut right, eps, kind)?;
-                        piru_secs = t.elapsed().as_secs_f64();
+                        piru_secs = t.secs();
                     }
                     Ok(RefreshedBlock {
                         block_idx: bi,
@@ -595,7 +599,7 @@ impl SecondOrder {
                     abort,
                 });
                 self.abort_inflight();
-                return Err(anyhow!("pipeline: persistent pool refused a background job"));
+                return Err(ScheduleError::NoPoolThreads.into());
             }
             submitted += 1;
         }
@@ -627,13 +631,15 @@ impl SecondOrder {
         let Some(mut fl) = self.inflight.take() else {
             return Ok(());
         };
-        let t = Instant::now();
+        let t = Stopwatch::start();
         // block only for the stragglers — results the adaptive poll already
         // drained into `received` cost no wait here
         while fl.received.len() < fl.outstanding {
             match fl.rx.recv() {
                 Ok(msg) => {
                     if msg.1.is_err() {
+                        // ordering: Relaxed — stop-starting-work hint; the
+                        // error merge below decides what surfaces
                         fl.abort.store(true, Ordering::Relaxed);
                     }
                     fl.received.push(msg);
@@ -642,14 +648,14 @@ impl SecondOrder {
                 // (panicking jobs report through their ReportOnPanic guard);
                 // kept as a backstop so the barrier can never hang blame-less
                 Err(_) => {
-                    timings.pipeline_stall_secs += t.elapsed().as_secs_f64();
+                    timings.pipeline_stall_secs += t.secs();
                     return Err(anyhow!(
                         "pipeline: a background refresh job died before reporting"
                     ));
                 }
             }
         }
-        timings.pipeline_stall_secs += t.elapsed().as_secs_f64();
+        timings.pipeline_stall_secs += t.secs();
         let mut updates: Vec<RefreshedBlock> = Vec::with_capacity(fl.outstanding);
         let mut first_err: Option<(usize, anyhow::Error)> = None;
         for (bi, res) in fl.received {
@@ -705,6 +711,8 @@ impl SecondOrder {
                     if msg.1.is_err() {
                         // stop still-queued jobs early; the completion below
                         // (or the next blocking barrier) surfaces the error
+                        // ordering: Relaxed — same hint-only contract as the
+                        // blocking barrier's store
                         fl.abort.store(true, Ordering::Relaxed);
                     }
                     fl.received.push(msg);
@@ -728,6 +736,8 @@ impl SecondOrder {
             sh.abort_round();
         }
         if let Some(fl) = self.inflight.take() {
+            // ordering: Relaxed — hint to skip work; the recv loop below is
+            // the real synchronization (drains every live job)
             fl.abort.store(true, Ordering::Relaxed);
             let mut outstanding = fl.outstanding - fl.received.len();
             while outstanding > 0 {

@@ -49,17 +49,17 @@
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{SecondOrderConfig, SecondOrderKind};
 use crate::coordinator::model::ModelHandle;
-use crate::coordinator::scheduler::{Scheduler, StepTimings};
+use crate::coordinator::scheduler::{ScheduleError, Scheduler, StepTimings};
 use crate::coordinator::second_order::{capture_stat, refresh_pu, BlockPre, StatInput};
 use crate::coordinator::state::{run_invroot, SideState};
 use crate::quant::{fp32, put_frame, read_frame};
 use crate::runtime::backend_by_name;
+use crate::util::timer::Stopwatch;
 
 /// Deterministic block → shard assignment: round-robin over the
 /// partitioner's block order. A pure function of `(block_idx, shards)`, so
@@ -344,20 +344,20 @@ impl ShardSet {
         let Some(mut fl) = self.inflight.take() else {
             return Ok(());
         };
-        let t = Instant::now();
+        let t = Stopwatch::start();
         while fl.received.len() < fl.outstanding {
             match self.reply_rx.recv() {
                 Ok(msg) => fl.received.push(msg),
                 Err(_) => {
                     if let Some(tm) = timings.as_deref_mut() {
-                        tm.pipeline_stall_secs += t.elapsed().as_secs_f64();
+                        tm.pipeline_stall_secs += t.secs();
                     }
                     return Err(anyhow!("a shard worker died before replying"));
                 }
             }
         }
         if let Some(tm) = timings.as_deref_mut() {
-            tm.pipeline_stall_secs += t.elapsed().as_secs_f64();
+            tm.pipeline_stall_secs += t.secs();
         }
         let mut first_err: Option<(usize, anyhow::Error)> = None;
         let mut updates: Vec<(usize, bool, f64, f64, SideState, SideState)> = Vec::new();
@@ -422,12 +422,13 @@ impl ShardSet {
     }
 
     fn send(&self, shard: usize, msg: ToShard) -> Result<()> {
-        self.shards[shard]
-            .tx
-            .as_ref()
-            .expect("sender live until drop")
-            .send(msg)
-            .map_err(|_| anyhow!("shard {shard} worker exited early"))
+        // a None sender means Drop already began — callers racing shutdown
+        // get the same typed error as a worker that exited early, instead of
+        // a panic inside the coordinator
+        let Some(tx) = self.shards[shard].tx.as_ref() else {
+            return Err(ScheduleError::ShardDisconnected { shard }.into());
+        };
+        tx.send(msg).map_err(|_| ScheduleError::ShardDisconnected { shard }.into())
     }
 }
 
@@ -633,15 +634,15 @@ fn process_round(
     }
     let round = scheduler.par_map_mut(&mut work, |_, w| {
         if let Some(stat) = w.stat.take() {
-            let t = Instant::now();
+            let t = Stopwatch::start();
             refresh_pu(rt, &mut w.left, &mut w.right, stat, beta, kind)?;
-            w.pu_secs = t.elapsed().as_secs_f64();
+            w.pu_secs = t.secs();
         }
         if w.do_piru {
-            let t = Instant::now();
+            let t = Stopwatch::start();
             run_invroot(rt, &mut w.left, eps, kind)?;
             run_invroot(rt, &mut w.right, eps, kind)?;
-            w.piru_secs = t.elapsed().as_secs_f64();
+            w.piru_secs = t.secs();
         }
         Ok(())
     });

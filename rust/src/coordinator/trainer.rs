@@ -11,7 +11,6 @@
 //! quantization-error tracking (Figures 7/8).
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -25,6 +24,7 @@ use crate::optim::{build_first_order, FirstOrder, StateSnapshot};
 use crate::quant::EncodedVec;
 use crate::runtime::Backend;
 use crate::util::json::Json;
+use crate::util::timer::Stopwatch;
 
 /// One held-out evaluation.
 #[derive(Debug, Clone)]
@@ -261,7 +261,7 @@ impl Trainer {
             }
             None => None,
         };
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let mut losses = Vec::new();
         let mut evals = Vec::new();
         let mut shadow_rows = Vec::new();
@@ -270,11 +270,11 @@ impl Trainer {
         let start = self.resume_step + 1;
 
         for step in start..=self.cfg.steps {
-            let step_t = Instant::now();
+            let step_t = Stopwatch::start();
             let batch = self.model.make_batch(&self.data, false, step as u64);
-            let t = Instant::now();
+            let t = Stopwatch::start();
             let (loss, mut grads, stats) = self.model.step(rt, &batch)?;
-            timings.model_step_secs += t.elapsed().as_secs_f64();
+            timings.model_step_secs += t.secs();
 
             if let Some(second) = self.second.as_mut() {
                 if step >= s2cfg.start_step {
@@ -310,17 +310,17 @@ impl Trainer {
                         }
                     } else {
                         if pu_due {
-                            let t = Instant::now();
+                            let t = Stopwatch::start();
                             second.update_preconditioners(rt, &self.model, &grads, &stats)?;
-                            timings.pu_secs += t.elapsed().as_secs_f64();
+                            timings.pu_secs += t.secs();
                             if let Some(sh) = self.shadow.as_mut() {
                                 sh.update_shadow(rt, second, &self.model, &grads, &stats)?;
                             }
                         }
                         if !due.is_empty() {
-                            let t = Instant::now();
+                            let t = Stopwatch::start();
                             second.update_invroots_subset(rt, &due)?;
-                            timings.piru_secs += t.elapsed().as_secs_f64();
+                            timings.piru_secs += t.secs();
                             if let Some(sh) = self.shadow.as_mut() {
                                 if due.contains(&sh.block_idx) {
                                     if let Some(row) = sh.measure(step, second)? {
@@ -330,24 +330,24 @@ impl Trainer {
                             }
                         }
                     }
-                    let t = Instant::now();
+                    let t = Stopwatch::start();
                     second.precondition(rt, &self.model, &mut grads)?;
-                    timings.precond_secs += t.elapsed().as_secs_f64();
+                    timings.precond_secs += t.secs();
                 }
             }
 
             // native first-order update over the flat parameter vector,
             // chunked across the persistent pool (bit-identical at any
             // worker count — the update is elementwise)
-            let t = Instant::now();
+            let t = Stopwatch::start();
             let mut flat_p = Self::flatten(&self.model.params);
             let flat_g = Self::flatten(&grads);
             debug_assert_eq!(flat_p.len(), self.flat_len);
             let lr = self.cfg.first.lr * self.cfg.lr_at(step - 1);
             self.first.step_par(&mut flat_p, &flat_g, lr, &self.sched);
             Self::scatter(&flat_p, &mut self.model.params);
-            timings.first_order_secs += t.elapsed().as_secs_f64();
-            timings.note_step(step, step_t.elapsed().as_secs_f64());
+            timings.first_order_secs += t.secs();
+            timings.note_step(step, step_t.secs());
 
             if step % self.cfg.log_every == 0 || step == 1 {
                 losses.push((step, loss));
@@ -370,7 +370,7 @@ impl Trainer {
                         .and_then(|e| e.accuracy)
                         .map(|a| format!("{a:.4}"))
                         .unwrap_or_default(),
-                    t0.elapsed().as_secs_f64()
+                    t0.secs()
                 )?;
             }
         }
@@ -397,7 +397,7 @@ impl Trainer {
             losses,
             evals,
             final_eval,
-            wall_secs: t0.elapsed().as_secs_f64(),
+            wall_secs: t0.secs(),
             memory: self.memory_report(),
             shadow_rows,
             host_fallbacks: self.second.as_ref().map(|s| s.host_fallbacks).unwrap_or(0),

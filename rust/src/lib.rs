@@ -22,6 +22,12 @@
 // `RUSTDOCFLAGS="-D warnings"`, so an undocumented public item fails the
 // build instead of silently drifting (see docs/ARCHITECTURE.md).
 #![warn(missing_docs)]
+// Every `unsafe` block must carry a `// SAFETY:` comment. The in-workspace
+// `shampoo-lint` binary enforces the same rule (plus the unsafe-module
+// allowlist) over tests and benches; this attribute makes the compiler
+// back it inside the crate. CI runs clippy with `-D warnings`, so a bare
+// unsafe block fails the build.
+#![warn(clippy::undocumented_unsafe_blocks)]
 
 /// Run configuration: TOML/CLI parsing into one [`config::RunConfig`].
 pub mod config;

@@ -658,6 +658,7 @@ mod tests {
     use crate::util::prop;
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn roundtrip_error_bounded() {
         let cb = codebook(Mapping::Linear2, 4);
         let max_gap = cb.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
@@ -749,6 +750,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn matrix_cols_column_blocking_regression_non_multiple_of_64() {
         // the old `block = min(64, n)` rule panicked at n=100 and straddled
         // column boundaries at n=96 — a huge entry in column 0 must never
@@ -837,6 +839,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn all_arms_bit_identical() {
         // the chunked and SIMD kernels are pure performance rewrites:
         // packed bytes, scales, and decoded values must be identical to the
@@ -887,6 +890,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn column_layout_arms_bit_identical() {
         // the per-column fallback layout (prime n) must also be identical
         // across arms, including partial blocks at every column end
@@ -941,6 +945,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn eight_bit_much_tighter_than_four() {
         let cb8 = codebook(Mapping::Dt, 8);
         let cb4 = codebook(Mapping::Dt, 4);

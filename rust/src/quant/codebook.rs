@@ -322,6 +322,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn boundaries_match_linear_scan() {
         use crate::util::prop;
         for (mapping, bits) in [
@@ -375,6 +376,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn nearest_block_matches_scalar_nearest() {
         use crate::util::prop;
         // both the counting kernel (≤5-bit) and the binary-search fallback
@@ -411,6 +413,7 @@ mod tests {
 
     #[cfg(feature = "simd")]
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn nearest_block_simd_matches_chunked() {
         use crate::util::prop;
         for (mapping, bits) in [

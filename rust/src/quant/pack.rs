@@ -164,6 +164,7 @@ mod tests {
     use crate::util::prop;
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn roundtrip_property_all_widths() {
         for bits in 1..=8u32 {
             prop::check(&format!("pack/unpack roundtrip {bits}-bit"), 20, |rng| {
@@ -212,6 +213,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn fast_paths_match_generic_layout() {
         // every arm — dispatcher, chunked fast paths, and (when built) the
         // SIMD lanes — must emit byte-for-byte what the generic bit-cursor

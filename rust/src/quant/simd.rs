@@ -53,6 +53,10 @@ pub fn absmax(xs: &[f32]) -> f32 {
         let mut i = 0usize;
         let mut r = 0.0f32;
         if xs.len() >= 4 {
+            // SAFETY: SSE2 is part of the x86_64 baseline (no feature
+            // detection needed), and every `loadu` reads 4 f32s at offset
+            // `i` with `i + 4 <= xs.len()` — always in bounds, and `loadu`
+            // tolerates any alignment.
             unsafe {
                 let signbit = _mm_set1_ps(-0.0);
                 let mut m = _mm_setzero_ps();
@@ -87,6 +91,8 @@ pub fn all_finite(xs: &[f32]) -> bool {
         let mut i = 0usize;
         let mut s = 0.0f32;
         if xs.len() >= 4 {
+            // SAFETY: baseline SSE2; unaligned 4-wide loads stay in bounds
+            // via the `i + 4 <= xs.len()` loop guard.
             unsafe {
                 let zero = _mm_setzero_ps();
                 let mut acc = zero;
@@ -124,6 +130,9 @@ pub fn normalize_into(xs: &[f32], inv: f32, out: &mut [f32]) {
         use std::arch::x86_64::*;
         let mut i = 0usize;
         if xs.len() >= 4 {
+            // SAFETY: baseline SSE2; loads from `xs` and stores to `out`
+            // cover lanes [i, i+4) with `i + 4 <= xs.len()` and
+            // `out.len() == xs.len()` (debug-asserted above).
             unsafe {
                 let iv = _mm_set1_ps(inv);
                 while i + 4 <= xs.len() {
@@ -167,6 +176,10 @@ pub fn count_below_mids(mids: &[f32], xs: &[f32], codes: &mut [u8]) {
     #[cfg(target_arch = "x86_64")]
     {
         use std::arch::x86_64::*;
+        // SAFETY: baseline SSE2; each iteration reads xs[i..i+16] and
+        // writes codes[i..i+16] under `i + 16 <= xs.len()` with
+        // `codes.len() == xs.len()` (debug-asserted above); unaligned
+        // load/store intrinsics tolerate any alignment.
         unsafe {
             while i + 16 <= xs.len() {
                 let x0 = _mm_loadu_ps(xs.as_ptr().add(i));
@@ -238,6 +251,10 @@ fn pack4(codes: &[u8]) -> Vec<u8> {
     let done = {
         use std::arch::x86_64::*;
         let mut ci = 0usize;
+        // SAFETY: baseline SSE2; reads codes[ci..ci+16] under the
+        // `ci + 16 <= codes.len()` guard and stores 8 bytes at
+        // out[ci/2..ci/2+8], in bounds because out holds
+        // ceil(codes.len()/2) >= ci/2 + 8 bytes for every guarded ci.
         unsafe {
             let lomask = _mm_set1_epi16(0x00FF);
             while ci + 16 <= codes.len() {
@@ -267,6 +284,10 @@ fn unpack4(packed: &[u8], out: &mut [u8]) {
     let done = {
         use std::arch::x86_64::*;
         let mut i = 0usize;
+        // SAFETY: baseline SSE2; each step reads 8 bytes at packed[i/2]
+        // and writes out[i..i+16] under `i + 16 <= out.len()`; callers
+        // pass packed.len() >= ceil(out.len()/2) (`packed_len`), so the
+        // 8-byte load at i/2 <= out.len()/2 - 8 stays in bounds.
         unsafe {
             let nib = _mm_set1_epi16(0x000F);
             while i + 16 <= out.len() {
@@ -389,6 +410,10 @@ pub fn decode_block(codes: &[u8], table: &[f32; 256], scale: f32, out: &mut [f32
         use std::arch::x86_64::*;
         let mut i = 0usize;
         if codes.len() >= 4 {
+            // SAFETY: baseline SSE2; the gather indexes `table[0..256]`
+            // with u8 codes (cannot exceed 255) and the 4-wide store to
+            // `out` is guarded by `i + 4 <= codes.len()` with
+            // `out.len() == codes.len()` (debug-asserted above).
             unsafe {
                 let sv = _mm_set1_ps(scale);
                 while i + 4 <= codes.len() {
@@ -465,6 +490,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn count_below_mids_matches_scalar() {
         let mut rng = Rng::new(13);
         // 15 mids = a 4-bit book; 255 mids = the widest (8-bit) book, which
@@ -488,6 +514,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
     fn pack_lanes_match_chunked_all_widths() {
         let mut rng = Rng::new(14);
         for bits in [1u32, 2, 3, 4, 8] {

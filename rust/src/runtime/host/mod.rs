@@ -12,13 +12,13 @@ pub mod ops;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
-use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use super::literal::HostTensor;
 use super::manifest::{ArtifactSpec, ExecStats, IoSpec, Manifest, ModelSpec, ParamSpec};
 use super::Backend;
+use crate::util::timer::Stopwatch;
 
 /// Bucket orders every backend serves (mirrors aot.py ALL_BUCKETS).
 pub const ALL_BUCKETS: [usize; 3] = [32, 64, 128];
@@ -224,12 +224,14 @@ impl Backend for HostBackend {
 
     fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         self.manifest.validate_inputs(name, inputs)?;
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let outs = self.dispatch(name, inputs)?;
-        let dt = t0.elapsed();
         let cell = self.stat_cell(name);
+        // ordering: Relaxed — independent telemetry counters; readers take
+        // a consistent-enough snapshot for reporting, nothing synchronizes
         cell.0.fetch_add(1, Ordering::Relaxed);
-        cell.1.fetch_add(dt.as_nanos() as u64, Ordering::Relaxed);
+        // ordering: Relaxed — same telemetry contract as the call counter
+        cell.1.fetch_add(t0.nanos(), Ordering::Relaxed);
         Ok(outs)
     }
 
@@ -242,6 +244,7 @@ impl Backend for HostBackend {
                 (
                     name.clone(),
                     ExecStats {
+                        // ordering: Relaxed — see the telemetry note above
                         calls: cell.0.load(Ordering::Relaxed),
                         total_secs: cell.1.load(Ordering::Relaxed) as f64 / 1e9,
                         compile_secs: 0.0,

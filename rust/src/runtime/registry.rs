@@ -9,13 +9,13 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use super::literal::HostTensor;
 use super::manifest::{ExecStats, Manifest};
 use super::Backend;
+use crate::util::timer::Stopwatch;
 
 /// The PJRT backend: one CPU client + lazily compiled executables.
 ///
@@ -61,12 +61,12 @@ impl PjrtBackend {
             .get(name)
             .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
         let path = self.dir.join(&spec.file);
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let proto = xla::HloModuleProto::from_text_file(&path)
             .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        let dt = t0.elapsed().as_secs_f64();
+        let dt = t0.secs();
         // under a compile race the first insert wins and every caller shares
         // its executable; the loser's compile time still lands in stats
         let exe = Arc::clone(
@@ -98,7 +98,7 @@ impl Backend for PjrtBackend {
         self.manifest.validate_inputs(name, inputs)?;
         let exe = self.compiled(name)?;
         let lits: Vec<xla::Literal> = inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
-        let t0 = Instant::now();
+        let t0 = Stopwatch::start();
         let result =
             exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("executing {name}: {e:?}"))?;
         let out_lit = result[0][0]
@@ -108,7 +108,7 @@ impl Backend for PjrtBackend {
         let parts = out_lit.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
         let outs: Vec<HostTensor> =
             parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
-        let dt = t0.elapsed().as_secs_f64();
+        let dt = t0.secs();
         let mut stats = self.stats.lock().expect("stats lock");
         let ent = stats.entry(name.to_string()).or_default();
         ent.calls += 1;

@@ -2,6 +2,16 @@
 //!
 //! Every `[[bench]]` target uses `BenchRunner`: warmup, fixed-duration
 //! timed runs, and robust summary statistics (mean / p50 / p95 / min).
+//!
+//! This is the **blessed wall-clock module**: the rest of the crate reads
+//! time only through [`Stopwatch`], never `Instant::now` directly. That is
+//! what makes the determinism contract checkable — `shampoo-lint`'s
+//! `det-wallclock` rule and clippy's `disallowed-methods` both flag raw
+//! clock reads, and the timings gathered here feed telemetry
+//! (`StepTimings`, bench stats), never control flow.
+
+// the one file where raw Instant::now is legal (see module docs)
+#![allow(clippy::disallowed_methods)]
 
 use std::time::{Duration, Instant};
 
@@ -22,6 +32,12 @@ impl Stopwatch {
     /// Milliseconds since start.
     pub fn millis(&self) -> f64 {
         self.secs() * 1e3
+    }
+
+    /// Whole nanoseconds since start (saturating at `u64::MAX`), for
+    /// accumulation into atomic counters.
+    pub fn nanos(&self) -> u64 {
+        u64::try_from(self.0.elapsed().as_nanos()).unwrap_or(u64::MAX)
     }
 }
 
