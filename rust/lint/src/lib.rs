@@ -27,9 +27,10 @@
 //! * **`det-rand`** — determinism modules may not touch ambient/unseeded
 //!   randomness (`thread_rng`, `from_entropy`, `rand::random`,
 //!   `getrandom`); all streams fork from the run seed via `util::rng`.
-//! * **`lock-unwrap`** — `coordinator/{scheduler,shard}.rs` may not call
-//!   bare `.unwrap()`/`.expect()` on lock/channel results (mutex poison,
-//!   condvar waits, `send`/`recv`): those must propagate a typed
+//! * **`lock-unwrap`** — `coordinator/{scheduler,shard,checkpoint}.rs`
+//!   may not call bare `.unwrap()`/`.expect()` on lock/channel results
+//!   (mutex poison, condvar waits, `send`/`recv`, buffered-writer
+//!   `into_inner`): those must propagate a typed
 //!   [`ScheduleError`](https://docs.rs/) / shard error-ack, recover
 //!   deliberately (`unwrap_or_else(PoisonError::into_inner)` with a
 //!   rationale), or carry an allow annotation.
@@ -89,7 +90,7 @@ pub const RULES: &[(&str, &str)] = &[
     (
         "lock-unwrap",
         "no bare .unwrap()/.expect() on lock/channel results in \
-         coordinator/{scheduler,shard}.rs",
+         coordinator/{scheduler,shard,checkpoint}.rs",
     ),
     (
         "allow-grammar",
@@ -106,8 +107,11 @@ pub const UNSAFE_ALLOWLIST: &[&str] = &[
 ];
 
 /// Files under the lock-discipline rule (path suffixes).
-pub const LOCK_DISCIPLINE_FILES: &[&str] =
-    &["src/coordinator/scheduler.rs", "src/coordinator/shard.rs"];
+pub const LOCK_DISCIPLINE_FILES: &[&str] = &[
+    "src/coordinator/scheduler.rs",
+    "src/coordinator/shard.rs",
+    "src/coordinator/checkpoint.rs",
+];
 
 /// One rule violation at a source location.
 #[derive(Debug, Clone)]

@@ -226,6 +226,19 @@ pub fn f(m: &std::sync::Mutex<Vec<u32>>) -> usize {
 }
 
 #[test]
+fn lock_unwrap_in_checkpoint_fires() {
+    // checkpoint.rs is under the lock discipline too: a BufWriter
+    // into_inner() (the fsync seam) must not be unwrapped bare
+    let src = r#"
+pub fn f(w: std::io::BufWriter<std::fs::File>) -> std::fs::File {
+    w.into_inner().unwrap()
+}
+"#;
+    let r = lint_source("rust/src/coordinator/checkpoint.rs", src);
+    assert_eq!(rules_fired(&r), vec!["lock-unwrap"]);
+}
+
+#[test]
 fn lock_expect_split_across_lines_fires() {
     let src = r#"
 pub fn f(m: &std::sync::Mutex<Vec<u32>>) -> usize {

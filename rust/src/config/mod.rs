@@ -326,6 +326,17 @@ pub struct RunConfig {
     /// (`first_order.bits`/`.mapping`, `quant.bits`/`.mapping`), so an
     /// empty policy reproduces pre-policy behavior exactly.
     pub quant_policy: Vec<(BufferRole, CodecSpec)>,
+    /// Save the end-of-run checkpoint as an incremental delta against the
+    /// checkpoint the run resumed from (`run.checkpoint_delta` /
+    /// `--checkpoint-delta`): buffers whose codec bytes are unchanged are
+    /// recorded in the manifest but not rewritten. Ignored when the run
+    /// did not resume from a v1 checkpoint.
+    pub checkpoint_delta: bool,
+    /// Chunk size in bytes for streaming checkpoint writes
+    /// (`run.checkpoint_chunk_bytes` / `--checkpoint-chunk-bytes`): large
+    /// frames are produced and written through a buffer of roughly this
+    /// size instead of staging the whole frame. Must be > 0.
+    pub checkpoint_chunk_bytes: usize,
 }
 
 impl Default for RunConfig {
@@ -345,6 +356,8 @@ impl Default for RunConfig {
             backend: "auto".into(),
             shadow_quant_error: false,
             quant_policy: Vec::new(),
+            checkpoint_delta: false,
+            checkpoint_chunk_bytes: 1 << 20,
         }
     }
 }
@@ -365,6 +378,9 @@ impl RunConfig {
         cfg.artifact_dir = doc.str_or("run.artifact_dir", &cfg.artifact_dir);
         cfg.backend = doc.str_or("run.backend", &cfg.backend);
         cfg.shadow_quant_error = doc.bool_or("run.shadow_quant_error", false);
+        cfg.checkpoint_delta = doc.bool_or("run.checkpoint_delta", cfg.checkpoint_delta);
+        cfg.checkpoint_chunk_bytes =
+            doc.usize_or("run.checkpoint_chunk_bytes", cfg.checkpoint_chunk_bytes);
 
         let f = &mut cfg.first;
         f.kind = FirstOrderKind::parse(&doc.str_or("optimizer.kind", "adamw"))?;
@@ -486,6 +502,9 @@ impl RunConfig {
                 }
             }
         }
+        if self.checkpoint_chunk_bytes == 0 {
+            bail!("run.checkpoint_chunk_bytes must be > 0");
+        }
         if self.second.pipeline
             && self.second.kind != SecondOrderKind::None
             && self.shadow_quant_error
@@ -571,6 +590,24 @@ warmup = 20
         assert_eq!(cfg.second.quant.bits, 4);
         assert_eq!(cfg.first.kind, FirstOrderKind::AdamW);
         assert!(matches!(cfg.schedule, Schedule::Cosine { warmup: 20 }));
+        // checkpoint knobs default off / 1 MiB
+        assert!(!cfg.checkpoint_delta);
+        assert_eq!(cfg.checkpoint_chunk_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn parses_checkpoint_knobs() {
+        let cfg = RunConfig::from_toml_str(
+            "[run]\ncheckpoint_delta = true\ncheckpoint_chunk_bytes = 4096\n",
+        )
+        .unwrap();
+        assert!(cfg.checkpoint_delta);
+        assert_eq!(cfg.checkpoint_chunk_bytes, 4096);
+        cfg.validate().unwrap();
+
+        let bad = RunConfig { checkpoint_chunk_bytes: 0, ..RunConfig::default() };
+        let err = bad.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("checkpoint_chunk_bytes"));
     }
 
     #[test]

@@ -1,0 +1,1292 @@
+//! The streaming checkpoint format (v1) and the read-only state server.
+//!
+//! A v1 checkpoint is two text lines followed by a binary payload:
+//!
+//! ```text
+//! {"magic":"shampoo4-ckpt","version":1,...,"manifest":[...]}\n
+//! #crc32:xxxxxxxx\n
+//! <frame 0 bytes><frame 1 bytes>...
+//! ```
+//!
+//! Line 1 is a compact JSON header carrying run identity (model, step,
+//! optimizer, counters, quant policy) plus the **manifest**: one row per
+//! buffer with its `role` (e.g. `param.0`, `opt.1`, `so.3.left`), codec
+//! name, decoded element count, byte length, payload-relative offset, and
+//! CRC-32. Line 2 records the CRC-32 of line 1, so header corruption is as
+//! detectable as payload corruption. Frames tile the payload exactly, in
+//! manifest order, with no gaps and no trailing bytes.
+//!
+//! **Streaming:** [`save`] never materializes the whole state — each frame
+//! is produced chunk-by-chunk through its [`FrameSpec::emit`] callback
+//! (once to size + checksum it, once to write it) and flows through a
+//! buffered writer. Reads are per-frame positional IO; the payload is never
+//! loaded whole.
+//!
+//! **Crash atomicity:** the file is written to `<path>.tmp`, fsynced,
+//! then renamed over `path` (plus a best-effort directory fsync), so a
+//! crash mid-save leaves either the old checkpoint or the new one — never
+//! a torn file at the final path.
+//!
+//! **Delta checkpoints:** [`save_delta`] records a frame as `in_parent`
+//! (and skips rewriting its bytes) when its bytes are identical to the
+//! parent checkpoint's — checked by CRC *and* a streaming byte compare.
+//! The child's manifest still lists every frame, so it remains the single
+//! source of truth; readers resolve `in_parent` frames through the
+//! `parent` path (depth- and cycle-checked, identity re-verified at every
+//! hop). Quantized codec bytes only change when a buffer is actually
+//! rewritten (e.g. second-order sides between T1 boundaries), which is
+//! what makes deltas worthwhile.
+//!
+//! **Fault model:** every structural defect maps to a typed
+//! [`CheckpointError`] naming the frame/offset involved — truncation,
+//! bit-flips (header or payload), foreign magic, unknown versions, broken
+//! parent chains. There is no code path that silently zero-decodes or
+//! partially restores; `tests/checkpoint_faults.rs` proves it by injecting
+//! faults at every frame boundary.
+//!
+//! [`StateServer`] serves decoded slices of any buffer to many concurrent
+//! readers straight from the framed file: positional reads (`pread` on
+//! unix; no locks anywhere) of just the bytes whose quantization blocks
+//! cover the requested range, decoded through the existing 256-entry
+//! tables via [`StateCodec::slice_ranges`].
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::quant::{codec_by_name, crc32, Crc32, EncodedVec, StateCodec};
+use crate::util::json::Json;
+
+/// Magic string identifying a v1+ streaming checkpoint header.
+pub const MAGIC: &str = "shampoo4-ckpt";
+
+/// Newest header version this build writes and understands.
+pub const VERSION: u64 = 1;
+
+/// Manifest codec name for opaque second-order side frames: their payload
+/// is a self-describing [`SideState`](crate::coordinator::state::SideState)
+/// serialization, not a bare codec buffer, so the server hands them out as
+/// raw bytes only.
+pub const SIDE_STATE_CODEC: &str = "side-state";
+
+/// Delta chains longer than this are rejected (runaway/cyclic protection
+/// beyond the explicit cycle check).
+const MAX_PARENT_DEPTH: usize = 32;
+
+/// Chunk size for streaming checksum verification.
+const VERIFY_CHUNK: usize = 64 * 1024;
+
+// ---------------------------------------------------------------------------
+// error taxonomy
+
+/// Typed failure taxonomy for the v1 checkpoint format. Every corrupt or
+/// foreign file maps to one of these (carried inside `anyhow::Error`),
+/// naming the frame/offset involved — never a silent zero-decode, never a
+/// partial restore.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CheckpointError {
+    /// The `magic` header key is present but is not ours.
+    BadMagic {
+        /// The magic value found in the file.
+        found: String,
+    },
+    /// `magic` matched but the declared `version` is unknown to this build.
+    UnsupportedVersion {
+        /// The version the file declares.
+        version: u64,
+    },
+    /// The file ends inside the two header lines.
+    TruncatedHeader {
+        /// What was being read when the bytes ran out.
+        detail: String,
+    },
+    /// The header line does not match its recorded `#crc32:` line.
+    HeaderChecksum {
+        /// CRC-32 recorded on the checksum line.
+        expected: u32,
+        /// CRC-32 computed over the header line actually on disk.
+        found: u32,
+    },
+    /// Structurally invalid header: bad JSON, missing/mistyped keys,
+    /// malformed checksum line, or a manifest that does not tile the
+    /// payload.
+    BadHeader {
+        /// What is wrong.
+        detail: String,
+    },
+    /// The payload ends inside a manifest frame.
+    Truncated {
+        /// Role of the first frame extending past end-of-file.
+        role: String,
+        /// The frame's payload-relative byte offset.
+        offset: u64,
+        /// Bytes the manifest says the frame occupies.
+        need: u64,
+        /// Payload bytes actually present from the frame's offset on.
+        have: u64,
+    },
+    /// A frame's bytes do not match the manifest checksum.
+    ChecksumMismatch {
+        /// Role of the corrupt frame.
+        role: String,
+        /// The frame's payload-relative byte offset.
+        offset: u64,
+        /// CRC-32 recorded in the manifest.
+        expected: u32,
+        /// CRC-32 computed over the bytes on disk.
+        found: u32,
+    },
+    /// A frame that passed its checksum failed structural validation, or
+    /// could not be read at all.
+    CorruptFrame {
+        /// Role of the offending frame.
+        role: String,
+        /// What is wrong.
+        detail: String,
+    },
+    /// A role the reader requires is absent from the manifest.
+    MissingFrame {
+        /// The absent role.
+        role: String,
+    },
+    /// The file is longer than the manifest accounts for.
+    TrailingBytes {
+        /// File length the manifest accounts for.
+        expected: u64,
+        /// Actual file length.
+        found: u64,
+    },
+    /// A delta checkpoint's parent chain cannot be resolved.
+    ParentChain {
+        /// The chain path involved.
+        path: String,
+        /// What went wrong.
+        detail: String,
+    },
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::BadMagic { found } => {
+                write!(f, "not a {MAGIC} checkpoint: header magic is {found:?}")
+            }
+            CheckpointError::UnsupportedVersion { version } => write!(
+                f,
+                "checkpoint version {version} is not supported by this build \
+                 (newest known: {VERSION})"
+            ),
+            CheckpointError::TruncatedHeader { detail } => {
+                write!(f, "checkpoint header truncated: {detail}")
+            }
+            CheckpointError::HeaderChecksum { expected, found } => write!(
+                f,
+                "checkpoint header failed its checksum: recorded {expected:#010x}, \
+                 computed {found:#010x}"
+            ),
+            CheckpointError::BadHeader { detail } => {
+                write!(f, "checkpoint header is invalid: {detail}")
+            }
+            CheckpointError::Truncated { role, offset, need, have } => write!(
+                f,
+                "checkpoint frame {role:?} at payload offset {offset} is truncated: \
+                 needs {need} bytes, file has {have}"
+            ),
+            CheckpointError::ChecksumMismatch { role, offset, expected, found } => write!(
+                f,
+                "checkpoint frame {role:?} at payload offset {offset} failed its \
+                 checksum: recorded {expected:#010x}, computed {found:#010x}"
+            ),
+            CheckpointError::CorruptFrame { role, detail } => {
+                write!(f, "checkpoint frame {role:?} is corrupt: {detail}")
+            }
+            CheckpointError::MissingFrame { role } => {
+                write!(f, "checkpoint has no frame for role {role:?}")
+            }
+            CheckpointError::TrailingBytes { expected, found } => write!(
+                f,
+                "checkpoint has trailing bytes: manifest accounts for {expected} \
+                 bytes, file has {found}"
+            ),
+            CheckpointError::ParentChain { path, detail } => {
+                write!(f, "checkpoint parent chain via {path:?} is broken: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {}
+
+fn bad(detail: impl Into<String>) -> CheckpointError {
+    CheckpointError::BadHeader { detail: detail.into() }
+}
+
+// ---------------------------------------------------------------------------
+// header + manifest
+
+/// One manifest row: where a buffer's codec bytes live and how to check
+/// them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FrameEntry {
+    /// Stable buffer identity (`param.0`, `opt.1`, `so.3.left`, ...).
+    pub role: String,
+    /// Codec the bytes decode through (`codec_by_name`), or
+    /// [`SIDE_STATE_CODEC`] for opaque side frames.
+    pub codec: String,
+    /// Element count of the decoded buffer (0 for opaque frames).
+    pub len: usize,
+    /// Byte length of the frame payload.
+    pub bytes: u64,
+    /// Payload-relative byte offset (0 when `in_parent`).
+    pub offset: u64,
+    /// CRC-32 of the frame bytes.
+    pub crc32: u32,
+    /// Delta checkpoints: the bytes live in the parent chain, not here.
+    pub in_parent: bool,
+}
+
+/// Parsed v1 header: run identity plus the frame manifest.
+#[derive(Debug, Clone)]
+pub struct Header {
+    /// Header format version (currently always 1).
+    pub version: u64,
+    /// Model name the checkpoint belongs to.
+    pub model: String,
+    /// Last completed training step.
+    pub step: usize,
+    /// Total model parameter count.
+    pub param_count: usize,
+    /// First-order optimizer name.
+    pub opt: String,
+    /// First-order scalar counters (bias-correction steps etc.).
+    pub opt_counters: Vec<f64>,
+    /// The run's configured role→codec policy summary ("" = single knobs).
+    pub quant_policy: String,
+    /// Shard count at save time (observability only — restores are
+    /// shard-count-portable by construction).
+    pub shards: usize,
+    /// Delta checkpoints: path of the parent (relative paths resolve
+    /// against this file's directory).
+    pub parent: Option<String>,
+    /// The frame manifest, in payload order.
+    pub manifest: Vec<FrameEntry>,
+}
+
+impl Header {
+    fn from_json(j: &Json) -> Result<Header> {
+        fn req_str(j: &Json, key: &str) -> Result<String> {
+            j.get(key)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| bad(format!("missing string key {key:?}")).into())
+        }
+        fn req_usize(j: &Json, key: &str) -> Result<usize> {
+            j.get(key)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| bad(format!("missing numeric key {key:?}")).into())
+        }
+        let version = req_usize(j, "version")? as u64;
+        let opt_counters: Vec<f64> = j
+            .get("opt_counters")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default();
+        let parent = j.get("parent").and_then(|v| v.as_str()).map(str::to_string);
+        let rows = j
+            .get("manifest")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| bad("missing manifest array"))?;
+        let mut manifest = Vec::with_capacity(rows.len());
+        let mut seen = BTreeSet::new();
+        for (i, row) in rows.iter().enumerate() {
+            let role = req_str(row, "role")
+                .map_err(|e| bad(format!("manifest row {i}: {e:#}")))?;
+            if !seen.insert(role.clone()) {
+                return Err(bad(format!("duplicate manifest role {role:?}")).into());
+            }
+            manifest.push(FrameEntry {
+                codec: req_str(row, "codec")
+                    .map_err(|e| bad(format!("manifest row {i}: {e:#}")))?,
+                len: req_usize(row, "len")
+                    .map_err(|e| bad(format!("manifest row {i}: {e:#}")))?,
+                bytes: req_usize(row, "bytes")
+                    .map_err(|e| bad(format!("manifest row {i}: {e:#}")))? as u64,
+                offset: req_usize(row, "offset")
+                    .map_err(|e| bad(format!("manifest row {i}: {e:#}")))? as u64,
+                crc32: req_usize(row, "crc32")
+                    .map_err(|e| bad(format!("manifest row {i}: {e:#}")))? as u32,
+                in_parent: row.get("in_parent").and_then(|v| v.as_bool()).unwrap_or(false),
+                role,
+            });
+        }
+        Ok(Header {
+            version,
+            model: req_str(j, "model")?,
+            step: req_usize(j, "step")?,
+            param_count: req_usize(j, "param_count")?,
+            opt: req_str(j, "opt")?,
+            opt_counters,
+            quant_policy: j
+                .get("quant_policy")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            shards: j.get("shards").and_then(|v| v.as_usize()).unwrap_or(1),
+            parent,
+            manifest,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// writer
+
+/// Streaming payload producer: feeds the sink consecutive byte chunks of
+/// one frame. Must be deterministic — the writer runs it once to size and
+/// checksum the frame, possibly once to delta-compare against the parent,
+/// and once to write.
+pub type FrameEmit<'a> = Box<dyn Fn(&mut dyn FnMut(&[u8])) + 'a>;
+
+/// How one buffer enters the checkpoint: manifest identity plus a
+/// streaming payload producer.
+pub struct FrameSpec<'a> {
+    /// Stable buffer identity (see [`FrameEntry::role`]).
+    pub role: String,
+    /// Codec name recorded in the manifest.
+    pub codec: String,
+    /// Decoded element count recorded in the manifest (0 for opaque).
+    pub len: usize,
+    /// Streaming payload producer.
+    pub emit: FrameEmit<'a>,
+}
+
+/// Run identity recorded in the header (everything except the manifest).
+#[derive(Debug, Clone)]
+pub struct CheckpointMeta {
+    /// Model name.
+    pub model: String,
+    /// Last completed training step.
+    pub step: usize,
+    /// Total model parameter count.
+    pub param_count: usize,
+    /// First-order optimizer name.
+    pub opt: String,
+    /// First-order scalar counters.
+    pub opt_counters: Vec<f64>,
+    /// Role→codec policy summary ("" = single knobs).
+    pub quant_policy: String,
+    /// Shard count at save time.
+    pub shards: usize,
+}
+
+/// Write a monolithic v1 checkpoint: every frame's bytes are present in
+/// this one file. Atomic: streams through `<path>.tmp` + fsync + rename.
+pub fn save(path: &Path, meta: &CheckpointMeta, frames: &[FrameSpec<'_>]) -> Result<()> {
+    write_file(path, meta, frames, None)
+}
+
+/// Write a delta v1 checkpoint against `parent`: frames whose bytes are
+/// byte-identical to the parent's resolution of the same role are recorded
+/// `in_parent` and not rewritten. The manifest still lists every frame, so
+/// the child alone fully describes the state; readers chase the `parent`
+/// path only for the skipped bytes. Same atomicity as [`save`].
+pub fn save_delta(
+    path: &Path,
+    meta: &CheckpointMeta,
+    frames: &[FrameSpec<'_>],
+    parent: &Path,
+) -> Result<()> {
+    write_file(path, meta, frames, Some(parent))
+}
+
+fn write_file(
+    path: &Path,
+    meta: &CheckpointMeta,
+    frames: &[FrameSpec<'_>],
+    parent: Option<&Path>,
+) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    // pass 1: stream every frame once to learn its byte count + checksum
+    let mut sized: Vec<FrameEntry> = Vec::with_capacity(frames.len());
+    for fr in frames {
+        let mut crc = Crc32::new();
+        let mut nbytes = 0u64;
+        (fr.emit)(&mut |chunk| {
+            crc.update(chunk);
+            nbytes += chunk.len() as u64;
+        });
+        sized.push(FrameEntry {
+            role: fr.role.clone(),
+            codec: fr.codec.clone(),
+            len: fr.len,
+            bytes: nbytes,
+            offset: 0,
+            crc32: crc.finish(),
+            in_parent: false,
+        });
+    }
+    // delta pass: a frame whose identity AND bytes match the parent's is
+    // recorded `in_parent` and its payload skipped
+    let mut stored_parent = None;
+    if let Some(ppath) = parent {
+        let pfile = CheckpointFile::open(ppath)
+            .with_context(|| format!("opening delta parent {}", ppath.display()))?;
+        for (fr, entry) in frames.iter().zip(sized.iter_mut()) {
+            let same_id = match pfile.frame(&entry.role) {
+                Some(pe) => {
+                    pe.codec == entry.codec
+                        && pe.len == entry.len
+                        && pe.bytes == entry.bytes
+                        && pe.crc32 == entry.crc32
+                }
+                None => false,
+            };
+            if !same_id {
+                continue;
+            }
+            // CRC equality is necessary but not sufficient: stream-compare
+            // the actual bytes so a collision can never silently alias state
+            let pbytes = pfile.read_frame_bytes(&entry.role)?;
+            let mut pos = 0usize;
+            let mut equal = true;
+            (fr.emit)(&mut |chunk| {
+                let end = pos + chunk.len();
+                if end > pbytes.len() || &pbytes[pos..end] != chunk {
+                    equal = false;
+                }
+                pos = end;
+            });
+            if equal && pos == pbytes.len() {
+                entry.in_parent = true;
+            }
+        }
+        if sized.iter().any(|e| e.in_parent) {
+            stored_parent = Some(stored_parent_path(path, ppath)?);
+        }
+    }
+    // assign payload offsets to the frames physically present here
+    let mut running = 0u64;
+    for e in sized.iter_mut() {
+        if e.in_parent {
+            continue;
+        }
+        e.offset = running;
+        running += e.bytes;
+    }
+    let header_line = header_to_json(meta, stored_parent.as_deref(), &sized).to_string();
+    let crc_line = format!("#crc32:{:08x}", crc32(header_line.as_bytes()));
+
+    let tmp = tmp_path(path);
+    if let Err(e) = write_tmp(&tmp, &header_line, &crc_line, frames, &sized) {
+        let _ = fs::remove_file(&tmp);
+        return Err(e);
+    }
+    fs::rename(&tmp, path).with_context(|| format!("committing {}", path.display()))?;
+    sync_parent_dir(path);
+    Ok(())
+}
+
+/// Pass 2: stream every present frame into `<path>.tmp` and fsync it.
+fn write_tmp(
+    tmp: &Path,
+    header_line: &str,
+    crc_line: &str,
+    frames: &[FrameSpec<'_>],
+    sized: &[FrameEntry],
+) -> Result<()> {
+    let f = fs::File::create(tmp).with_context(|| format!("creating {}", tmp.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{header_line}")?;
+    writeln!(w, "{crc_line}")?;
+    for (fr, entry) in frames.iter().zip(sized) {
+        if entry.in_parent {
+            continue;
+        }
+        let mut written = 0u64;
+        let mut io_err: Option<std::io::Error> = None;
+        (fr.emit)(&mut |chunk| {
+            if io_err.is_some() {
+                return;
+            }
+            if let Err(e) = w.write_all(chunk) {
+                io_err = Some(e);
+                return;
+            }
+            written += chunk.len() as u64;
+        });
+        if let Some(e) = io_err {
+            return Err(e.into());
+        }
+        if written != entry.bytes {
+            anyhow::bail!(
+                "checkpoint frame {:?} changed size between passes: sized {} bytes, \
+                 wrote {} (emit must be deterministic)",
+                entry.role,
+                entry.bytes,
+                written
+            );
+        }
+    }
+    w.flush()?;
+    let f = w.into_inner().map_err(|e| anyhow::anyhow!("flushing checkpoint writer: {e}"))?;
+    f.sync_all()?;
+    Ok(())
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Best-effort directory fsync so the rename itself is durable (POSIX
+/// crash-atomicity; failure here degrades durability, never correctness).
+fn sync_parent_dir(path: &Path) {
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        if let Ok(d) = fs::File::open(&dir) {
+            let _ = d.sync_all();
+        }
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+}
+
+/// The parent path recorded in a delta header: just the file name when
+/// parent and child share a directory (so checkpoint dirs stay
+/// relocatable), the canonical absolute path otherwise.
+fn stored_parent_path(child: &Path, parent: &Path) -> Result<String> {
+    let p = if child.parent() == parent.parent() {
+        match parent.file_name() {
+            Some(n) => PathBuf::from(n),
+            None => parent.to_path_buf(),
+        }
+    } else {
+        fs::canonicalize(parent)
+            .with_context(|| format!("canonicalizing delta parent {}", parent.display()))?
+    };
+    match p.to_str() {
+        Some(s) => Ok(s.to_string()),
+        None => anyhow::bail!("delta parent path {} is not valid UTF-8", p.display()),
+    }
+}
+
+fn header_to_json(meta: &CheckpointMeta, parent: Option<&str>, manifest: &[FrameEntry]) -> Json {
+    let rows: Vec<Json> = manifest
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("role", Json::Str(e.role.clone())),
+                ("codec", Json::Str(e.codec.clone())),
+                ("len", Json::Num(e.len as f64)),
+                ("bytes", Json::Num(e.bytes as f64)),
+                ("offset", Json::Num(e.offset as f64)),
+                ("crc32", Json::Num(e.crc32 as f64)),
+                ("in_parent", Json::Bool(e.in_parent)),
+            ])
+        })
+        .collect();
+    let mut pairs = vec![
+        ("magic", Json::Str(MAGIC.to_string())),
+        ("version", Json::Num(VERSION as f64)),
+        ("model", Json::Str(meta.model.clone())),
+        ("step", Json::Num(meta.step as f64)),
+        ("param_count", Json::Num(meta.param_count as f64)),
+        ("opt", Json::Str(meta.opt.clone())),
+        ("opt_counters", Json::arr_f64(&meta.opt_counters)),
+        ("quant_policy", Json::Str(meta.quant_policy.clone())),
+        ("shards", Json::Num(meta.shards as f64)),
+        ("manifest", Json::Arr(rows)),
+    ];
+    if let Some(p) = parent {
+        pairs.push(("parent", Json::Str(p.to_string())));
+    }
+    Json::obj(pairs)
+}
+
+// ---------------------------------------------------------------------------
+// reader
+
+/// Probe a checkpoint's header version without touching the payload:
+/// `Ok(None)` = legacy v0 (JSON header with no `magic` key), `Ok(Some(v))`
+/// = v1 streaming format. Foreign magic and unknown versions are typed
+/// errors, not `None`.
+pub fn probe_version(path: &Path) -> Result<Option<u64>> {
+    let f = fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let line = read_header_line(&mut r, "header line")?;
+    let j = Json::parse(&line).map_err(|e| bad(format!("header is not JSON: {e}")))?;
+    let magic = match j.get("magic").and_then(|v| v.as_str()) {
+        Some(m) => m.to_string(),
+        None => return Ok(None),
+    };
+    if magic != MAGIC {
+        return Err(CheckpointError::BadMagic { found: magic }.into());
+    }
+    let version = j
+        .get("version")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| bad("magic without a version key"))? as u64;
+    if version != VERSION {
+        return Err(CheckpointError::UnsupportedVersion { version }.into());
+    }
+    Ok(Some(version))
+}
+
+fn read_header_line(r: &mut impl BufRead, what: &str) -> Result<String> {
+    let mut buf = Vec::new();
+    let n = r.read_until(b'\n', &mut buf)?;
+    if n == 0 || buf.last() != Some(&b'\n') {
+        return Err(CheckpointError::TruncatedHeader {
+            detail: format!("missing newline after {what}"),
+        }
+        .into());
+    }
+    buf.pop();
+    match String::from_utf8(buf) {
+        Ok(s) => Ok(s),
+        Err(_) => Err(bad(format!("{what} is not UTF-8")).into()),
+    }
+}
+
+fn parse_crc_line(line: &str) -> Result<u32> {
+    let malformed = || bad("malformed #crc32 checksum line");
+    let hex = match line.strip_prefix("#crc32:") {
+        Some(h) => h,
+        None => return Err(malformed().into()),
+    };
+    if hex.len() != 8 || !hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(malformed().into());
+    }
+    match u32::from_str_radix(hex, 16) {
+        Ok(v) => Ok(v),
+        Err(_) => Err(malformed().into()),
+    }
+}
+
+fn resolve_parent_path(child: &Path, stored: &str) -> PathBuf {
+    let p = Path::new(stored);
+    if p.is_absolute() {
+        return p.to_path_buf();
+    }
+    match child.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.join(p),
+        _ => p.to_path_buf(),
+    }
+}
+
+/// Sequential positional read: open, seek, fill `buf` exactly.
+fn read_exact_at_path(path: &Path, off: u64, buf: &mut [u8]) -> std::io::Result<()> {
+    let mut f = fs::File::open(path)?;
+    f.seek(SeekFrom::Start(off))?;
+    f.read_exact(buf)
+}
+
+/// An opened v1 checkpoint: validated header plus the resolved delta-parent
+/// chain. Structure (header checksum, manifest tiling, payload length,
+/// chain identity) is verified at open; frame payload checksums are
+/// verified on every read. All reads are per-frame positional IO — the
+/// payload is never loaded whole.
+pub struct CheckpointFile {
+    path: PathBuf,
+    /// The parsed, validated header.
+    pub header: Header,
+    payload_start: u64,
+    parent: Option<Box<CheckpointFile>>,
+}
+
+impl CheckpointFile {
+    /// Open and structurally validate `path` (and its delta-parent chain,
+    /// depth- and cycle-checked).
+    pub fn open(path: &Path) -> Result<Self> {
+        let mut visited = BTreeSet::new();
+        Self::open_chain(path, &mut visited, 0)
+    }
+
+    fn open_chain(path: &Path, visited: &mut BTreeSet<PathBuf>, depth: usize) -> Result<Self> {
+        if depth > MAX_PARENT_DEPTH {
+            return Err(CheckpointError::ParentChain {
+                path: path.display().to_string(),
+                detail: format!("chain deeper than {MAX_PARENT_DEPTH}"),
+            }
+            .into());
+        }
+        let canon = fs::canonicalize(path).unwrap_or_else(|_| path.to_path_buf());
+        if !visited.insert(canon) {
+            return Err(CheckpointError::ParentChain {
+                path: path.display().to_string(),
+                detail: "cycle in delta-parent chain".to_string(),
+            }
+            .into());
+        }
+        let f = fs::File::open(path)
+            .with_context(|| format!("opening checkpoint {}", path.display()))?;
+        let file_len = f.metadata()?.len();
+        let mut r = BufReader::new(f);
+        let header_line = read_header_line(&mut r, "header line")?;
+        let crc_line = read_header_line(&mut r, "checksum line")?;
+        let expected = parse_crc_line(&crc_line)?;
+        let found = crc32(header_line.as_bytes());
+        if expected != found {
+            return Err(CheckpointError::HeaderChecksum { expected, found }.into());
+        }
+        let j = Json::parse(&header_line).map_err(|e| bad(format!("header is not JSON: {e}")))?;
+        match j.get("magic").and_then(|v| v.as_str()) {
+            Some(m) if m == MAGIC => {}
+            Some(m) => return Err(CheckpointError::BadMagic { found: m.to_string() }.into()),
+            None => return Err(bad("missing magic key (legacy v0 checkpoint?)").into()),
+        }
+        let version = j
+            .get("version")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| bad("missing version key"))? as u64;
+        if version != VERSION {
+            return Err(CheckpointError::UnsupportedVersion { version }.into());
+        }
+        let header = Header::from_json(&j)?;
+        let payload_start = header_line.len() as u64 + 1 + crc_line.len() as u64 + 1;
+        let payload_len = file_len.saturating_sub(payload_start);
+        // present frames must tile the payload exactly, in manifest order
+        let mut running = 0u64;
+        for e in header.manifest.iter().filter(|e| !e.in_parent) {
+            if e.offset != running {
+                return Err(bad(format!(
+                    "frame {:?} at offset {} breaks the manifest tiling (expected {running})",
+                    e.role, e.offset
+                ))
+                .into());
+            }
+            if e.offset + e.bytes > payload_len {
+                return Err(CheckpointError::Truncated {
+                    role: e.role.clone(),
+                    offset: e.offset,
+                    need: e.bytes,
+                    have: payload_len.saturating_sub(e.offset),
+                }
+                .into());
+            }
+            running += e.bytes;
+        }
+        if running < payload_len {
+            return Err(CheckpointError::TrailingBytes {
+                expected: payload_start + running,
+                found: file_len,
+            }
+            .into());
+        }
+        let parent = if header.manifest.iter().any(|e| e.in_parent) {
+            let pstr = match header.parent.clone() {
+                Some(p) => p,
+                None => {
+                    return Err(bad("manifest has in_parent frames but no parent key").into())
+                }
+            };
+            let ppath = resolve_parent_path(path, &pstr);
+            let pfile = Self::open_chain(&ppath, visited, depth + 1).map_err(|e| {
+                anyhow::Error::from(CheckpointError::ParentChain {
+                    path: pstr.clone(),
+                    detail: format!("{e:#}"),
+                })
+            })?;
+            Some(Box::new(pfile))
+        } else {
+            None
+        };
+        let file = Self { path: path.to_path_buf(), header, payload_start, parent };
+        // every delegated frame must resolve (identity-checked) through the
+        // chain now, not at first read
+        for e in file.header.manifest.iter().filter(|e| e.in_parent) {
+            file.locate(&e.role)?;
+        }
+        Ok(file)
+    }
+
+    /// The file this view reads from.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Absolute file offset where the payload begins (manifest frame
+    /// offsets are relative to this). The fault-injection suite uses it to
+    /// target exact frame boundaries.
+    pub fn payload_offset(&self) -> u64 {
+        self.payload_start
+    }
+
+    /// This file's manifest row for `role`, if any (even when the bytes
+    /// live in the parent chain).
+    pub fn frame(&self, role: &str) -> Option<&FrameEntry> {
+        self.header.manifest.iter().find(|e| e.role == role)
+    }
+
+    /// Resolve `role` to the chain file that physically stores its bytes.
+    /// The child's manifest entry is authoritative: the storing ancestor
+    /// must agree on codec, element count, byte length, and checksum.
+    fn locate(&self, role: &str) -> Result<(&CheckpointFile, &FrameEntry)> {
+        let e = match self.frame(role) {
+            Some(e) => e,
+            None => return Err(CheckpointError::MissingFrame { role: role.to_string() }.into()),
+        };
+        if !e.in_parent {
+            return Ok((self, e));
+        }
+        let parent = match self.parent.as_deref() {
+            Some(p) => p,
+            None => {
+                return Err(CheckpointError::ParentChain {
+                    path: self.path.display().to_string(),
+                    detail: format!("frame {role:?} is in_parent but no parent is open"),
+                }
+                .into())
+            }
+        };
+        let (file, pe) = parent.locate(role)?;
+        if pe.codec != e.codec || pe.len != e.len || pe.bytes != e.bytes || pe.crc32 != e.crc32 {
+            return Err(CheckpointError::ParentChain {
+                path: file.path.display().to_string(),
+                detail: format!(
+                    "frame {role:?} identity diverged along the chain: child records \
+                     {}@{} ({} bytes, crc {:#010x}), ancestor stores {}@{} ({} bytes, \
+                     crc {:#010x})",
+                    e.codec, e.len, e.bytes, e.crc32, pe.codec, pe.len, pe.bytes, pe.crc32
+                ),
+            }
+            .into());
+        }
+        Ok((file, pe))
+    }
+
+    /// `(path, absolute offset, byte length)` of `role`'s stored bytes in
+    /// the chain file that holds them.
+    pub fn frame_location(&self, role: &str) -> Result<(PathBuf, u64, u64)> {
+        let (file, e) = self.locate(role)?;
+        Ok((file.path.clone(), file.payload_start + e.offset, e.bytes))
+    }
+
+    /// Read and checksum-verify one frame's raw bytes, resolving through
+    /// the delta chain.
+    pub fn read_frame_bytes(&self, role: &str) -> Result<Vec<u8>> {
+        let (file, e) = self.locate(role)?;
+        let mut buf = vec![0u8; e.bytes as usize];
+        read_exact_at_path(&file.path, file.payload_start + e.offset, &mut buf).map_err(
+            |err| {
+                anyhow::Error::from(CheckpointError::CorruptFrame {
+                    role: role.to_string(),
+                    detail: format!(
+                        "reading {} bytes at payload offset {}: {err}",
+                        e.bytes, e.offset
+                    ),
+                })
+            },
+        )?;
+        let found = crc32(&buf);
+        if found != e.crc32 {
+            return Err(CheckpointError::ChecksumMismatch {
+                role: role.to_string(),
+                offset: e.offset,
+                expected: e.crc32,
+                found,
+            }
+            .into());
+        }
+        Ok(buf)
+    }
+
+    /// Read one frame as an [`EncodedVec`] ready for codec decode.
+    pub fn read_frame_encoded(&self, role: &str) -> Result<EncodedVec> {
+        let len = self.locate(role)?.1.len;
+        let bytes = self.read_frame_bytes(role)?;
+        Ok(EncodedVec { bytes, len })
+    }
+
+    /// Checksum-verify one frame without materializing it (chunked reads).
+    pub fn verify_frame(&self, role: &str) -> Result<()> {
+        let (file, e) = self.locate(role)?;
+        let mut f = fs::File::open(&file.path)?;
+        f.seek(SeekFrom::Start(file.payload_start + e.offset))?;
+        let mut crc = Crc32::new();
+        let mut remaining = e.bytes;
+        let mut chunk = vec![0u8; VERIFY_CHUNK.min((e.bytes.max(1)) as usize)];
+        while remaining > 0 {
+            let take = chunk.len().min(remaining as usize);
+            f.read_exact(&mut chunk[..take]).map_err(|err| {
+                anyhow::Error::from(CheckpointError::CorruptFrame {
+                    role: role.to_string(),
+                    detail: format!("reading {take} bytes at payload offset {}: {err}", e.offset),
+                })
+            })?;
+            crc.update(&chunk[..take]);
+            remaining -= take as u64;
+        }
+        let found = crc.finish();
+        if found != e.crc32 {
+            return Err(CheckpointError::ChecksumMismatch {
+                role: role.to_string(),
+                offset: e.offset,
+                expected: e.crc32,
+                found,
+            }
+            .into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the read-only state server
+
+/// Shared read handle for concurrent serving: positional reads with no
+/// shared mutable state — `pread` on unix, an ephemeral handle per call
+/// elsewhere. No locks anywhere, so readers never serialize on each other.
+struct ServerFile {
+    path: PathBuf,
+    #[cfg(unix)]
+    handle: fs::File,
+}
+
+impl ServerFile {
+    fn open(path: &Path) -> Result<Self> {
+        Ok(Self {
+            path: path.to_path_buf(),
+            #[cfg(unix)]
+            handle: fs::File::open(path)?,
+        })
+    }
+
+    fn read_exact_at(&self, off: u64, buf: &mut [u8]) -> Result<()> {
+        #[cfg(unix)]
+        let res = {
+            use std::os::unix::fs::FileExt;
+            self.handle.read_exact_at(buf, off)
+        };
+        #[cfg(not(unix))]
+        let res = read_exact_at_path(&self.path, off, buf);
+        let n = buf.len();
+        res.with_context(|| {
+            format!("reading {n} bytes at offset {off} from {}", self.path.display())
+        })
+    }
+}
+
+/// Per-role serving metadata: resolved codec, decoded length, and the
+/// absolute byte range in whichever chain file stores the frame.
+struct ServedFrame {
+    /// `None` for opaque [`SIDE_STATE_CODEC`] frames (raw bytes only).
+    codec: Option<Arc<dyn StateCodec>>,
+    len: usize,
+    bytes: u64,
+    abs_offset: u64,
+    file: Arc<ServerFile>,
+}
+
+/// Read-only concurrent state server over a framed checkpoint: many reader
+/// threads (`StateServer` is `Send + Sync`; share it behind an `Arc`) pull
+/// decoded slices of any buffer straight from the file. Every frame
+/// checksum is verified once at open; a slice read afterwards touches only
+/// the bytes whose quantization blocks cover the requested range
+/// ([`StateCodec::slice_ranges`]) and decodes them through the existing
+/// 256-entry tables.
+pub struct StateServer {
+    frames: BTreeMap<String, ServedFrame>,
+}
+
+impl StateServer {
+    /// Open a checkpoint for serving: validates structure, checksums every
+    /// frame (chunked — nothing is materialized), resolves every decodable
+    /// frame's codec, and pins one positional-read handle per chain file.
+    pub fn open(path: &Path) -> Result<Self> {
+        let ckpt = CheckpointFile::open(path)?;
+        let mut files: BTreeMap<PathBuf, Arc<ServerFile>> = BTreeMap::new();
+        let mut frames = BTreeMap::new();
+        for e in &ckpt.header.manifest {
+            ckpt.verify_frame(&e.role)?;
+            let (fpath, abs_offset, bytes) = ckpt.frame_location(&e.role)?;
+            let file = if let Some(f) = files.get(&fpath) {
+                Arc::clone(f)
+            } else {
+                let f = Arc::new(ServerFile::open(&fpath)?);
+                files.insert(fpath, Arc::clone(&f));
+                f
+            };
+            let codec = if e.codec == SIDE_STATE_CODEC {
+                None
+            } else {
+                let c = codec_by_name(&e.codec).map_err(|err| {
+                    anyhow::Error::from(CheckpointError::CorruptFrame {
+                        role: e.role.clone(),
+                        detail: format!("unknown codec {:?}: {err:#}", e.codec),
+                    })
+                })?;
+                Some(c)
+            };
+            frames.insert(
+                e.role.clone(),
+                ServedFrame { codec, len: e.len, bytes, abs_offset, file },
+            );
+        }
+        Ok(Self { frames })
+    }
+
+    /// Every servable role, sorted.
+    pub fn roles(&self) -> Vec<String> {
+        self.frames.keys().cloned().collect()
+    }
+
+    fn served(&self, role: &str) -> Result<&ServedFrame> {
+        match self.frames.get(role) {
+            Some(f) => Ok(f),
+            None => Err(CheckpointError::MissingFrame { role: role.to_string() }.into()),
+        }
+    }
+
+    /// Decoded element count of `role` (0 for opaque side-state frames).
+    pub fn frame_len(&self, role: &str) -> Result<usize> {
+        Ok(self.served(role)?.len)
+    }
+
+    /// Decode `count` elements of `role` starting at element `start`,
+    /// reading only the bytes whose quantization blocks cover the slice.
+    pub fn serve_slice(&self, role: &str, start: usize, count: usize) -> Result<Vec<f32>> {
+        let fr = self.served(role)?;
+        let codec = match fr.codec.as_ref() {
+            Some(c) => c,
+            None => {
+                return Err(CheckpointError::CorruptFrame {
+                    role: role.to_string(),
+                    detail: format!(
+                        "{SIDE_STATE_CODEC} frames are opaque; use read_raw for their bytes"
+                    ),
+                }
+                .into())
+            }
+        };
+        if start + count > fr.len {
+            anyhow::bail!(
+                "slice [{start}, {}) is out of bounds for frame {role:?} of {} elements",
+                start + count,
+                fr.len
+            );
+        }
+        if count == 0 {
+            return Ok(Vec::new());
+        }
+        let sr = codec.slice_ranges(fr.len, start, count);
+        let mut bytes = Vec::with_capacity(sr.total_bytes());
+        for r in &sr.ranges {
+            let prev = bytes.len();
+            bytes.resize(prev + r.len(), 0);
+            fr.file.read_exact_at(fr.abs_offset + r.start as u64, &mut bytes[prev..])?;
+        }
+        let sub = EncodedVec { bytes, len: sr.elem_count };
+        let decoded = codec.decode(&sub);
+        let local = start - sr.elem_start;
+        Ok(decoded[local..local + count].to_vec())
+    }
+
+    /// Decode one whole buffer.
+    pub fn serve_all(&self, role: &str) -> Result<Vec<f32>> {
+        let len = self.served(role)?.len;
+        self.serve_slice(role, 0, len)
+    }
+
+    /// One frame's raw stored bytes (works for opaque side-state frames
+    /// too).
+    pub fn read_raw(&self, role: &str) -> Result<Vec<u8>> {
+        let fr = self.served(role)?;
+        let mut buf = vec![0u8; fr.bytes as usize];
+        fr.file.read_exact_at(fr.abs_offset, &mut buf)?;
+        Ok(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("shampoo4_ckpt_unit_{name}"));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn frame<'a>(role: &str, codec: &str, len: usize, data: &'a [u8]) -> FrameSpec<'a> {
+        FrameSpec {
+            role: role.to_string(),
+            codec: codec.to_string(),
+            len,
+            emit: Box::new(move |sink: &mut dyn FnMut(&[u8])| {
+                // deliberately chunked to exercise streaming writes
+                for c in data.chunks(3) {
+                    sink(c);
+                }
+            }),
+        }
+    }
+
+    fn meta() -> CheckpointMeta {
+        CheckpointMeta {
+            model: "m".into(),
+            step: 7,
+            param_count: 3,
+            opt: "adamw".into(),
+            opt_counters: vec![7.0],
+            quant_policy: String::new(),
+            shards: 1,
+        }
+    }
+
+    fn f32_bytes(v: &[f32]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn save_open_read_roundtrip() {
+        let dir = tdir("roundtrip");
+        let path = dir.join("c.bin");
+        let pdata = f32_bytes(&[1.0, -2.5, 3.0]);
+        let odata = vec![9u8, 8, 7, 6];
+        let frames =
+            vec![frame("param.0", "fp32", 3, &pdata), frame("opt.0", "fp32", 1, &odata)];
+        save(&path, &meta(), &frames).unwrap();
+        assert!(!tmp_path(&path).exists(), "tmp file must be renamed away");
+
+        assert_eq!(probe_version(&path).unwrap(), Some(1));
+        let c = CheckpointFile::open(&path).unwrap();
+        assert_eq!(c.header.step, 7);
+        assert_eq!(c.header.manifest.len(), 2);
+        assert_eq!(c.read_frame_bytes("param.0").unwrap(), pdata);
+        assert_eq!(c.read_frame_bytes("opt.0").unwrap(), odata);
+        c.verify_frame("param.0").unwrap();
+        c.verify_frame("opt.0").unwrap();
+        let e = c.read_frame_encoded("param.0").unwrap();
+        assert_eq!(e.len, 3);
+        let missing = c.read_frame_bytes("nope").unwrap_err();
+        assert!(format!("{missing:#}").contains("no frame for role"));
+    }
+
+    #[test]
+    fn delta_skips_identical_frames_and_resolves_through_parent() {
+        let dir = tdir("delta");
+        let base = dir.join("base.bin");
+        let child = dir.join("child.bin");
+        let pdata = f32_bytes(&[1.0, 2.0, 4.0]);
+        let o0 = vec![1u8, 2, 3];
+        save(
+            &base,
+            &meta(),
+            &[frame("param.0", "fp32", 3, &pdata), frame("opt.0", "fp32", 1, &o0)],
+        )
+        .unwrap();
+        let o1 = vec![5u8, 6, 7];
+        save_delta(
+            &child,
+            &meta(),
+            &[frame("param.0", "fp32", 3, &pdata), frame("opt.0", "fp32", 1, &o1)],
+            &base,
+        )
+        .unwrap();
+        let c = CheckpointFile::open(&child).unwrap();
+        let pe = c.frame("param.0").unwrap();
+        assert!(pe.in_parent, "unchanged frame must delegate to the parent");
+        assert!(!c.frame("opt.0").unwrap().in_parent);
+        assert_eq!(c.read_frame_bytes("param.0").unwrap(), pdata);
+        assert_eq!(c.read_frame_bytes("opt.0").unwrap(), o1);
+        // the child file holds only the changed frame's bytes
+        let child_len = fs::metadata(&child).unwrap().len();
+        assert_eq!(child_len, c.payload_offset() + o1.len() as u64);
+        // chain is visible to the server too
+        let srv = StateServer::open(&child).unwrap();
+        assert_eq!(srv.serve_all("param.0").unwrap(), vec![1.0, 2.0, 4.0]);
+    }
+
+    #[test]
+    fn corrupt_payload_and_header_are_typed_errors() {
+        let dir = tdir("corrupt");
+        let path = dir.join("c.bin");
+        let pdata = f32_bytes(&[0.5, 1.5, 2.5]);
+        save(&path, &meta(), &[frame("param.0", "fp32", 3, &pdata)]).unwrap();
+        let c = CheckpointFile::open(&path).unwrap();
+        let off = c.payload_offset();
+        let mut bytes = fs::read(&path).unwrap();
+
+        // flip one payload byte → checksum mismatch naming the frame
+        let mut flipped = bytes.clone();
+        flipped[off as usize] ^= 0x40;
+        fs::write(&path, &flipped).unwrap();
+        let c2 = CheckpointFile::open(&path).unwrap();
+        let err = c2.read_frame_bytes("param.0").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("param.0") && msg.contains("checksum"), "{msg}");
+
+        // truncate inside the frame → Truncated at open
+        fs::write(&path, &bytes[..off as usize + 2]).unwrap();
+        let err = CheckpointFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+        // extend past the manifest → trailing bytes
+        let mut longer = bytes.clone();
+        longer.push(0);
+        fs::write(&path, &longer).unwrap();
+        let err = CheckpointFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing"), "{err:#}");
+
+        // flip one header byte → header checksum error
+        bytes[2] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        let err = CheckpointFile::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("header"), "{err:#}");
+    }
+
+    #[test]
+    fn foreign_magic_and_versions_are_named() {
+        let dir = tdir("magic");
+        let path = dir.join("c.bin");
+        fs::write(&path, "{\"magic\":\"other-fmt\",\"version\":1}\n").unwrap();
+        let err = probe_version(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("other-fmt"));
+
+        let hdr = format!("{{\"magic\":\"{MAGIC}\",\"version\":9}}");
+        fs::write(&path, format!("{hdr}\n")).unwrap();
+        let err = probe_version(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("version 9"));
+
+        // v0: JSON header without magic probes as None
+        fs::write(&path, "{\"model\":\"m\"}\n").unwrap();
+        assert_eq!(probe_version(&path).unwrap(), None);
+    }
+
+    #[test]
+    fn server_slices_match_full_decode() {
+        let dir = tdir("server");
+        let path = dir.join("c.bin");
+        let vals: Vec<f32> = (0..130).map(|i| (i as f32) * 0.25 - 16.0).collect();
+        let codec = codec_by_name("q4-dt").unwrap();
+        let enc = codec.encode(&vals);
+        let f = FrameSpec {
+            role: "opt.0".to_string(),
+            codec: codec.name(),
+            len: enc.len,
+            emit: Box::new(|sink: &mut dyn FnMut(&[u8])| sink(&enc.bytes)),
+        };
+        save(&path, &meta(), &[f]).unwrap();
+        let srv = StateServer::open(&path).unwrap();
+        let full = codec.decode(&enc);
+        assert_eq!(srv.serve_all("opt.0").unwrap(), full);
+        for (s, n) in [(0usize, 1usize), (63, 2), (64, 64), (100, 30), (129, 1), (7, 0)] {
+            assert_eq!(srv.serve_slice("opt.0", s, n).unwrap(), full[s..s + n].to_vec());
+        }
+        assert!(srv.serve_slice("opt.0", 100, 64).is_err(), "oob slice must fail");
+    }
+}

@@ -1,5 +1,8 @@
 //! L3 coordinator: the training framework around the paper's optimizer.
 //!
+//! * `checkpoint`   — the streaming per-buffer-framed checkpoint format
+//!                    (manifest + checksums, atomic commit, delta chains)
+//!                    and the concurrent read-only `StateServer`
 //! * `partition`    — Shampoo blocking of parameters into bucket orders
 //! * `state`        — quantized / dense / naive preconditioner block states
 //! * `second_order` — Algorithm 3 orchestration over the AOT artifacts,
@@ -16,6 +19,9 @@
 //! * `memory`       — analytic planner (Table 13) sharing the live
 //!                    byte-accounting model
 
+/// The streaming checkpoint format (framed buffers + manifest, atomic
+/// commit, delta chains) and the read-only concurrent `StateServer`.
+pub mod checkpoint;
 /// Analytic memory planner (Table 13).
 pub mod memory;
 /// Parameter buffers + model step/eval marshaling.
@@ -36,6 +42,7 @@ pub mod state;
 /// The training loop, eval, metrics, checkpoints.
 pub mod trainer;
 
+pub use checkpoint::{CheckpointError, CheckpointFile, StateServer};
 pub use model::ModelHandle;
 pub use scheduler::{ScheduleError, Scheduler, StepTimings};
 pub use second_order::SecondOrder;

@@ -311,11 +311,48 @@ impl SecondOrder {
     /// precondition inputs are invalidated, and the next step rebuilds them
     /// from the restored state.
     pub fn restore_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let sides = self.parse_state(bytes)?;
+        self.validate_sides(&sides)?;
+        self.apply_sides(sides)
+    }
+
+    /// Parse a [`SecondOrder::serialize_state`] blob into per-block
+    /// (left, right) side pairs. Pure: no engine state is touched. The
+    /// blob must contain exactly `blocks.len()` pairs — trailing bytes are
+    /// a descriptive error, not silently ignored.
+    pub fn parse_state(&self, bytes: &[u8]) -> Result<Vec<(SideState, SideState)>> {
         let mut off = 0usize;
-        let mut restored = Vec::with_capacity(self.blocks.len() * 2);
-        for (bi, bp) in self.blocks.iter().enumerate() {
-            for side in [&bp.left, &bp.right] {
-                let (s, used) = SideState::deserialize(&bytes[off..])?;
+        let mut out = Vec::with_capacity(self.blocks.len());
+        for _ in 0..self.blocks.len() {
+            let (l, used) = SideState::deserialize(&bytes[off..])?;
+            off += used;
+            let (r, used) = SideState::deserialize(&bytes[off..])?;
+            off += used;
+            out.push((l, r));
+        }
+        if off != bytes.len() {
+            return Err(anyhow!(
+                "second-order checkpoint blob has {} trailing bytes",
+                bytes.len() - off
+            ));
+        }
+        Ok(out)
+    }
+
+    /// Check parsed side pairs against this engine's configuration: pair
+    /// count, then per-block arm kind, matrix order, and storage codec.
+    /// Pure — callers run this *before* [`SecondOrder::apply_sides`] so a
+    /// mismatched checkpoint can never half-apply.
+    pub fn validate_sides(&self, sides: &[(SideState, SideState)]) -> Result<()> {
+        if sides.len() != self.blocks.len() {
+            return Err(anyhow!(
+                "checkpoint has {} second-order blocks, run expects {}",
+                sides.len(),
+                self.blocks.len()
+            ));
+        }
+        for (bi, ((l, r), bp)) in sides.iter().zip(&self.blocks).enumerate() {
+            for (s, side) in [(l, &bp.left), (r, &bp.right)] {
                 if s.order() != side.order()
                     || s.arm_name() != side.arm_name()
                     || s.codec_name() != side.codec_name()
@@ -331,25 +368,23 @@ impl SecondOrder {
                         side.codec_name()
                     ));
                 }
-                restored.push(s);
-                off += used;
             }
         }
-        if off != bytes.len() {
-            return Err(anyhow!(
-                "second-order checkpoint blob has {} trailing bytes",
-                bytes.len() - off
-            ));
-        }
-        let mut it = restored.into_iter();
-        for bp in self.blocks.iter_mut() {
-            bp.left = it.next().expect("one side per parsed entry");
-            bp.right = it.next().expect("one side per parsed entry");
+        Ok(())
+    }
+
+    /// Swap validated side pairs in ([`SecondOrder::validate_sides`] must
+    /// have passed), invalidate cached precondition inputs, and re-sync the
+    /// shard workers' copies: the pairs are in global block order
+    /// (shard-agnostic), so a checkpoint saved at any shard count restores
+    /// at any other. The only failure mode left here is shard re-sync IO.
+    pub fn apply_sides(&mut self, sides: Vec<(SideState, SideState)>) -> Result<()> {
+        debug_assert_eq!(sides.len(), self.blocks.len());
+        for (bp, (l, r)) in self.blocks.iter_mut().zip(sides) {
+            bp.left = l;
+            bp.right = r;
             bp.inv_cache = None;
         }
-        // re-sync the shard workers' copies: the blob is in global block
-        // order (shard-agnostic), so a checkpoint saved at any shard count
-        // restores at any other
         if let Some(sh) = self.shards.as_mut() {
             sh.sync_states(&self.blocks)?;
         }

@@ -303,6 +303,14 @@ impl SideState {
     /// codec payloads (no requantization — byte-exact round-trip).
     pub fn serialize(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.serialize_into(&mut out);
+        out
+    }
+
+    /// Streaming variant of [`SideState::serialize`]: append this side's
+    /// bytes to `out`. The checkpoint writer's per-frame emit seam — one
+    /// side at a time, never the whole engine's state in one blob.
+    pub fn serialize_into(&self, out: &mut Vec<u8>) {
         out.push(match &self.arm {
             SideArm::Quantized { .. } => 0u8,
             SideArm::Dense { .. } => 1,
@@ -311,21 +319,20 @@ impl SideState {
         let name = self.codec.name();
         out.push(name.len() as u8);
         out.extend_from_slice(name.as_bytes());
-        put_u32(&mut out, self.order());
+        put_u32(out, self.order());
         match &self.arm {
             SideArm::Quantized { lam, codes, inv_diag, inv_codes }
             | SideArm::Naive { diag: lam, codes, inv_diag, inv_codes } => {
-                put_f32s(&mut out, lam);
-                put_enc(&mut out, codes);
-                put_f32s(&mut out, inv_diag);
-                put_enc(&mut out, inv_codes);
+                put_f32s(out, lam);
+                put_enc(out, codes);
+                put_f32s(out, inv_diag);
+                put_enc(out, inv_codes);
             }
             SideArm::Dense { l, lhat, .. } => {
-                put_enc(&mut out, l);
-                put_enc(&mut out, lhat);
+                put_enc(out, l);
+                put_enc(out, lhat);
             }
         }
-        out
     }
 
     /// Inverse of [`SideState::serialize`]. Returns the state and the bytes

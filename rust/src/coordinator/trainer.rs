@@ -10,15 +10,20 @@
 //! exact memory accounting, and the optional 32-bit shadow for dynamic
 //! quantization-error tracking (Figures 7/8).
 
+use std::collections::BTreeSet;
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
 use crate::config::{RunConfig, SecondOrderKind};
+use crate::coordinator::checkpoint::{
+    self, CheckpointError, CheckpointFile, CheckpointMeta, FrameSpec,
+};
 use crate::coordinator::model::{DataSource, ModelHandle};
 use crate::coordinator::scheduler::{Scheduler, StepTimings};
 use crate::coordinator::second_order::SecondOrder;
 use crate::coordinator::shadow::ShadowTracker;
+use crate::coordinator::state::SideState;
 use crate::errors;
 use crate::optim::{build_first_order, FirstOrder, StateSnapshot};
 use crate::quant::EncodedVec;
@@ -405,73 +410,116 @@ impl Trainer {
         })
     }
 
-    /// Save parameters + full optimizer state + step metadata (JSON header
-    /// line, then a binary payload: params as f32 LE, the first-order
-    /// buffers as raw codec bytes, and the second-order blocks as raw codec
-    /// bytes). Codec payloads are persisted verbatim — no requantization —
-    /// so loading restores the exact optimization trajectory for both
-    /// optimizer families at any state bitwidth. (Stochastic-rounding
-    /// buffers are the one caveat: the restore itself is byte-exact, but
-    /// post-resume encodes draw a fresh rounding stream — see
-    /// [`load_checkpoint`](Trainer::load_checkpoint).)
-    pub fn save_checkpoint(&self, path: &Path, step: usize) -> Result<()> {
-        use std::io::Write;
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let snap = self.first.export_state();
-        let buf_lens: Vec<usize> = snap.buffers.iter().map(|(_, e)| e.len).collect();
-        let buf_bytes: Vec<usize> = snap.buffers.iter().map(|(_, e)| e.bytes.len()).collect();
-        let buf_codecs: Vec<Json> = snap
-            .buffers
-            .iter()
-            .map(|(name, _)| Json::Str(name.clone()))
-            .collect();
-        let second_blob = self
-            .second
-            .as_ref()
-            .map(|s| s.serialize_state())
-            .unwrap_or_default();
-        let header = Json::obj(vec![
-            ("model", Json::Str(self.model.name.clone())),
-            ("step", Json::Num(step as f64)),
-            ("param_count", Json::Num(self.model.param_count() as f64)),
-            ("opt", Json::Str(self.first.name().to_string())),
-            ("opt_buffers", Json::arr_usize(&buf_lens)),
-            ("opt_bytes", Json::arr_usize(&buf_bytes)),
-            ("opt_codecs", Json::Arr(buf_codecs)),
-            ("opt_counters", Json::arr_f64(&snap.counters)),
+    /// Run identity for a checkpoint header at `step`.
+    fn checkpoint_meta(&self, step: usize, counters: Vec<f64>) -> CheckpointMeta {
+        CheckpointMeta {
+            model: self.model.name.clone(),
+            step,
+            param_count: self.model.param_count(),
+            opt: self.first.name().to_string(),
+            opt_counters: counters,
             // observability: the configured role→codec policy ("" when the
             // run used the single knobs). Enforcement is per buffer — every
-            // buffer's codec name above (and inside the second-order blob)
-            // must match on load, so a mismatched policy is rejected even
-            // for checkpoints predating this field.
-            ("quant_policy", Json::Str(self.cfg.codec_policy().summary())),
+            // manifest codec name must match on load, so a mismatched
+            // policy is rejected even without this field.
+            quant_policy: self.cfg.codec_policy().summary(),
             // observability only: restore recomputes the round-robin
             // assignment from the run's own shard count, so checkpoints
             // are shard-count-portable by construction
-            ("shards", Json::Num(self.cfg.second.shards as f64)),
-            ("second_order_bytes", Json::Num(second_blob.len() as f64)),
-        ])
-        .to_string();
-        let mut f = std::fs::File::create(path)?;
-        writeln!(f, "{header}")?;
-        for p in &self.model.params {
-            let bytes: Vec<u8> = p.iter().flat_map(|x| x.to_le_bytes()).collect();
-            f.write_all(&bytes)?;
+            shards: self.cfg.second.shards,
         }
-        for (_, e) in &snap.buffers {
-            f.write_all(&e.bytes)?;
-        }
-        f.write_all(&second_blob)?;
-        Ok(())
     }
 
-    /// Load a checkpoint written by `save_checkpoint`: restores parameters,
-    /// the first-order optimizer state, the second-order preconditioner
-    /// state (when both the checkpoint and this run have one), and the
-    /// resume position — a subsequent `train` continues at step + 1.
-    /// Returns the step. The restore is bit-exact: codec payloads are
+    /// One [`FrameSpec`] per state buffer, in manifest order: `param.{i}`
+    /// (fp32 LE, emitted in `checkpoint_chunk_bytes` chunks), `opt.{i}`
+    /// (raw first-order codec bytes), `so.{b}.left` / `so.{b}.right`
+    /// (opaque side-state serializations, one side at a time) — the
+    /// streaming seam: no whole-state blob is ever staged.
+    fn checkpoint_frames<'a>(&'a self, snap: &'a StateSnapshot) -> Vec<FrameSpec<'a>> {
+        let chunk_elems = (self.cfg.checkpoint_chunk_bytes / 4).max(1);
+        let mut frames = Vec::new();
+        for (i, p) in self.model.params.iter().enumerate() {
+            frames.push(FrameSpec {
+                role: format!("param.{i}"),
+                codec: "fp32".to_string(),
+                len: p.len(),
+                emit: Box::new(move |sink: &mut dyn FnMut(&[u8])| {
+                    for chunk in p.chunks(chunk_elems) {
+                        let bytes: Vec<u8> =
+                            chunk.iter().flat_map(|x| x.to_le_bytes()).collect();
+                        sink(&bytes);
+                    }
+                }),
+            });
+        }
+        for (i, (codec, e)) in snap.buffers.iter().enumerate() {
+            frames.push(FrameSpec {
+                role: format!("opt.{i}"),
+                codec: codec.clone(),
+                len: e.len,
+                emit: Box::new(move |sink: &mut dyn FnMut(&[u8])| sink(&e.bytes)),
+            });
+        }
+        if let Some(second) = self.second.as_ref() {
+            for (bi, bp) in second.blocks.iter().enumerate() {
+                for (side, tag) in [(&bp.left, "left"), (&bp.right, "right")] {
+                    frames.push(FrameSpec {
+                        role: format!("so.{bi}.{tag}"),
+                        codec: checkpoint::SIDE_STATE_CODEC.to_string(),
+                        len: 0,
+                        emit: Box::new(move |sink: &mut dyn FnMut(&[u8])| {
+                            let mut buf = Vec::new();
+                            side.serialize_into(&mut buf);
+                            sink(&buf);
+                        }),
+                    });
+                }
+            }
+        }
+        frames
+    }
+
+    /// Save parameters + full optimizer state + step metadata in the
+    /// streaming v1 format (see [`checkpoint`]): a checksummed JSON header
+    /// with a per-buffer manifest, then one frame per buffer — params as
+    /// f32 LE, first-order buffers and second-order sides as raw codec
+    /// bytes, persisted verbatim with no requantization, so loading
+    /// restores the exact optimization trajectory for both optimizer
+    /// families at any state bitwidth. The write is chunked (no full-state
+    /// staging buffer) and crash-atomic: `<path>.tmp` + fsync + rename.
+    /// (Stochastic-rounding buffers are the one caveat: the restore itself
+    /// is byte-exact, but post-resume encodes draw a fresh rounding
+    /// stream — see [`load_checkpoint`](Trainer::load_checkpoint).)
+    pub fn save_checkpoint(&self, path: &Path, step: usize) -> Result<()> {
+        let snap = self.first.export_state();
+        let meta = self.checkpoint_meta(step, snap.counters.clone());
+        let frames = self.checkpoint_frames(&snap);
+        checkpoint::save(path, &meta, &frames)
+    }
+
+    /// Like [`save_checkpoint`](Trainer::save_checkpoint), but incremental
+    /// against `parent` (an earlier v1 checkpoint): buffers whose codec
+    /// bytes are unchanged are recorded in the manifest but not rewritten —
+    /// readers resolve them through the parent chain. Restores from a delta
+    /// chain are bit-identical to restores from a monolithic save.
+    pub fn save_checkpoint_delta(&self, path: &Path, step: usize, parent: &Path) -> Result<()> {
+        let snap = self.first.export_state();
+        let meta = self.checkpoint_meta(step, snap.counters.clone());
+        let frames = self.checkpoint_frames(&snap);
+        checkpoint::save_delta(path, &meta, &frames, parent)
+    }
+
+    /// Load a checkpoint written by `save_checkpoint` (either the v1
+    /// streaming format or the legacy v0 blob, dispatched on the header's
+    /// `magic`/`version` keys): restores parameters, the first-order
+    /// optimizer state, the second-order preconditioner state (when both
+    /// the checkpoint and this run have one), and the resume position — a
+    /// subsequent `train` continues at step + 1. Returns the step.
+    ///
+    /// The restore is **all-or-nothing**: every frame is read and
+    /// validated (checksums, codec identity, structure) before any trainer
+    /// state is touched, so a corrupt or mismatched checkpoint leaves the
+    /// prior state fully intact. It is also bit-exact: codec payloads are
     /// adopted verbatim, so for deterministic codecs the resumed loss
     /// trajectory is identical to an uninterrupted run. Stochastic-rounding
     /// (`-sr`) buffers restore their bytes exactly too, but their in-memory
@@ -480,6 +528,134 @@ impl Trainer {
     /// replaying the uninterrupted run's — the resumed trajectory is
     /// equivalent in distribution, not bit-identical.
     pub fn load_checkpoint(&mut self, path: &Path) -> Result<usize> {
+        match checkpoint::probe_version(path)? {
+            None => self.load_checkpoint_v0(path),
+            Some(_) => self.load_checkpoint_v1(path),
+        }
+    }
+
+    /// v1 loader: per-frame positional reads, staged + validated fully
+    /// before the all-or-nothing apply.
+    fn load_checkpoint_v1(&mut self, path: &Path) -> Result<usize> {
+        let ckpt = CheckpointFile::open(path)?;
+        let h = &ckpt.header;
+        if h.model != self.model.name {
+            anyhow::bail!("checkpoint is for {}, trainer has {}", h.model, self.model.name);
+        }
+        if h.opt != self.first.name() {
+            anyhow::bail!(
+                "checkpoint optimizer state is for {}, trainer has {}",
+                h.opt,
+                self.first.name()
+            );
+        }
+        if h.param_count != self.model.param_count() {
+            anyhow::bail!(
+                "checkpoint has {} parameters, trainer has {}",
+                h.param_count,
+                self.model.param_count()
+            );
+        }
+        // stage 1: read + structurally validate everything; nothing below
+        // touches trainer state until every frame has been checked
+        let mut consumed: BTreeSet<String> = BTreeSet::new();
+        let mut new_params: Vec<Vec<f32>> = Vec::with_capacity(self.model.params.len());
+        for (i, p) in self.model.params.iter().enumerate() {
+            let role = format!("param.{i}");
+            let entry = match ckpt.frame(&role) {
+                Some(e) => e,
+                None => return Err(CheckpointError::MissingFrame { role }.into()),
+            };
+            if entry.codec != "fp32" || entry.len != p.len() {
+                return Err(CheckpointError::CorruptFrame {
+                    role: role.clone(),
+                    detail: format!(
+                        "expected fp32@{} (tensor shape), manifest records {}@{}",
+                        p.len(),
+                        entry.codec,
+                        entry.len
+                    ),
+                }
+                .into());
+            }
+            let bytes = ckpt.read_frame_bytes(&role)?;
+            new_params.push(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+            consumed.insert(role);
+        }
+        let mut buffers = Vec::new();
+        let mut i = 0usize;
+        while let Some(entry) = ckpt.frame(&format!("opt.{i}")) {
+            let role = format!("opt.{i}");
+            let len = entry.len;
+            let codec = entry.codec.clone();
+            let bytes = ckpt.read_frame_bytes(&role)?;
+            buffers.push((codec, EncodedVec { bytes, len }));
+            consumed.insert(role);
+            i += 1;
+        }
+        let snapshot = StateSnapshot { buffers, counters: h.opt_counters.clone() };
+        let so_count = h.manifest.iter().filter(|e| e.role.starts_with("so.")).count();
+        let mut sides: Vec<(SideState, SideState)> = Vec::new();
+        match self.second.as_ref() {
+            Some(second) if so_count > 0 => {
+                if so_count != second.blocks.len() * 2 {
+                    anyhow::bail!(
+                        "checkpoint has {so_count} second-order side frames, run expects {}",
+                        second.blocks.len() * 2
+                    );
+                }
+                for bi in 0..second.blocks.len() {
+                    let left = read_side_frame(&ckpt, bi, "left", &mut consumed)?;
+                    let right = read_side_frame(&ckpt, bi, "right", &mut consumed)?;
+                    sides.push((left, right));
+                }
+            }
+            None if so_count > 0 => eprintln!(
+                "load_checkpoint: checkpoint carries second-order state but this run \
+                 has no second-order optimizer; ignoring it"
+            ),
+            Some(_) => eprintln!(
+                "load_checkpoint: checkpoint has no second-order state; statistics \
+                 re-warm from initialization over the next T1/T2 cycles"
+            ),
+            None => {}
+        }
+        // stage 2: logical validation, still pure
+        if let Some(second) = self.second.as_ref() {
+            if !sides.is_empty() {
+                second.validate_sides(&sides).context("restoring second-order state")?;
+            }
+        }
+        // stage 3: checksum-verify every frame this run does NOT consume
+        // (e.g. ignored second-order state), so corruption anywhere in the
+        // file fails the load — zero silent restores
+        for e in &h.manifest {
+            if !consumed.contains(&e.role) {
+                ckpt.verify_frame(&e.role)?;
+            }
+        }
+        // stage 4: apply. `import_state` validates everything before
+        // mutating, and the sides were pre-validated above, so the only
+        // failure mode past this point is shard re-sync IO.
+        self.first.import_state(snapshot)?;
+        if !sides.is_empty() {
+            if let Some(second) = self.second.as_mut() {
+                second.apply_sides(sides).context("restoring second-order state")?;
+            }
+        }
+        self.model.params = new_params;
+        self.resume_step = h.step;
+        Ok(h.step)
+    }
+
+    /// Legacy v0 loader (pre-manifest monolithic blob): same staged
+    /// all-or-nothing discipline — parse + validate everything, then apply.
+    fn load_checkpoint_v0(&mut self, path: &Path) -> Result<usize> {
         use std::io::Read;
         let mut f = std::fs::File::open(path)?;
         let mut all = Vec::new();
@@ -508,11 +684,10 @@ impl Trainer {
             let raw = take(&all, &mut off, p.len() * 4)?;
             new_params.push(
                 raw.chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
                     .collect::<Vec<f32>>(),
             );
         }
-        self.model.params = new_params;
 
         let opt = header.get("opt").and_then(|j| j.as_str()).unwrap_or("");
         if opt != self.first.name() {
@@ -547,18 +722,20 @@ impl Trainer {
             let bytes = take(&all, &mut off, nbytes)?.to_vec();
             buffers.push((codec, EncodedVec { bytes, len }));
         }
-        self.first.import_state(StateSnapshot { buffers, counters })?;
 
         let so_bytes = header
             .get("second_order_bytes")
             .and_then(|j| j.as_usize())
             .unwrap_or(0);
+        let mut sides = None;
         if so_bytes > 0 {
             let blob = take(&all, &mut off, so_bytes)?;
-            match self.second.as_mut() {
-                Some(second) => second
-                    .restore_state(blob)
-                    .context("restoring second-order state")?,
+            match self.second.as_ref() {
+                Some(second) => {
+                    let s = second.parse_state(blob).context("restoring second-order state")?;
+                    second.validate_sides(&s).context("restoring second-order state")?;
+                    sides = Some(s);
+                }
                 None => eprintln!(
                     "load_checkpoint: checkpoint carries second-order state but this run \
                      has no second-order optimizer; ignoring it"
@@ -570,10 +747,45 @@ impl Trainer {
                  re-warm from initialization over the next T1/T2 cycles"
             );
         }
+        // all-or-nothing apply: nothing above mutated trainer state, and
+        // `import_state` validates its whole snapshot before mutating
+        self.first.import_state(StateSnapshot { buffers, counters })?;
+        if let Some(s) = sides {
+            if let Some(second) = self.second.as_mut() {
+                second.apply_sides(s).context("restoring second-order state")?;
+            }
+        }
+        self.model.params = new_params;
         let step = header.get("step").and_then(|j| j.as_usize()).unwrap_or(0);
         self.resume_step = step;
         Ok(step)
     }
+}
+
+/// Read + deserialize one `so.{bi}.{tag}` side frame, marking it consumed.
+fn read_side_frame(
+    ckpt: &CheckpointFile,
+    bi: usize,
+    tag: &str,
+    consumed: &mut BTreeSet<String>,
+) -> Result<SideState> {
+    let role = format!("so.{bi}.{tag}");
+    let bytes = ckpt.read_frame_bytes(&role)?;
+    let (s, used) = SideState::deserialize(&bytes).map_err(|err| {
+        anyhow::Error::from(CheckpointError::CorruptFrame {
+            role: role.clone(),
+            detail: format!("{err:#}"),
+        })
+    })?;
+    if used != bytes.len() {
+        return Err(CheckpointError::CorruptFrame {
+            role,
+            detail: format!("{} trailing bytes after the side state", bytes.len() - used),
+        }
+        .into());
+    }
+    consumed.insert(role);
+    Ok(s)
 }
 
 /// Convenience: NRE between two host matrices (re-export for shadow users).

@@ -30,6 +30,11 @@
 //!                round-robin across N shard workers, each with its own
 //!                Backend instance; requests/replies travel as codec-encoded
 //!                bytes and results are bit-identical to --shards 1)
+//!                [--checkpoint-delta] [--checkpoint-chunk-bytes N]
+//!                (streaming checkpoints: the final save is written frame by
+//!                frame in N-byte chunks; with --checkpoint-delta and a v1
+//!                --resume parent, unchanged frames are referenced from the
+//!                parent instead of rewritten)
 //!   quant-error  [--n 1200] [--bits 4] [--block 64]
 //!                (Table 1/5/6/7, Figures 2/3/5/6 — see benches for the
 //!                full sweeps)
@@ -55,6 +60,7 @@ const BOOL_FLAGS: &[&str] = &[
     "stagger-invroots",
     "pipeline",
     "pipeline-adaptive",
+    "checkpoint-delta",
     "help",
     "quiet",
 ];
@@ -175,6 +181,13 @@ pub fn apply_cli_overrides(cfg: &mut RunConfig, args: &Args) -> Result<()> {
     if let Some(n) = args.get("shards") {
         cfg.second.shards = n.parse::<usize>().context("--shards")?.max(1);
     }
+    if args.flag("checkpoint-delta") {
+        cfg.checkpoint_delta = true;
+    }
+    if let Some(b) = args.get("checkpoint-chunk-bytes") {
+        cfg.checkpoint_chunk_bytes =
+            b.parse::<usize>().context("--checkpoint-chunk-bytes")?;
+    }
     if let Some(d) = args.get("artifact-dir") {
         cfg.artifact_dir = d.to_string();
     }
@@ -223,9 +236,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let out_dir = PathBuf::from(args.get_or("out", &format!("runs/{}", cfg.name)));
     let mut trainer = Trainer::new(rt, cfg.clone())?;
+    let mut resume_path: Option<PathBuf> = None;
     if let Some(ckpt) = args.get("resume") {
         let step = trainer.load_checkpoint(Path::new(ckpt))?;
         println!("resumed from {ckpt} at step {step} (continuing to {})", cfg.steps);
+        resume_path = Some(PathBuf::from(ckpt));
     }
     let mem0 = trainer.memory_report();
     println!(
@@ -236,7 +251,22 @@ fn cmd_train(args: &Args) -> Result<()> {
         mem0.total_mb()
     );
     let res = trainer.train(rt, Some(&out_dir.join("metrics.csv")))?;
-    trainer.save_checkpoint(&out_dir.join("checkpoint.bin"), cfg.steps)?;
+    let ckpt_path = out_dir.join("checkpoint.bin");
+    // --checkpoint-delta: write a delta against the checkpoint we resumed
+    // from, provided it is a v1 streaming file (v0 blobs have no manifest to
+    // delta against). Falls back to a monolithic save otherwise.
+    let delta_parent = resume_path.filter(|p| {
+        cfg.checkpoint_delta
+            && !p.as_path().eq(ckpt_path.as_path())
+            && matches!(
+                shampoo4::coordinator::checkpoint::probe_version(p),
+                Ok(Some(_))
+            )
+    });
+    match delta_parent {
+        Some(parent) => trainer.save_checkpoint_delta(&ckpt_path, cfg.steps, &parent)?,
+        None => trainer.save_checkpoint(&ckpt_path, cfg.steps)?,
+    }
     for (step, loss) in res.losses.iter().rev().take(5).rev() {
         println!("step {step:>6} loss {loss:.4}");
     }

@@ -70,6 +70,124 @@ pub fn read_frame(bytes: &[u8], off: &mut usize) -> anyhow::Result<EncodedVec> {
     Ok(EncodedVec { bytes: payload, len })
 }
 
+// ---------------------------------------------------------------------------
+// CRC-32 + checked frames (checkpoint integrity substrate)
+// ---------------------------------------------------------------------------
+
+/// CRC-32 (IEEE 802.3, reflected polynomial `0xEDB88320`) lookup table,
+/// built at compile time — no dependencies, bit-stable across platforms.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Streaming CRC-32 (IEEE) hasher. Checkpoint frames record one checksum
+/// per buffer so a flipped bit is a descriptive error, never a silent
+/// zero-decode; the streaming form lets the writer fold chunks in as they
+/// are produced (no full-frame staging buffer).
+#[derive(Debug, Clone)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    /// Fresh hasher (empty input hashes to 0).
+    pub fn new() -> Self {
+        Self { state: 0xFFFF_FFFF }
+    }
+
+    /// Fold `bytes` into the running checksum.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut c = self.state;
+        for &b in bytes {
+            c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+        self.state = c;
+    }
+
+    /// The checksum of everything folded in so far.
+    pub fn finish(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot CRC-32 (IEEE) of `bytes` — `crc32(b"123456789") == 0xCBF43926`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut h = Crc32::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// [`put_frame`] plus a trailing CRC-32 of the payload bytes (u32 LE):
+/// `len | nbytes | bytes | crc32`. The checked form is for frames that
+/// cross a trust boundary (files, wire hops that may be replayed later);
+/// in-process shard traffic keeps the unchecked framing.
+pub fn put_frame_checked(out: &mut Vec<u8>, e: &EncodedVec) {
+    put_frame(out, e);
+    out.extend(crc32(&e.bytes).to_le_bytes());
+}
+
+/// Read one [`put_frame_checked`] frame, verifying the trailing checksum.
+/// Truncation and checksum mismatches are descriptive errors naming the
+/// byte offset.
+pub fn read_frame_checked(bytes: &[u8], off: &mut usize) -> anyhow::Result<EncodedVec> {
+    let frame_at = *off;
+    let e = read_frame(bytes, off)?;
+    if bytes.len() < *off + 4 {
+        anyhow::bail!("wire frame checksum truncated at byte {}", *off);
+    }
+    let want = u32::from_le_bytes(bytes[*off..*off + 4].try_into().unwrap());
+    *off += 4;
+    let found = crc32(&e.bytes);
+    if found != want {
+        anyhow::bail!(
+            "wire frame at byte {frame_at} failed its checksum: \
+             recorded {want:#010x}, computed {found:#010x}"
+        );
+    }
+    Ok(e)
+}
+
+/// The byte ranges of a *flat* encoded payload that cover a requested
+/// element range — the partial-decode contract behind checkpoint slice
+/// serving. The `ranges`, concatenated in order, form a standalone payload
+/// for `elem_count` elements starting at `elem_start` (block codecs round
+/// the request out to whole blocks), decodable with the stock
+/// [`StateCodec::decode`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceRanges {
+    /// Byte ranges into the payload, in concatenation order.
+    pub ranges: Vec<std::ops::Range<usize>>,
+    /// First element the concatenated ranges decode (≤ requested start).
+    pub elem_start: usize,
+    /// Elements the concatenated ranges decode (≥ requested count).
+    pub elem_count: usize,
+}
+
+impl SliceRanges {
+    /// Total bytes across all ranges.
+    pub fn total_bytes(&self) -> usize {
+        self.ranges.iter().map(|r| r.len()).sum()
+    }
+}
+
 /// Pluggable storage codec for optimizer state vectors.
 ///
 /// Encode → decode round-trips are the storage algorithm itself: exact for
@@ -175,6 +293,36 @@ pub trait StateCodec: Send + Sync {
         self.decode(e)
     }
 
+    /// Byte ranges of a flat `len`-element payload that cover elements
+    /// `[start, start + count)` — see [`SliceRanges`]. The default is the
+    /// whole payload (always correct); exact codecs narrow to the precise
+    /// byte span and block codecs to the covering blocks. Only valid for
+    /// *flat* payloads ([`StateCodec::encode`] layouts) — column-blocked
+    /// [`StateCodec::encode_matrix`] payloads interleave blocks per column
+    /// and are not sliceable.
+    fn slice_ranges(&self, len: usize, start: usize, count: usize) -> SliceRanges {
+        debug_assert!(start + count <= len);
+        let _ = (start, count);
+        SliceRanges { ranges: vec![0..self.state_bytes(len)], elem_start: 0, elem_count: len }
+    }
+
+    /// Decode elements `[start, start + count)` of a flat payload via
+    /// [`StateCodec::slice_ranges`] — bit-identical to slicing a full
+    /// [`StateCodec::decode`], touching only the covering bytes.
+    fn decode_range(&self, e: &EncodedVec, start: usize, count: usize) -> Vec<f32> {
+        if count == 0 {
+            return Vec::new();
+        }
+        let sr = self.slice_ranges(e.len, start, count);
+        let mut bytes = Vec::with_capacity(sr.total_bytes());
+        for r in &sr.ranges {
+            bytes.extend_from_slice(&e.bytes[r.clone()]);
+        }
+        let sub = EncodedVec { bytes, len: sr.elem_count };
+        let local = start - sr.elem_start;
+        self.decode(&sub)[local..local + count].to_vec()
+    }
+
     /// Split an encoded buffer into the artifact boundary format: codes
     /// one-per-byte, per-block scales, and the block size. Only meaningful
     /// for codebook codecs.
@@ -224,6 +372,15 @@ impl StateCodec for Fp32 {
 
     fn resolution(&self, _absmax: f32) -> f32 {
         0.0
+    }
+
+    fn slice_ranges(&self, len: usize, start: usize, count: usize) -> SliceRanges {
+        debug_assert!(start + count <= len);
+        SliceRanges {
+            ranges: vec![start * 4..(start + count) * 4],
+            elem_start: start,
+            elem_count: count,
+        }
     }
 }
 
@@ -283,6 +440,15 @@ impl StateCodec for Bf16 {
     fn resolution(&self, absmax: f32) -> f32 {
         // 7 mantissa bits: relative error ≤ 2^-8 after round-to-nearest
         absmax * (1.0 / 256.0) + f32::MIN_POSITIVE
+    }
+
+    fn slice_ranges(&self, len: usize, start: usize, count: usize) -> SliceRanges {
+        debug_assert!(start + count <= len);
+        SliceRanges {
+            ranges: vec![start * 2..(start + count) * 2],
+            elem_start: start,
+            elem_count: count,
+        }
     }
 }
 
@@ -453,6 +619,37 @@ impl StateCodec for BlockQuant {
         self.rcb.as_deref()
     }
 
+    /// Covering blocks: code bytes for the block-aligned element span, plus
+    /// their per-block scales. Sound because block boundaries land on byte
+    /// boundaries whenever `block × bits` is a whole number of bytes — true
+    /// for the stock block (64) at every supported bitwidth. Non-aligned
+    /// custom blocks fall back to the whole payload.
+    fn slice_ranges(&self, len: usize, start: usize, count: usize) -> SliceRanges {
+        debug_assert!(start + count <= len);
+        if (self.block * self.bits as usize) % 8 != 0 || count == 0 {
+            return SliceRanges {
+                ranges: vec![0..self.state_bytes(len)],
+                elem_start: 0,
+                elem_count: len,
+            };
+        }
+        let bytes_per_block = self.block * self.bits as usize / 8;
+        let b0 = start / self.block;
+        let b1 = (start + count).div_ceil(self.block).min(self.nblocks(len));
+        let elem_start = b0 * self.block;
+        let elem_count = (b1 * self.block).min(len) - elem_start;
+        let split = packed_len(len, self.bits);
+        let code_start = b0 * bytes_per_block;
+        SliceRanges {
+            ranges: vec![
+                code_start..code_start + packed_len(elem_count, self.bits),
+                split + b0 * 4..split + b1 * 4,
+            ],
+            elem_start,
+            elem_count,
+        }
+    }
+
     fn matrix_state_bytes(&self, n: usize) -> usize {
         super::blockwise::matrix_state_bytes(n, self.bits, self.block)
     }
@@ -590,6 +787,10 @@ impl StateCodec for StochasticRound {
 
     fn validate_payload(&self, e: &EncodedVec) -> Result<()> {
         self.inner.validate_payload(e)
+    }
+
+    fn slice_ranges(&self, len: usize, start: usize, count: usize) -> SliceRanges {
+        self.inner.slice_ranges(len, start, count)
     }
 
     fn resolution(&self, absmax: f32) -> f32 {
@@ -895,6 +1096,100 @@ mod tests {
         assert!(BlockQuant::q8(Mapping::Dt).runtime_codebook().is_none());
         assert!(Fp32.runtime_codebook().is_none());
         assert!(Bf16.runtime_codebook().is_none());
+    }
+
+    #[test]
+    fn crc32_known_vectors_and_streaming() {
+        // the canonical IEEE check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        // streaming over any chunking matches the one-shot hash
+        let data: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        let want = crc32(&data);
+        for split in [0usize, 1, 7, 500, 999, 1000] {
+            let mut h = Crc32::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finish(), want, "split {split}");
+        }
+    }
+
+    #[test]
+    fn checked_frames_round_trip_and_reject_corruption() {
+        let q4 = BlockQuant::q4_linear2();
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..130).map(|_| rng.normal_f32()).collect();
+        let e = q4.encode(&x);
+        let mut wire = Vec::new();
+        put_frame_checked(&mut wire, &e);
+        let mut off = 0;
+        let back = read_frame_checked(&wire, &mut off).unwrap();
+        assert_eq!(off, wire.len());
+        assert_eq!(back, e);
+        // flip any payload byte → checksum error naming the offset
+        for i in 8..wire.len() - 4 {
+            let mut bad = wire.clone();
+            bad[i] ^= 0x40;
+            let mut off = 0;
+            let err = read_frame_checked(&bad, &mut off).unwrap_err().to_string();
+            assert!(err.contains("checksum"), "byte {i}: {err}");
+        }
+        // truncating the checksum itself is an error too
+        let mut off = 0;
+        assert!(read_frame_checked(&wire[..wire.len() - 2], &mut off).is_err());
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
+    fn decode_range_matches_full_decode() {
+        let mut rng = Rng::new(6);
+        let mut all: Vec<Arc<dyn StateCodec>> = codecs();
+        all.push(Arc::new(BlockQuant::new(Mapping::Dt, 2)));
+        all.push(Arc::new(StochasticRound::new(Mapping::Dt, 4, 9)));
+        for codec in all {
+            for len in [1usize, 5, 63, 64, 65, 130, 257] {
+                let x: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+                let e = codec.encode(&x);
+                let full = codec.decode(&e);
+                for (start, count) in
+                    [(0, len), (0, 1), (len - 1, 1), (len / 3, len - len / 3), (len / 2, 0)]
+                {
+                    let got = codec.decode_range(&e, start, count);
+                    let want = &full[start..start + count];
+                    assert_eq!(
+                        got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "codec {} len {len} start {start} count {count}",
+                        codec.name()
+                    );
+                    if count > 0 {
+                        let sr = codec.slice_ranges(len, start, count);
+                        assert!(sr.total_bytes() <= e.bytes.len());
+                        assert!(sr.elem_start <= start);
+                        assert!(sr.elem_start + sr.elem_count >= start + count);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_ranges_narrow_to_covering_blocks() {
+        // one mid-payload element of a q4 block-64 buffer needs one block of
+        // code bytes (32) + one scale (4), not the whole 2.5 KB payload
+        let q4 = BlockQuant::q4_linear2();
+        let sr = q4.slice_ranges(4096, 100, 1);
+        assert_eq!(sr.elem_start, 64);
+        assert_eq!(sr.elem_count, 64);
+        assert_eq!(sr.total_bytes(), 32 + 4);
+        // exact codecs narrow to the exact span
+        let sr = Fp32.slice_ranges(1000, 10, 2);
+        assert_eq!(sr.total_bytes(), 8);
+        // non-byte-aligned custom blocks fall back to the whole payload
+        let odd = BlockQuant::with_block(Mapping::Dt, 3, 5);
+        let sr = odd.slice_ranges(50, 10, 2);
+        assert_eq!(sr.elem_count, 50);
+        assert_eq!(sr.total_bytes(), odd.state_bytes(50));
     }
 
     #[test]

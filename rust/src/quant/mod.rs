@@ -28,8 +28,9 @@ pub use blockwise::{
 pub use blockwise::{dequantize_simd, quantize_simd, try_quantize_simd};
 pub use codebook::{codebook, runtime_codebook, Boundaries, Mapping};
 pub use codec::{
-    codec_by_name, codec_for, fp32, put_frame, read_frame, Bf16, BlockQuant, EncodedVec,
-    Fp32, StateBuf, StateCodec, StochasticRound, CODEC_REGISTRY_HELP,
+    codec_by_name, codec_for, crc32, fp32, put_frame, put_frame_checked, read_frame,
+    read_frame_checked, Bf16, BlockQuant, Crc32, EncodedVec, Fp32, SliceRanges, StateBuf,
+    StateCodec, StochasticRound, CODEC_REGISTRY_HELP,
 };
 pub use pack::{
     pack_bits, pack_bits_chunked, packed_len, unpack_bits, unpack_bits_into,

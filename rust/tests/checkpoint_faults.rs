@@ -1,0 +1,257 @@
+//! Fault-injection harness for the v1 streaming checkpoint format.
+//!
+//! Saves a real training checkpoint, then attacks it byte by byte:
+//! truncation at every frame boundary (and one byte either side), a
+//! bit-flip inside every payload frame (first and last byte), and
+//! bit-flips in both header lines. Every mutation must be rejected with a
+//! typed error naming the corrupt buffer / offset / header — never a
+//! silent zero-decode — and a failed load must leave the prior trainer
+//! state (parameters, first-order buffers + counters, second-order sides)
+//! bit-for-bit untouched.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::fs;
+use std::path::PathBuf;
+
+use shampoo4::config::{FirstOrderKind, RunConfig, SecondOrderKind};
+use shampoo4::coordinator::{CheckpointFile, Trainer};
+use shampoo4::runtime::HostBackend;
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("shampoo4_faults_{name}"));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn cfg() -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = "it_faults".into();
+    cfg.model = "mlp_base".into();
+    cfg.steps = 10;
+    cfg.first.kind = FirstOrderKind::Sgdm;
+    cfg.first.lr = 0.05;
+    cfg.second.kind = SecondOrderKind::Shampoo;
+    cfg.second.update_precond_every = 4;
+    cfg.second.update_invroot_every = 8;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 0;
+    cfg.log_every = 5;
+    cfg
+}
+
+/// Bit-exact fingerprint of everything a checkpoint load may touch.
+type Fingerprint = (Vec<Vec<u32>>, Vec<(String, Vec<u8>, usize)>, Vec<f64>, Vec<Vec<u8>>, usize);
+
+fn fingerprint(t: &Trainer) -> Fingerprint {
+    let params: Vec<Vec<u32>> =
+        t.model.params.iter().map(|p| p.iter().map(|x| x.to_bits()).collect()).collect();
+    let snap = t.first.export_state();
+    let buffers: Vec<(String, Vec<u8>, usize)> =
+        snap.buffers.iter().map(|(c, e)| (c.clone(), e.bytes.clone(), e.len)).collect();
+    let sides: Vec<Vec<u8>> = t
+        .second
+        .as_ref()
+        .map(|s| {
+            s.blocks
+                .iter()
+                .flat_map(|b| [b.left.serialize(), b.right.serialize()])
+                .collect()
+        })
+        .unwrap_or_default();
+    (params, buffers, snap.counters.clone(), sides, t.model.param_count())
+}
+
+/// Overwrite the checkpoint with `mutated`, demand that loading it fails
+/// with a message naming one of `must_name`, and that the failed load left
+/// the victim trainer's state untouched.
+fn reject(
+    ckpt: &std::path::Path,
+    victim: &mut Trainer,
+    before: &Fingerprint,
+    label: &str,
+    mutated: &[u8],
+    must_name: &[&str],
+) {
+    fs::write(ckpt, mutated).unwrap();
+    let err = match victim.load_checkpoint(ckpt) {
+        Ok(step) => panic!("{label}: corrupt checkpoint silently restored (step {step})"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(
+        must_name.iter().any(|n| msg.contains(&n.to_lowercase())),
+        "{label}: error does not name the fault (wanted one of {must_name:?}): {msg}"
+    );
+    assert_eq!(
+        &fingerprint(victim),
+        before,
+        "{label}: failed load mutated trainer state"
+    );
+}
+
+#[test]
+fn every_injected_fault_is_rejected_and_leaves_state_untouched() {
+    let rt = HostBackend::new();
+    let dir = tdir("matrix");
+    let ckpt = dir.join("ck.bin");
+
+    let mut t = Trainer::new(&rt, cfg()).unwrap();
+    t.train(&rt, None).unwrap();
+    t.save_checkpoint(&ckpt, 10).unwrap();
+
+    // map the file: header end + every frame's absolute [start, end)
+    let view = CheckpointFile::open(&ckpt).unwrap();
+    let payload = view.payload_offset();
+    let manifest: Vec<(String, u64, u64)> = view
+        .header
+        .manifest
+        .iter()
+        .map(|e| (e.role.clone(), e.offset, e.bytes))
+        .collect();
+    assert!(
+        manifest.iter().any(|(r, _, _)| r.starts_with("so.")),
+        "run must produce second-order frames for the harness to attack"
+    );
+    drop(view);
+    let clean = fs::read(&ckpt).unwrap();
+    let full = clean.len() as u64;
+
+    // the victim holds freshly initialized state that every failed load
+    // must leave exactly alone
+    let mut victim = Trainer::new(&rt, cfg()).unwrap();
+    let before = fingerprint(&victim);
+
+    // 1. truncation at every frame boundary and one byte either side
+    // (the only valid length is the full file)
+    let mut boundaries: Vec<u64> = manifest.iter().map(|(_, off, _)| payload + off).collect();
+    boundaries.push(full);
+    for b in boundaries {
+        for cut in [b.saturating_sub(1), b, b + 1] {
+            if cut >= full {
+                continue;
+            }
+            reject(
+                &ckpt,
+                &mut victim,
+                &before,
+                &format!("truncate@{cut}"),
+                &clean[..cut as usize],
+                &["truncat", "header", "checksum"],
+            );
+        }
+    }
+
+    // 2. one flipped byte inside every frame (first and last byte) must be
+    // rejected with an error naming that exact buffer
+    for (role, off, bytes) in &manifest {
+        assert!(*bytes > 0, "frame {role} is empty");
+        for pos in [payload + off, payload + off + bytes - 1] {
+            let mut m = clean.clone();
+            m[pos as usize] ^= 0x01;
+            reject(
+                &ckpt,
+                &mut victim,
+                &before,
+                &format!("bitflip {role}@{pos}"),
+                &m,
+                &[role],
+            );
+        }
+    }
+
+    // 3. a flipped byte in either header line is as fatal as payload damage
+    let nl1 = clean.iter().position(|&b| b == b'\n').unwrap();
+    for pos in [2usize, nl1 + 2] {
+        let mut m = clean.clone();
+        m[pos] ^= 0x01;
+        reject(
+            &ckpt,
+            &mut victim,
+            &before,
+            &format!("header bitflip@{pos}"),
+            &m,
+            &["header"],
+        );
+    }
+
+    // 4. trailing garbage past the manifest is rejected too
+    let mut longer = clean.clone();
+    longer.push(0xAA);
+    reject(&ckpt, &mut victim, &before, "append 1 byte", &longer, &["trailing"]);
+
+    // 5. after all that abuse, the pristine bytes still restore
+    fs::write(&ckpt, &clean).unwrap();
+    assert_eq!(victim.load_checkpoint(&ckpt).unwrap(), 10);
+    assert_eq!(
+        fingerprint(&victim).0,
+        fingerprint(&t).0,
+        "clean restore must reproduce the saved parameters"
+    );
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn delta_chain_faults_name_the_parent() {
+    // corrupting a *parent* frame that a delta child delegates to must fail
+    // the child's load with an error naming the chain / the frame
+    let rt = HostBackend::new();
+    let dir = tdir("delta");
+    let base = dir.join("base.bin");
+    let child = dir.join("child.bin");
+
+    let mut c8 = cfg();
+    c8.steps = 8;
+    let mut t8 = Trainer::new(&rt, c8).unwrap();
+    t8.train(&rt, None).unwrap();
+    t8.save_checkpoint(&base, 8).unwrap();
+
+    let mut c10 = cfg();
+    c10.steps = 10;
+    let mut t10 = Trainer::new(&rt, c10).unwrap();
+    assert_eq!(t10.load_checkpoint(&base).unwrap(), 8);
+    t10.train(&rt, None).unwrap();
+    t10.save_checkpoint_delta(&child, 10, &base).unwrap();
+
+    // no precond/invroot refresh ran between step 8 and 10, so the side
+    // frames must delegate to the parent
+    let view = CheckpointFile::open(&child).unwrap();
+    let delegated: Vec<String> = view
+        .header
+        .manifest
+        .iter()
+        .filter(|e| e.in_parent)
+        .map(|e| e.role.clone())
+        .collect();
+    assert!(
+        delegated.iter().any(|r| r.starts_with("so.")),
+        "expected second-order frames to be delta-shared, manifest: {:?}",
+        view.header.manifest.iter().map(|e| (&e.role, e.in_parent)).collect::<Vec<_>>()
+    );
+    let (ppath, poff, _) = view.frame_location(&delegated[0]).unwrap();
+    assert_eq!(ppath, base, "delegated frame must resolve into the parent file");
+    drop(view);
+
+    // flip one byte of the delegated frame inside the PARENT file
+    let mut pbytes = fs::read(&base).unwrap();
+    pbytes[poff as usize] ^= 0x01;
+    fs::write(&base, &pbytes).unwrap();
+
+    let mut victim = Trainer::new(&rt, cfg()).unwrap();
+    let before = fingerprint(&victim);
+    let err = victim.load_checkpoint(&child).unwrap_err();
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(
+        msg.contains(&delegated[0].to_lowercase()) || msg.contains("checksum"),
+        "parent corruption not named: {msg}"
+    );
+    assert_eq!(fingerprint(&victim), before, "failed chain load mutated trainer state");
+
+    // deleting the parent breaks the chain with a named error
+    fs::remove_file(&base).unwrap();
+    let err = victim.load_checkpoint(&child).unwrap_err();
+    let msg = format!("{err:#}").to_lowercase();
+    assert!(msg.contains("parent chain"), "missing parent not named: {msg}");
+    fs::remove_dir_all(&dir).ok();
+}

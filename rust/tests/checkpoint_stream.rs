@@ -1,0 +1,269 @@
+//! Kill-and-resume property tests for the v1 streaming checkpoint format,
+//! plus the concurrent StateServer stress test.
+//!
+//! The matrix: save at step k under shampoo / caspr / kfac crossed with
+//! the pipelined engine, the sharded engine (N = 2), and a mixed
+//! per-buffer `--quant-policy` — then resume through a monolithic save AND
+//! through a delta chain, train m more steps, and demand bit-identical
+//! parameters to the uninterrupted run. Delta restores must equal
+//! monolithic restores exactly; a depth-2 chain must resolve delegated
+//! frames all the way to the root file.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use shampoo4::config::{FirstOrderKind, RunConfig, SecondOrderKind};
+use shampoo4::coordinator::{CheckpointFile, StateServer, Trainer};
+use shampoo4::runtime::HostBackend;
+use shampoo4::util::rng::Rng;
+
+fn tdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("shampoo4_stream_{name}"));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn base_cfg(name: &str, kind: SecondOrderKind, steps: usize) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.name = name.to_string();
+    cfg.model = "mlp_base".into();
+    cfg.steps = steps;
+    cfg.first.kind = FirstOrderKind::Sgdm;
+    cfg.first.lr = 0.05;
+    cfg.second.kind = kind;
+    cfg.second.update_precond_every = 4;
+    cfg.second.update_invroot_every = 8;
+    cfg.schedule = shampoo4::config::Schedule::Constant;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 0;
+    cfg.log_every = 1;
+    cfg
+}
+
+fn bits(params: &[Vec<f32>]) -> Vec<Vec<u32>> {
+    params.iter().map(|p| p.iter().map(|x| x.to_bits()).collect()).collect()
+}
+
+/// The kill-and-resume property: train straight to k+m; separately train to
+/// k, checkpoint (monolithic AND as a delta chain: a parent at step 8 plus
+/// a delta at k = 10), resume each, train m more — every arm must land on
+/// bit-identical parameters.
+fn check_resume(label: &str, cfg: RunConfig) {
+    let rt = HostBackend::new();
+    let dir = tdir(label);
+    let mono = dir.join("mono.bin");
+    let parent = dir.join("parent.bin");
+    let delta = dir.join("delta.bin");
+
+    let mut straight = Trainer::new(&rt, cfg.clone()).unwrap();
+    straight.train(&rt, None).unwrap();
+
+    // monolithic save at k = 10
+    let mut c10 = cfg.clone();
+    c10.steps = 10;
+    let mut half = Trainer::new(&rt, c10.clone()).unwrap();
+    half.train(&rt, None).unwrap();
+    half.save_checkpoint(&mono, 10).unwrap();
+
+    // delta chain: parent at step 8, delta at k = 10 (no PU/PIRU refresh
+    // falls in (8, 10], so the second-order side frames must be delegated,
+    // not rewritten)
+    let mut c8 = cfg.clone();
+    c8.steps = 8;
+    let mut t8 = Trainer::new(&rt, c8).unwrap();
+    t8.train(&rt, None).unwrap();
+    t8.save_checkpoint(&parent, 8).unwrap();
+    let mut t10 = Trainer::new(&rt, c10).unwrap();
+    assert_eq!(t10.load_checkpoint(&parent).unwrap(), 8);
+    t10.train(&rt, None).unwrap();
+    t10.save_checkpoint_delta(&delta, 10, &parent).unwrap();
+
+    let view = CheckpointFile::open(&delta).unwrap();
+    assert!(
+        view.header.manifest.iter().any(|e| e.in_parent && e.role.starts_with("so.")),
+        "{label}: delta did not delegate any second-order frame: {:?}",
+        view.header.manifest.iter().map(|e| (&e.role, e.in_parent)).collect::<Vec<_>>()
+    );
+    drop(view);
+
+    // resume via the monolithic file
+    let mut rm = Trainer::new(&rt, cfg.clone()).unwrap();
+    assert_eq!(rm.load_checkpoint(&mono).unwrap(), 10);
+    assert_eq!(bits(&rm.model.params), bits(&half.model.params), "{label}: mono restore");
+
+    // resume via the delta chain: the restored state must equal the
+    // monolithic restore bit for bit
+    let mut rd = Trainer::new(&rt, cfg.clone()).unwrap();
+    assert_eq!(rd.load_checkpoint(&delta).unwrap(), 10);
+    assert_eq!(
+        bits(&rd.model.params),
+        bits(&rm.model.params),
+        "{label}: delta restore differs from monolithic restore"
+    );
+
+    // train m = 10 more steps from each; both must rejoin the straight run
+    let r = rm.train(&rt, None).unwrap();
+    assert_eq!(r.timings.steps, 10, "{label}: mono resume must run only the back half");
+    let r = rd.train(&rt, None).unwrap();
+    assert_eq!(r.timings.steps, 10, "{label}: delta resume must run only the back half");
+    assert_eq!(
+        bits(&rm.model.params),
+        bits(&straight.model.params),
+        "{label}: monolithic resume diverged from the straight run"
+    );
+    assert_eq!(
+        bits(&rd.model.params),
+        bits(&straight.model.params),
+        "{label}: delta-chain resume diverged from the straight run"
+    );
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shampoo_pipelined_resumes_bit_identically_via_mono_and_delta() {
+    let mut cfg = base_cfg("st_shampoo_pipe", SecondOrderKind::Shampoo, 20);
+    cfg.second.pipeline = true;
+    cfg.second.parallelism = 2;
+    check_resume("shampoo+pipeline", cfg);
+}
+
+#[test]
+fn caspr_sharded_resumes_bit_identically_via_mono_and_delta() {
+    let mut cfg = base_cfg("st_caspr_sh2", SecondOrderKind::Caspr, 20);
+    cfg.second.shards = 2;
+    check_resume("caspr+shards2", cfg);
+}
+
+#[test]
+fn kfac_mixed_policy_resumes_bit_identically_via_mono_and_delta() {
+    use shampoo4::quant::{BufferRole, CodecSpec, Mapping};
+    let mut cfg = base_cfg("st_kfac_policy", SecondOrderKind::KFac, 20);
+    cfg.first.kind = FirstOrderKind::AdamW;
+    cfg.first.lr = 1e-3;
+    cfg.quant_policy = vec![
+        (BufferRole::Momentum, CodecSpec::parse("q4-dt", Mapping::Dt).unwrap()),
+        (BufferRole::SecondMoment, CodecSpec::parse("q8-dt", Mapping::Dt).unwrap()),
+    ];
+    check_resume("kfac+policy", cfg);
+}
+
+#[test]
+fn depth_two_delta_chain_resolves_to_the_root() {
+    let rt = HostBackend::new();
+    let dir = tdir("chain2");
+    let root = dir.join("root.bin");
+    let child = dir.join("child.bin");
+    let grand = dir.join("grand.bin");
+
+    let mut c8 = base_cfg("st_chain2", SecondOrderKind::Shampoo, 8);
+    let mut t8 = Trainer::new(&rt, c8.clone()).unwrap();
+    t8.train(&rt, None).unwrap();
+    t8.save_checkpoint(&root, 8).unwrap();
+
+    c8.steps = 10;
+    let mut t10 = Trainer::new(&rt, c8.clone()).unwrap();
+    assert_eq!(t10.load_checkpoint(&root).unwrap(), 8);
+    t10.train(&rt, None).unwrap();
+    t10.save_checkpoint_delta(&child, 10, &root).unwrap();
+
+    c8.steps = 11;
+    let mut t11 = Trainer::new(&rt, c8.clone()).unwrap();
+    assert_eq!(t11.load_checkpoint(&child).unwrap(), 10);
+    t11.train(&rt, None).unwrap();
+    t11.save_checkpoint_delta(&grand, 11, &child).unwrap();
+
+    // a side frame delegated twice must resolve into the root file
+    let view = CheckpointFile::open(&grand).unwrap();
+    let so_role = view
+        .header
+        .manifest
+        .iter()
+        .find(|e| e.in_parent && e.role.starts_with("so."))
+        .map(|e| e.role.clone())
+        .expect("grandchild must delegate side frames");
+    let (path, _, _) = view.frame_location(&so_role).unwrap();
+    assert_eq!(path, root, "depth-2 delegation must resolve to the root file");
+    drop(view);
+
+    // restoring through the depth-2 chain reproduces the saved state
+    let mut r = Trainer::new(&rt, c8).unwrap();
+    assert_eq!(r.load_checkpoint(&grand).unwrap(), 11);
+    assert_eq!(bits(&r.model.params), bits(&t11.model.params));
+    fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn state_server_concurrent_slices_match_full_decode() {
+    use shampoo4::quant::{BufferRole, CodecSpec, Mapping};
+    let rt = HostBackend::new();
+    let dir = tdir("server");
+    let ckpt = dir.join("ck.bin");
+
+    // mixed policy gives the server fp32 (params), q4 and q8 (moments)
+    // frames plus opaque side-state frames to refuse
+    let mut cfg = base_cfg("st_server", SecondOrderKind::Shampoo, 8);
+    cfg.first.kind = FirstOrderKind::AdamW;
+    cfg.first.lr = 1e-3;
+    cfg.quant_policy = vec![
+        (BufferRole::Momentum, CodecSpec::parse("q4-dt", Mapping::Dt).unwrap()),
+        (BufferRole::SecondMoment, CodecSpec::parse("q8-dt", Mapping::Dt).unwrap()),
+    ];
+    let mut t = Trainer::new(&rt, cfg).unwrap();
+    t.train(&rt, None).unwrap();
+    t.save_checkpoint(&ckpt, 8).unwrap();
+
+    let srv = Arc::new(StateServer::open(&ckpt).unwrap());
+    let roles: Vec<String> = srv
+        .roles()
+        .into_iter()
+        .filter(|r| srv.frame_len(r).unwrap() > 0)
+        .collect();
+    assert!(roles.iter().any(|r| r.starts_with("param.")));
+    assert!(roles.iter().any(|r| r.starts_with("opt.")));
+    let full: Arc<BTreeMap<String, Vec<f32>>> = Arc::new(
+        roles.iter().map(|r| (r.clone(), srv.serve_all(r).unwrap())).collect(),
+    );
+
+    // ≥ 8 reader threads pulling seeded-random slices, each checked
+    // bit-for-bit against the single-threaded full decode
+    let threads: Vec<_> = (0..8u64)
+        .map(|tid| {
+            let srv = Arc::clone(&srv);
+            let full = Arc::clone(&full);
+            let roles = roles.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(0xC0FFEE + tid);
+                for _ in 0..200 {
+                    let role = &roles[rng.below(roles.len())];
+                    let want = &full[role];
+                    let start = rng.below(want.len());
+                    let count = rng.below(want.len() - start + 1);
+                    let got = srv.serve_slice(role, start, count).unwrap();
+                    let got: Vec<u32> = got.iter().map(|x| x.to_bits()).collect();
+                    let want: Vec<u32> =
+                        want[start..start + count].iter().map(|x| x.to_bits()).collect();
+                    assert_eq!(got, want, "{role} [{start}, +{count})");
+                }
+            })
+        })
+        .collect();
+    for h in threads {
+        h.join().unwrap();
+    }
+
+    // opaque side frames refuse decoded serving but hand out raw bytes
+    let side = srv
+        .roles()
+        .into_iter()
+        .find(|r| r.starts_with("so."))
+        .expect("run must produce side frames");
+    let err = srv.serve_slice(&side, 0, 1).unwrap_err();
+    assert!(format!("{err:#}").contains("opaque"), "{err:#}");
+    assert!(!srv.read_raw(&side).unwrap().is_empty());
+    fs::remove_dir_all(&dir).ok();
+}
