@@ -1,9 +1,17 @@
-//! Quant-kernel throughput harness: scalar vs chunked vs SIMD arms for the
-//! block-wise quantizer (encode + decode at q2/q3/q4/q8) and the bit-pack
-//! lanes (1/2/4/8-bit), with bytes/second columns.
+//! Quant-kernel throughput harness: scalar vs chunked vs every detected
+//! SIMD lane for the block-wise quantizer (deterministic + stochastic
+//! encode, decode, at q2/q3/q4/q8) and the bit-pack lanes (1/2/4/8-bit),
+//! with bytes/second columns.
 //!
 //!   cargo bench --bench quant_simd                  # scalar + chunked arms
-//!   cargo bench --bench quant_simd --features simd  # + explicit SIMD arms
+//!   cargo bench --bench quant_simd --features simd  # + one row per lane
+//!
+//! With `--features simd`, vector rows are emitted per *detected* lane
+//! (`simd[sse2]`, `simd[avx2]`, `simd[neon]`) via the forced-lane entry
+//! points, so one run on an AVX2 host measures both x86 lanes side by
+//! side. Every JSON row carries a `lane` field (`"ref"` for the
+//! scalar/chunked reference arms); the harness refuses to append a run
+//! record whose rows are missing it.
 //!
 //! Normal runs append a machine-readable run record (rows + derived
 //! speedups) to `BENCH_quant_simd.json` at the repo root — the committed
@@ -14,13 +22,12 @@
 
 use shampoo4::quant::{
     codebook, dequantize_chunked, dequantize_scalar, pack_bits_chunked, quantize_chunked,
-    quantize_scalar, unpack_bits_into_chunked, Mapping, BLOCK,
+    quantize_scalar, try_quantize_stochastic_scalar, unpack_bits_into_chunked, Mapping, BLOCK,
 };
-#[cfg(feature = "simd")]
-use shampoo4::quant::{dequantize_simd, quantize_simd};
 use shampoo4::util::json::Json;
 use shampoo4::util::rng::Rng;
 use shampoo4::util::timer::BenchRunner;
+use std::collections::BTreeMap;
 
 /// Repo-root baseline file (normal mode appends a run record here).
 const OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_quant_simd.json");
@@ -38,12 +45,33 @@ fn arch() -> &'static str {
     }
 }
 
+/// Vector lanes to bench: every detected lane except the forced-scalar
+/// fallback (which routes to the chunked reference paths already measured
+/// by the `ref` rows).
+#[cfg(feature = "simd")]
+fn bench_lanes() -> Vec<shampoo4::quant::simd::Lane> {
+    shampoo4::quant::simd::detected_lanes()
+        .into_iter()
+        .filter(|&l| l != shampoo4::quant::simd::Lane::Scalar)
+        .collect()
+}
+
 /// Time one arm, print its throughput row, and record it as a JSON row.
-fn row(runner: &BenchRunner, rows: &mut Vec<Json>, name: &str, bytes: usize, f: impl FnMut()) {
+/// `lane` is the registry lane the row measures, or `"ref"` for the
+/// scalar/chunked reference arms.
+fn row(
+    runner: &BenchRunner,
+    rows: &mut Vec<Json>,
+    name: &str,
+    lane: &str,
+    bytes: usize,
+    f: impl FnMut(),
+) {
     let s = runner.run(name, f);
     println!("{}", s.throughput_report(bytes));
     rows.push(Json::obj(vec![
         ("name", Json::Str(name.to_string())),
+        ("lane", Json::Str(lane.to_string())),
         ("mean_ns", Json::Num(s.mean_ns)),
         ("p50_ns", Json::Num(s.p50_ns)),
         ("min_ns", Json::Num(s.min_ns)),
@@ -66,6 +94,19 @@ fn speedup(a: Option<f64>, b: Option<f64>) -> Json {
     }
 }
 
+/// The lane-field schema guard: every row of a run record must carry a
+/// non-empty `lane` string, or the record is refused (exit 1) rather than
+/// appended to the committed baseline.
+fn rows_all_have_lane(run: &Json) -> bool {
+    run.get("rows")
+        .and_then(|r| r.as_arr())
+        .is_some_and(|rows| {
+            rows.iter().all(|r| {
+                r.get("lane").and_then(|l| l.as_str()).is_some_and(|l| !l.is_empty())
+            })
+        })
+}
+
 fn main() {
     let smoke = std::env::var("QUANT_BENCH_SMOKE").is_ok_and(|v| v == "1");
     let (runner, n) = if smoke {
@@ -82,8 +123,8 @@ fn main() {
 
     // ---- block quantizer: encode + decode at every bitwidth class ---------
     // q3 exercises the generic bit-cursor pack path; the byte-aligned widths
-    // exercise the chunked fast paths and (with --features simd) the
-    // SSE2/SWAR lanes.
+    // exercise the chunked fast paths and (with --features simd) one row
+    // per detected vector lane via the forced-lane entry points.
     for (label, mapping, bits) in [
         ("q2-dt", Mapping::Dt, 2u32),
         ("q3-dt", Mapping::Dt, 3),
@@ -92,26 +133,76 @@ fn main() {
     ] {
         let cb = codebook(mapping, bits);
         let q = quantize_chunked(&x, &cb, bits, BLOCK);
-        row(&runner, &mut rows, &format!("{label}/encode scalar"), fbytes, || {
+        row(&runner, &mut rows, &format!("{label}/encode scalar"), "ref", fbytes, || {
             std::hint::black_box(quantize_scalar(std::hint::black_box(&x), &cb, bits, BLOCK));
         });
-        row(&runner, &mut rows, &format!("{label}/encode chunked"), fbytes, || {
+        row(&runner, &mut rows, &format!("{label}/encode chunked"), "ref", fbytes, || {
             std::hint::black_box(quantize_chunked(std::hint::black_box(&x), &cb, bits, BLOCK));
         });
         #[cfg(feature = "simd")]
-        row(&runner, &mut rows, &format!("{label}/encode simd"), fbytes, || {
-            std::hint::black_box(quantize_simd(std::hint::black_box(&x), &cb, bits, BLOCK));
+        for lane in bench_lanes() {
+            let name = format!("{label}/encode simd[{lane}]");
+            row(&runner, &mut rows, &name, lane.name(), fbytes, || {
+                std::hint::black_box(shampoo4::quant::quantize_lane(
+                    std::hint::black_box(&x),
+                    &cb,
+                    bits,
+                    BLOCK,
+                    lane,
+                ));
+            });
+        }
+        // stochastic-rounding encode: the second hot loop the lane registry
+        // vectorizes (bracket + fraction pass); the RNG stream advances
+        // identically on every arm
+        let mut sr_rng = Rng::new(7);
+        row(&runner, &mut rows, &format!("{label}/encode-sr scalar"), "ref", fbytes, || {
+            std::hint::black_box(
+                try_quantize_stochastic_scalar(
+                    std::hint::black_box(&x),
+                    &cb,
+                    bits,
+                    BLOCK,
+                    &mut sr_rng,
+                )
+                .unwrap(),
+            );
         });
-        row(&runner, &mut rows, &format!("{label}/decode scalar"), fbytes, || {
+        #[cfg(feature = "simd")]
+        for lane in bench_lanes() {
+            let name = format!("{label}/encode-sr simd[{lane}]");
+            let mut lane_rng = Rng::new(7);
+            row(&runner, &mut rows, &name, lane.name(), fbytes, || {
+                std::hint::black_box(
+                    shampoo4::quant::try_quantize_stochastic_lane(
+                        std::hint::black_box(&x),
+                        &cb,
+                        bits,
+                        BLOCK,
+                        &mut lane_rng,
+                        lane,
+                    )
+                    .unwrap(),
+                );
+            });
+        }
+        row(&runner, &mut rows, &format!("{label}/decode scalar"), "ref", fbytes, || {
             std::hint::black_box(dequantize_scalar(std::hint::black_box(&q), &cb));
         });
-        row(&runner, &mut rows, &format!("{label}/decode chunked"), fbytes, || {
+        row(&runner, &mut rows, &format!("{label}/decode chunked"), "ref", fbytes, || {
             std::hint::black_box(dequantize_chunked(std::hint::black_box(&q), &cb));
         });
         #[cfg(feature = "simd")]
-        row(&runner, &mut rows, &format!("{label}/decode simd"), fbytes, || {
-            std::hint::black_box(dequantize_simd(std::hint::black_box(&q), &cb));
-        });
+        for lane in bench_lanes() {
+            let name = format!("{label}/decode simd[{lane}]");
+            row(&runner, &mut rows, &name, lane.name(), fbytes, || {
+                std::hint::black_box(shampoo4::quant::dequantize_lane(
+                    std::hint::black_box(&q),
+                    &cb,
+                    lane,
+                ));
+            });
+        }
     }
 
     // ---- raw pack lanes ---------------------------------------------------
@@ -119,54 +210,91 @@ fn main() {
         let codes: Vec<u8> = (0..n).map(|_| rng.below(1usize << bits) as u8).collect();
         let packed = pack_bits_chunked(&codes, bits);
         let mut out = vec![0u8; n];
-        row(&runner, &mut rows, &format!("pack{bits}/chunked"), n, || {
+        row(&runner, &mut rows, &format!("pack{bits}/chunked"), "ref", n, || {
             std::hint::black_box(pack_bits_chunked(std::hint::black_box(&codes), bits));
         });
         #[cfg(feature = "simd")]
-        row(&runner, &mut rows, &format!("pack{bits}/simd"), n, || {
-            std::hint::black_box(shampoo4::quant::simd::pack_bits_simd(
-                std::hint::black_box(&codes),
-                bits,
-            ));
-        });
-        row(&runner, &mut rows, &format!("unpack{bits}/chunked"), n, || {
+        for lane in bench_lanes() {
+            let name = format!("pack{bits}/simd[{lane}]");
+            row(&runner, &mut rows, &name, lane.name(), n, || {
+                std::hint::black_box(shampoo4::quant::simd::pack_bits_lane(
+                    lane,
+                    std::hint::black_box(&codes),
+                    bits,
+                ));
+            });
+        }
+        row(&runner, &mut rows, &format!("unpack{bits}/chunked"), "ref", n, || {
             unpack_bits_into_chunked(std::hint::black_box(&packed), bits, &mut out);
             std::hint::black_box(&out);
         });
         #[cfg(feature = "simd")]
-        row(&runner, &mut rows, &format!("unpack{bits}/simd"), n, || {
-            shampoo4::quant::simd::unpack_bits_into_simd(
-                std::hint::black_box(&packed),
-                bits,
-                &mut out,
-            );
-            std::hint::black_box(&out);
-        });
+        for lane in bench_lanes() {
+            let name = format!("unpack{bits}/simd[{lane}]");
+            row(&runner, &mut rows, &name, lane.name(), n, || {
+                shampoo4::quant::simd::unpack_bits_into_lane(
+                    lane,
+                    std::hint::black_box(&packed),
+                    bits,
+                    &mut out,
+                );
+                std::hint::black_box(&out);
+            });
+        }
     }
 
     // ---- derived speedups (the acceptance numbers) ------------------------
-    let enc_scalar = mean_of(&rows, "q4-linear2/encode scalar");
-    let derived = Json::obj(vec![
-        (
-            "q4_encode_speedup_simd_vs_scalar",
-            speedup(enc_scalar, mean_of(&rows, "q4-linear2/encode simd")),
+    // per lane: q4 + q8 encode/decode and the SR encode vs the scalar
+    // reference; plus the AVX2-vs-SSE2 widening ratios on hosts with both
+    let mut derived: BTreeMap<String, Json> = BTreeMap::new();
+    derived.insert(
+        "q4_encode_speedup_chunked_vs_scalar".to_string(),
+        speedup(
+            mean_of(&rows, "q4-linear2/encode scalar"),
+            mean_of(&rows, "q4-linear2/encode chunked"),
         ),
-        (
-            "q4_encode_speedup_chunked_vs_scalar",
-            speedup(enc_scalar, mean_of(&rows, "q4-linear2/encode chunked")),
-        ),
-        (
-            "q4_decode_speedup_simd_vs_scalar",
+    );
+    #[cfg(feature = "simd")]
+    for lane in bench_lanes() {
+        for (short, label) in [("q4", "q4-linear2"), ("q8", "q8-dt")] {
+            derived.insert(
+                format!("{short}_encode_speedup_{lane}_vs_scalar"),
+                speedup(
+                    mean_of(&rows, &format!("{label}/encode scalar")),
+                    mean_of(&rows, &format!("{label}/encode simd[{lane}]")),
+                ),
+            );
+            derived.insert(
+                format!("{short}_decode_speedup_{lane}_vs_scalar"),
+                speedup(
+                    mean_of(&rows, &format!("{label}/decode scalar")),
+                    mean_of(&rows, &format!("{label}/decode simd[{lane}]")),
+                ),
+            );
+            derived.insert(
+                format!("{short}_sr_encode_speedup_{lane}_vs_scalar"),
+                speedup(
+                    mean_of(&rows, &format!("{label}/encode-sr scalar")),
+                    mean_of(&rows, &format!("{label}/encode-sr simd[{lane}]")),
+                ),
+            );
+        }
+    }
+    #[cfg(feature = "simd")]
+    for (short, label) in [("q4", "q4-linear2"), ("q8", "q8-dt")] {
+        derived.insert(
+            format!("{short}_encode_speedup_avx2_vs_sse2"),
             speedup(
-                mean_of(&rows, "q4-linear2/decode scalar"),
-                mean_of(&rows, "q4-linear2/decode simd"),
+                mean_of(&rows, &format!("{label}/encode simd[sse2]")),
+                mean_of(&rows, &format!("{label}/encode simd[avx2]")),
             ),
-        ),
-    ]);
+        );
+    }
+    let derived = Json::Obj(derived);
     for (k, v) in derived.as_obj().unwrap() {
         match v.as_f64() {
             Some(r) => println!("# {k}: {r:.2}x"),
-            None => println!("# {k}: n/a (build with --features simd)"),
+            None => println!("# {k}: n/a (lane not detected or simd disabled)"),
         }
     }
 
@@ -183,6 +311,10 @@ fn main() {
         ("rows", Json::Arr(rows)),
         ("derived", derived),
     ]);
+    if !rows_all_have_lane(&run) {
+        eprintln!("# refusing to record: a row is missing its `lane` field");
+        std::process::exit(1);
+    }
 
     if smoke {
         // throwaway output: never touches the committed baseline
@@ -206,7 +338,8 @@ fn main() {
     let runs = runs.split_off(excess);
     let note = "quant throughput baseline; regenerate with \
                 `cargo bench --bench quant_simd --features simd` (and once without \
-                --features simd for the scalar/chunked-only arms)";
+                --features simd for the scalar/chunked-only arms); every row carries \
+                a `lane` field (`ref` = scalar/chunked reference arms)";
     let out = Json::obj(vec![
         ("_note", Json::Str(note.to_string())),
         ("runs", Json::Arr(runs)),

@@ -17,7 +17,13 @@
 //! A third section exercises the sharded block engine: single-process vs
 //! `--shards {2,4}` (sync + pipelined), reporting bytes-on-wire per refresh
 //! round and the codec-vs-fp32 state wire-format ratio to
-//! bench_out/BENCH_shard.json (schema committed at repo root).
+//! bench_out/BENCH_shard.json, and appending a timestamped run record to
+//! the committed `BENCH_shard.json` baseline at the repo root.
+//!
+//! SHAMPOO4_BENCH_SECTION selects which section runs: `table2`,
+//! `parallel`, `shard`, or `all` (default). The nightly bench-baseline
+//! job runs `SHAMPOO4_BENCH_SECTION=shard` so the committed baseline
+//! accumulates records without paying for the full Table 2 sweep.
 
 #![allow(clippy::field_reassign_with_default)]
 
@@ -34,6 +40,22 @@ fn steps_default() -> usize {
         .unwrap_or(200)
 }
 
+/// Section filter (`SHAMPOO4_BENCH_SECTION`): `table2` / `parallel` /
+/// `shard` run one section; anything else (or unset) runs all three.
+fn section() -> String {
+    std::env::var("SHAMPOO4_BENCH_SECTION").unwrap_or_else(|_| "all".to_string())
+}
+
+fn section_on(name: &str) -> bool {
+    let s = section();
+    s == "all" || s == name
+}
+
+/// Repo-root shard baseline (every shard-section run appends here).
+const SHARD_OUT_PATH: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_shard.json");
+/// Most recent run records kept in the shard baseline's `runs` array.
+const SHARD_KEEP_RUNS: usize = 20;
+
 struct Arm {
     label: &'static str,
     model: &'static str,
@@ -47,6 +69,16 @@ fn main() -> Result<()> {
     let rt = default_backend(std::path::Path::new("artifacts"))?;
     let rt = rt.as_ref();
     let steps = steps_default();
+    if !section_on("table2") {
+        println!("# SHAMPOO4_BENCH_SECTION={} — skipping Table 2 arms", section());
+        if section_on("parallel") {
+            parallel_engine_rows(rt, steps)?;
+        }
+        if section_on("shard") {
+            shard_engine_rows(rt, steps)?;
+        }
+        return Ok(());
+    }
     #[rustfmt::skip]
     let arms = [
         Arm { label: "SGDM", model: "mlp_base", f: FirstOrderKind::Sgdm, lr: 0.05, bits: 0, steps_mult: 1.5 },
@@ -98,8 +130,12 @@ fn main() -> Result<()> {
     }
     println!("# curves (Figures 1/4): bench_out/table2_*.csv");
 
-    parallel_engine_rows(rt, steps)?;
-    shard_engine_rows(rt, steps)?;
+    if section_on("parallel") {
+        parallel_engine_rows(rt, steps)?;
+    }
+    if section_on("shard") {
+        shard_engine_rows(rt, steps)?;
+    }
     Ok(())
 }
 
@@ -335,5 +371,39 @@ fn shard_engine_rows(rt: &dyn Backend, steps: usize) -> Result<()> {
         sh2.wall_secs / single.wall_secs.max(1e-12),
         "bench_out/BENCH_shard.json"
     );
+
+    // append a timestamped record to the committed repo-root baseline,
+    // keeping the last SHARD_KEEP_RUNS (the nightly bench-baseline job
+    // commits the result)
+    let timestamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let run = match j {
+        Json::Obj(mut m) => {
+            m.insert("timestamp_unix".to_string(), Json::Num(timestamp as f64));
+            Json::Obj(m)
+        }
+        other => other,
+    };
+    let mut runs: Vec<Json> = std::fs::read_to_string(SHARD_OUT_PATH)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|p| p.get("runs").and_then(|r| r.as_arr().map(|a| a.to_vec())))
+        .unwrap_or_default();
+    runs.push(run);
+    let excess = runs.len().saturating_sub(SHARD_KEEP_RUNS);
+    let runs = runs.split_off(excess);
+    let note = "sharded-engine wall-clock + wire-format baseline; regenerate with \
+                `SHAMPOO4_BENCH_SECTION=shard cargo bench --bench table2_training \
+                --features simd` (appends a timestamped record, keeps the last 20)";
+    let out = Json::obj(vec![
+        ("_note", Json::Str(note.to_string())),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match std::fs::write(SHARD_OUT_PATH, out.to_string()) {
+        Ok(()) => println!("# appended run to BENCH_shard.json (repo root)"),
+        Err(e) => println!("# could not write BENCH_shard.json: {e}"),
+    }
     Ok(())
 }

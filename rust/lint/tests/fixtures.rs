@@ -21,7 +21,7 @@ pub fn f(p: *const f32) -> f32 {
     unsafe { *p }
 }
 "#;
-    let r = lint_source("rust/src/quant/simd.rs", src);
+    let r = lint_source("rust/src/quant/simd/sse2.rs", src);
     assert_eq!(rules_fired(&r), vec!["unsafe-safety"]);
 }
 
@@ -33,14 +33,14 @@ pub fn f(p: *const f32) -> f32 {
     unsafe { *p }
 }
 "#;
-    let r = lint_source("rust/src/quant/simd.rs", src);
+    let r = lint_source("rust/src/quant/simd/sse2.rs", src);
     assert!(r.violations.is_empty(), "{:?}", r.violations);
 }
 
 #[test]
 fn unsafe_trailing_safety_comment_is_clean() {
     let src = "pub fn f(p: *const f32) -> f32 { unsafe { *p } } // SAFETY: p valid.\n";
-    let r = lint_source("rust/src/quant/simd.rs", src);
+    let r = lint_source("rust/src/quant/simd/sse2.rs", src);
     assert!(r.violations.is_empty(), "{:?}", r.violations);
 }
 
@@ -54,6 +54,23 @@ pub fn f(p: *const f32) -> f32 {
 "#;
     let r = lint_source("rust/src/quant/codec.rs", src);
     assert_eq!(rules_fired(&r), vec!["unsafe-module"]);
+}
+
+#[test]
+fn unsafe_in_lane_registry_module_fires_module_rule() {
+    // the dispatch/registry module of the simd directory is deliberately
+    // NOT allowlisted: only the per-ISA kernel files may hold unsafe, so
+    // unsafe creeping into mod.rs (or the old single-file path) is caught
+    let src = r#"
+pub fn f(p: *const f32) -> f32 {
+    // SAFETY: caller guarantees p is valid.
+    unsafe { *p }
+}
+"#;
+    for path in ["rust/src/quant/simd/mod.rs", "rust/src/quant/simd.rs"] {
+        let r = lint_source(path, src);
+        assert_eq!(rules_fired(&r), vec!["unsafe-module"], "{path}");
+    }
 }
 
 #[test]

@@ -207,6 +207,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     apply_cli_overrides(&mut cfg, args)?;
     cfg.validate()?;
+    // Pre-validate the SHAMPOO4_SIMD_LANE override so a typo or a lane the
+    // host cannot run surfaces as a clean CLI error instead of a panic the
+    // first time a quant kernel dispatches.
+    #[cfg(feature = "simd")]
+    {
+        use shampoo4::quant::simd;
+        simd::lane_from_env().map_err(|e| anyhow::anyhow!(e))?;
+        println!("simd-lane: {} ({})", simd::active_lane(), simd::simd_arch());
+    }
     let dir = artifact_dir(args);
     let rt = backend_by_name(&cfg.backend, &dir)?;
     let rt = rt.as_ref();

@@ -9,13 +9,19 @@
 //! Three interchangeable encode/decode arms share one contract:
 //!  * **scalar** — the reference implementation, one element at a time;
 //!  * **chunked** — branch-free block lanes that auto-vectorize;
-//!  * **simd** (`--features simd`) — explicit SSE2/SWAR lanes in
-//!    `quant::simd`.
+//!  * **simd** (`--features simd`) — explicit vector kernels behind the
+//!    lane registry in `quant::simd` (SSE2/AVX2 on x86_64, NEON on
+//!    aarch64, plus portable SWAR packs); the active lane is resolved
+//!    once per encode/decode call, and `_lane` twins
+//!    (`try_quantize_lane_layout`, `dequantize_lane`,
+//!    `try_quantize_stochastic_lane`) pin a specific lane for tests
+//!    and benches.
 //!
-//! The property suite asserts scalar == chunked == SIMD *bit-for-bit*
-//! (packed bytes, scales, decoded values) at every bitwidth, mapping, block
-//! size, and odd length; `quantize`/`dequantize` dispatch to the fastest
-//! arm compiled in.
+//! The property suite asserts scalar == chunked == *every detected SIMD
+//! lane* bit-for-bit (packed bytes, scales, decoded values) at every
+//! bitwidth, mapping, block size, and odd length — the N-way equivalence
+//! contract; `quantize`/`dequantize` dispatch to the fastest arm
+//! compiled in.
 //!
 //! Non-finite inputs are a typed error, not silent corruption: a NaN
 //! element would vanish from the absmax fold (`f32::max` drops NaN) and
@@ -308,7 +314,9 @@ pub fn try_quantize_simd(
     try_quantize_simd_layout(x, cb, bits, block, None)
 }
 
-/// [`try_quantize_simd`] with an explicit column layout.
+/// [`try_quantize_simd`] with an explicit column layout — resolves
+/// [`active_lane`](super::simd::active_lane) once per call, so the hot
+/// loop never re-reads the registry.
 #[cfg(feature = "simd")]
 pub fn try_quantize_simd_layout(
     x: &[f32],
@@ -316,6 +324,34 @@ pub fn try_quantize_simd_layout(
     bits: u32,
     block: usize,
     col: Option<usize>,
+) -> Result<QuantizedVec, QuantError> {
+    try_quantize_lane_layout(x, cb, bits, block, col, super::simd::active_lane())
+}
+
+/// Lane-forced encode (infallible wrapper — panics on non-finite input).
+#[cfg(feature = "simd")]
+pub fn quantize_lane(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    lane: super::simd::Lane,
+) -> QuantizedVec {
+    try_quantize_lane_layout(x, cb, bits, block, None, lane).unwrap_or_else(|e| panic!("{e}"))
+}
+
+/// [`try_quantize_simd_layout`] on an explicit [`Lane`](super::simd::Lane)
+/// — how the N-way property suite and the `quant_simd` harness pin lanes
+/// regardless of what the host dispatcher would pick. Every lane is
+/// bit-identical to the scalar/chunked arms (property-tested).
+#[cfg(feature = "simd")]
+pub fn try_quantize_lane_layout(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    col: Option<usize>,
+    lane: super::simd::Lane,
 ) -> Result<QuantizedVec, QuantError> {
     use super::simd;
     assert!(block >= 1, "block must be >= 1");
@@ -326,20 +362,20 @@ pub fn try_quantize_simd_layout(
     let mut normed = vec![0.0f32; block.min(x.len())];
     try_for_blocks(x.len(), block, col, |bi, start, blen| {
         let blk = &x[start..start + blen];
-        if !simd::all_finite(blk) {
+        if !simd::all_finite_with(lane, blk) {
             return Err(nonfinite_err(blk, bi, start));
         }
-        let absmax = simd::absmax(blk);
+        let absmax = simd::absmax_with(lane, blk);
         let scale = if absmax > 0.0 { absmax } else { 1.0 };
         let inv = 1.0 / scale;
         scales.push(scale);
-        let lane = &mut normed[..blen];
-        simd::normalize_into(blk, inv, lane);
-        bounds.nearest_block_simd(lane, &mut codes[start..start + blen]);
+        let buf = &mut normed[..blen];
+        simd::normalize_into_with(lane, blk, inv, buf);
+        bounds.nearest_block_simd(lane, buf, &mut codes[start..start + blen]);
         Ok(())
     })?;
     Ok(QuantizedVec {
-        packed: simd::pack_bits_simd(&codes, bits),
+        packed: simd::pack_bits_lane(lane, &codes, bits),
         scales,
         len: x.len(),
         bits,
@@ -432,7 +468,33 @@ pub fn quantize_stochastic(
 /// deterministic arms. The RNG stream position is only advanced for
 /// blocks that pass the gate, and the error is returned before any draw
 /// for the offending block.
+///
+/// Dispatches to the active-lane SIMD arm under `--features simd` (the
+/// bracket + fraction pass vectorizes; the per-element uniform draw stays
+/// in element order, so any lane reproduces the scalar stream bit-for-bit
+/// from the same seed), and to the scalar reference otherwise.
 pub fn try_quantize_stochastic(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Result<QuantizedVec, QuantError> {
+    #[cfg(feature = "simd")]
+    {
+        try_quantize_stochastic_lane(x, cb, bits, block, rng, super::simd::active_lane())
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        try_quantize_stochastic_scalar(x, cb, bits, block, rng)
+    }
+}
+
+/// Reference scalar SR encoder: per-element
+/// [`stochastic_pair`](Boundaries::stochastic_pair) bracket search, one
+/// uniform draw per element. The equivalence baseline for every SIMD lane
+/// (the forced-lane × seed reproducibility test pins them to this stream).
+pub fn try_quantize_stochastic_scalar(
     x: &[f32],
     cb: &[f32],
     bits: u32,
@@ -462,6 +524,67 @@ pub fn try_quantize_stochastic(
     })?;
     Ok(QuantizedVec {
         packed: pack_bits_chunked(&codes, bits),
+        scales,
+        len: x.len(),
+        bits,
+        block,
+        col: None,
+    })
+}
+
+/// [`try_quantize_stochastic`] on an explicit lane: the per-block bracket
+/// + fraction pass runs through
+/// [`stochastic_block_simd`](Boundaries::stochastic_block_simd) (a
+/// vectorized counting sweep replaces the per-element binary search), then
+/// one uniform draw per element resolves each bracket **in element
+/// order** — the same stream positions as the scalar arm, so a fixed seed
+/// yields bit-identical codes on every lane.
+///
+/// [`Lane::Scalar`](super::simd::Lane::Scalar) routes straight to
+/// [`try_quantize_stochastic_scalar`].
+#[cfg(feature = "simd")]
+pub fn try_quantize_stochastic_lane(
+    x: &[f32],
+    cb: &[f32],
+    bits: u32,
+    block: usize,
+    rng: &mut crate::util::rng::Rng,
+    lane: super::simd::Lane,
+) -> Result<QuantizedVec, QuantError> {
+    use super::simd;
+    if lane == simd::Lane::Scalar {
+        return try_quantize_stochastic_scalar(x, cb, bits, block, rng);
+    }
+    assert!(block >= 1, "block must be >= 1");
+    assert!(cb.len() >= (1usize << bits));
+    let bounds = Boundaries::new(cb);
+    let mut codes = vec![0u8; x.len()];
+    let mut scales = Vec::with_capacity(x.len().div_ceil(block));
+    let scratch = block.min(x.len());
+    let mut normed = vec![0.0f32; scratch];
+    let mut counts = vec![0u8; scratch];
+    let mut pairs = vec![(0u8, 0u8, 0.0f32); scratch];
+    try_for_blocks(x.len(), block, None, |bi, start, blen| {
+        let blk = &x[start..start + blen];
+        if !simd::all_finite_with(lane, blk) {
+            return Err(nonfinite_err(blk, bi, start));
+        }
+        let absmax = simd::absmax_with(lane, blk);
+        let scale = if absmax > 0.0 { absmax } else { 1.0 };
+        let inv = 1.0 / scale;
+        scales.push(scale);
+        let nb = &mut normed[..blen];
+        simd::normalize_into_with(lane, blk, inv, nb);
+        let prs = &mut pairs[..blen];
+        bounds.stochastic_block_simd(lane, nb, &mut counts[..blen], prs);
+        for (c, &(lo, hi, p)) in codes[start..start + blen].iter_mut().zip(prs.iter()) {
+            let up = (rng.uniform() as f32) < p;
+            *c = if up { hi } else { lo };
+        }
+        Ok(())
+    })?;
+    Ok(QuantizedVec {
+        packed: simd::pack_bits_lane(lane, &codes, bits),
         scales,
         len: x.len(),
         bits,
@@ -508,21 +631,30 @@ pub fn dequantize_chunked(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
     out
 }
 
-/// SIMD decode arm: SIMD/SWAR unpack lanes, then the 4-wide
-/// [`decode_block`](super::simd::decode_block) multiply per block.
-/// Bit-identical to the chunked arm.
+/// SIMD decode arm: SIMD/SWAR unpack lanes, then the vectorized
+/// [`decode_block`](super::simd::decode_block) multiply per block on the
+/// active lane. Bit-identical to the chunked arm.
 #[cfg(feature = "simd")]
 pub fn dequantize_simd(q: &QuantizedVec, cb: &[f32]) -> Vec<f32> {
+    dequantize_lane(q, cb, super::simd::active_lane())
+}
+
+/// [`dequantize_simd`] on an explicit [`Lane`](super::simd::Lane) — the
+/// forced-lane decode twin used by the N-way property suite and the
+/// `quant_simd` harness.
+#[cfg(feature = "simd")]
+pub fn dequantize_lane(q: &QuantizedVec, cb: &[f32], lane: super::simd::Lane) -> Vec<f32> {
     use super::simd;
     debug_assert_eq!(q.scales.len(), layout_scale_count(q.len, q.block, q.col));
     let mut table = [0.0f32; 256];
     let k = cb.len().min(256);
     table[..k].copy_from_slice(&cb[..k]);
     let mut codes = vec![0u8; q.len];
-    simd::unpack_bits_into_simd(&q.packed, q.bits, &mut codes);
+    simd::unpack_bits_into_lane(lane, &q.packed, q.bits, &mut codes);
     let mut out = vec![0.0f32; q.len];
     for_blocks(q.len, q.block, q.col, |bi, start, blen| {
-        simd::decode_block(
+        simd::decode_block_with(
+            lane,
             &codes[start..start + blen],
             &table,
             q.scales[bi],
@@ -866,10 +998,10 @@ mod tests {
                     return Err(format!("dispatch diverged at n={n} block={block}"));
                 }
                 #[cfg(feature = "simd")]
-                {
-                    let qv = try_quantize_simd(&x, &cb, bits, block).unwrap();
+                for lane in crate::quant::simd::detected_lanes() {
+                    let qv = try_quantize_lane_layout(&x, &cb, bits, block, None, lane).unwrap();
                     if !same(&qv, &qs) {
-                        return Err(format!("simd diverged at n={n} block={block}"));
+                        return Err(format!("{lane} diverged at n={n} block={block}"));
                     }
                 }
                 let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
@@ -881,8 +1013,10 @@ mod tests {
                     return Err(format!("dispatch decode diverged at n={n} block={block}"));
                 }
                 #[cfg(feature = "simd")]
-                if bits_of(&dequantize_simd(&qc, &cb)) != ds {
-                    return Err(format!("simd decode diverged at n={n} block={block}"));
+                for lane in crate::quant::simd::detected_lanes() {
+                    if bits_of(&dequantize_lane(&qc, &cb, lane)) != ds {
+                        return Err(format!("{lane} decode diverged at n={n} block={block}"));
+                    }
                 }
                 Ok(())
             });
@@ -904,10 +1038,10 @@ mod tests {
             assert_eq!(qs.packed, qc.packed, "n={n}");
             assert_eq!(qs.scales, qc.scales, "n={n}");
             #[cfg(feature = "simd")]
-            {
-                let qv = try_quantize_simd_layout(&x, &cb, 4, block, col).unwrap();
-                assert_eq!(qs.packed, qv.packed, "n={n} simd");
-                assert_eq!(qs.scales, qv.scales, "n={n} simd");
+            for lane in crate::quant::simd::detected_lanes() {
+                let qv = try_quantize_lane_layout(&x, &cb, 4, block, col, lane).unwrap();
+                assert_eq!(qs.packed, qv.packed, "n={n} {lane}");
+                assert_eq!(qs.scales, qv.scales, "n={n} {lane}");
             }
             let bits_of = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
             assert_eq!(
@@ -942,6 +1076,41 @@ mod tests {
         let mut rng_c = crate::util::rng::Rng::new(99);
         let qc = quantize_stochastic(&x, &cb, 4, 64, &mut rng_c);
         assert_ne!(qa.packed, qc.packed, "distinct seeds should round differently");
+    }
+
+    #[test]
+    #[cfg(feature = "simd")]
+    #[cfg_attr(miri, ignore)] // lane × seed × mapping sweep: too slow under Miri
+    fn stochastic_lanes_bit_identical_to_scalar_across_seeds() {
+        // the vectorized SR bracket pass must not perturb the seeded RNG
+        // stream: for every detected lane and every seed, the lane-forced
+        // encode reproduces the scalar reference bit-for-bit (packed bytes
+        // AND scales), including odd lengths with partial tail blocks
+        for (mapping, bits) in [(Mapping::Linear2, 4u32), (Mapping::Dt, 8), (Mapping::Dt, 2)] {
+            let cb = codebook(mapping, bits);
+            for (n, block) in [(333usize, 64usize), (64, 64), (17, 7)] {
+                let mut data_rng = crate::util::rng::Rng::new(11);
+                let x: Vec<f32> = (0..n).map(|_| data_rng.normal_f32()).collect();
+                for seed in [1u64, 42, 1234] {
+                    let mut rng_s = crate::util::rng::Rng::new(seed);
+                    let qs =
+                        try_quantize_stochastic_scalar(&x, &cb, bits, block, &mut rng_s).unwrap();
+                    for lane in crate::quant::simd::detected_lanes() {
+                        let mut rng_l = crate::util::rng::Rng::new(seed);
+                        let ql =
+                            try_quantize_stochastic_lane(&x, &cb, bits, block, &mut rng_l, lane)
+                                .unwrap();
+                        let tag = format!("{mapping:?}/{bits} n={n} seed={seed} {lane}");
+                        assert_eq!(qs.packed, ql.packed, "{tag} packed");
+                        assert_eq!(qs.scales, ql.scales, "{tag} scales");
+                    }
+                    // the dispatcher (whatever lane it picks) is on the same stream
+                    let mut rng_d = crate::util::rng::Rng::new(seed);
+                    let qd = try_quantize_stochastic(&x, &cb, bits, block, &mut rng_d).unwrap();
+                    assert_eq!(qs.packed, qd.packed, "dispatch n={n} seed={seed}");
+                }
+            }
+        }
     }
 
     #[test]

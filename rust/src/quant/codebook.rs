@@ -193,8 +193,9 @@ impl Boundaries {
     }
 
     /// SIMD arm of [`Boundaries::nearest_block`] (`--features simd`): the
-    /// counting kernel runs 16 elements per step through
-    /// [`count_below_mids`](super::simd::count_below_mids), followed by the
+    /// counting kernel runs 16 (SSE2/NEON) or 32 (AVX2) elements per step
+    /// through [`count_below_mids_with`](super::simd::count_below_mids_with)
+    /// on the given lane, followed by the
     /// same duplicate-run remap pass — for EVERY book width. Unlike the
     /// scalar arm (where 255 linear compares lose to an 8-probe binary
     /// search), the vectorized count amortizes the midpoint sweep across a
@@ -203,11 +204,63 @@ impl Boundaries {
     /// `u8`. Bit-identical to the scalar arms at any width — the count is
     /// exactly `partition_point(|m| m < x)`.
     #[cfg(feature = "simd")]
-    pub fn nearest_block_simd(&self, xs: &[f32], codes: &mut [u8]) {
+    pub fn nearest_block_simd(&self, lane: super::simd::Lane, xs: &[f32], codes: &mut [u8]) {
         debug_assert_eq!(xs.len(), codes.len());
-        super::simd::count_below_mids(&self.mids, xs, codes);
+        super::simd::count_below_mids_with(lane, &self.mids, xs, codes);
         for c in codes.iter_mut() {
             *c = self.remap[*c as usize];
+        }
+    }
+
+    /// SIMD arm of the stochastic-rounding bracket search (`--features
+    /// simd`): one `(lo, hi, p)` triple per element of `xs`, bit-identical
+    /// to calling [`Boundaries::stochastic_pair`] element-by-element.
+    ///
+    /// The scalar pair does a per-element binary search over the *codebook
+    /// entries* (`partition_point(|c| c < x)`); this arm replaces it with
+    /// one vectorized [`count_below_mids_with`](super::simd::count_below_mids_with)
+    /// sweep counting `cb[..K-1]` — capped at 255 entries so the running
+    /// count fits the kernel's u8 lane even for a full 256-entry book —
+    /// and folds the final entry back in scalar (`cb[K-1] < x` can only
+    /// matter when all earlier entries already compared below). The
+    /// bracket/fraction arithmetic then runs the *same* f32 ops in the
+    /// same order as `stochastic_pair`, so triples match bit-for-bit,
+    /// clamps and exact codebook hits included. The seeded RNG draw stays
+    /// with the caller, in element order — this kernel never consumes
+    /// randomness, which is what keeps forced-lane SR streams reproducible.
+    ///
+    /// `counts` is caller-provided scratch (same length as `xs`).
+    #[cfg(feature = "simd")]
+    pub fn stochastic_block_simd(
+        &self,
+        lane: super::simd::Lane,
+        xs: &[f32],
+        counts: &mut [u8],
+        pairs: &mut [(u8, u8, f32)],
+    ) {
+        debug_assert_eq!(xs.len(), counts.len());
+        debug_assert_eq!(xs.len(), pairs.len());
+        let cb = &self.cb;
+        let k = cb.len();
+        debug_assert!(k >= 2, "codebooks have at least 2 entries");
+        super::simd::count_below_mids_with(lane, &cb[..k - 1], xs, counts);
+        let last = cb[k - 1];
+        for ((&x, &n), pr) in xs.iter().zip(counts.iter()).zip(pairs.iter_mut()) {
+            let mut hi = n as usize;
+            if hi == k - 1 && last < x {
+                hi = k;
+            }
+            *pr = if hi == 0 {
+                (self.remap[0], self.remap[0], 0.0)
+            } else if hi >= k {
+                let end = self.remap[k - 1];
+                (end, end, 1.0)
+            } else {
+                let lo = hi - 1;
+                let gap = cb[hi] - cb[lo];
+                let p = if gap > 0.0 { (x - cb[lo]) / gap } else { 1.0 };
+                (self.remap[lo], self.remap[hi], p)
+            };
         }
     }
 
@@ -414,7 +467,7 @@ mod tests {
     #[cfg(feature = "simd")]
     #[test]
     #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
-    fn nearest_block_simd_matches_chunked() {
+    fn nearest_block_simd_matches_chunked_on_every_lane() {
         use crate::util::prop;
         for (mapping, bits) in [
             (Mapping::Dt, 2u32),
@@ -425,18 +478,66 @@ mod tests {
         ] {
             let cb = codebook(mapping, bits);
             let b = Boundaries::new(&cb);
-            prop::check(&format!("simd nearest_block {mapping:?}/{bits}"), 10, |rng| {
-                let n = 1 + rng.below(200);
-                let xs: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.7) as f32).collect();
-                let mut chunked = vec![0u8; n];
-                let mut simd = vec![0u8; n];
-                b.nearest_block(&xs, &mut chunked);
-                b.nearest_block_simd(&xs, &mut simd);
-                if chunked != simd {
-                    return Err(format!("simd arm diverged at n={n}"));
-                }
-                Ok(())
-            });
+            for lane in crate::quant::simd::detected_lanes() {
+                prop::check(
+                    &format!("simd nearest_block {mapping:?}/{bits} lane={lane}"),
+                    10,
+                    |rng| {
+                        let n = 1 + rng.below(200);
+                        let xs: Vec<f32> =
+                            (0..n).map(|_| (rng.normal() * 0.7) as f32).collect();
+                        let mut chunked = vec![0u8; n];
+                        let mut simd = vec![0u8; n];
+                        b.nearest_block(&xs, &mut chunked);
+                        b.nearest_block_simd(lane, &xs, &mut simd);
+                        if chunked != simd {
+                            return Err(format!("simd arm diverged at n={n}"));
+                        }
+                        Ok(())
+                    },
+                );
+            }
+        }
+    }
+
+    #[cfg(feature = "simd")]
+    #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
+    fn stochastic_block_simd_matches_scalar_pairs_on_every_lane() {
+        use crate::util::prop;
+        for (mapping, bits) in [(Mapping::Dt, 4u32), (Mapping::Linear2, 3), (Mapping::Dt, 8)] {
+            let cb = codebook(mapping, bits);
+            let b = Boundaries::new(&cb);
+            for lane in crate::quant::simd::detected_lanes() {
+                prop::check(
+                    &format!("simd stochastic_block {mapping:?}/{bits} lane={lane}"),
+                    10,
+                    |rng| {
+                        let n = 1 + rng.below(200);
+                        let mut xs: Vec<f32> =
+                            (0..n).map(|_| (rng.normal() * 0.7) as f32).collect();
+                        // force exact hits and out-of-range clamps into the mix
+                        if n > 3 {
+                            xs[0] = cb[rng.below(cb.len())];
+                            xs[1] = -2.0;
+                            xs[2] = 2.0;
+                        }
+                        let mut counts = vec![0u8; n];
+                        let mut pairs = vec![(0u8, 0u8, 0f32); n];
+                        b.stochastic_block_simd(lane, &xs, &mut counts, &mut pairs);
+                        for (&x, &(lo, hi, p)) in xs.iter().zip(&pairs) {
+                            let (wl, wh, wp) = b.stochastic_pair(x);
+                            if (lo, hi, p.to_bits()) != (wl, wh, wp.to_bits()) {
+                                return Err(format!(
+                                    "pair diverged at x={x}: got ({lo},{hi},{p}), \
+                                     want ({wl},{wh},{wp})"
+                                ));
+                            }
+                        }
+                        Ok(())
+                    },
+                );
+            }
         }
     }
 

@@ -724,6 +724,13 @@ impl StateCodec for BlockQuant {
 /// The counter is in-memory state, so a *resumed* run continues
 /// deterministically but draws a fresh stream rather than replaying the
 /// interrupted one.
+///
+/// Under `--features simd` the encode dispatches through the SIMD lane
+/// registry (`try_quantize_stochastic` resolves the active lane): the
+/// bracket+fraction pass is vectorized per block while the RNG draw stays
+/// with the caller in element order, so every lane — and the scalar
+/// fallback — replays the identical seeded stream and produces identical
+/// bytes.
 pub struct StochasticRound {
     inner: BlockQuant,
     seed: u64,

@@ -13,7 +13,8 @@ pub mod codec;
 pub mod pack;
 /// The per-buffer codec policy resolver (role → codec spec).
 pub mod policy;
-/// Explicit SIMD lanes for the hot loops (`--features simd`).
+/// Runtime-detected SIMD lane registry for the hot loops
+/// (`--features simd`).
 #[cfg(feature = "simd")]
 pub mod simd;
 
@@ -22,10 +23,16 @@ pub use blockwise::{
     layout_scale_count, matrix_layout, matrix_state_bytes, quantize, quantize_chunked,
     quantize_matrix_cols, quantize_scalar, quantize_stochastic, try_quantize,
     try_quantize_chunked, try_quantize_matrix_cols, try_quantize_scalar,
-    try_quantize_stochastic, QuantError, QuantizedVec, BLOCK, MATRIX_BLOCK_MIN,
+    try_quantize_stochastic, try_quantize_stochastic_scalar, QuantError, QuantizedVec,
+    BLOCK, MATRIX_BLOCK_MIN,
 };
 #[cfg(feature = "simd")]
-pub use blockwise::{dequantize_simd, quantize_simd, try_quantize_simd};
+pub use blockwise::{
+    dequantize_lane, dequantize_simd, quantize_lane, quantize_simd, try_quantize_lane_layout,
+    try_quantize_simd, try_quantize_stochastic_lane,
+};
+#[cfg(feature = "simd")]
+pub use simd::{active_lane, detected_lanes, lane_from_env, Lane, LANE_ENV};
 pub use codebook::{codebook, runtime_codebook, Boundaries, Mapping};
 pub use codec::{
     codec_by_name, codec_for, crc32, fp32, put_frame, put_frame_checked, read_frame,

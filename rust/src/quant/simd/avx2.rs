@@ -1,0 +1,272 @@
+//! 256-bit AVX2 kernels (`std::arch::x86_64`), selected at runtime by
+//! the lane registry via `is_x86_feature_detected!("avx2")`.
+//!
+//! Safety pattern: AVX2 is *not* part of the x86_64 baseline, so every
+//! public entry point is a safe wrapper that asserts the (std-cached)
+//! CPUID probe before calling a single `#[target_feature(enable =
+//! "avx2")]` kernel. The dispatcher only routes here when the registry
+//! detected AVX2, but the assert keeps the wrappers sound even for a
+//! caller that forces the lane on the wrong host.
+//!
+//! Bit-identity mirrors the SSE2 lane: abs/max/mul/cmp are elementwise
+//! or order-insensitive, the counting kernel's saturating packs are
+//! exact on 0/-1 masks (with one dword permute undoing the per-128-bit
+//! lane interleave the 256-bit packs introduce), and the decode gather
+//! reads the same table entries the scalar loop would.
+
+use std::arch::x86_64::*;
+
+/// Panic unless the host really has AVX2 (std caches the CPUID probe,
+/// so this is one atomic load on the hot path).
+#[inline]
+fn require_avx2() {
+    assert!(
+        std::arch::is_x86_feature_detected!("avx2"),
+        "AVX2 lane dispatched on a host without AVX2 (set {}=sse2 or scalar)",
+        super::LANE_ENV
+    );
+}
+
+/// AVX2 arm of [`absmax`](super::absmax): 8-wide `andnot(-0.0)` + `max`.
+pub(super) fn absmax(xs: &[f32]) -> f32 {
+    require_avx2();
+    // SAFETY: AVX2 presence was just asserted by `require_avx2`,
+    // satisfying the kernel's target-feature contract; the in-bounds
+    // reasoning lives on the kernel itself.
+    unsafe { absmax_avx2(xs) }
+}
+
+// SAFETY: caller must guarantee AVX2 is available (the safe wrapper
+// asserts it); every 8-wide `loadu` reads xs[i..i+8] under the
+// `i + 8 <= xs.len()` guard and tolerates any alignment.
+#[target_feature(enable = "avx2")]
+unsafe fn absmax_avx2(xs: &[f32]) -> f32 {
+    let signbit = _mm256_set1_ps(-0.0);
+    let mut m = _mm256_setzero_ps();
+    let mut i = 0usize;
+    while i + 8 <= xs.len() {
+        let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+        m = _mm256_max_ps(m, _mm256_andnot_ps(signbit, v));
+        i += 8;
+    }
+    // horizontal max: 256 → 128 → scalar (max is order-insensitive)
+    let m4 = _mm_max_ps(_mm256_castps256_ps128(m), _mm256_extractf128_ps::<1>(m));
+    let m4 = _mm_max_ps(m4, _mm_movehl_ps(m4, m4));
+    let m4 = _mm_max_ss(m4, _mm_shuffle_ps::<0x55>(m4, m4));
+    let mut r = _mm_cvtss_f32(m4);
+    for &v in &xs[i..] {
+        r = r.max(v.abs());
+    }
+    r
+}
+
+/// AVX2 arm of [`all_finite`](super::all_finite): 8-wide `v * 0.0`
+/// accumulation.
+pub(super) fn all_finite(xs: &[f32]) -> bool {
+    require_avx2();
+    // SAFETY: AVX2 presence was just asserted by `require_avx2`.
+    unsafe { all_finite_avx2(xs) }
+}
+
+// SAFETY: caller must guarantee AVX2 (the safe wrapper asserts it);
+// unaligned 8-wide loads stay in bounds via the `i + 8 <= xs.len()`
+// loop guard.
+#[target_feature(enable = "avx2")]
+unsafe fn all_finite_avx2(xs: &[f32]) -> bool {
+    let zero = _mm256_setzero_ps();
+    let mut acc = zero;
+    let mut i = 0usize;
+    while i + 8 <= xs.len() {
+        let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(v, zero));
+        i += 8;
+    }
+    // the sum is ±0.0 iff every lane was finite; add order is
+    // irrelevant for that predicate (±0.0 sums stay ±0.0, NaN sticks)
+    let a = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps::<1>(acc));
+    let a = _mm_add_ps(a, _mm_movehl_ps(a, a));
+    let a = _mm_add_ss(a, _mm_shuffle_ps::<0x55>(a, a));
+    let mut s = _mm_cvtss_f32(a);
+    for &v in &xs[i..] {
+        s += v * 0.0;
+    }
+    s == 0.0
+}
+
+/// AVX2 arm of [`normalize_into`](super::normalize_into): 8-wide
+/// broadcast multiply.
+pub(super) fn normalize_into(xs: &[f32], inv: f32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    require_avx2();
+    // SAFETY: AVX2 presence was just asserted by `require_avx2`.
+    unsafe { normalize_into_avx2(xs, inv, out) }
+}
+
+// SAFETY: caller must guarantee AVX2 (the safe wrapper asserts it);
+// loads from `xs` and stores to `out` cover lanes [i, i+8) under
+// `i + 8 <= xs.len()` with `out.len() == xs.len()` (debug-asserted by
+// the wrapper's caller contract).
+#[target_feature(enable = "avx2")]
+unsafe fn normalize_into_avx2(xs: &[f32], inv: f32, out: &mut [f32]) {
+    let iv = _mm256_set1_ps(inv);
+    let mut i = 0usize;
+    while i + 8 <= xs.len() {
+        let v = _mm256_loadu_ps(xs.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(v, iv));
+        i += 8;
+    }
+    for (o, &v) in out[i..].iter_mut().zip(&xs[i..]) {
+        *o = v * inv;
+    }
+}
+
+/// AVX2 arm of [`count_below_mids`](super::count_below_mids).
+///
+/// Lane layout: 32 elements per group held in four f32x8 registers;
+/// per midpoint, four 8-wide `LT_OQ` masks are narrowed i32 → i16 → i8
+/// (saturating packs are exact on 0/-1 masks) and subtracted from a
+/// 32-lane u8 accumulator. The 256-bit packs interleave per 128-bit
+/// lane, but identically on every midpoint iteration, so one dword
+/// permute after the loop restores element order. The sub-32 tail
+/// reuses the SSE2 kernel (16-wide + scalar).
+pub(super) fn count_below_mids(mids: &[f32], xs: &[f32], codes: &mut [u8]) {
+    debug_assert_eq!(xs.len(), codes.len());
+    debug_assert!(mids.len() <= 255, "count must fit a u8 lane");
+    require_avx2();
+    // SAFETY: AVX2 presence was just asserted by `require_avx2`.
+    unsafe { count_below_mids_avx2(mids, xs, codes) }
+}
+
+// SAFETY: caller must guarantee AVX2 (the safe wrapper asserts it);
+// each iteration reads xs[i..i+32] and writes codes[i..i+32] under
+// `i + 32 <= xs.len()` with `codes.len() == xs.len()` (debug-asserted
+// by the wrapper); unaligned load/store intrinsics tolerate any
+// alignment.
+#[target_feature(enable = "avx2")]
+unsafe fn count_below_mids_avx2(mids: &[f32], xs: &[f32], codes: &mut [u8]) {
+    // The two pack stages leave the 32 accumulated bytes as dwords
+    // [e0-3, e8-11, e16-19, e24-27 | e4-7, e12-15, e20-23, e28-31];
+    // gathering dwords [0,4,1,5,2,6,3,7] restores element order.
+    let fix = _mm256_setr_epi32(0, 4, 1, 5, 2, 6, 3, 7);
+    let mut i = 0usize;
+    while i + 32 <= xs.len() {
+        let x0 = _mm256_loadu_ps(xs.as_ptr().add(i));
+        let x1 = _mm256_loadu_ps(xs.as_ptr().add(i + 8));
+        let x2 = _mm256_loadu_ps(xs.as_ptr().add(i + 16));
+        let x3 = _mm256_loadu_ps(xs.as_ptr().add(i + 24));
+        let mut acc = _mm256_setzero_si256();
+        for &m in mids {
+            let mv = _mm256_set1_ps(m);
+            let c0 = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(mv, x0));
+            let c1 = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(mv, x1));
+            let c2 = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(mv, x2));
+            let c3 = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(mv, x3));
+            let lo = _mm256_packs_epi32(c0, c1);
+            let hi = _mm256_packs_epi32(c2, c3);
+            // 32 bytes of 0x00 / 0xFF; subtracting adds 1 per hit
+            acc = _mm256_sub_epi8(acc, _mm256_packs_epi16(lo, hi));
+        }
+        let fixed = _mm256_permutevar8x32_epi32(acc, fix);
+        _mm256_storeu_si256(codes.as_mut_ptr().add(i) as *mut __m256i, fixed);
+        i += 32;
+    }
+    super::sse2::count_below_mids(mids, &xs[i..], &mut codes[i..]);
+}
+
+/// AVX2 4-bit pack: 32 codes → 16 bytes per step (same nibble algebra
+/// as the SSE2 lane, one qword permute to undo the `packus` lane
+/// interleave before the 16-byte store).
+pub(super) fn pack4(codes: &[u8]) -> Vec<u8> {
+    require_avx2();
+    // SAFETY: AVX2 presence was just asserted by `require_avx2`.
+    unsafe { pack4_avx2(codes) }
+}
+
+// SAFETY: caller must guarantee AVX2 (the safe wrapper asserts it);
+// reads codes[ci..ci+32] under the `ci + 32 <= codes.len()` guard and
+// stores 16 bytes at out[ci/2..ci/2+16], in bounds because out holds
+// ceil(codes.len()/2) >= ci/2 + 16 bytes for every guarded ci.
+#[target_feature(enable = "avx2")]
+unsafe fn pack4_avx2(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    let lomask = _mm256_set1_epi16(0x00FF);
+    let mut ci = 0usize;
+    while ci + 32 <= codes.len() {
+        let v = _mm256_loadu_si256(codes.as_ptr().add(ci) as *const __m256i);
+        let even = _mm256_and_si256(v, lomask);
+        let odd = _mm256_srli_epi16::<8>(v);
+        let pair = _mm256_or_si256(even, _mm256_slli_epi16::<4>(odd));
+        let b = _mm256_packus_epi16(pair, _mm256_setzero_si256());
+        // packus packs per 128-bit lane: qwords are [p0, 0, p1, 0] —
+        // pull qword 2 next to qword 0, then store the low 16 bytes
+        let packed = _mm256_permute4x64_epi64::<0b0000_1000>(b);
+        _mm_storeu_si128(
+            out.as_mut_ptr().add(ci / 2) as *mut __m128i,
+            _mm256_castsi256_si128(packed),
+        );
+        ci += 32;
+    }
+    for (o, c) in out[ci / 2..].iter_mut().zip(codes[ci..].chunks(2)) {
+        *o = c[0] | (c.get(1).copied().unwrap_or(0) << 4);
+    }
+    out
+}
+
+/// AVX2 4-bit unpack: 16 bytes → 32 codes per step (`cvtepu8_epi16` is
+/// order-preserving, so no permute is needed on this direction).
+pub(super) fn unpack4(packed: &[u8], out: &mut [u8]) {
+    require_avx2();
+    // SAFETY: AVX2 presence was just asserted by `require_avx2`.
+    unsafe { unpack4_avx2(packed, out) }
+}
+
+// SAFETY: caller must guarantee AVX2 (the safe wrapper asserts it);
+// each step reads 16 bytes at packed[i/2] and writes out[i..i+32]
+// under `i + 32 <= out.len()`; callers pass packed.len() >=
+// ceil(out.len()/2) (`packed_len`), so the 16-byte load at
+// i/2 <= out.len()/2 - 16 stays in bounds.
+#[target_feature(enable = "avx2")]
+unsafe fn unpack4_avx2(packed: &[u8], out: &mut [u8]) {
+    let nib = _mm256_set1_epi16(0x000F);
+    let mut i = 0usize;
+    while i + 32 <= out.len() {
+        let p = _mm_loadu_si128(packed.as_ptr().add(i / 2) as *const __m128i);
+        let w = _mm256_cvtepu8_epi16(p);
+        let lo = _mm256_and_si256(w, nib);
+        let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(w), nib);
+        let o = _mm256_or_si256(lo, _mm256_slli_epi16::<8>(hi));
+        _mm256_storeu_si256(out.as_mut_ptr().add(i) as *mut __m256i, o);
+        i += 32;
+    }
+    super::sse2::unpack4(&packed[i / 2..], &mut out[i..]);
+}
+
+/// AVX2 arm of [`decode_block`](super::decode_block): a real 8-wide
+/// `i32gather` over the 256-entry table plus an 8-wide scale multiply.
+pub(super) fn decode_block(codes: &[u8], table: &[f32; 256], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    require_avx2();
+    // SAFETY: AVX2 presence was just asserted by `require_avx2`.
+    unsafe { decode_block_avx2(codes, table, scale, out) }
+}
+
+// SAFETY: caller must guarantee AVX2 (the safe wrapper asserts it);
+// the gather indexes `table[0..256]` with zero-extended u8 codes
+// (cannot exceed 255), each 8-byte code load and 8-wide store is
+// guarded by `i + 8 <= codes.len()` with `out.len() == codes.len()`
+// (debug-asserted by the wrapper).
+#[target_feature(enable = "avx2")]
+unsafe fn decode_block_avx2(codes: &[u8], table: &[f32; 256], scale: f32, out: &mut [f32]) {
+    let sv = _mm256_set1_ps(scale);
+    let mut i = 0usize;
+    while i + 8 <= codes.len() {
+        let idx8 = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+        let idx = _mm256_cvtepu8_epi32(idx8);
+        let g = _mm256_i32gather_ps::<4>(table.as_ptr(), idx);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(g, sv));
+        i += 8;
+    }
+    for (o, &c) in out[i..].iter_mut().zip(&codes[i..]) {
+        *o = table[c as usize] * scale;
+    }
+}

@@ -1,0 +1,713 @@
+//! Explicit SIMD lanes for the quant hot loops (`--features simd`): a
+//! runtime-feature-detected **lane registry** with one-time cached
+//! dispatch.
+//!
+//! Every kernel here is a *bit-identical* rewrite of the corresponding
+//! chunked kernel in [`blockwise`](super::blockwise) /
+//! [`pack`](super::pack) / [`Boundaries::nearest_block`] — the property
+//! suite asserts scalar == chunked == every detected lane (N-way) at
+//! every bitwidth, mapping, block size, and odd length, so enabling the
+//! feature (or hitting a different host CPU) can never change codes,
+//! scales, packed bytes, or decoded values.
+//!
+//! Registry model (stable Rust — no nightly `portable_simd`):
+//!  * [`Lane`] names one kernel backend; [`detected_lanes`] probes the
+//!    host once per call ([`Lane::Scalar`] always, SSE2 on x86_64 as the
+//!    baseline ISA, AVX2 behind `is_x86_feature_detected!`, NEON on
+//!    aarch64 as the baseline ISA).
+//!  * [`active_lane`] resolves the dispatch lane exactly once per
+//!    process (`OnceLock`): the best detected lane, unless the
+//!    [`LANE_ENV`] env override pins one (unknown / host-unsupported
+//!    names are an error, surfaced cleanly by the CLI via
+//!    [`lane_from_env`]).
+//!  * Every public kernel has a `*_with`/`*_lane` twin taking an
+//!    explicit [`Lane`], which is how the N-way property suite and the
+//!    `quant_simd` harness exercise lanes the dispatcher would not pick.
+//!  * **2/1-bit pack lanes** are u64 SWAR (shift-mask folds packing 8
+//!    codes per word) shared by every vector lane — portable and
+//!    branch-free. [`Lane::Scalar`] bypasses them too: it is the pure
+//!    chunked fallback, kept dispatchable so CI can force the reference
+//!    arms through the very same call sites.
+//!
+//! Why SIMD can be exact here: the encode pipeline is `abs` / `max` /
+//! `mul` / `cmplt` / integer adds — none of which reassociate rounding
+//! (f32 max is order-insensitive for finite inputs, and non-finite
+//! blocks are rejected before the fold is used). The counting kernel
+//! computes `#{mids strictly below x}` exactly like the chunked lane,
+//! which is exactly `partition_point(|m| m < x)` — tie semantics
+//! included. The same kernel also powers the stochastic-rounding
+//! bracket search (`Boundaries::stochastic_block`), counting codebook
+//! entries instead of midpoints, so SR encodes vectorize without
+//! touching the seeded RNG draw order.
+//!
+//! Obligations for a future lane (AVX-512, SVE, …): implement the seven
+//! per-arch kernels (`absmax`, `all_finite`, `normalize_into`,
+//! `count_below_mids`, `pack4`, `unpack4`, `decode_block`) in a new
+//! `simd/<lane>.rs`, add the variant + detection + dispatch arms here,
+//! add the module to `shampoo-lint`'s unsafe allowlist, and the N-way
+//! property suite picks it up from [`detected_lanes`] automatically —
+//! bit-identity is the only acceptance bar.
+//!
+//! [`Boundaries::nearest_block`]: super::codebook::Boundaries::nearest_block
+
+use super::pack::{pack_bits_chunked, packed_len, unpack_bits_into_chunked};
+
+/// 256-bit AVX2 kernels (runtime-detected, never part of the x86_64
+/// baseline — see the module's safety pattern).
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+/// 128-bit NEON kernels (part of the aarch64 baseline ISA).
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+/// 128-bit SSE2 kernels (part of the x86_64 baseline ISA).
+#[cfg(target_arch = "x86_64")]
+pub mod sse2;
+
+// ---------------------------------------------------------------------------
+// lane registry
+// ---------------------------------------------------------------------------
+
+/// Env var that pins the dispatch lane: `scalar`, `sse2`, `avx2`, or
+/// `neon` (case-insensitive). Unknown names, or lanes the host cannot
+/// run, are an error — see [`lane_from_env`].
+pub const LANE_ENV: &str = "SHAMPOO4_SIMD_LANE";
+
+/// One dispatchable kernel backend. All variants exist on every arch so
+/// override parsing and error messages stay uniform; [`detected_lanes`]
+/// is the source of truth for what the host can actually run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Pure scalar/chunked reference arms — always available, and kept
+    /// dispatchable so forced-lane CI legs exercise the fallback paths.
+    Scalar,
+    /// 128-bit SSE2 lanes — the x86_64 baseline ISA, no detection needed.
+    Sse2,
+    /// 256-bit AVX2 lanes — selected via `is_x86_feature_detected!`.
+    Avx2,
+    /// 128-bit NEON lanes — the aarch64 baseline ISA, no detection needed.
+    Neon,
+}
+
+impl Lane {
+    /// Lane name as accepted by [`LANE_ENV`] and recorded in bench rows.
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Scalar => "scalar",
+            Lane::Sse2 => "sse2",
+            Lane::Avx2 => "avx2",
+            Lane::Neon => "neon",
+        }
+    }
+
+    /// Parse a lane name (case-insensitive). `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Lane> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Lane::Scalar),
+            "sse2" => Some(Lane::Sse2),
+            "avx2" => Some(Lane::Avx2),
+            "neon" => Some(Lane::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Lane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Every lane the host can run, in ascending preference order.
+/// [`Lane::Scalar`] is always first; the last entry is what
+/// [`active_lane`] picks absent an override. The N-way property suite
+/// iterates this list, so a new detected lane is automatically under
+/// the bit-identity contract.
+pub fn detected_lanes() -> Vec<Lane> {
+    let mut lanes = vec![Lane::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        lanes.push(Lane::Sse2);
+        if std::arch::is_x86_feature_detected!("avx2") {
+            lanes.push(Lane::Avx2);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    lanes.push(Lane::Neon);
+    lanes
+}
+
+/// Validate a would-be override name against the host's detected lanes.
+fn validate_lane_name(raw: &str) -> Result<Lane, String> {
+    let lane = Lane::parse(raw).ok_or_else(|| {
+        format!("{LANE_ENV}={raw:?} is not a lane name (expected scalar, sse2, avx2, or neon)")
+    })?;
+    let lanes = detected_lanes();
+    if !lanes.contains(&lane) {
+        let names: Vec<&str> = lanes.iter().map(|l| l.name()).collect();
+        return Err(format!(
+            "{LANE_ENV}={} is unsupported on this host (detected lanes: {})",
+            lane.name(),
+            names.join(", ")
+        ));
+    }
+    Ok(lane)
+}
+
+/// Read the [`LANE_ENV`] override: `Ok(None)` when unset or empty,
+/// `Ok(Some(lane))` for a valid host-supported lane, `Err(message)` for
+/// an unknown name or a lane this host cannot run. The CLI calls this
+/// before training so a bad override is a clean error, not a panic.
+pub fn lane_from_env() -> Result<Option<Lane>, String> {
+    let raw = match std::env::var(LANE_ENV) {
+        Ok(v) => v,
+        Err(_) => return Ok(None),
+    };
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Ok(None);
+    }
+    validate_lane_name(raw).map(Some)
+}
+
+/// The lane every non-`_with` kernel wrapper dispatches through: the
+/// best detected lane, or the [`LANE_ENV`] override. Resolved once and
+/// cached for the process lifetime, so the hot loops pay one atomic
+/// load, not a CPUID probe.
+///
+/// # Panics
+/// Panics if [`LANE_ENV`] names an unknown or host-unsupported lane.
+/// Front ends should validate with [`lane_from_env`] first to turn that
+/// into a clean error.
+pub fn active_lane() -> Lane {
+    static ACTIVE: std::sync::OnceLock<Lane> = std::sync::OnceLock::new();
+    *ACTIVE.get_or_init(|| match lane_from_env() {
+        Ok(Some(forced)) => forced,
+        Ok(None) => *detected_lanes()
+            .last()
+            .expect("detected_lanes always contains Lane::Scalar"),
+        Err(msg) => panic!("{msg}"),
+    })
+}
+
+/// Name of the active lane backend, for bench/JSON provenance.
+pub fn simd_arch() -> &'static str {
+    match active_lane() {
+        Lane::Scalar => "scalar",
+        Lane::Sse2 => "sse2+swar",
+        Lane::Avx2 => "avx2+swar",
+        Lane::Neon => "neon+swar",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 block lanes: absmax, finiteness, normalize
+// ---------------------------------------------------------------------------
+
+/// Max |x| over the slice (0.0 for an empty slice), on [`active_lane`].
+/// Identical to the scalar `fold(0.0, |m, v| m.max(v.abs()))` for finite
+/// inputs — callers must reject non-finite blocks (see [`all_finite`])
+/// before trusting it.
+pub fn absmax(xs: &[f32]) -> f32 {
+    absmax_with(active_lane(), xs)
+}
+
+/// [`absmax`] on an explicit lane (the N-way suite and the harness
+/// force lanes this way).
+pub fn absmax_with(lane: Lane, xs: &[f32]) -> f32 {
+    match lane {
+        Lane::Scalar => absmax_scalar(xs),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Sse2 => sse2::absmax(xs),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => avx2::absmax(xs),
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => neon::absmax(xs),
+        _ => absmax_scalar(xs),
+    }
+}
+
+fn absmax_scalar(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+}
+
+/// True iff every element is finite, on [`active_lane`]. Branch-free:
+/// accumulates `v * 0.0` (exactly ±0.0 for finite `v`, NaN for ±Inf/NaN
+/// — a fold LLVM cannot constant-fold away without fast-math) and tests
+/// the sum against 0.0.
+pub fn all_finite(xs: &[f32]) -> bool {
+    all_finite_with(active_lane(), xs)
+}
+
+/// [`all_finite`] on an explicit lane.
+pub fn all_finite_with(lane: Lane, xs: &[f32]) -> bool {
+    match lane {
+        Lane::Scalar => all_finite_scalar(xs),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Sse2 => sse2::all_finite(xs),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => avx2::all_finite(xs),
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => neon::all_finite(xs),
+        _ => all_finite_scalar(xs),
+    }
+}
+
+fn all_finite_scalar(xs: &[f32]) -> bool {
+    let mut s = 0.0f32;
+    for &v in xs {
+        s += v * 0.0;
+    }
+    s == 0.0
+}
+
+/// `out[i] = xs[i] * inv` — the per-block normalize lane, on
+/// [`active_lane`]. IEEE multiply is elementwise, so every arm is
+/// bit-identical to the scalar loop.
+pub fn normalize_into(xs: &[f32], inv: f32, out: &mut [f32]) {
+    normalize_into_with(active_lane(), xs, inv, out)
+}
+
+/// [`normalize_into`] on an explicit lane.
+pub fn normalize_into_with(lane: Lane, xs: &[f32], inv: f32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    match lane {
+        Lane::Scalar => normalize_scalar(xs, inv, out),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Sse2 => sse2::normalize_into(xs, inv, out),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => avx2::normalize_into(xs, inv, out),
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => neon::normalize_into(xs, inv, out),
+        _ => normalize_scalar(xs, inv, out),
+    }
+}
+
+fn normalize_scalar(xs: &[f32], inv: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(xs) {
+        *o = v * inv;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// counting lane (nearest-code + stochastic bracket search)
+// ---------------------------------------------------------------------------
+
+/// `codes[i] = #{m in mids : m < xs[i]}` on [`active_lane`] — the
+/// strict-below counting kernel behind both the nearest-code encode
+/// (every book width up to 255 midpoints, i.e. 8-bit books, before the
+/// duplicate-run remap) and the stochastic-rounding bracket search
+/// (counting codebook entries). The vectorized sweeps amortize each
+/// midpoint across 16 (SSE2/NEON) or 32 (AVX2) elements, so they beat
+/// the scalar binary search even for wide books where the scalar
+/// counting arm does not.
+pub fn count_below_mids(mids: &[f32], xs: &[f32], codes: &mut [u8]) {
+    count_below_mids_with(active_lane(), mids, xs, codes)
+}
+
+/// [`count_below_mids`] on an explicit lane.
+pub fn count_below_mids_with(lane: Lane, mids: &[f32], xs: &[f32], codes: &mut [u8]) {
+    debug_assert_eq!(xs.len(), codes.len());
+    debug_assert!(mids.len() <= 255, "count must fit a u8 lane");
+    match lane {
+        Lane::Scalar => count_below_mids_scalar(mids, xs, codes),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Sse2 => sse2::count_below_mids(mids, xs, codes),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => avx2::count_below_mids(mids, xs, codes),
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => neon::count_below_mids(mids, xs, codes),
+        _ => count_below_mids_scalar(mids, xs, codes),
+    }
+}
+
+pub(super) fn count_below_mids_scalar(mids: &[f32], xs: &[f32], codes: &mut [u8]) {
+    for (c, &x) in codes.iter_mut().zip(xs) {
+        let mut n = 0u8;
+        for &m in mids {
+            n += (m < x) as u8;
+        }
+        *c = n;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pack / unpack lanes
+// ---------------------------------------------------------------------------
+
+/// SIMD arm of [`pack_bits`](super::pack::pack_bits) on
+/// [`active_lane`]: byte-for-byte identical output (the property suite
+/// asserts it against both the chunked fast paths and the generic
+/// bit-cursor loop).
+pub fn pack_bits_simd(codes: &[u8], bits: u32) -> Vec<u8> {
+    pack_bits_lane(active_lane(), codes, bits)
+}
+
+/// [`pack_bits_simd`] on an explicit lane. [`Lane::Scalar`] routes every
+/// width through the chunked reference; vector lanes share the u64 SWAR
+/// 2/1-bit folds and dispatch the nibble lane per arch.
+pub fn pack_bits_lane(lane: Lane, codes: &[u8], bits: u32) -> Vec<u8> {
+    assert!((1..=8).contains(&bits));
+    if lane == Lane::Scalar {
+        return pack_bits_chunked(codes, bits);
+    }
+    match bits {
+        8 => codes.to_vec(),
+        4 => pack4_lane(lane, codes),
+        2 => pack2(codes),
+        1 => pack1(codes),
+        _ => pack_bits_chunked(codes, bits),
+    }
+}
+
+/// SIMD arm of [`unpack_bits_into`](super::pack::unpack_bits_into) on
+/// [`active_lane`].
+pub fn unpack_bits_into_simd(packed: &[u8], bits: u32, out: &mut [u8]) {
+    unpack_bits_into_lane(active_lane(), packed, bits, out)
+}
+
+/// [`unpack_bits_into_simd`] on an explicit lane.
+pub fn unpack_bits_into_lane(lane: Lane, packed: &[u8], bits: u32, out: &mut [u8]) {
+    assert!((1..=8).contains(&bits));
+    if lane == Lane::Scalar {
+        return unpack_bits_into_chunked(packed, bits, out);
+    }
+    match bits {
+        8 => out.copy_from_slice(&packed[..out.len()]),
+        4 => unpack4_lane(lane, packed, out),
+        2 => unpack2(packed, out),
+        1 => unpack1(packed, out),
+        _ => unpack_bits_into_chunked(packed, bits, out),
+    }
+}
+
+fn pack4_lane(lane: Lane, codes: &[u8]) -> Vec<u8> {
+    match lane {
+        #[cfg(target_arch = "x86_64")]
+        Lane::Sse2 => sse2::pack4(codes),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => avx2::pack4(codes),
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => neon::pack4(codes),
+        _ => pack4_scalar(codes),
+    }
+}
+
+fn unpack4_lane(lane: Lane, packed: &[u8], out: &mut [u8]) {
+    match lane {
+        #[cfg(target_arch = "x86_64")]
+        Lane::Sse2 => sse2::unpack4(packed, out),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => avx2::unpack4(packed, out),
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => neon::unpack4(packed, out),
+        _ => unpack4_scalar(packed, out),
+    }
+}
+
+/// Scalar 4-bit pack — the shared tail loop, doubled as the full
+/// implementation on arches with no vector nibble lane.
+pub(super) fn pack4_scalar(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    for (o, c) in out.iter_mut().zip(codes.chunks(2)) {
+        *o = c[0] | (c.get(1).copied().unwrap_or(0) << 4);
+    }
+    out
+}
+
+/// Scalar 4-bit unpack (see [`pack4_scalar`]).
+pub(super) fn unpack4_scalar(packed: &[u8], out: &mut [u8]) {
+    for (c, &b) in out.chunks_mut(2).zip(packed) {
+        c[0] = b & 0x0F;
+        if let Some(hi) = c.get_mut(1) {
+            *hi = b >> 4;
+        }
+    }
+}
+
+/// 2-bit pack: u64 SWAR, 8 codes (one word) → 2 bytes. Two shift-mask
+/// folds gather the 2-bit fields: bytes → nibbles → packed bytes.
+/// Portable — shared by every vector lane.
+fn pack2(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(4)];
+    let mut ci = 0usize;
+    let mut oi = 0usize;
+    while ci + 8 <= codes.len() {
+        let x = u64::from_le_bytes(codes[ci..ci + 8].try_into().unwrap());
+        let x = (x | (x >> 6)) & 0x000F_000F_000F_000F;
+        let x = (x | (x >> 12)) & 0x0000_00FF_0000_00FF;
+        out[oi] = x as u8;
+        out[oi + 1] = (x >> 32) as u8;
+        ci += 8;
+        oi += 2;
+    }
+    for (o, c) in out[oi..].iter_mut().zip(codes[ci..].chunks(4)) {
+        for (k, &v) in c.iter().enumerate() {
+            *o |= v << (2 * k);
+        }
+    }
+    out
+}
+
+/// 2-bit unpack: inverse SWAR spread, 2 bytes → 8 codes.
+fn unpack2(packed: &[u8], out: &mut [u8]) {
+    let mut ci = 0usize;
+    let mut pi = 0usize;
+    while ci + 8 <= out.len() {
+        let y = (packed[pi] as u64) | ((packed[pi + 1] as u64) << 32);
+        let y = (y | (y << 12)) & 0x000F_000F_000F_000F;
+        let y = (y | (y << 6)) & 0x0303_0303_0303_0303;
+        out[ci..ci + 8].copy_from_slice(&y.to_le_bytes());
+        ci += 8;
+        pi += 2;
+    }
+    for (c, &b) in out[ci..].chunks_mut(4).zip(&packed[pi..]) {
+        for (k, v) in c.iter_mut().enumerate() {
+            *v = (b >> (2 * k)) & 0x03;
+        }
+    }
+}
+
+/// 1-bit pack: the classic multiply-gather — 8 LSBs fan out to bits
+/// 56..63 of the product with no cross-term collisions, one byte per word.
+fn pack1(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(8)];
+    let mut ci = 0usize;
+    let mut oi = 0usize;
+    while ci + 8 <= codes.len() {
+        let x = u64::from_le_bytes(codes[ci..ci + 8].try_into().unwrap()) & 0x0101_0101_0101_0101;
+        out[oi] = (x.wrapping_mul(0x0102_0408_1020_4080) >> 56) as u8;
+        ci += 8;
+        oi += 1;
+    }
+    for (o, c) in out[oi..].iter_mut().zip(codes[ci..].chunks(8)) {
+        for (k, &v) in c.iter().enumerate() {
+            *o |= v << k;
+        }
+    }
+    out
+}
+
+/// 1-bit unpack: broadcast the byte to all 8 lanes, isolate bit k in
+/// byte k, then normalize each nonzero byte to 1 with a carryless
+/// `+0x7F >> 7` (a set bit ≤ 0x80 never carries across its byte).
+fn unpack1(packed: &[u8], out: &mut [u8]) {
+    let mut ci = 0usize;
+    let mut pi = 0usize;
+    while ci + 8 <= out.len() {
+        let spread =
+            (packed[pi] as u64).wrapping_mul(0x0101_0101_0101_0101) & 0x8040_2010_0804_0201;
+        let y = (spread.wrapping_add(0x7F7F_7F7F_7F7F_7F7F) >> 7) & 0x0101_0101_0101_0101;
+        out[ci..ci + 8].copy_from_slice(&y.to_le_bytes());
+        ci += 8;
+        pi += 1;
+    }
+    for (c, &b) in out[ci..].chunks_mut(8).zip(&packed[pi..]) {
+        for (k, v) in c.iter_mut().enumerate() {
+            *v = (b >> k) & 0x01;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// decode lane
+// ---------------------------------------------------------------------------
+
+/// Decode lane on [`active_lane`]: `out[i] = table[codes[i]] * scale`
+/// for one block. IEEE multiply is elementwise, so every arm is
+/// bit-identical to the chunked table loop.
+pub fn decode_block(codes: &[u8], table: &[f32; 256], scale: f32, out: &mut [f32]) {
+    decode_block_with(active_lane(), codes, table, scale, out)
+}
+
+/// [`decode_block`] on an explicit lane.
+pub fn decode_block_with(
+    lane: Lane,
+    codes: &[u8],
+    table: &[f32; 256],
+    scale: f32,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(codes.len(), out.len());
+    match lane {
+        Lane::Scalar => decode_block_scalar(codes, table, scale, out),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Sse2 => sse2::decode_block(codes, table, scale, out),
+        #[cfg(target_arch = "x86_64")]
+        Lane::Avx2 => avx2::decode_block(codes, table, scale, out),
+        #[cfg(target_arch = "aarch64")]
+        Lane::Neon => neon::decode_block(codes, table, scale, out),
+        _ => decode_block_scalar(codes, table, scale, out),
+    }
+}
+
+fn decode_block_scalar(codes: &[u8], table: &[f32; 256], scale: f32, out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = table[c as usize] * scale;
+    }
+}
+
+/// Unpack a whole payload through the SIMD lanes (convenience mirror of
+/// [`unpack_bits`](super::pack::unpack_bits)).
+pub fn unpack_bits_simd(packed: &[u8], bits: u32, count: usize) -> Vec<u8> {
+    debug_assert!(packed.len() >= packed_len(count, bits));
+    let mut out = vec![0u8; count];
+    unpack_bits_into_simd(packed, bits, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn registry_reports_consistent_lanes() {
+        let lanes = detected_lanes();
+        assert_eq!(lanes[0], Lane::Scalar, "scalar is always detected");
+        let active = active_lane();
+        assert!(lanes.contains(&active), "active {active} not in {lanes:?}");
+        if let Ok(Some(forced)) = lane_from_env() {
+            assert_eq!(active, forced, "env override must win the dispatch");
+        }
+        for l in &lanes {
+            assert_eq!(Lane::parse(l.name()), Some(*l), "name/parse round-trip");
+        }
+        #[cfg(target_arch = "x86_64")]
+        assert!(lanes.contains(&Lane::Sse2), "sse2 is the x86_64 baseline");
+        #[cfg(target_arch = "aarch64")]
+        assert!(lanes.contains(&Lane::Neon), "neon is the aarch64 baseline");
+    }
+
+    #[test]
+    fn lane_override_validation() {
+        assert_eq!(Lane::parse("AVX2"), Some(Lane::Avx2));
+        assert_eq!(Lane::parse("mmx"), None);
+        assert!(validate_lane_name("warp9").is_err());
+        assert_eq!(validate_lane_name("scalar").unwrap(), Lane::Scalar);
+        #[cfg(target_arch = "x86_64")]
+        {
+            assert_eq!(validate_lane_name("SSE2").unwrap(), Lane::Sse2);
+            let err = validate_lane_name("neon").unwrap_err();
+            assert!(err.contains("unsupported on this host"), "{err}");
+            assert!(err.contains("detected lanes"), "{err}");
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            assert_eq!(validate_lane_name("neon").unwrap(), Lane::Neon);
+            assert!(validate_lane_name("sse2").is_err());
+        }
+    }
+
+    #[test]
+    fn absmax_and_finite_match_scalar_on_every_lane() {
+        let mut rng = Rng::new(11);
+        for lane in detected_lanes() {
+            for n in [0usize, 1, 3, 4, 5, 7, 8, 15, 16, 17, 31, 32, 33, 64, 100] {
+                let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let want = xs.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                assert_eq!(
+                    absmax_with(lane, &xs).to_bits(),
+                    want.to_bits(),
+                    "lane={lane} n={n}"
+                );
+                assert!(all_finite_with(lane, &xs), "lane={lane} n={n}");
+            }
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                for pos in [0usize, 3, 7, 31, 63] {
+                    let mut xs = vec![0.25f32; 64];
+                    xs[pos] = bad;
+                    assert!(!all_finite_with(lane, &xs), "lane={lane} bad={bad} pos={pos}");
+                }
+            }
+            // -0.0 stays finite and abs-es to +0.0
+            assert!(all_finite_with(lane, &[-0.0f32; 9]));
+            assert_eq!(absmax_with(lane, &[-0.0f32; 9]), 0.0);
+        }
+    }
+
+    #[test]
+    fn normalize_matches_scalar_on_every_lane() {
+        let mut rng = Rng::new(12);
+        for lane in detected_lanes() {
+            for n in [1usize, 4, 7, 31, 33, 64] {
+                let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                let inv = 0.371f32;
+                let mut a = vec![0.0f32; n];
+                normalize_into_with(lane, &xs, inv, &mut a);
+                for (av, &x) in a.iter().zip(&xs) {
+                    assert_eq!(av.to_bits(), (x * inv).to_bits(), "lane={lane} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
+    fn count_below_mids_matches_scalar_on_every_lane() {
+        let mut rng = Rng::new(13);
+        // 15 mids = a 4-bit book; 255 mids = the widest (8-bit) book, which
+        // the SIMD encode path routes through this kernel too. Lengths
+        // straddle the 16-wide (SSE2/NEON) and 32-wide (AVX2) group sizes.
+        for width in [15usize, 255] {
+            let mids: Vec<f32> = {
+                let mut m: Vec<f32> = (0..width).map(|_| rng.normal_f32()).collect();
+                m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                m
+            };
+            for lane in detected_lanes() {
+                for n in [0usize, 1, 15, 16, 17, 31, 32, 33, 63, 64, 100] {
+                    let xs: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+                    let mut got = vec![0u8; n];
+                    count_below_mids_with(lane, &mids, &xs, &mut got);
+                    for (&x, &c) in xs.iter().zip(&got) {
+                        let want = mids.iter().filter(|&&m| m < x).count() as u8;
+                        assert_eq!(c, want, "lane={lane} x={x} width={width}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // property sweep: too slow under Miri's interpreter
+    fn pack_lanes_match_chunked_all_widths_on_every_lane() {
+        let mut rng = Rng::new(14);
+        for lane in detected_lanes() {
+            for bits in [1u32, 2, 3, 4, 8] {
+                for n in [0usize, 1, 2, 7, 8, 15, 16, 17, 31, 32, 33, 63, 64, 129, 1000] {
+                    let codes: Vec<u8> =
+                        (0..n).map(|_| rng.below(1usize << bits) as u8).collect();
+                    let want = pack_bits_chunked(&codes, bits);
+                    let got = pack_bits_lane(lane, &codes, bits);
+                    assert_eq!(got, want, "pack lane={lane} bits={bits} n={n}");
+                    let mut back = vec![0u8; n];
+                    unpack_bits_into_lane(lane, &got, bits, &mut back);
+                    assert_eq!(back, codes, "unpack lane={lane} bits={bits} n={n}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_block_matches_scalar_on_every_lane() {
+        let mut rng = Rng::new(15);
+        let mut table = [0.0f32; 256];
+        for t in table.iter_mut().take(16) {
+            *t = rng.normal_f32();
+        }
+        for lane in detected_lanes() {
+            for n in [1usize, 3, 4, 5, 7, 8, 9, 64] {
+                let codes: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+                let mut out = vec![0.0f32; n];
+                decode_block_with(lane, &codes, &table, 1.7, &mut out);
+                for (o, &c) in out.iter().zip(&codes) {
+                    assert_eq!(
+                        o.to_bits(),
+                        (table[c as usize] * 1.7).to_bits(),
+                        "lane={lane} n={n}"
+                    );
+                }
+            }
+        }
+    }
+}

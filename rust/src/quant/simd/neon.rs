@@ -1,0 +1,205 @@
+//! 128-bit NEON kernels (`std::arch::aarch64`). NEON/ASIMD is part of
+//! the aarch64 baseline ISA, so — like the SSE2 lane — there is no
+//! runtime feature detection and no `target_feature` gating: the
+//! intrinsics are unconditionally sound to call, and every `unsafe`
+//! block only has in-bounds pointer arithmetic to justify.
+//!
+//! Bit-identity mirrors the SSE2 lane: abs/max/mul/cmp are elementwise
+//! or order-insensitive, and the counting kernel narrows its 0/all-ones
+//! masks with `vmovn` (plain low-half truncation), which is exact and —
+//! unlike the x86 saturating packs — order-preserving, so no permute
+//! fixup is needed.
+
+use std::arch::aarch64::*;
+
+/// NEON arm of [`absmax`](super::absmax): 4-wide `vabs` + `vmax` with a
+/// `vmaxv` horizontal reduction (max is order-insensitive).
+pub(super) fn absmax(xs: &[f32]) -> f32 {
+    let mut i = 0usize;
+    let mut r = 0.0f32;
+    if xs.len() >= 4 {
+        // SAFETY: NEON is part of the aarch64 baseline (no feature
+        // detection needed), and every `vld1q` reads 4 f32s at offset
+        // `i` with `i + 4 <= xs.len()` — always in bounds, and NEON
+        // loads tolerate any alignment.
+        unsafe {
+            let mut m = vdupq_n_f32(0.0);
+            while i + 4 <= xs.len() {
+                let v = vld1q_f32(xs.as_ptr().add(i));
+                m = vmaxq_f32(m, vabsq_f32(v));
+                i += 4;
+            }
+            r = vmaxvq_f32(m);
+        }
+    }
+    for &v in &xs[i..] {
+        r = r.max(v.abs());
+    }
+    r
+}
+
+/// NEON arm of [`all_finite`](super::all_finite): 4-wide `v * 0.0`
+/// accumulation (the sum is ±0.0 iff every lane was finite; add order
+/// is irrelevant for that predicate).
+pub(super) fn all_finite(xs: &[f32]) -> bool {
+    let mut i = 0usize;
+    let mut s = 0.0f32;
+    if xs.len() >= 4 {
+        // SAFETY: baseline NEON; unaligned 4-wide loads stay in bounds
+        // via the `i + 4 <= xs.len()` loop guard.
+        unsafe {
+            let zero = vdupq_n_f32(0.0);
+            let mut acc = zero;
+            while i + 4 <= xs.len() {
+                let v = vld1q_f32(xs.as_ptr().add(i));
+                acc = vaddq_f32(acc, vmulq_f32(v, zero));
+                i += 4;
+            }
+            s = vaddvq_f32(acc);
+        }
+    }
+    for &v in &xs[i..] {
+        s += v * 0.0;
+    }
+    s == 0.0
+}
+
+/// NEON arm of [`normalize_into`](super::normalize_into): 4-wide
+/// broadcast multiply.
+pub(super) fn normalize_into(xs: &[f32], inv: f32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let mut i = 0usize;
+    if xs.len() >= 4 {
+        // SAFETY: baseline NEON; loads from `xs` and stores to `out`
+        // cover lanes [i, i+4) with `i + 4 <= xs.len()` and
+        // `out.len() == xs.len()` (debug-asserted above).
+        unsafe {
+            let iv = vdupq_n_f32(inv);
+            while i + 4 <= xs.len() {
+                let v = vld1q_f32(xs.as_ptr().add(i));
+                vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(v, iv));
+                i += 4;
+            }
+        }
+    }
+    for (o, &v) in out[i..].iter_mut().zip(&xs[i..]) {
+        *o = v * inv;
+    }
+}
+
+/// NEON arm of [`count_below_mids`](super::count_below_mids).
+///
+/// Lane layout: 16 elements per group held in four f32x4 registers;
+/// per midpoint, four `vclt` masks (0 / all-ones u32) are narrowed
+/// u32 → u16 → u8 with `vmovn` (low-half truncation — exact on masks
+/// and order-preserving) and subtracted from a 16-lane u8 accumulator.
+/// The tail (< 16 elements) runs the same count arithmetic scalar.
+pub(super) fn count_below_mids(mids: &[f32], xs: &[f32], codes: &mut [u8]) {
+    debug_assert_eq!(xs.len(), codes.len());
+    debug_assert!(mids.len() <= 255, "count must fit a u8 lane");
+    let mut i = 0usize;
+    // SAFETY: baseline NEON; each iteration reads xs[i..i+16] and
+    // writes codes[i..i+16] under `i + 16 <= xs.len()` with
+    // `codes.len() == xs.len()` (debug-asserted above).
+    unsafe {
+        while i + 16 <= xs.len() {
+            let x0 = vld1q_f32(xs.as_ptr().add(i));
+            let x1 = vld1q_f32(xs.as_ptr().add(i + 4));
+            let x2 = vld1q_f32(xs.as_ptr().add(i + 8));
+            let x3 = vld1q_f32(xs.as_ptr().add(i + 12));
+            let mut acc = vdupq_n_u8(0);
+            for &m in mids {
+                let mv = vdupq_n_f32(m);
+                let c0 = vcltq_f32(mv, x0);
+                let c1 = vcltq_f32(mv, x1);
+                let c2 = vcltq_f32(mv, x2);
+                let c3 = vcltq_f32(mv, x3);
+                let lo = vcombine_u16(vmovn_u32(c0), vmovn_u32(c1));
+                let hi = vcombine_u16(vmovn_u32(c2), vmovn_u32(c3));
+                // 16 bytes of 0x00 / 0xFF; subtracting adds 1 per hit
+                let b = vcombine_u8(vmovn_u16(lo), vmovn_u16(hi));
+                acc = vsubq_u8(acc, b);
+            }
+            vst1q_u8(codes.as_mut_ptr().add(i), acc);
+            i += 16;
+        }
+    }
+    super::count_below_mids_scalar(mids, &xs[i..], &mut codes[i..]);
+}
+
+/// NEON 4-bit pack: 16 codes → 8 bytes per step (`vuzp` splits the
+/// even/odd code streams; `even | odd << 4` merges each pair).
+pub(super) fn pack4(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    let mut ci = 0usize;
+    // SAFETY: baseline NEON; reads codes[ci..ci+16] under the
+    // `ci + 16 <= codes.len()` guard and stores 8 bytes at
+    // out[ci/2..ci/2+8], in bounds because out holds
+    // ceil(codes.len()/2) >= ci/2 + 8 bytes for every guarded ci.
+    unsafe {
+        while ci + 16 <= codes.len() {
+            let v = vld1q_u8(codes.as_ptr().add(ci));
+            let even = vuzp1q_u8(v, v);
+            let odd = vuzp2q_u8(v, v);
+            let b = vorrq_u8(even, vshlq_n_u8::<4>(odd));
+            vst1_u8(out.as_mut_ptr().add(ci / 2), vget_low_u8(b));
+            ci += 16;
+        }
+    }
+    for (o, c) in out[ci / 2..].iter_mut().zip(codes[ci..].chunks(2)) {
+        *o = c[0] | (c.get(1).copied().unwrap_or(0) << 4);
+    }
+    out
+}
+
+/// NEON 4-bit unpack: 8 bytes → 16 codes per step (split nibbles, then
+/// `vzip` re-interleaves the low/high streams into element order).
+pub(super) fn unpack4(packed: &[u8], out: &mut [u8]) {
+    let mut i = 0usize;
+    // SAFETY: baseline NEON; each step reads 8 bytes at packed[i/2]
+    // and writes out[i..i+16] under `i + 16 <= out.len()`; callers
+    // pass packed.len() >= ceil(out.len()/2) (`packed_len`), so the
+    // 8-byte load at i/2 <= out.len()/2 - 8 stays in bounds.
+    unsafe {
+        while i + 16 <= out.len() {
+            let p = vld1_u8(packed.as_ptr().add(i / 2));
+            let lo = vand_u8(p, vdup_n_u8(0x0F));
+            let hi = vshr_n_u8::<4>(p);
+            let z = vcombine_u8(vzip1_u8(lo, hi), vzip2_u8(lo, hi));
+            vst1q_u8(out.as_mut_ptr().add(i), z);
+            i += 16;
+        }
+    }
+    super::unpack4_scalar(&packed[i / 2..], &mut out[i..]);
+}
+
+/// NEON arm of [`decode_block`](super::decode_block): the gather is
+/// scalar (no NEON table gather at 256 entries); the scale multiply
+/// runs 4-wide.
+pub(super) fn decode_block(codes: &[u8], table: &[f32; 256], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    let mut i = 0usize;
+    if codes.len() >= 4 {
+        // SAFETY: baseline NEON; the gather indexes `table[0..256]`
+        // with u8 codes (cannot exceed 255) and the 4-wide store to
+        // `out` is guarded by `i + 4 <= codes.len()` with
+        // `out.len() == codes.len()` (debug-asserted above).
+        unsafe {
+            let sv = vdupq_n_f32(scale);
+            while i + 4 <= codes.len() {
+                let g = [
+                    table[codes[i] as usize],
+                    table[codes[i + 1] as usize],
+                    table[codes[i + 2] as usize],
+                    table[codes[i + 3] as usize],
+                ];
+                let v = vld1q_f32(g.as_ptr());
+                vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(v, sv));
+                i += 4;
+            }
+        }
+    }
+    for (o, &c) in out[i..].iter_mut().zip(&codes[i..]) {
+        *o = table[c as usize] * scale;
+    }
+}

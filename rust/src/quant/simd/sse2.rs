@@ -1,0 +1,208 @@
+//! 128-bit SSE2 kernels (`std::arch::x86_64`). SSE2 is part of the
+//! x86_64 baseline ISA, so there is no runtime feature detection and no
+//! `target_feature` gating — the intrinsics are unconditionally sound to
+//! call; every `unsafe` block only has in-bounds pointer arithmetic to
+//! justify. Each kernel carries a scalar tail for sub-group lengths and
+//! is bit-identical to the scalar/chunked reference (asserted by the
+//! N-way property suite in the parent module).
+
+use std::arch::x86_64::*;
+
+/// SSE2 arm of [`absmax`](super::absmax): 4-wide `andnot(-0.0)` + `max`
+/// with a `movehl`/`shuffle` horizontal reduction.
+pub(super) fn absmax(xs: &[f32]) -> f32 {
+    let mut i = 0usize;
+    let mut r = 0.0f32;
+    if xs.len() >= 4 {
+        // SAFETY: SSE2 is part of the x86_64 baseline (no feature
+        // detection needed), and every `loadu` reads 4 f32s at offset
+        // `i` with `i + 4 <= xs.len()` — always in bounds, and `loadu`
+        // tolerates any alignment.
+        unsafe {
+            let signbit = _mm_set1_ps(-0.0);
+            let mut m = _mm_setzero_ps();
+            while i + 4 <= xs.len() {
+                let v = _mm_loadu_ps(xs.as_ptr().add(i));
+                m = _mm_max_ps(m, _mm_andnot_ps(signbit, v));
+                i += 4;
+            }
+            let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+            let m = _mm_max_ss(m, _mm_shuffle_ps::<0x55>(m, m));
+            r = _mm_cvtss_f32(m);
+        }
+    }
+    for &v in &xs[i..] {
+        r = r.max(v.abs());
+    }
+    r
+}
+
+/// SSE2 arm of [`all_finite`](super::all_finite): 4-wide `v * 0.0`
+/// accumulation (the sum is ±0.0 iff every lane was finite).
+pub(super) fn all_finite(xs: &[f32]) -> bool {
+    let mut i = 0usize;
+    let mut s = 0.0f32;
+    if xs.len() >= 4 {
+        // SAFETY: baseline SSE2; unaligned 4-wide loads stay in bounds
+        // via the `i + 4 <= xs.len()` loop guard.
+        unsafe {
+            let zero = _mm_setzero_ps();
+            let mut acc = zero;
+            while i + 4 <= xs.len() {
+                let v = _mm_loadu_ps(xs.as_ptr().add(i));
+                acc = _mm_add_ps(acc, _mm_mul_ps(v, zero));
+                i += 4;
+            }
+            let a = _mm_add_ps(acc, _mm_movehl_ps(acc, acc));
+            let a = _mm_add_ss(a, _mm_shuffle_ps::<0x55>(a, a));
+            s = _mm_cvtss_f32(a);
+        }
+    }
+    for &v in &xs[i..] {
+        s += v * 0.0;
+    }
+    s == 0.0
+}
+
+/// SSE2 arm of [`normalize_into`](super::normalize_into): 4-wide
+/// broadcast multiply.
+pub(super) fn normalize_into(xs: &[f32], inv: f32, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    let mut i = 0usize;
+    if xs.len() >= 4 {
+        // SAFETY: baseline SSE2; loads from `xs` and stores to `out`
+        // cover lanes [i, i+4) with `i + 4 <= xs.len()` and
+        // `out.len() == xs.len()` (debug-asserted above).
+        unsafe {
+            let iv = _mm_set1_ps(inv);
+            while i + 4 <= xs.len() {
+                let v = _mm_loadu_ps(xs.as_ptr().add(i));
+                _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_mul_ps(v, iv));
+                i += 4;
+            }
+        }
+    }
+    for (o, &v) in out[i..].iter_mut().zip(&xs[i..]) {
+        *o = v * inv;
+    }
+}
+
+/// SSE2 arm of [`count_below_mids`](super::count_below_mids).
+///
+/// Lane layout: 16 elements per group held in four f32x4 registers;
+/// per midpoint, four `cmplt` masks are narrowed `i32 → i16 → i8`
+/// (saturating packs are exact on 0/-1 masks) and subtracted from a
+/// 16-lane u8 accumulator, so one register holds all 16 running counts.
+/// The tail (< 16 elements) runs the same count arithmetic scalar.
+pub(super) fn count_below_mids(mids: &[f32], xs: &[f32], codes: &mut [u8]) {
+    debug_assert_eq!(xs.len(), codes.len());
+    debug_assert!(mids.len() <= 255, "count must fit a u8 lane");
+    let mut i = 0usize;
+    // SAFETY: baseline SSE2; each iteration reads xs[i..i+16] and
+    // writes codes[i..i+16] under `i + 16 <= xs.len()` with
+    // `codes.len() == xs.len()` (debug-asserted above); unaligned
+    // load/store intrinsics tolerate any alignment.
+    unsafe {
+        while i + 16 <= xs.len() {
+            let x0 = _mm_loadu_ps(xs.as_ptr().add(i));
+            let x1 = _mm_loadu_ps(xs.as_ptr().add(i + 4));
+            let x2 = _mm_loadu_ps(xs.as_ptr().add(i + 8));
+            let x3 = _mm_loadu_ps(xs.as_ptr().add(i + 12));
+            let mut acc = _mm_setzero_si128();
+            for &m in mids {
+                let mv = _mm_set1_ps(m);
+                let c0 = _mm_castps_si128(_mm_cmplt_ps(mv, x0));
+                let c1 = _mm_castps_si128(_mm_cmplt_ps(mv, x1));
+                let c2 = _mm_castps_si128(_mm_cmplt_ps(mv, x2));
+                let c3 = _mm_castps_si128(_mm_cmplt_ps(mv, x3));
+                let lo = _mm_packs_epi32(c0, c1);
+                let hi = _mm_packs_epi32(c2, c3);
+                // 16 bytes of 0x00 / 0xFF; subtracting adds 1 per hit
+                acc = _mm_sub_epi8(acc, _mm_packs_epi16(lo, hi));
+            }
+            _mm_storeu_si128(codes.as_mut_ptr().add(i) as *mut __m128i, acc);
+            i += 16;
+        }
+    }
+    super::count_below_mids_scalar(mids, &xs[i..], &mut codes[i..]);
+}
+
+/// SSE2 4-bit pack: 16 codes → 8 bytes per step. Each u16 lane holds an
+/// (even, odd) code pair; `even | odd << 4` stays below 256, so a
+/// saturating `packus` narrows the 8 lanes to the 8 output bytes.
+pub(super) fn pack4(codes: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; codes.len().div_ceil(2)];
+    let mut ci = 0usize;
+    // SAFETY: baseline SSE2; reads codes[ci..ci+16] under the
+    // `ci + 16 <= codes.len()` guard and stores 8 bytes at
+    // out[ci/2..ci/2+8], in bounds because out holds
+    // ceil(codes.len()/2) >= ci/2 + 8 bytes for every guarded ci.
+    unsafe {
+        let lomask = _mm_set1_epi16(0x00FF);
+        while ci + 16 <= codes.len() {
+            let v = _mm_loadu_si128(codes.as_ptr().add(ci) as *const __m128i);
+            let even = _mm_and_si128(v, lomask);
+            let odd = _mm_srli_epi16::<8>(v);
+            let pair = _mm_or_si128(even, _mm_slli_epi16::<4>(odd));
+            let b = _mm_packus_epi16(pair, _mm_setzero_si128());
+            _mm_storel_epi64(out.as_mut_ptr().add(ci / 2) as *mut __m128i, b);
+            ci += 16;
+        }
+    }
+    for (o, c) in out[ci / 2..].iter_mut().zip(codes[ci..].chunks(2)) {
+        *o = c[0] | (c.get(1).copied().unwrap_or(0) << 4);
+    }
+    out
+}
+
+/// SSE2 4-bit unpack: 8 bytes → 16 codes per step (zero-extend bytes to
+/// u16 lanes, split nibbles, re-interleave as `lo | hi << 8`).
+pub(super) fn unpack4(packed: &[u8], out: &mut [u8]) {
+    let mut i = 0usize;
+    // SAFETY: baseline SSE2; each step reads 8 bytes at packed[i/2]
+    // and writes out[i..i+16] under `i + 16 <= out.len()`; callers
+    // pass packed.len() >= ceil(out.len()/2) (`packed_len`), so the
+    // 8-byte load at i/2 <= out.len()/2 - 8 stays in bounds.
+    unsafe {
+        let nib = _mm_set1_epi16(0x000F);
+        while i + 16 <= out.len() {
+            let p = _mm_loadl_epi64(packed.as_ptr().add(i / 2) as *const __m128i);
+            let w = _mm_unpacklo_epi8(p, _mm_setzero_si128());
+            let lo = _mm_and_si128(w, nib);
+            let hi = _mm_and_si128(_mm_srli_epi16::<4>(w), nib);
+            let o = _mm_or_si128(lo, _mm_slli_epi16::<8>(hi));
+            _mm_storeu_si128(out.as_mut_ptr().add(i) as *mut __m128i, o);
+            i += 16;
+        }
+    }
+    super::unpack4_scalar(&packed[i / 2..], &mut out[i..]);
+}
+
+/// SSE2 arm of [`decode_block`](super::decode_block): the gather is
+/// scalar (SSE2 has no gather); the scale multiply runs 4-wide.
+pub(super) fn decode_block(codes: &[u8], table: &[f32; 256], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    let mut i = 0usize;
+    if codes.len() >= 4 {
+        // SAFETY: baseline SSE2; the gather indexes `table[0..256]`
+        // with u8 codes (cannot exceed 255) and the 4-wide store to
+        // `out` is guarded by `i + 4 <= codes.len()` with
+        // `out.len() == codes.len()` (debug-asserted above).
+        unsafe {
+            let sv = _mm_set1_ps(scale);
+            while i + 4 <= codes.len() {
+                let g = _mm_set_ps(
+                    table[codes[i + 3] as usize],
+                    table[codes[i + 2] as usize],
+                    table[codes[i + 1] as usize],
+                    table[codes[i] as usize],
+                );
+                _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_mul_ps(g, sv));
+                i += 4;
+            }
+        }
+    }
+    for (o, &c) in out[i..].iter_mut().zip(&codes[i..]) {
+        *o = table[c as usize] * scale;
+    }
+}
